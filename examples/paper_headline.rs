@@ -1,0 +1,80 @@
+//! End-to-end reproduction driver (deliverable (e) of DESIGN.md): runs the
+//! full system — AOT artifacts through PJRT, the 51-replica simulated
+//! testbed for all three protocol variants, and the live thread cluster —
+//! and reports the paper's headline metrics:
+//!
+//!   §6: "a Versão 1 ... aumentar 6× o débito máximo atingível e a
+//!        Versão 2 diminuir para 1/3 a carga de CPU do líder, ambos em
+//!        cenários com 51 réplicas."
+//!
+//! Run: `cargo run --release --example paper_headline [--quick]`
+//! (expects `make artifacts` to have produced artifacts/; the PJRT check
+//! is skipped with a warning otherwise)
+
+use epiraft::config::Config;
+use epiraft::harness::{self, Scale};
+use epiraft::raft::Variant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let scale = if quick { Scale::quick() } else { Scale::paper() };
+
+    println!("=== epiraft end-to-end reproduction (51 replicas) ===\n");
+
+    // ---- layer check: AOT artifacts through PJRT -------------------------
+    println!("[1/4] PJRT artifact check (L1 Pallas kernel + L2 model -> HLO -> rust)");
+    match epiraft::runtime::artifacts_check("artifacts") {
+        Ok(()) => {}
+        Err(e) => println!("  skipped ({e}); run `make artifacts` for the full check"),
+    }
+
+    // ---- headline numbers -------------------------------------------------
+    println!("\n[2/4] §6 headline (max throughput; leader CPU at 10 closed-loop clients)");
+    let h = harness::headline(scale);
+    println!("  raft  max throughput : {:>9.1} req/s", h.raft_max_tput);
+    println!(
+        "  v1    max throughput : {:>9.1} req/s   => {:.1}x raft (paper: ~6x)",
+        h.v1_max_tput, h.tput_ratio_v1
+    );
+    println!("  v2    max throughput : {:>9.1} req/s", h.v2_max_tput);
+    println!("  raft  leader CPU     : {:>8.1}%", h.raft_leader_cpu * 100.0);
+    println!(
+        "  v2    leader CPU     : {:>8.1}%   => {:.2}x raft (paper: ~1/3)",
+        h.v2_leader_cpu * 100.0,
+        h.cpu_ratio_v2
+    );
+    assert!(h.tput_ratio_v1 > 4.0, "V1 speedup collapsed: {}", h.tput_ratio_v1);
+    assert!(h.cpu_ratio_v2 < 0.5, "V2 leader CPU ratio too high: {}", h.cpu_ratio_v2);
+
+    // ---- mini Fig 4 sweep --------------------------------------------------
+    println!("\n[3/4] throughput-latency sweep (Fig 4 shape)");
+    let rates = if quick {
+        vec![100.0, 400.0, 1200.0]
+    } else {
+        harness::fig4_default_rates()
+    };
+    let pts = harness::fig4(scale, &rates);
+    harness::print_points("Fig 4 (mini)", "rate", &pts);
+    if let Ok(path) = harness::write_points_json("paper_headline_fig4", &pts) {
+        println!("wrote {path}");
+    }
+
+    // ---- live cluster ------------------------------------------------------
+    println!("\n[4/4] live thread-per-replica cluster (V2, n=5, real clock)");
+    let mut cfg = Config::default();
+    cfg.protocol.n = 5;
+    cfg.protocol.variant = Variant::V2;
+    cfg.protocol.round_interval_us = 2_000;
+    cfg.workload.clients = 4;
+    cfg.workload.duration_us = 2_000_000;
+    cfg.workload.warmup_us = 400_000;
+    match epiraft::cluster::run_live(&cfg) {
+        Ok(report) => {
+            print!("{}", report.render());
+            assert!(report.logs_consistent);
+        }
+        Err(e) => println!("  live cluster failed: {e}"),
+    }
+
+    println!("\nall layers compose: kernels -> HLO -> PJRT -> coordinator -> cluster OK");
+}

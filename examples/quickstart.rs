@@ -1,0 +1,102 @@
+//! Quickstart: the epiraft public API in two parts.
+//!
+//! Part 1 drives three protocol `Node`s by hand through a commit cycle —
+//! the sans-io core every host (simulator, live cluster, your own runtime)
+//! builds on.
+//!
+//! Part 2 runs the packaged simulator on a 5-replica cluster for each
+//! protocol variant and prints the §4.1 measurements.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use epiraft::config::Config;
+use epiraft::kvstore::Command;
+use epiraft::raft::{Action, ClientResult, Message, Node, Variant};
+use epiraft::sim::run_experiment;
+
+fn main() {
+    part1_manual_nodes();
+    part2_simulated_clusters();
+}
+
+/// Wire three nodes together by hand: append a command at the leader,
+/// deliver the AppendEntries, deliver the reply, watch it commit.
+fn part1_manual_nodes() {
+    println!("== part 1: driving the sans-io core by hand ==");
+    let cfg = epiraft::config::ProtocolConfig::for_variant(3, Variant::Raft);
+    let mut leader = Node::new(0, cfg.clone(), 1);
+    let mut follower = Node::new(1, cfg.clone(), 2);
+    let _ = Node::new(2, cfg, 3); // third replica (not needed for majority)
+
+    // Install replica 0 as the term-1 leader (the paper's stable-leader
+    // replication phase; elections work too — see the fault_tolerance
+    // example).
+    let boot = leader.bootstrap_leader(0);
+    follower.bootstrap_follower(0, 0);
+    println!("leader elected: node {} at term {}", leader.id(), leader.term());
+
+    // A client writes key 7 = 42.
+    let actions = leader.client_request(10, /*req id*/ 1, Command::Put { key: 7, value: 42 });
+    // Deliver the leader's AppendEntries to follower 1 and return its reply.
+    let mut replies = Vec::new();
+    for a in boot.into_iter().chain(actions) {
+        if let Action::Send { to: 1, msg } = a {
+            for ra in follower.on_message(20, msg) {
+                if let Action::Send { to: 0, msg } = ra {
+                    replies.push(msg);
+                }
+            }
+        }
+    }
+    // Leader processes the replies: majority reached (leader + follower 1).
+    for msg in replies {
+        for a in leader.on_message(30, msg) {
+            match a {
+                Action::ClientReply { req, result: ClientResult::Ok(_) } => {
+                    println!("request {req} committed and applied");
+                }
+                Action::Committed { from, to } => {
+                    println!("leader committed log indices ({from}, {to}]");
+                }
+                _ => {}
+            }
+        }
+    }
+    println!("leader kv[7] = {:?}", leader.kv().get(7));
+    assert_eq!(leader.kv().get(7), Some(42));
+    let _ = Message::entry_count; // (see raft::message for the wire types)
+    println!();
+}
+
+/// Run the simulator for each variant on a small cluster.
+fn part2_simulated_clusters() {
+    println!("== part 2: simulated 5-replica cluster, 10 clients, 2s ==");
+    println!(
+        "{:<8} {:>12} {:>14} {:>12} {:>12}",
+        "variant", "tput(req/s)", "lat_mean(us)", "leader_cpu", "follower_cpu"
+    );
+    for variant in Variant::ALL {
+        let mut cfg = Config::default();
+        cfg.protocol.n = 5;
+        cfg.protocol.variant = variant;
+        cfg.workload.clients = 10;
+        cfg.workload.duration_us = 2_000_000;
+        cfg.workload.warmup_us = 400_000;
+        cfg.seed = 1;
+        let r = run_experiment(&cfg);
+        assert!(r.safety_ok);
+        println!(
+            "{:<8} {:>12.1} {:>14.1} {:>11.1}% {:>11.1}%",
+            r.variant,
+            r.throughput,
+            r.mean_latency_us,
+            r.leader_cpu * 100.0,
+            r.follower_cpu_mean * 100.0
+        );
+    }
+    println!("\nnext steps:");
+    println!("  cargo run --release --example paper_headline   # the paper's §6 claims");
+    println!("  cargo run --release --example fault_tolerance  # crashes & partitions");
+    println!("  cargo run --release --example live_cluster     # real threads");
+    println!("  epiraft fig 4|5|6|7                            # regenerate the figures");
+}

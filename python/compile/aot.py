@@ -1,0 +1,117 @@
+"""AOT lowering: jit → StableHLO → XlaComputation → **HLO text**.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` 0.1.6 rust crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md and DESIGN.md §3.
+
+Outputs (``make artifacts``):
+  artifacts/merge_fold.hlo.txt     — L1 Pallas kernel (interpret lowering)
+  artifacts/quorum_update.hlo.txt  — L2 Update pass
+  artifacts/cluster_step.hlo.txt   — merge ∘ update fleet step
+  artifacts/meta.json              — batch geometry for the Rust loader
+  artifacts/golden.json            — ref-computed vectors for
+                                     native ≡ HLO equivalence tests
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def golden_cases(b, m, n_cases=4, n_procs=51, seed=20230713):
+    """Random input/output vectors computed with the numpy oracle."""
+    rng = np.random.default_rng(seed)
+    cases = []
+    for _ in range(n_cases):
+        c = ref.random_case(rng, b, m, n_procs)
+        out_bm, out_mc, out_nc = ref.cluster_step_ref(
+            c["bm"], c["mc"], c["nc"], c["msgs_bm"], c["msgs_mc"], c["msgs_nc"],
+            c["count"], c["me"], c["majority"], c["last_index"], c["last_term_eq"],
+        )
+        mf_bm, mf_mc, mf_nc = ref.merge_fold_ref(
+            c["bm"], c["mc"], c["nc"], c["msgs_bm"], c["msgs_mc"], c["msgs_nc"], c["count"]
+        )
+        cases.append(
+            {
+                "in": {k: np.asarray(v).flatten().tolist() for k, v in c.items()},
+                "merge_fold_out": {
+                    "bm": mf_bm.flatten().tolist(),
+                    "mc": mf_mc.flatten().tolist(),
+                    "nc": mf_nc.flatten().tolist(),
+                },
+                "cluster_step_out": {
+                    "bm": out_bm.flatten().tolist(),
+                    "mc": out_mc.flatten().tolist(),
+                    "nc": out_nc.flatten().tolist(),
+                },
+            }
+        )
+    return cases
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=None, help="artifacts directory")
+    ap.add_argument("--out", default=None, help="(legacy) single-artifact path; sets out-dir")
+    ap.add_argument("--batch", type=int, default=None, help="B (replica batch)")
+    ap.add_argument("--msgs", type=int, default=None, help="M (messages per state)")
+    args = ap.parse_args()
+
+    from compile.kernels.merge import DEFAULT_B, DEFAULT_M
+
+    b = args.batch or DEFAULT_B
+    m = args.msgs or DEFAULT_M
+
+    out_dir = args.out_dir
+    if out_dir is None and args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    if out_dir is None:
+        out_dir = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "..", "artifacts")
+    out_dir = os.path.abspath(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    shapes = model.example_args(b, m)
+    written = []
+    for name, fn in model.FUNCTIONS.items():
+        lowered = jax.jit(fn).lower(*shapes[name])
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written.append((name, path, len(text)))
+
+    meta = {"B": b, "M": m, "W": ref.W, "version": 1, "functions": list(model.FUNCTIONS)}
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+
+    golden = {"B": b, "M": m, "W": ref.W, "cases": golden_cases(b, m)}
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+
+    for name, path, size in written:
+        print(f"wrote {path} ({size} chars)")
+    print(f"wrote {out_dir}/meta.json and golden.json (B={b}, M={m}, W={ref.W})")
+
+
+if __name__ == "__main__":
+    main()

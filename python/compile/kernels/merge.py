@@ -1,0 +1,138 @@
+"""Layer 1 — Pallas kernel: batched epidemic-commit Merge fold.
+
+The V2 hot-spot: every replica folds batches of received
+``(bitmap, max_commit, next_commit)`` triples (Algorithm 3 of the paper)
+into its local state. The kernel processes B independent replica states,
+each folding M messages, in one launch — the vectorised "fleet step" the
+Rust runtime calls through PJRT for batched simulation and for the
+`micro_hotpath` benchmark.
+
+Semantics (must stay bit-identical to ``EpidemicState::merge`` in
+``rust/src/epidemic/commit.rs``; DESIGN.md §4.1 documents the `<=`
+resolution of the paper's pseudocode/prose mismatch):
+
+    for each message k < count:
+        mc  = max(mc, mc_k)                     # Alg. 3 line 1
+        if nc <= nc_k:  bm |= bm_k              # lines 2-4
+        if nc <= mc:    bm, nc = bm_k, nc_k     # lines 5-7
+        if nc <= mc:    bm, nc = 0,   mc + 1    # invariant restore
+
+Layout: bitmaps are W=2 little-endian u32 words (up to 64 replicas) —
+the same layout as ``util::bitset::Bitmap`` on the Rust side.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the fold is element-wise
+over ``(B, W)`` u32 lanes — VPU work tiled by BlockSpec over the B axis so
+each (B_TILE, M, W) message block sits in VMEM; there is no matmul, so the
+MXU is idle and the roofline is memory-bound. ``interpret=True`` everywhere
+on CPU (Mosaic custom-calls cannot run on the CPU PJRT plugin).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Bitmap words per state: W*32 >= max cluster size (paper: 51 replicas).
+W = 2
+# Default batch geometry for the AOT artifacts.
+DEFAULT_B = 64
+DEFAULT_M = 16
+# Block tile over the replica axis.
+B_TILE = 16
+
+
+def _merge_fold_kernel(
+    bm_ref,
+    mc_ref,
+    nc_ref,
+    msgs_bm_ref,
+    msgs_mc_ref,
+    msgs_nc_ref,
+    count_ref,
+    out_bm_ref,
+    out_mc_ref,
+    out_nc_ref,
+):
+    """Pallas kernel body: fold M messages into each of the block's states."""
+    bm = bm_ref[...]  # (BT, W) u32
+    mc = mc_ref[...]  # (BT,)  u32
+    nc = nc_ref[...]  # (BT,)  u32
+    count = count_ref[...]  # (BT,) u32
+    m = msgs_mc_ref.shape[1]
+
+    def body(k, carry):
+        bm, mc, nc = carry
+        valid = k < count  # (BT,) bool
+        bm_k = msgs_bm_ref[:, k, :]
+        mc_k = msgs_mc_ref[:, k]
+        nc_k = msgs_nc_ref[:, k]
+        # line 1
+        mc2 = jnp.maximum(mc, mc_k)
+        # lines 2-4 (votes for >= index certify ours)
+        or_ok = nc <= nc_k
+        bm2 = jnp.where(or_ok[:, None], bm | bm_k, bm)
+        # lines 5-7 (local vote already majority-confirmed: adopt received)
+        adopt = nc <= mc2
+        bm3 = jnp.where(adopt[:, None], bm_k, bm2)
+        nc2 = jnp.where(adopt, nc_k, nc)
+        # invariant restore (stale received state)
+        stale = nc2 <= mc2
+        bm4 = jnp.where(stale[:, None], jnp.zeros_like(bm3), bm3)
+        nc3 = jnp.where(stale, mc2 + jnp.uint32(1), nc2)
+        # masked lanes keep their previous state
+        bm5 = jnp.where(valid[:, None], bm4, bm)
+        mc3 = jnp.where(valid, mc2, mc)
+        nc4 = jnp.where(valid, nc3, nc)
+        return bm5, mc3, nc4
+
+    bm, mc, nc = jax.lax.fori_loop(0, m, body, (bm, mc, nc))
+    out_bm_ref[...] = bm
+    out_mc_ref[...] = mc
+    out_nc_ref[...] = nc
+
+
+@functools.partial(jax.jit, static_argnames=())
+def merge_fold(bm, mc, nc, msgs_bm, msgs_mc, msgs_nc, count):
+    """Fold message batches into states.
+
+    Args:
+      bm:      (B, W)    u32 — local bitmaps.
+      mc:      (B,)      u32 — local max_commit.
+      nc:      (B,)      u32 — local next_commit.
+      msgs_bm: (B, M, W) u32 — received bitmaps.
+      msgs_mc: (B, M)    u32 — received max_commit.
+      msgs_nc: (B, M)    u32 — received next_commit.
+      count:   (B,)      u32 — number of valid messages per state.
+
+    Returns: (bm', mc', nc') with the same shapes/dtypes as the inputs.
+    """
+    b, w = bm.shape
+    _, m = msgs_mc.shape
+    assert w == W, f"bitmap must have {W} words"
+    bt = B_TILE if b % B_TILE == 0 else b
+    grid = (b // bt,)
+    return pl.pallas_call(
+        _merge_fold_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, w), lambda i: (i, 0)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt, m, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bt, m), lambda i: (i, 0)),
+            pl.BlockSpec((bt, m), lambda i: (i, 0)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, w), lambda i: (i, 0)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, w), jnp.uint32),
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
+        ],
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(bm, mc, nc, msgs_bm, msgs_mc, msgs_nc, count)

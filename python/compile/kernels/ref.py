@@ -1,0 +1,141 @@
+"""Pure-numpy oracle for the epidemic-commit kernels.
+
+Scalar, loop-based reimplementation of Algorithms 2 and 3 (§3.2) — the
+correctness reference the Pallas kernel and the L2 model are tested
+against, and the generator of the golden vectors consumed by the Rust
+native≡HLO equivalence tests (``artifacts/golden.json``).
+"""
+
+import numpy as np
+
+W = 2  # u32 words per bitmap (matches kernels/merge.py and rust bitset)
+
+
+def merge_one(bm, mc, nc, bm_k, mc_k, nc_k):
+    """Algorithm 3 (Merge) for one state/message pair.
+
+    All args are python ints / length-W lists of ints; returns (bm, mc, nc).
+    Must stay bit-identical to ``EpidemicState::merge``.
+    """
+    bm = list(bm)
+    # line 1
+    mc = max(mc, mc_k)
+    # lines 2-4
+    if nc <= nc_k:
+        bm = [a | b for a, b in zip(bm, bm_k)]
+    # lines 5-7
+    if nc <= mc:
+        bm = list(bm_k)
+        nc = nc_k
+    # invariant restore
+    if nc <= mc:
+        bm = [0] * len(bm)
+        nc = (mc + 1) & 0xFFFFFFFF
+    return bm, mc, nc
+
+
+def merge_fold_ref(bm, mc, nc, msgs_bm, msgs_mc, msgs_nc, count):
+    """Reference for kernels.merge.merge_fold (numpy arrays in/out)."""
+    bm = np.array(bm, dtype=np.uint32).copy()
+    mc = np.array(mc, dtype=np.uint32).copy()
+    nc = np.array(nc, dtype=np.uint32).copy()
+    b, m = np.shape(msgs_mc)
+    for i in range(b):
+        s_bm = [int(x) for x in bm[i]]
+        s_mc, s_nc = int(mc[i]), int(nc[i])
+        for k in range(min(int(count[i]), m)):
+            s_bm, s_mc, s_nc = merge_one(
+                s_bm,
+                s_mc,
+                s_nc,
+                [int(x) for x in msgs_bm[i, k]],
+                int(msgs_mc[i, k]),
+                int(msgs_nc[i, k]),
+            )
+        bm[i] = s_bm
+        mc[i], nc[i] = s_mc, s_nc
+    return bm, mc, nc
+
+
+def popcount_words(words):
+    return sum(bin(int(w)).count("1") for w in words)
+
+
+def update_step_ref(bm, mc, nc, me, majority, last_index, last_term_eq):
+    """One pass of Algorithm 2 + the §3.2 own-bit rule, for one state.
+
+    Must stay bit-identical to ``EpidemicState::update_step``.
+    Returns (bm, mc, nc).
+    """
+    bm = list(bm)
+    fired = popcount_words(bm) >= majority
+    if fired:
+        mc = nc  # line 2
+        bm = [0] * len(bm)  # line 3
+        if nc >= last_index or not last_term_eq:  # line 4
+            nc = (nc + 1) & 0xFFFFFFFF  # line 5
+        else:
+            nc = last_index  # line 7
+    # own-bit rule (line 8 generalised per the prose)
+    if last_index >= nc and last_term_eq:
+        bm[me // 32] |= 1 << (me % 32)
+    return bm, mc, nc
+
+
+def quorum_update_ref(bm, mc, nc, me, majority, last_index, last_term_eq):
+    """Reference for model.quorum_update (batched over axis 0)."""
+    bm = np.array(bm, dtype=np.uint32).copy()
+    mc = np.array(mc, dtype=np.uint32).copy()
+    nc = np.array(nc, dtype=np.uint32).copy()
+    b = bm.shape[0]
+    for i in range(b):
+        s_bm, s_mc, s_nc = update_step_ref(
+            [int(x) for x in bm[i]],
+            int(mc[i]),
+            int(nc[i]),
+            int(me[i]),
+            int(majority),
+            int(last_index[i]),
+            bool(last_term_eq[i]),
+        )
+        bm[i] = s_bm
+        mc[i], nc[i] = s_mc, s_nc
+    return bm, mc, nc
+
+
+def cluster_step_ref(
+    bm, mc, nc, msgs_bm, msgs_mc, msgs_nc, count, me, majority, last_index, last_term_eq
+):
+    """Reference for model.cluster_step: merge fold then one update pass."""
+    bm, mc, nc = merge_fold_ref(bm, mc, nc, msgs_bm, msgs_mc, msgs_nc, count)
+    return quorum_update_ref(bm, mc, nc, me, majority, last_index, last_term_eq)
+
+
+def random_case(rng, b, m, n_procs):
+    """Draw a random but *plausible* batch (invariant nc > mc holds on
+    inputs, bitmaps only use the low n_procs bits)."""
+
+    def bitmaps(shape):
+        full = rng.integers(0, 2**32, size=shape + (W,), dtype=np.uint64)
+        mask = np.zeros(W, dtype=np.uint64)
+        for i in range(n_procs):
+            mask[i // 32] |= np.uint64(1 << (i % 32))
+        return (full & mask).astype(np.uint32)
+
+    mc = rng.integers(0, 1000, size=(b,)).astype(np.uint32)
+    nc = (mc + rng.integers(1, 50, size=(b,)).astype(np.uint32)).astype(np.uint32)
+    msgs_mc = rng.integers(0, 1000, size=(b, m)).astype(np.uint32)
+    msgs_nc = (msgs_mc + rng.integers(1, 50, size=(b, m)).astype(np.uint32)).astype(np.uint32)
+    return dict(
+        bm=bitmaps((b,)),
+        mc=mc,
+        nc=nc,
+        msgs_bm=bitmaps((b, m)),
+        msgs_mc=msgs_mc,
+        msgs_nc=msgs_nc,
+        count=rng.integers(0, m + 1, size=(b,)).astype(np.uint32),
+        me=rng.integers(0, n_procs, size=(b,)).astype(np.uint32),
+        majority=np.uint32(n_procs // 2 + 1),
+        last_index=rng.integers(0, 1100, size=(b,)).astype(np.uint32),
+        last_term_eq=rng.integers(0, 2, size=(b,)).astype(np.uint32),
+    )

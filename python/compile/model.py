@@ -1,0 +1,103 @@
+"""Layer 2 — JAX compute graph over the L1 Pallas kernel.
+
+* ``quorum_update`` — vectorised single pass of Algorithm 2 (Update) plus
+  the §3.2 own-bit rule (popcount majority test, commit advance, bitmap
+  reset, own-bit set).
+* ``cluster_step`` — the fleet step: fold received message batches into B
+  replica states (L1 kernel) and run one Update pass on each.
+
+Both are lowered once by ``aot.py`` to HLO text and executed from the Rust
+runtime through PJRT; python never runs at request time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.merge import W, merge_fold
+
+
+def quorum_update(bm, mc, nc, me, majority, last_index, last_term_eq):
+    """One pass of Algorithm 2 + own-bit rule, batched over axis 0.
+
+    Args:
+      bm:          (B, W) u32 bitmaps.
+      mc, nc:      (B,)   u32 max_commit / next_commit.
+      me:          (B,)   u32 own process id per state.
+      majority:    ()     u32 majority threshold (⌊n/2⌋+1).
+      last_index:  (B,)   u32 index of last log entry.
+      last_term_eq:(B,)   u32 1 iff term(last entry) == current term.
+
+    Returns (bm', mc', nc').
+    """
+    last_eq = last_term_eq != 0
+    votes = jax.lax.population_count(bm).sum(axis=1, dtype=jnp.uint32)
+    fired = votes >= majority
+    # lines 2-3
+    mc2 = jnp.where(fired, nc, mc)
+    bm2 = jnp.where(fired[:, None], jnp.zeros_like(bm), bm)
+    # lines 4-7
+    incr = (nc >= last_index) | (~last_eq)
+    nc2 = jnp.where(fired, jnp.where(incr, nc + jnp.uint32(1), last_index), nc)
+    # own-bit rule (line 8 generalised)
+    own = (last_index >= nc2) & last_eq
+    words = jnp.arange(W, dtype=jnp.uint32)[None, :]  # (1, W)
+    one_hot = jnp.where(
+        (me[:, None] // jnp.uint32(32)) == words,
+        jnp.left_shift(jnp.uint32(1), me[:, None] % jnp.uint32(32)),
+        jnp.uint32(0),
+    )
+    bm3 = jnp.where(own[:, None], bm2 | one_hot, bm2)
+    return bm3, mc2, nc2
+
+
+def cluster_step(
+    bm, mc, nc, msgs_bm, msgs_mc, msgs_nc, count, me, majority, last_index, last_term_eq
+):
+    """Fleet step: merge the message batch (L1 kernel), then Update."""
+    bm, mc, nc = merge_fold(bm, mc, nc, msgs_bm, msgs_mc, msgs_nc, count)
+    return quorum_update(bm, mc, nc, me, majority, last_index, last_term_eq)
+
+
+def example_args(b, m):
+    """ShapeDtypeStructs for AOT lowering at batch geometry (b, m)."""
+    u32 = jnp.uint32
+    return dict(
+        merge_fold=(
+            jax.ShapeDtypeStruct((b, W), u32),
+            jax.ShapeDtypeStruct((b,), u32),
+            jax.ShapeDtypeStruct((b,), u32),
+            jax.ShapeDtypeStruct((b, m, W), u32),
+            jax.ShapeDtypeStruct((b, m), u32),
+            jax.ShapeDtypeStruct((b, m), u32),
+            jax.ShapeDtypeStruct((b,), u32),
+        ),
+        quorum_update=(
+            jax.ShapeDtypeStruct((b, W), u32),
+            jax.ShapeDtypeStruct((b,), u32),
+            jax.ShapeDtypeStruct((b,), u32),
+            jax.ShapeDtypeStruct((b,), u32),
+            jax.ShapeDtypeStruct((), u32),
+            jax.ShapeDtypeStruct((b,), u32),
+            jax.ShapeDtypeStruct((b,), u32),
+        ),
+        cluster_step=(
+            jax.ShapeDtypeStruct((b, W), u32),
+            jax.ShapeDtypeStruct((b,), u32),
+            jax.ShapeDtypeStruct((b,), u32),
+            jax.ShapeDtypeStruct((b, m, W), u32),
+            jax.ShapeDtypeStruct((b, m), u32),
+            jax.ShapeDtypeStruct((b, m), u32),
+            jax.ShapeDtypeStruct((b,), u32),
+            jax.ShapeDtypeStruct((b,), u32),
+            jax.ShapeDtypeStruct((), u32),
+            jax.ShapeDtypeStruct((b,), u32),
+            jax.ShapeDtypeStruct((b,), u32),
+        ),
+    )
+
+
+FUNCTIONS = {
+    "merge_fold": merge_fold,
+    "quorum_update": quorum_update,
+    "cluster_step": cluster_step,
+}

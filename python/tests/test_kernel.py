@@ -1,0 +1,107 @@
+"""L1 correctness: the Pallas merge_fold kernel against the numpy oracle.
+
+Exact integer equality is required — the kernel, the oracle and the Rust
+native implementation must be bit-identical (the epidemic structures are
+protocol state, not floating-point math).
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile.kernels import ref
+from compile.kernels.merge import W, merge_fold
+
+
+def run_kernel(c):
+    out = merge_fold(
+        c["bm"], c["mc"], c["nc"], c["msgs_bm"], c["msgs_mc"], c["msgs_nc"], c["count"]
+    )
+    return [np.asarray(x) for x in out]
+
+
+def run_ref(c):
+    return ref.merge_fold_ref(
+        c["bm"], c["mc"], c["nc"], c["msgs_bm"], c["msgs_mc"], c["msgs_nc"], c["count"]
+    )
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("b,m", [(16, 4), (64, 16), (32, 1)])
+def test_merge_fold_matches_ref_random(seed, b, m):
+    rng = np.random.default_rng(seed)
+    c = ref.random_case(rng, b, m, n_procs=51)
+    got = run_kernel(c)
+    want = run_ref(c)
+    for g, w, name in zip(got, want, ["bm", "mc", "nc"]):
+        np.testing.assert_array_equal(g, w, err_msg=f"{name} mismatch (seed={seed})")
+
+
+def test_zero_count_is_identity():
+    rng = np.random.default_rng(1)
+    c = ref.random_case(rng, 16, 4, n_procs=51)
+    c["count"] = np.zeros(16, dtype=np.uint32)
+    bm, mc, nc = run_kernel(c)
+    np.testing.assert_array_equal(bm, c["bm"])
+    np.testing.assert_array_equal(mc, c["mc"])
+    np.testing.assert_array_equal(nc, c["nc"])
+
+
+def test_invariant_preserved_by_fold():
+    # nc > mc on input (random_case guarantees it) must hold on output.
+    for seed in range(4):
+        c = ref.random_case(np.random.default_rng(seed), 64, 16, n_procs=51)
+        _bm, mc, nc = run_kernel(c)
+        assert (nc.astype(np.uint64) > mc.astype(np.uint64)).all()
+
+
+def test_merge_is_idempotent_per_message():
+    # Folding the same single message twice == folding it once.
+    rng = np.random.default_rng(3)
+    c = ref.random_case(rng, 8, 2, n_procs=51)
+    c["msgs_bm"][:, 1] = c["msgs_bm"][:, 0]
+    c["msgs_mc"][:, 1] = c["msgs_mc"][:, 0]
+    c["msgs_nc"][:, 1] = c["msgs_nc"][:, 0]
+    once = dict(c)
+    once["count"] = np.ones(8, dtype=np.uint32)
+    twice = dict(c)
+    twice["count"] = np.full(8, 2, dtype=np.uint32)
+    for g, w in zip(run_kernel(once), run_kernel(twice)):
+        np.testing.assert_array_equal(g, w)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(0, 999), st.integers(1, 49),
+       st.integers(0, 999), st.integers(1, 49), st.data())
+def test_single_state_fold_hypothesis(bm0, mc, dn, mc_k, dn_k, data):
+    """Hypothesis sweep of the scalar semantics through the kernel."""
+    b, m = 8, 2  # kernel geometry stays fixed; lane 0 carries the case
+    c = ref.random_case(np.random.default_rng(0), b, m, n_procs=51)
+    c["bm"][0] = [bm0 & 0xFFFFFFFF, (bm0 >> 16) & 0x7FFFF]
+    c["mc"][0] = mc
+    c["nc"][0] = mc + dn
+    c["msgs_mc"][0, 0] = mc_k
+    c["msgs_nc"][0, 0] = mc_k + dn_k
+    c["msgs_bm"][0, 0] = [
+        data.draw(st.integers(0, 2**32 - 1)),
+        data.draw(st.integers(0, 2**19 - 1)),
+    ]
+    c["count"][0] = 1
+    got = run_kernel(c)
+    want = run_ref(c)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g[0], w[0])
+
+
+def test_kernel_rejects_wrong_word_count():
+    rng = np.random.default_rng(5)
+    c = ref.random_case(rng, 16, 4, n_procs=51)
+    bad = np.zeros((16, W + 1), dtype=np.uint32)
+    with pytest.raises(AssertionError):
+        merge_fold(bad, c["mc"], c["nc"], c["msgs_bm"], c["msgs_mc"], c["msgs_nc"], c["count"])

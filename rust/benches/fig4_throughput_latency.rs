@@ -1,0 +1,38 @@
+//! Bench: regenerate Fig 4 — mean latency vs request rate, 51 replicas,
+//! 100 concurrent clients, Raft vs V1 vs V2 (3 repetitions, mean — §4.1).
+//!
+//! Run: `cargo bench --bench fig4_throughput_latency [-- --quick]`
+//! Output: table on stdout + target/results/fig4.json
+
+use epiraft::harness::{self, Scale};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var_os("EPIRAFT_BENCH_QUICK").is_some();
+    let scale = if quick { Scale::quick() } else { Scale::paper() };
+    let rates = harness::fig4_default_rates();
+    let t = std::time::Instant::now();
+    let pts = harness::fig4(scale, &rates);
+    harness::print_points(
+        "Fig 4 — mean latency vs request rate (51 replicas, 100 clients)",
+        "rate",
+        &pts,
+    );
+    match harness::write_points_json("fig4", &pts) {
+        Ok(path) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("write failed: {e}"),
+    }
+    // Shape assertions (who wins, by roughly what factor).
+    let max_tput = |v: &str| {
+        pts.iter().filter(|p| p.variant == v).map(|p| p.throughput).fold(0.0, f64::max)
+    };
+    let raft = max_tput("raft");
+    let v1 = max_tput("v1");
+    println!(
+        "\nshape check: raft ceiling {:.0} req/s, v1 reaches {:.0} req/s ({:.1}x)",
+        raft,
+        v1,
+        v1 / raft
+    );
+    println!("total bench time: {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerate Fig 5 — per-replica CPU usage vs client request
+//! rate, 51 replicas, 10 clients (leader vs follower mean, per variant).
+//!
+//! Run: `cargo bench --bench fig5_cpu_by_rate [-- --quick]`
+//! Output: table on stdout + target/results/fig5.json
+
+use epiraft::harness::{self, Scale};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var_os("EPIRAFT_BENCH_QUICK").is_some();
+    let scale = if quick { Scale::quick() } else { Scale::paper() };
+    let rates = harness::fig5_default_rates();
+    let t = std::time::Instant::now();
+    let pts = harness::fig5(scale, &rates);
+    harness::print_points(
+        "Fig 5 — CPU usage vs client request rate (51 replicas, 10 clients)",
+        "rate",
+        &pts,
+    );
+    match harness::write_points_json("fig5", &pts) {
+        Ok(path) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("write failed: {e}"),
+    }
+    // Shape: at every matched rate, leader CPU ordering raft >= v1 >= v2.
+    for &rate in &rates {
+        let cpu = |v: &str| {
+            pts.iter()
+                .find(|p| p.variant == v && p.x == rate)
+                .map(|p| p.leader_cpu)
+                .unwrap_or(0.0)
+        };
+        println!(
+            "rate {:>6}: leader cpu raft {:>5.1}%  v1 {:>5.1}%  v2 {:>5.1}%",
+            rate,
+            cpu("raft") * 100.0,
+            cpu("v1") * 100.0,
+            cpu("v2") * 100.0
+        );
+    }
+    println!("total bench time: {:.1}s", t.elapsed().as_secs_f64());
+}

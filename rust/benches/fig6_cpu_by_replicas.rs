@@ -1,0 +1,56 @@
+//! Bench: regenerate Fig 6 — per-replica CPU usage vs number of replicas,
+//! 10 closed-loop clients ("enviam pedidos imediatamente após receberem as
+//! respostas", §4.2), leader vs followers, per variant.
+//!
+//! Run: `cargo bench --bench fig6_cpu_by_replicas [-- --quick]`
+//! Output: table on stdout + target/results/fig6.json
+
+use epiraft::harness::{self, Scale};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var_os("EPIRAFT_BENCH_QUICK").is_some();
+    let scale = if quick { Scale::quick() } else { Scale::paper() };
+    let ns = harness::fig6_default_ns();
+    let t = std::time::Instant::now();
+    let pts = harness::fig6(scale, &ns);
+    harness::print_points(
+        "Fig 6 — CPU usage vs number of replicas (10 closed-loop clients)",
+        "n",
+        &pts,
+    );
+    match harness::write_points_json("fig6", &pts) {
+        Ok(path) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("write failed: {e}"),
+    }
+    // Companion series at a fixed sub-saturation rate: shows the paper's
+    // rising-leader-CPU-with-n curves directly (the unthrottled loop pins
+    // saturated leaders at 100%).
+    let fixed = epiraft::harness::figures::fig6_rate(scale, &ns, 150.0);
+    harness::print_points(
+        "Fig 6b — CPU usage vs number of replicas (fixed 150 req/s)",
+        "n",
+        &fixed,
+    );
+    match harness::write_points_json("fig6_fixed_rate", &fixed) {
+        Ok(path) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("write failed: {e}"),
+    }
+    // Shape: raft leader CPU grows with n and dominates followers; the V2
+    // leader stays near its followers at every size ("em nenhum ponto o
+    // gargalo").
+    for &n in &ns {
+        let p = |v: &str| pts.iter().find(|p| p.variant == v && p.x == n as f64).unwrap();
+        println!(
+            "n={:>3}: raft leader/follower {:>5.1}%/{:>4.1}%   v1 {:>5.1}%/{:>4.1}%   v2 {:>5.1}%/{:>4.1}%",
+            n,
+            p("raft").leader_cpu * 100.0,
+            p("raft").follower_cpu_mean * 100.0,
+            p("v1").leader_cpu * 100.0,
+            p("v1").follower_cpu_mean * 100.0,
+            p("v2").leader_cpu * 100.0,
+            p("v2").follower_cpu_mean * 100.0,
+        );
+    }
+    println!("total bench time: {:.1}s", t.elapsed().as_secs_f64());
+}

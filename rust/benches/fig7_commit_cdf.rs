@@ -1,0 +1,46 @@
+//! Bench: regenerate Fig 7 — CDF of the interval between a request being
+//! received by the leader and its commit at each replica, 51 replicas,
+//! loaded system, per variant.
+//!
+//! Run: `cargo bench --bench fig7_commit_cdf [-- --quick]`
+//! Output: CDF quantiles on stdout + target/results/fig7.json
+
+use epiraft::harness::{self, Scale};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var_os("EPIRAFT_BENCH_QUICK").is_some();
+    let scale = if quick { Scale::quick() } else { Scale::paper() };
+    let rate = 2000.0; // beyond V1's knee: the paper measures a loaded system (Fig 7 x-axis reaches seconds)
+    let t = std::time::Instant::now();
+    let cdfs = harness::fig7(scale, rate);
+    println!("== Fig 7 — FDA (CDF) leader-receive -> replica-commit, rate {rate} ==");
+    for (variant, pts) in &cdfs {
+        println!("\n[{variant}] {} committed-entry observations", pts.len());
+        for frac in [0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+            if let Some((v, f)) = pts.iter().find(|(_, f)| *f >= frac) {
+                println!("  p{:<4} {:>10} us (cdf {:.3})", (frac * 100.0) as u32, v, f);
+            }
+        }
+    }
+    match harness::write_cdfs_json("fig7", &cdfs) {
+        Ok(path) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("write failed: {e}"),
+    }
+    // Shape: V2's CDF rises earliest (decentralised commit); original Raft
+    // latest (followers wait on the leader's next broadcast).
+    let p50 = |name: &str| {
+        cdfs.iter()
+            .find(|(v, _)| *v == name)
+            .and_then(|(_, pts)| pts.iter().find(|(_, f)| *f >= 0.5))
+            .map(|(v, _)| *v)
+            .unwrap_or(0)
+    };
+    println!(
+        "\nshape check p50: raft {} us, v1 {} us, v2 {} us",
+        p50("raft"),
+        p50("v1"),
+        p50("v2")
+    );
+    println!("total bench time: {:.1}s", t.elapsed().as_secs_f64());
+}

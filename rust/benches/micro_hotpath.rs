@@ -1,0 +1,187 @@
+//! Micro-benchmarks of the hot paths (criterion-lite; §Perf of
+//! EXPERIMENTS.md):
+//!
+//! * scalar `Merge`/`Update` (every gossip receipt runs these),
+//! * native batched fleet step vs the AOT-compiled HLO executable through
+//!   PJRT (batch-size crossover),
+//! * simulator event-loop throughput (events/s),
+//! * supporting structures (permutation round, histogram record).
+//!
+//! Run: `cargo bench --bench micro_hotpath`
+
+use epiraft::config::Config;
+use epiraft::epidemic::{EpidemicState, LogView, Permutation};
+use epiraft::harness::{bench, black_box};
+use epiraft::raft::Variant;
+use epiraft::runtime::{Engine, MergeExecutor};
+use epiraft::sim::run_experiment;
+use epiraft::util::histogram::Histogram;
+use epiraft::util::rng::Xoshiro256;
+
+fn main() {
+    let samples = 12;
+    println!("== micro_hotpath ==");
+
+    // --- scalar merge/update -----------------------------------------------
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let mk_state = |rng: &mut Xoshiro256| {
+        let mut s = EpidemicState::new(51);
+        s.max_commit = rng.next_below(1000);
+        s.next_commit = s.max_commit + 1 + rng.next_below(40);
+        for _ in 0..rng.next_below(26) {
+            let b = rng.next_below(51) as usize;
+            s.bitmap.set(b);
+        }
+        s
+    };
+    let states: Vec<EpidemicState> = (0..256).map(|_| mk_state(&mut rng)).collect();
+    let mut local = mk_state(&mut rng);
+    let mut i = 0;
+    let r = bench("scalar merge (51 procs)", samples, || {
+        local.merge(black_box(&states[i & 255]));
+        i += 1;
+    });
+    println!("{}", r.report_line());
+
+    let log = LogView { last_index: 500, last_term: 3, current_term: 3 };
+    let mut j = 0;
+    let mut upd = mk_state(&mut rng);
+    let r = bench("scalar update_step (51 procs)", samples, || {
+        upd.update_step(black_box(j & 50), 26, log);
+        j += 1;
+    });
+    println!("{}", r.report_line());
+
+    // --- permutation + histogram ------------------------------------------
+    let mut perm = Permutation::new(51, 0, &mut rng);
+    let r = bench("permutation next_round(F=3)", samples, || {
+        black_box(perm.next_round(3));
+    });
+    println!("{}", r.report_line());
+
+    let mut h = Histogram::default();
+    let mut v = 1u64;
+    let r = bench("histogram record", samples, || {
+        v = v.wrapping_mul(6364136223846793005).wrapping_add(1);
+        h.record(v % 1_000_000);
+    });
+    println!("{}", r.report_line());
+
+    // --- native vs HLO fleet step -------------------------------------------
+    match Engine::load("artifacts").and_then(|e| {
+        let x = MergeExecutor::from_engine(&e)?;
+        Ok((e, x))
+    }) {
+        Ok((engine, exec)) => {
+            let geo = engine.geometry;
+            let total_states = geo.b;
+            let mut rr = Xoshiro256::seed_from_u64(11);
+            let bm: Vec<u32> = (0..total_states * geo.w).map(|_| rr.next_u64() as u32).collect();
+            let mc: Vec<u32> = (0..total_states).map(|_| rr.next_below(1000) as u32).collect();
+            let nc: Vec<u32> = mc.iter().map(|&x| x + 1 + (rr.next_below(40) as u32)).collect();
+            let msgs_bm: Vec<u32> =
+                (0..total_states * geo.m * geo.w).map(|_| rr.next_u64() as u32).collect();
+            let msgs_mc: Vec<u32> =
+                (0..total_states * geo.m).map(|_| rr.next_below(1000) as u32).collect();
+            let msgs_nc: Vec<u32> =
+                msgs_mc.iter().map(|&x| x + 1 + (rr.next_below(40) as u32)).collect();
+            let count: Vec<u32> =
+                (0..total_states).map(|_| rr.next_below(geo.m as u64 + 1) as u32).collect();
+            let me: Vec<u32> = (0..total_states).map(|_| rr.next_below(51) as u32).collect();
+            let last_index: Vec<u32> =
+                (0..total_states).map(|_| rr.next_below(1100) as u32).collect();
+            let last_eq: Vec<u32> = (0..total_states).map(|_| rr.next_below(2) as u32).collect();
+
+            let states_per_call = geo.b as f64;
+            let msgs_per_call = (geo.b * geo.m) as f64;
+
+            let r = bench(
+                &format!("native fleet step (B={} M={})", geo.b, geo.m),
+                samples,
+                || {
+                    black_box(exec.native_cluster_step(
+                        &bm, &mc, &nc, &msgs_bm, &msgs_mc, &msgs_nc, &count, &me, 26,
+                        &last_index, &last_eq,
+                    ));
+                },
+            );
+            println!(
+                "{}   ({:.1}M merges/s)",
+                r.report_line(),
+                msgs_per_call / r.ns_per_iter.mean * 1e3
+            );
+
+            let r = bench(
+                &format!("HLO/PJRT fleet step (B={} M={})", geo.b, geo.m),
+                samples,
+                || {
+                    black_box(
+                        exec.hlo_cluster_step(
+                            &bm, &mc, &nc, &msgs_bm, &msgs_mc, &msgs_nc, &count, &me, 26,
+                            &last_index, &last_eq,
+                        )
+                        .expect("hlo exec"),
+                    );
+                },
+            );
+            println!(
+                "{}   ({:.2}M merges/s, {:.0} states/call)",
+                r.report_line(),
+                msgs_per_call / r.ns_per_iter.mean * 1e3,
+                states_per_call
+            );
+        }
+        Err(e) => println!("(HLO bench skipped: {e}; run `make artifacts`)"),
+    }
+
+    // --- HLO geometry sweep (dispatch amortisation) -------------------------
+    for dir in ["artifacts", "artifacts/b256", "artifacts/b1024"] {
+        let Ok(engine) = Engine::load(dir) else { continue };
+        let Ok(exec) = MergeExecutor::from_engine(&engine) else { continue };
+        let geo = engine.geometry;
+        let mut rr = Xoshiro256::seed_from_u64(13);
+        let bm: Vec<u32> = (0..geo.b * geo.w).map(|_| rr.next_u64() as u32).collect();
+        let mc: Vec<u32> = (0..geo.b).map(|_| rr.next_below(1000) as u32).collect();
+        let nc: Vec<u32> = mc.iter().map(|&x| x + 1 + (rr.next_below(40) as u32)).collect();
+        let msgs_bm: Vec<u32> = (0..geo.b * geo.m * geo.w).map(|_| rr.next_u64() as u32).collect();
+        let msgs_mc: Vec<u32> = (0..geo.b * geo.m).map(|_| rr.next_below(1000) as u32).collect();
+        let msgs_nc: Vec<u32> = msgs_mc.iter().map(|&x| x + 1 + (rr.next_below(40) as u32)).collect();
+        let count: Vec<u32> = (0..geo.b).map(|_| geo.m as u32).collect();
+        let me: Vec<u32> = (0..geo.b).map(|_| rr.next_below(51) as u32).collect();
+        let last_index: Vec<u32> = (0..geo.b).map(|_| rr.next_below(1100) as u32).collect();
+        let last_eq: Vec<u32> = (0..geo.b).map(|_| rr.next_below(2) as u32).collect();
+        let merges = (geo.b * geo.m) as f64;
+        let r = bench(&format!("HLO fleet step {dir} (B={})", geo.b), 8, || {
+            black_box(
+                exec.hlo_cluster_step(&bm, &mc, &nc, &msgs_bm, &msgs_mc, &msgs_nc, &count,
+                    &me, 26, &last_index, &last_eq).expect("exec"),
+            );
+        });
+        println!("{}   ({:.2}M merges/s)", r.report_line(), merges / r.ns_per_iter.mean * 1e3);
+        let r = bench(&format!("native fleet step {dir} (B={})", geo.b), 8, || {
+            black_box(exec.native_cluster_step(&bm, &mc, &nc, &msgs_bm, &msgs_mc, &msgs_nc,
+                &count, &me, 26, &last_index, &last_eq));
+        });
+        println!("{}   ({:.2}M merges/s)", r.report_line(), merges / r.ns_per_iter.mean * 1e3);
+    }
+
+    // --- simulator event loop -----------------------------------------------
+    for variant in Variant::ALL {
+        let mut cfg = Config::default();
+        cfg.protocol.n = 51;
+        cfg.protocol.variant = variant;
+        cfg.workload.clients = 100;
+        cfg.workload.rate = 800.0;
+        cfg.workload.duration_us = 2_000_000;
+        cfg.workload.warmup_us = 200_000;
+        cfg.seed = 5;
+        let report = run_experiment(&cfg);
+        println!(
+            "sim event loop [{:<4}]: {:>9} events in {:>6.2}s host = {:>10.0} events/s",
+            variant.name(),
+            report.events_processed,
+            report.host_secs,
+            report.events_processed as f64 / report.host_secs.max(1e-9)
+        );
+    }
+}

@@ -1,0 +1,212 @@
+//! Hand-rolled CLI (no clap offline): subcommands + `--flag value` parsing.
+//!
+//! ```text
+//! epiraft run        [--variant v] [--n N] [--rate R] [--clients C]
+//!                    [--secs S] [--seed S] [--config FILE] [--set k=v]...
+//! epiraft fig        <4|5|6|7> [--quick] [--out NAME]
+//! epiraft headline   [--quick]
+//! epiraft ablate     <fanout|round|responses|coalesce|votes> [--quick]
+//! epiraft live       [--variant v] [--n N] [--clients C] [--secs S]
+//! epiraft artifacts-check [--dir artifacts]
+//! epiraft config-dump
+//! ```
+
+use crate::config::Config;
+use std::collections::VecDeque;
+
+/// Parsed command line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cli {
+    pub command: String,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    /// `--key value` and bare `--flag` options.
+    pub options: Vec<(String, Option<String>)>,
+}
+
+/// Flags that never take a value.
+const BARE_FLAGS: &[&str] = &["quick", "help", "cold-start", "verbose", "json"];
+
+impl Cli {
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Cli, String> {
+        let mut args: VecDeque<String> = args.into_iter().collect();
+        let command = args.pop_front().unwrap_or_else(|| "help".to_string());
+        let mut positional = Vec::new();
+        let mut options = Vec::new();
+        while let Some(a) = args.pop_front() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    options.push((k.to_string(), Some(v.to_string())));
+                } else if BARE_FLAGS.contains(&name) {
+                    options.push((name.to_string(), None));
+                } else {
+                    let v = args
+                        .pop_front()
+                        .ok_or_else(|| format!("--{name} expects a value"))?;
+                    options.push((name.to_string(), Some(v)));
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Cli { command, positional, options })
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.options.iter().any(|(k, _)| k == flag)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>, String> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().map_err(|_| format!("--{key}: bad integer '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        self.get(key)
+            .map(|v| v.parse::<f64>().map_err(|_| format!("--{key}: bad number '{v}'")))
+            .transpose()
+    }
+
+    /// Build a [`Config`] from `--config`, common shorthand flags and
+    /// repeated `--set section.key=value` options.
+    pub fn build_config(&self) -> Result<Config, String> {
+        let mut cfg = match self.get("config") {
+            Some(path) => Config::from_file(path)?,
+            None => Config::default(),
+        };
+        if let Some(v) = self.get("variant") {
+            cfg.set("protocol.variant", v)?;
+        }
+        if let Some(n) = self.get("n") {
+            cfg.set("protocol.n", n)?;
+        }
+        if let Some(r) = self.get("rate") {
+            cfg.set("workload.rate", r)?;
+        }
+        if let Some(c) = self.get("clients") {
+            cfg.set("workload.clients", c)?;
+        }
+        if let Some(s) = self.get_f64("secs")? {
+            cfg.workload.duration_us = (s * 1e6) as u64;
+            cfg.workload.warmup_us = (cfg.workload.duration_us / 5).max(1);
+        }
+        if let Some(s) = self.get("seed") {
+            cfg.set("seed", s)?;
+        }
+        for (k, v) in &self.options {
+            if k == "set" {
+                let v = v.as_deref().ok_or("--set expects key=value")?;
+                let (key, value) =
+                    v.split_once('=').ok_or_else(|| format!("--set: expected key=value, got {v}"))?;
+                cfg.set(key.trim(), value.trim())?;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+pub const USAGE: &str = r#"epiraft — Raft with epidemic propagation (paper reproduction)
+
+USAGE:
+  epiraft run [--variant raft|v1|v2] [--n N] [--clients C] [--rate R]
+              [--secs S] [--seed X] [--config FILE] [--set k=v]... [--cold-start]
+      Run one simulated experiment and print the report.
+
+  epiraft fig <4|5|6|7> [--quick]
+      Regenerate a paper figure (tables + target/results/figN.json).
+
+  epiraft headline [--quick]
+      Reproduce the §6 headline claims (V1 ~6x max throughput,
+      V2 leader CPU ~1/3).
+
+  epiraft ablate <fanout|round|responses|coalesce|votes> [--quick]
+      Run an ablation study.
+
+  epiraft live [--variant v] [--n N] [--clients C] [--secs S]
+      Run the live thread-per-replica cluster (real time, real channels).
+
+  epiraft fleet [--n N] [--backend native|hlo] [--seed S]
+      Convergence study of the V2 commit structures (rounds vs fanout),
+      through the native or the AOT-compiled HLO/PJRT backend.
+
+  epiraft artifacts-check [--dir artifacts]
+      Load the AOT-compiled HLO kernels via PJRT and verify them against
+      the native implementation.
+
+  epiraft config-dump [--config FILE] [--set k=v]...
+      Print the fully resolved configuration.
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::raft::Variant;
+
+    fn parse(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let cli = parse("run --variant v2 --n 51 --rate 1000 --quick");
+        assert_eq!(cli.command, "run");
+        assert_eq!(cli.get("variant"), Some("v2"));
+        assert_eq!(cli.get("n"), Some("51"));
+        assert!(cli.has("quick"));
+    }
+
+    #[test]
+    fn equals_style_options() {
+        let cli = parse("fig 4 --set protocol.fanout=5 --set=network.loss=0.1");
+        assert_eq!(cli.positional, vec!["4"]);
+        let sets: Vec<&str> = cli
+            .options
+            .iter()
+            .filter(|(k, _)| k == "set")
+            .map(|(_, v)| v.as_deref().unwrap())
+            .collect();
+        assert_eq!(sets, vec!["protocol.fanout=5", "network.loss=0.1"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Cli::parse(vec!["run".into(), "--variant".into()]).is_err());
+    }
+
+    #[test]
+    fn build_config_applies_flags_and_sets() {
+        let cli = parse("run --variant v1 --n 21 --rate 500 --secs 2 --set protocol.fanout=7");
+        let cfg = cli.build_config().unwrap();
+        assert_eq!(cfg.protocol.variant, Variant::V1);
+        assert_eq!(cfg.protocol.n, 21);
+        assert_eq!(cfg.workload.rate, 500.0);
+        assert_eq!(cfg.workload.duration_us, 2_000_000);
+        assert_eq!(cfg.protocol.fanout, 7);
+    }
+
+    #[test]
+    fn build_config_rejects_bad_values() {
+        assert!(parse("run --variant paxos").build_config().is_err());
+        assert!(parse("run --set nope=1").build_config().is_err());
+        assert!(parse("run --set protocol.fanout").build_config().is_err());
+    }
+
+    #[test]
+    fn last_option_wins() {
+        let cli = parse("run --n 5 --n 9");
+        assert_eq!(cli.get("n"), Some("9"));
+    }
+}

@@ -1,0 +1,55 @@
+//! Per-thread CPU time via `clock_gettime(CLOCK_THREAD_CPUTIME_ID)` — the
+//! live-cluster analogue of the paper's per-core CPU measurements.
+
+/// CPU time consumed by the calling thread, in microseconds.
+pub fn thread_cpu_us() -> u64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: ts is a valid, writable timespec; the clock id is a constant.
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    if rc != 0 {
+        return 0;
+    }
+    ts.tv_sec as u64 * 1_000_000 + ts.tv_nsec as u64 / 1_000
+}
+
+/// CPU time consumed by the whole process, in microseconds.
+pub fn process_cpu_us() -> u64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_PROCESS_CPUTIME_ID, &mut ts) };
+    if rc != 0 {
+        return 0;
+    }
+    ts.tv_sec as u64 * 1_000_000 + ts.tv_nsec as u64 / 1_000
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_cpu_advances_with_work() {
+        let before = thread_cpu_us();
+        let mut acc = 0u64;
+        for i in 0..3_000_000u64 {
+            acc = acc.wrapping_add(std::hint::black_box(i));
+        }
+        std::hint::black_box(acc);
+        let after = thread_cpu_us();
+        assert!(after > before, "CPU clock must advance: {before} -> {after}");
+    }
+
+    #[test]
+    fn sleeping_consumes_little_cpu() {
+        let before = thread_cpu_us();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let after = thread_cpu_us();
+        assert!(after - before < 20_000, "sleep burned {}us CPU", after - before);
+    }
+
+    #[test]
+    fn process_cpu_at_least_thread_cpu() {
+        let t = thread_cpu_us();
+        let p = process_cpu_us();
+        assert!(p >= t);
+    }
+}

@@ -1,0 +1,326 @@
+//! Live cluster: the same sans-io [`Node`] core driven by real threads,
+//! real channels and the real clock — one OS thread per replica (the
+//! paper's one-core-per-replica deployment), `std::sync::mpsc` as the
+//! transport, client threads running the Paxi closed loop.
+//!
+//! The discrete-event simulator produces the paper's figures; this runtime
+//! proves the protocol core composes end-to-end outside the simulator, and
+//! powers the `live_cluster` example and the `epiraft live` subcommand.
+
+pub mod cpu;
+
+use crate::config::Config;
+use crate::kvstore::Command;
+use crate::raft::{Action, ClientResult, Message, Node, NodeId, RequestId, Time};
+use crate::util::histogram::Histogram;
+use crate::util::rng::Xoshiro256;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Input to a replica thread.
+enum Input {
+    Msg(Message),
+    Client { req: RequestId, cmd: Command, reply_to: Sender<(RequestId, ClientResult)> },
+    Stop,
+}
+
+/// Result of a live run.
+#[derive(Clone, Debug)]
+pub struct LiveReport {
+    pub variant: &'static str,
+    pub n: usize,
+    pub completed: u64,
+    pub throughput: f64,
+    pub mean_latency_us: f64,
+    pub p99_latency_us: u64,
+    /// Thread CPU seconds per replica over the run.
+    pub cpu_us: Vec<u64>,
+    pub wall_secs: f64,
+    pub commit_index: Vec<u64>,
+    pub logs_consistent: bool,
+}
+
+impl LiveReport {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "live cluster: variant={} n={} wall={:.2}s\n",
+            self.variant, self.n, self.wall_secs
+        ));
+        s.push_str(&format!(
+            "completed={} throughput={:.1} req/s latency mean={:.0}us p99={}us\n",
+            self.completed, self.throughput, self.mean_latency_us, self.p99_latency_us
+        ));
+        for (i, us) in self.cpu_us.iter().enumerate() {
+            s.push_str(&format!(
+                "replica {i}: cpu={:.1}% commit={}\n",
+                *us as f64 / (self.wall_secs * 1e6) * 100.0,
+                self.commit_index[i]
+            ));
+        }
+        s.push_str(&format!(
+            "log consistency: {}\n",
+            if self.logs_consistent { "OK" } else { "VIOLATED" }
+        ));
+        s
+    }
+}
+
+struct ReplicaHandle {
+    sender: Sender<Input>,
+    join: thread::JoinHandle<(Node, u64)>,
+}
+
+/// Spawn one replica's event loop.
+fn spawn_replica(
+    mut node: Node,
+    rx: Receiver<Input>,
+    peers: Vec<Option<Sender<Input>>>,
+    epoch: Instant,
+) -> thread::JoinHandle<(Node, u64)> {
+    thread::spawn(move || {
+        let mut reply_channels: HashMap<RequestId, Sender<(RequestId, ClientResult)>> =
+            HashMap::new();
+        let now_us = |epoch: &Instant| epoch.elapsed().as_micros() as Time;
+        loop {
+            let now = now_us(&epoch);
+            let deadline = node.next_deadline();
+            let wait = Duration::from_micros(deadline.saturating_sub(now).min(50_000).max(100));
+            let input = match rx.recv_timeout(wait) {
+                Ok(i) => Some(i),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break,
+            };
+            let now = now_us(&epoch);
+            let actions = match input {
+                Some(Input::Stop) => break,
+                Some(Input::Msg(m)) => node.on_message(now, m),
+                Some(Input::Client { req, cmd, reply_to }) => {
+                    reply_channels.insert(req, reply_to);
+                    node.client_request(now, req, cmd)
+                }
+                None => node.tick(now),
+            };
+            for a in actions {
+                match a {
+                    Action::Send { to, msg } => {
+                        if let Some(Some(tx)) = peers.get(to) {
+                            let _ = tx.send(Input::Msg(msg));
+                        }
+                    }
+                    Action::ClientReply { req, result } => {
+                        if let Some(tx) = reply_channels.remove(&req) {
+                            let _ = tx.send((req, result));
+                        }
+                    }
+                    Action::Committed { .. } | Action::RoleChanged { .. } => {}
+                }
+            }
+        }
+        (node, cpu::thread_cpu_us())
+    })
+}
+
+/// Run a live cluster per `cfg` and drive it with closed-loop clients.
+pub fn run_live(cfg: &Config) -> anyhow::Result<LiveReport> {
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let n = cfg.protocol.n;
+    let epoch = Instant::now();
+
+    // Build channels first so every replica can hold senders to all peers.
+    let mut senders: Vec<Sender<Input>> = Vec::with_capacity(n);
+    let mut receivers: Vec<Receiver<Input>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+
+    let mut handles: Vec<ReplicaHandle> = Vec::with_capacity(n);
+    for (id, rx) in receivers.into_iter().enumerate() {
+        let mut node = Node::new(id, cfg.protocol.clone(), cfg.seed ^ 0xC1u64 ^ id as u64);
+        let boot_actions = if id == 0 {
+            node.bootstrap_leader(0)
+        } else {
+            node.bootstrap_follower(0, 0);
+            Vec::new()
+        };
+        let peers: Vec<Option<Sender<Input>>> = senders
+            .iter()
+            .enumerate()
+            .map(|(j, tx)| if j == id { None } else { Some(tx.clone()) })
+            .collect();
+        // Deliver bootstrap sends (leader's first broadcast/round).
+        for a in boot_actions {
+            if let Action::Send { to, msg } = a {
+                let _ = senders[to].send(Input::Msg(msg));
+            }
+        }
+        let join = spawn_replica(node, rx, peers, epoch);
+        handles.push(ReplicaHandle { sender: senders[id].clone(), join });
+    }
+
+    // Clients.
+    let duration = Duration::from_micros(cfg.workload.duration_us);
+    let warmup = Duration::from_micros(cfg.workload.warmup_us);
+    let period_us: u64 = if cfg.workload.rate > 0.0 {
+        ((cfg.workload.clients as f64 / cfg.workload.rate) * 1e6) as u64
+    } else {
+        0
+    };
+    let replica_senders: Arc<Vec<Sender<Input>>> = Arc::new(senders.clone());
+    let mut client_joins = Vec::new();
+    for c in 0..cfg.workload.clients {
+        let senders = Arc::clone(&replica_senders);
+        let keys = cfg.workload.keys;
+        let wf = cfg.workload.write_fraction;
+        let seed = cfg.seed ^ 0xC11E47 ^ c as u64;
+        let nrep = n;
+        client_joins.push(thread::spawn(move || {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let mut hist = Histogram::default();
+            let mut completed = 0u64;
+            let (tx, rx) = channel::<(RequestId, ClientResult)>();
+            let start = Instant::now();
+            let mut target: NodeId = 0;
+            let mut next_req: RequestId = (c as RequestId) << 32;
+            while start.elapsed() < duration {
+                if period_us > 0 {
+                    // Rate throttle (coarse: sleep off the excess).
+                    let target_t = completed.saturating_mul(period_us);
+                    let elapsed = start.elapsed().as_micros() as u64;
+                    if target_t > elapsed {
+                        thread::sleep(Duration::from_micros(target_t - elapsed));
+                    }
+                }
+                next_req += 1;
+                let req = next_req;
+                let key = rng.next_below(keys.max(1));
+                let cmd = if rng.next_f64() < wf {
+                    Command::Put { key, value: rng.next_u64() }
+                } else {
+                    Command::Get { key }
+                };
+                let sent = Instant::now();
+                if senders[target]
+                    .send(Input::Client { req, cmd, reply_to: tx.clone() })
+                    .is_err()
+                {
+                    break;
+                }
+                // Wait for the reply (with redirect handling).
+                let mut done = false;
+                while !done {
+                    match rx.recv_timeout(Duration::from_millis(2000)) {
+                        Ok((rid, ClientResult::Ok(_))) if rid == req => {
+                            if start.elapsed() > warmup {
+                                completed += 1;
+                                hist.record(sent.elapsed().as_micros() as u64);
+                            }
+                            done = true;
+                        }
+                        Ok((rid, ClientResult::Redirect(hint))) if rid == req => {
+                            target = hint.unwrap_or((target + 1) % nrep);
+                            thread::sleep(Duration::from_millis(2));
+                            if senders[target]
+                                .send(Input::Client { req, cmd, reply_to: tx.clone() })
+                                .is_err()
+                            {
+                                done = true;
+                            }
+                        }
+                        Ok(_) => {} // stale reply from a previous request
+                        Err(_) => {
+                            // Timed out: rotate and retry.
+                            target = (target + 1) % nrep;
+                            done = true;
+                        }
+                    }
+                }
+            }
+            (completed, hist)
+        }));
+    }
+
+    // Wait out the run, then stop everything.
+    thread::sleep(duration + Duration::from_millis(100));
+    let mut completed = 0u64;
+    let mut hist = Histogram::default();
+    for j in client_joins {
+        let (c, h) = j.join().expect("client thread panicked");
+        completed += c;
+        hist.merge(&h);
+    }
+    for h in &handles {
+        let _ = h.sender.send(Input::Stop);
+    }
+    let mut cpu_us = Vec::with_capacity(n);
+    let mut nodes = Vec::with_capacity(n);
+    for h in handles {
+        let (node, cpu) = h.join.join().expect("replica thread panicked");
+        cpu_us.push(cpu);
+        nodes.push(node);
+    }
+
+    // Consistency: committed prefixes agree.
+    let reference = nodes.iter().max_by_key(|r| r.commit_index()).unwrap();
+    let mut logs_consistent = true;
+    for node in &nodes {
+        for idx in 1..=node.commit_index() {
+            if node.log().get(idx) != reference.log().get(idx) {
+                logs_consistent = false;
+            }
+        }
+    }
+
+    let wall_secs = epoch.elapsed().as_secs_f64();
+    let window = (cfg.workload.duration_us - cfg.workload.warmup_us) as f64 / 1e6;
+    Ok(LiveReport {
+        variant: cfg.protocol.variant.name(),
+        n,
+        completed,
+        throughput: completed as f64 / window,
+        mean_latency_us: hist.mean(),
+        p99_latency_us: hist.p99(),
+        cpu_us,
+        wall_secs,
+        commit_index: nodes.iter().map(|r| r.commit_index()).collect(),
+        logs_consistent,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::raft::Variant;
+
+    fn live_cfg(variant: Variant) -> Config {
+        let mut cfg = Config::default();
+        cfg.protocol.n = 3;
+        cfg.protocol.variant = variant;
+        // Shorten gossip cadence so a 1.2s run commits plenty.
+        cfg.protocol.round_interval_us = 2_000;
+        cfg.workload.clients = 2;
+        cfg.workload.duration_us = 1_200_000;
+        cfg.workload.warmup_us = 200_000;
+        cfg.seed = 7;
+        cfg
+    }
+
+    #[test]
+    fn live_cluster_serves_all_variants() {
+        for variant in Variant::ALL {
+            let report = run_live(&live_cfg(variant)).unwrap();
+            assert!(
+                report.completed > 20,
+                "{variant:?}: only {} requests completed",
+                report.completed
+            );
+            assert!(report.logs_consistent, "{variant:?}: log divergence");
+            assert!(report.commit_index.iter().all(|&c| c > 0), "{variant:?}: {:?}", report.commit_index);
+        }
+    }
+}

@@ -1,0 +1,508 @@
+//! Configuration system: typed config structs for every layer (protocol,
+//! network, CPU-cost model, workload, experiment control) plus an in-tree
+//! TOML-subset parser (`[section]` headers, `key = value` with integers,
+//! floats, booleans and strings — the subset our config files use).
+//!
+//! Priority: defaults < config file < CLI `--set section.key=value`.
+
+use crate::raft::types::Variant;
+use std::collections::BTreeMap;
+
+/// Protocol-level parameters (per node).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProtocolConfig {
+    /// Cluster size.
+    pub n: usize,
+    pub variant: Variant,
+    /// Gossip fanout `F` (Algorithm 1).
+    pub fanout: usize,
+    /// Period between gossip rounds while uncommitted entries exist (µs).
+    pub round_interval_us: u64,
+    /// Period between heartbeat-only rounds when fully committed (µs) —
+    /// the paper's "intervalo de tempo maior".
+    pub idle_round_interval_us: u64,
+    /// Classic Raft heartbeat interval (µs).
+    pub heartbeat_interval_us: u64,
+    /// Election timeout range (µs), randomized per node per arming.
+    pub election_timeout_min_us: u64,
+    pub election_timeout_max_us: u64,
+    /// Retransmit timeout for repair RPCs and votes (µs).
+    pub rpc_timeout_us: u64,
+    /// Cap on entries per repair RPC.
+    pub max_entries_per_rpc: usize,
+    /// Append a no-op on election (commits prior-term entries promptly).
+    pub leader_noop: bool,
+    /// Ablation: V2 followers also send success responses (default off —
+    /// DESIGN.md §4.3).
+    pub v2_success_responses: bool,
+    /// Ablation: coalescing window for classic Raft broadcasts (µs);
+    /// 0 = broadcast per client request (Paxi behaviour).
+    pub raft_coalesce_us: u64,
+    /// §6 future-work extension: collect votes by epidemic propagation
+    /// (candidates contact F peers; requests flood via relays). Only
+    /// effective for the gossip variants. Default off (as evaluated in the
+    /// paper).
+    pub gossip_votes: bool,
+}
+
+impl Default for ProtocolConfig {
+    fn default() -> Self {
+        Self {
+            n: 5,
+            variant: Variant::Raft,
+            fanout: 3,
+            round_interval_us: 5_000,
+            idle_round_interval_us: 50_000,
+            heartbeat_interval_us: 50_000,
+            election_timeout_min_us: 150_000,
+            election_timeout_max_us: 300_000,
+            rpc_timeout_us: 100_000,
+            max_entries_per_rpc: 1024,
+            leader_noop: true,
+            v2_success_responses: false,
+            raft_coalesce_us: 0,
+            gossip_votes: false,
+        }
+    }
+}
+
+impl ProtocolConfig {
+    pub fn for_variant(n: usize, variant: Variant) -> Self {
+        Self { n, variant, ..Self::default() }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 {
+            return Err("protocol.n must be >= 1".into());
+        }
+        if self.fanout == 0 {
+            return Err("protocol.fanout must be >= 1".into());
+        }
+        if self.election_timeout_min_us > self.election_timeout_max_us {
+            return Err("election timeout min > max".into());
+        }
+        if self.round_interval_us == 0 || self.heartbeat_interval_us == 0 {
+            return Err("intervals must be > 0".into());
+        }
+        if self.election_timeout_min_us <= self.heartbeat_interval_us
+            || (self.variant.is_gossip()
+                && self.election_timeout_min_us <= self.idle_round_interval_us)
+        {
+            return Err("election timeout must exceed heartbeat/idle-round interval".into());
+        }
+        if self.max_entries_per_rpc == 0 {
+            return Err("protocol.max_entries_per_rpc must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Simulated network parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkConfig {
+    /// Mean one-way latency (µs); the paper runs all replicas on one host
+    /// (loopback), so the default is small.
+    pub latency_mean_us: f64,
+    /// Latency jitter standard deviation (µs).
+    pub latency_stddev_us: f64,
+    /// Minimum latency floor (µs).
+    pub latency_min_us: u64,
+    /// Independent message-loss probability.
+    pub loss: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        Self { latency_mean_us: 120.0, latency_stddev_us: 30.0, latency_min_us: 20, loss: 0.0 }
+    }
+}
+
+/// Per-replica CPU cost model (µs of service time on the replica's
+/// dedicated core). Calibrated against Paxi's Go implementation profile:
+/// HTTP client handling is expensive, inter-replica messaging moderate,
+/// per-entry costs small. EXPERIMENTS.md §Calibration documents the fit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostConfig {
+    /// Client request receive+decode at the leader (Paxi HTTP server path).
+    pub client_recv_us: f64,
+    /// Client reply encode+send.
+    pub client_reply_us: f64,
+    /// Fixed cost to send one replica-to-replica message.
+    pub msg_send_us: f64,
+    /// Fixed cost to receive one replica-to-replica message.
+    pub msg_recv_us: f64,
+    /// Marginal cost per entry serialized into an outgoing message.
+    pub entry_send_us: f64,
+    /// Marginal cost per entry parsed from an incoming message (duplicates
+    /// included — deserialization happens before RoundLC filtering).
+    pub entry_recv_us: f64,
+    /// Cost to append one entry to the local log + state machine apply.
+    pub entry_apply_us: f64,
+    /// Cost to run Merge+Update on the V2 structures once.
+    pub merge_us: f64,
+    /// Cost of a timer fire / internal tick.
+    pub tick_us: f64,
+}
+
+impl Default for CostConfig {
+    fn default() -> Self {
+        Self {
+            client_recv_us: 400.0,
+            client_reply_us: 260.0,
+            msg_send_us: 32.0,
+            msg_recv_us: 55.0,
+            entry_send_us: 0.3,
+            entry_recv_us: 0.6,
+            entry_apply_us: 0.8,
+            merge_us: 2.5,
+            tick_us: 1.0,
+        }
+    }
+}
+
+/// Workload shape (the Paxi benchmark client).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    /// Number of concurrent closed-loop clients.
+    pub clients: usize,
+    /// Target aggregate request rate (req/s); 0 = unbounded closed loop
+    /// (each client fires as soon as the previous reply lands).
+    pub rate: f64,
+    /// Fraction of writes (rest are reads; all go through the log).
+    pub write_fraction: f64,
+    /// Number of distinct keys.
+    pub keys: u64,
+    /// Experiment duration (simulated µs).
+    pub duration_us: u64,
+    /// Warmup to discard (simulated µs).
+    pub warmup_us: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            clients: 10,
+            rate: 0.0,
+            write_fraction: 0.5,
+            keys: 1000,
+            duration_us: 10_000_000,
+            warmup_us: 1_000_000,
+        }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub protocol: ProtocolConfig,
+    pub network: NetworkConfig,
+    pub cost: CostConfig,
+    pub workload: WorkloadConfig,
+    pub seed: u64,
+}
+
+impl Config {
+    pub fn validate(&self) -> Result<(), String> {
+        self.protocol.validate()?;
+        if !(0.0..=1.0).contains(&self.network.loss) {
+            return Err("network.loss must be in [0,1]".into());
+        }
+        if !(0.0..=1.0).contains(&self.workload.write_fraction) {
+            return Err("workload.write_fraction must be in [0,1]".into());
+        }
+        if self.workload.clients == 0 {
+            return Err("workload.clients must be >= 1".into());
+        }
+        if self.workload.warmup_us >= self.workload.duration_us {
+            return Err("workload.warmup_us must be < duration_us".into());
+        }
+        Ok(())
+    }
+
+    /// Apply one `section.key=value` assignment (file lines and CLI --set).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let v = value.trim().trim_matches('"');
+        let parse_u64 =
+            |v: &str| v.parse::<u64>().map_err(|_| format!("bad integer for {key}: {v}"));
+        let parse_f64 =
+            |v: &str| v.parse::<f64>().map_err(|_| format!("bad float for {key}: {v}"));
+        let parse_bool = |v: &str| match v {
+            "true" | "1" | "yes" => Ok(true),
+            "false" | "0" | "no" => Ok(false),
+            _ => Err(format!("bad bool for {key}: {v}")),
+        };
+        match key {
+            "seed" => self.seed = parse_u64(v)?,
+            "protocol.n" => self.protocol.n = parse_u64(v)? as usize,
+            "protocol.variant" => {
+                self.protocol.variant =
+                    Variant::parse(v).ok_or_else(|| format!("unknown variant {v}"))?
+            }
+            "protocol.fanout" => self.protocol.fanout = parse_u64(v)? as usize,
+            "protocol.round_interval_us" => self.protocol.round_interval_us = parse_u64(v)?,
+            "protocol.idle_round_interval_us" => {
+                self.protocol.idle_round_interval_us = parse_u64(v)?
+            }
+            "protocol.heartbeat_interval_us" => {
+                self.protocol.heartbeat_interval_us = parse_u64(v)?
+            }
+            "protocol.election_timeout_min_us" => {
+                self.protocol.election_timeout_min_us = parse_u64(v)?
+            }
+            "protocol.election_timeout_max_us" => {
+                self.protocol.election_timeout_max_us = parse_u64(v)?
+            }
+            "protocol.rpc_timeout_us" => self.protocol.rpc_timeout_us = parse_u64(v)?,
+            "protocol.max_entries_per_rpc" => {
+                self.protocol.max_entries_per_rpc = parse_u64(v)? as usize
+            }
+            "protocol.leader_noop" => self.protocol.leader_noop = parse_bool(v)?,
+            "protocol.v2_success_responses" => {
+                self.protocol.v2_success_responses = parse_bool(v)?
+            }
+            "protocol.raft_coalesce_us" => self.protocol.raft_coalesce_us = parse_u64(v)?,
+            "protocol.gossip_votes" => self.protocol.gossip_votes = parse_bool(v)?,
+            "network.latency_mean_us" => self.network.latency_mean_us = parse_f64(v)?,
+            "network.latency_stddev_us" => self.network.latency_stddev_us = parse_f64(v)?,
+            "network.latency_min_us" => self.network.latency_min_us = parse_u64(v)?,
+            "network.loss" => self.network.loss = parse_f64(v)?,
+            "cost.client_recv_us" => self.cost.client_recv_us = parse_f64(v)?,
+            "cost.client_reply_us" => self.cost.client_reply_us = parse_f64(v)?,
+            "cost.msg_send_us" => self.cost.msg_send_us = parse_f64(v)?,
+            "cost.msg_recv_us" => self.cost.msg_recv_us = parse_f64(v)?,
+            "cost.entry_send_us" => self.cost.entry_send_us = parse_f64(v)?,
+            "cost.entry_recv_us" => self.cost.entry_recv_us = parse_f64(v)?,
+            "cost.entry_apply_us" => self.cost.entry_apply_us = parse_f64(v)?,
+            "cost.merge_us" => self.cost.merge_us = parse_f64(v)?,
+            "cost.tick_us" => self.cost.tick_us = parse_f64(v)?,
+            "workload.clients" => self.workload.clients = parse_u64(v)? as usize,
+            "workload.rate" => self.workload.rate = parse_f64(v)?,
+            "workload.write_fraction" => self.workload.write_fraction = parse_f64(v)?,
+            "workload.keys" => self.workload.keys = parse_u64(v)?,
+            "workload.duration_us" => self.workload.duration_us = parse_u64(v)?,
+            "workload.warmup_us" => self.workload.warmup_us = parse_u64(v)?,
+            _ => return Err(format!("unknown config key: {key}")),
+        }
+        Ok(())
+    }
+
+    /// Parse a TOML-subset document into assignments over defaults.
+    pub fn from_toml(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        for (key, value) in parse_toml_subset(text)? {
+            cfg.set(&key, &value)?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Config, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_toml(&text)
+    }
+}
+
+/// Parse `[section]` + `key = value` lines into dotted assignments.
+/// Comments (`#`), blank lines and inline comments are handled.
+pub fn parse_toml_subset(text: &str) -> Result<Vec<(String, String)>, String> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: malformed section header", lineno + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        out.push((key, v.trim().to_string()));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect quotes so '#' inside strings survives.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Named presets matching the paper's experimental setups.
+pub mod presets {
+    use super::*;
+
+    /// §4.1: 51 replicas, Paxi client, stable leader.
+    pub fn paper_cluster(variant: Variant) -> Config {
+        let mut cfg = Config::default();
+        cfg.protocol = ProtocolConfig::for_variant(51, variant);
+        cfg
+    }
+
+    /// Fig 4: 100 concurrent clients with a target aggregate rate.
+    pub fn fig4(variant: Variant, rate: f64) -> Config {
+        let mut cfg = paper_cluster(variant);
+        cfg.workload.clients = 100;
+        cfg.workload.rate = rate;
+        cfg
+    }
+
+    /// Fig 5/6: 10 closed-loop clients.
+    pub fn fig56(variant: Variant, n: usize, rate: f64) -> Config {
+        let mut cfg = paper_cluster(variant);
+        cfg.protocol.n = n;
+        cfg.workload.clients = 10;
+        cfg.workload.rate = rate;
+        cfg
+    }
+}
+
+/// Map of every settable key → current value, for `epiraft config-dump`.
+pub fn dump(cfg: &Config) -> BTreeMap<String, String> {
+    let mut m = BTreeMap::new();
+    let p = &cfg.protocol;
+    m.insert("seed".into(), cfg.seed.to_string());
+    m.insert("protocol.n".into(), p.n.to_string());
+    m.insert("protocol.variant".into(), p.variant.name().into());
+    m.insert("protocol.fanout".into(), p.fanout.to_string());
+    m.insert("protocol.round_interval_us".into(), p.round_interval_us.to_string());
+    m.insert("protocol.idle_round_interval_us".into(), p.idle_round_interval_us.to_string());
+    m.insert("protocol.heartbeat_interval_us".into(), p.heartbeat_interval_us.to_string());
+    m.insert("protocol.election_timeout_min_us".into(), p.election_timeout_min_us.to_string());
+    m.insert("protocol.election_timeout_max_us".into(), p.election_timeout_max_us.to_string());
+    m.insert("protocol.rpc_timeout_us".into(), p.rpc_timeout_us.to_string());
+    m.insert("protocol.max_entries_per_rpc".into(), p.max_entries_per_rpc.to_string());
+    m.insert("protocol.leader_noop".into(), p.leader_noop.to_string());
+    m.insert("protocol.v2_success_responses".into(), p.v2_success_responses.to_string());
+    m.insert("protocol.raft_coalesce_us".into(), p.raft_coalesce_us.to_string());
+    m.insert("protocol.gossip_votes".into(), p.gossip_votes.to_string());
+    m.insert("network.latency_mean_us".into(), cfg.network.latency_mean_us.to_string());
+    m.insert("network.latency_stddev_us".into(), cfg.network.latency_stddev_us.to_string());
+    m.insert("network.latency_min_us".into(), cfg.network.latency_min_us.to_string());
+    m.insert("network.loss".into(), cfg.network.loss.to_string());
+    m.insert("cost.client_recv_us".into(), cfg.cost.client_recv_us.to_string());
+    m.insert("cost.client_reply_us".into(), cfg.cost.client_reply_us.to_string());
+    m.insert("cost.msg_send_us".into(), cfg.cost.msg_send_us.to_string());
+    m.insert("cost.msg_recv_us".into(), cfg.cost.msg_recv_us.to_string());
+    m.insert("cost.entry_send_us".into(), cfg.cost.entry_send_us.to_string());
+    m.insert("cost.entry_recv_us".into(), cfg.cost.entry_recv_us.to_string());
+    m.insert("cost.entry_apply_us".into(), cfg.cost.entry_apply_us.to_string());
+    m.insert("cost.merge_us".into(), cfg.cost.merge_us.to_string());
+    m.insert("cost.tick_us".into(), cfg.cost.tick_us.to_string());
+    m.insert("workload.clients".into(), cfg.workload.clients.to_string());
+    m.insert("workload.rate".into(), cfg.workload.rate.to_string());
+    m.insert("workload.write_fraction".into(), cfg.workload.write_fraction.to_string());
+    m.insert("workload.keys".into(), cfg.workload.keys.to_string());
+    m.insert("workload.duration_us".into(), cfg.workload.duration_us.to_string());
+    m.insert("workload.warmup_us".into(), cfg.workload.warmup_us.to_string());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+        for v in Variant::ALL {
+            presets::paper_cluster(v).validate().unwrap();
+            presets::fig4(v, 1000.0).validate().unwrap();
+            presets::fig56(v, 21, 500.0).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn toml_subset_parsing() {
+        let text = r#"
+# experiment config
+seed = 7
+
+[protocol]
+n = 51            # replicas
+variant = "v2"
+fanout = 4
+
+[workload]
+clients = 100
+rate = 2500.5
+"#;
+        let cfg = Config::from_toml(text).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.protocol.n, 51);
+        assert_eq!(cfg.protocol.variant, Variant::V2);
+        assert_eq!(cfg.protocol.fanout, 4);
+        assert_eq!(cfg.workload.clients, 100);
+        assert_eq!(cfg.workload.rate, 2500.5);
+        // Untouched keys keep defaults.
+        assert_eq!(cfg.network.loss, 0.0);
+    }
+
+    #[test]
+    fn set_rejects_unknown_and_malformed() {
+        let mut cfg = Config::default();
+        assert!(cfg.set("protocol.bogus", "1").is_err());
+        assert!(cfg.set("protocol.n", "abc").is_err());
+        assert!(cfg.set("protocol.variant", "paxos").is_err());
+        assert!(cfg.set("protocol.leader_noop", "maybe").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut cfg = Config::default();
+        cfg.protocol.n = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = Config::default();
+        cfg.protocol.election_timeout_min_us = 1;
+        assert!(cfg.validate().is_err(), "election timeout below heartbeat");
+
+        let mut cfg = Config::default();
+        cfg.network.loss = 1.5;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = Config::default();
+        cfg.workload.warmup_us = cfg.workload.duration_us;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn dump_covers_set_roundtrip() {
+        let cfg = presets::fig4(Variant::V1, 1234.0);
+        let dumped = dump(&cfg);
+        let mut rebuilt = Config::default();
+        for (k, v) in &dumped {
+            rebuilt.set(k, v).unwrap();
+        }
+        assert_eq!(rebuilt, cfg);
+    }
+
+    #[test]
+    fn inline_comment_and_quotes() {
+        let pairs = parse_toml_subset("name = \"a # b\" # trailing").unwrap();
+        assert_eq!(pairs[0].1, "\"a # b\"");
+    }
+
+    #[test]
+    fn malformed_section_errors() {
+        assert!(parse_toml_subset("[oops").is_err());
+        assert!(parse_toml_subset("keynovalue").is_err());
+    }
+}

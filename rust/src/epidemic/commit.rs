@@ -1,0 +1,379 @@
+//! §3.2 — the decentralised-commit data structures (Version 2).
+//!
+//! Three gossiped variables per process:
+//!
+//! * `bitmap`    — one bit per process; bit `i` set means "process `i`'s log
+//!                 holds the entry at `next_commit` and the term of its last
+//!                 entry equals the current term" (the vote for advancing).
+//! * `max_commit` — highest index known to be replicated by a majority
+//!                  (upper bound for `commit_index`).
+//! * `next_commit` — index currently being voted on.
+//!
+//! Invariant (paper, §3.2): `next_commit > max_commit` before and after
+//! `Update` and `Merge`. Property tests in `rust/tests/` pin this under
+//! arbitrary interleavings.
+//!
+//! Ambiguity resolution (DESIGN.md §4): Algorithm 3's pseudocode uses `<`
+//! at lines 2 and 5 where the prose says "menor **ou igual**"; we implement
+//! `<=`, which is required to restore the invariant when a received
+//! `max_commit'` equals the local `next_commit`.
+
+use crate::raft::types::{LogIndex, Term};
+use crate::util::bitset::Bitmap;
+
+/// A process's epidemic commit state (also the wire payload — the same
+/// triple is carried inside gossiped AppendEntries).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EpidemicState {
+    pub bitmap: Bitmap,
+    pub max_commit: LogIndex,
+    pub next_commit: LogIndex,
+}
+
+/// View of the local log the algorithms need: the index and term of the
+/// last entry, plus the current term. Decouples the algebra from `LogStore`
+/// so the kernel oracle, property tests and HLO path share one definition.
+#[derive(Clone, Copy, Debug)]
+pub struct LogView {
+    pub last_index: LogIndex,
+    pub last_term: Term,
+    pub current_term: Term,
+}
+
+impl EpidemicState {
+    /// Fresh state for an `n`-process cluster: nothing confirmed, voting
+    /// for index 1.
+    pub fn new(n: usize) -> Self {
+        Self { bitmap: Bitmap::zeros(n), max_commit: 0, next_commit: 1 }
+    }
+
+    pub fn n(&self) -> usize {
+        self.bitmap.len()
+    }
+
+    /// Check the paper's invariant.
+    pub fn invariant_holds(&self) -> bool {
+        self.next_commit > self.max_commit
+    }
+
+    /// Prose rule (§3.2): set own bit when the local log holds the entry at
+    /// `next_commit` **and** the last entry's term is the current term.
+    /// Returns true if the bit was (newly or already) eligible.
+    pub fn maybe_set_own_bit(&mut self, me: usize, log: LogView) -> bool {
+        if log.last_index >= self.next_commit && log.last_term == log.current_term {
+            self.bitmap.set(me);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// One pass of Algorithm 2 — `Update`: if the bitmap shows a majority,
+    /// advance `max_commit` to `next_commit`, reset the bitmap and pick the
+    /// next index to vote on from the local log state (lines 1–7); then
+    /// apply the own-bit rule (line 8 is its special case). Returns whether
+    /// `max_commit` advanced.
+    ///
+    /// This single-pass form is the exact semantics of the AOT-compiled
+    /// `quorum_update` kernel (`python/compile/model.py`); the native and
+    /// HLO paths are verified bit-identical in `rust/tests/` and
+    /// `epiraft artifacts-check`.
+    pub fn update_step(&mut self, me: usize, majority: usize, log: LogView) -> bool {
+        let fired = self.bitmap.has_majority(majority);
+        if fired {
+            self.max_commit = self.next_commit; // line 2
+            self.bitmap.clear(); // line 3
+            // line 4: next_commit at/ahead of log end, or last term stale
+            if self.next_commit >= log.last_index || log.last_term != log.current_term {
+                self.next_commit += 1; // line 5
+            } else {
+                self.next_commit = log.last_index; // line 7
+            }
+        }
+        // Own-bit rule (§3.2 prose; line 8 when `fired`).
+        self.maybe_set_own_bit(me, log);
+        if fired {
+            debug_assert!(self.invariant_holds());
+        }
+        fired
+    }
+
+    /// Algorithm 2 iterated to a fixed point: a single merge can reveal
+    /// several advances (e.g. n = 1, where the own bit alone is a
+    /// majority). Returns how many times `max_commit` advanced.
+    pub fn update(&mut self, me: usize, majority: usize, log: LogView) -> usize {
+        let mut advances = 0;
+        while self.update_step(me, majority, log) {
+            advances += 1;
+        }
+        advances
+    }
+
+    /// Algorithm 3 — `Merge`: fold a received `(bitmap', max_commit',
+    /// next_commit')` into the local state.
+    pub fn merge(&mut self, other: &EpidemicState) {
+        // line 1: take the larger max_commit.
+        self.max_commit = self.max_commit.max(other.max_commit);
+        // lines 2-4: votes for a >= index certify ours; OR them in.
+        if self.next_commit <= other.next_commit {
+            self.bitmap.or_with(&other.bitmap);
+        }
+        // lines 5-7: our vote target is already majority-confirmed — adopt
+        // the more advanced received vote wholesale.
+        if self.next_commit <= self.max_commit {
+            self.bitmap = other.bitmap.clone();
+            self.next_commit = other.next_commit;
+        }
+        // Restore the invariant in the corner where the received state was
+        // itself stale (other.next_commit <= merged max_commit): never vote
+        // below max_commit + 1.
+        if self.next_commit <= self.max_commit {
+            self.bitmap.clear();
+            self.next_commit = self.max_commit + 1;
+        }
+        debug_assert!(self.invariant_holds());
+    }
+
+    /// §3.2 election rule: on starting an election or learning of a new
+    /// term, reset the vote — a new leader may own a shorter log than the
+    /// index being voted on.
+    pub fn reset_for_new_term(&mut self) {
+        self.bitmap.clear();
+        self.next_commit = self.max_commit + 1;
+        debug_assert!(self.invariant_holds());
+    }
+
+    /// Follower commit rule (§3.2): `commit_index` may advance to
+    /// `min(last_index, max_commit)` when the last entry's term equals the
+    /// current term. Returns the allowed commit bound (callers take the max
+    /// with their current commit_index).
+    pub fn commit_bound(&self, log: LogView) -> LogIndex {
+        if log.last_term == log.current_term {
+            log.last_index.min(self.max_commit)
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lv(last_index: LogIndex, last_term: Term, current_term: Term) -> LogView {
+        LogView { last_index, last_term, current_term }
+    }
+
+    #[test]
+    fn fresh_state_invariant() {
+        let s = EpidemicState::new(51);
+        assert!(s.invariant_holds());
+        assert_eq!(s.max_commit, 0);
+        assert_eq!(s.next_commit, 1);
+    }
+
+    #[test]
+    fn own_bit_requires_entry_and_current_term() {
+        let mut s = EpidemicState::new(5);
+        // Log too short.
+        assert!(!s.maybe_set_own_bit(0, lv(0, 0, 1)));
+        // Entry present but last term stale.
+        assert!(!s.maybe_set_own_bit(0, lv(3, 1, 2)));
+        // Both conditions hold.
+        assert!(s.maybe_set_own_bit(0, lv(1, 2, 2)));
+        assert!(s.bitmap.get(0));
+    }
+
+    #[test]
+    fn update_advances_on_majority() {
+        let mut s = EpidemicState::new(5);
+        for i in 0..3 {
+            s.bitmap.set(i);
+        }
+        // Log has 4 entries at current term: next_commit jumps to last_index.
+        let adv = s.update(0, 3, lv(4, 1, 1));
+        assert_eq!(adv, 1);
+        assert_eq!(s.max_commit, 1);
+        assert_eq!(s.next_commit, 4);
+        assert!(s.bitmap.get(0), "line 8: own bit re-set");
+        assert_eq!(s.bitmap.count(), 1);
+        assert!(s.invariant_holds());
+    }
+
+    #[test]
+    fn update_without_majority_is_noop() {
+        let mut s = EpidemicState::new(5);
+        s.bitmap.set(0);
+        s.bitmap.set(1);
+        let before = s.clone();
+        assert_eq!(s.update(0, 3, lv(4, 1, 1)), 0);
+        assert_eq!(s, before);
+    }
+
+    #[test]
+    fn update_line5_when_log_short_or_stale() {
+        // next_commit >= last_index: increment path.
+        let mut s = EpidemicState::new(5);
+        for i in 0..3 {
+            s.bitmap.set(i);
+        }
+        s.next_commit = 4;
+        s.update(0, 3, lv(4, 1, 1));
+        assert_eq!(s.max_commit, 4);
+        assert_eq!(s.next_commit, 5);
+        assert!(!s.bitmap.get(0), "own bit not set when log lacks the entry");
+
+        // Stale last term: increment path even with a longer log.
+        let mut s = EpidemicState::new(5);
+        for i in 0..3 {
+            s.bitmap.set(i);
+        }
+        s.update(0, 3, lv(9, 1, 2));
+        assert_eq!(s.next_commit, 2);
+        assert!(!s.bitmap.get(0));
+    }
+
+    #[test]
+    fn single_node_majority_loops() {
+        // n=1: own vote is a majority; update must advance but terminate.
+        let mut s = EpidemicState::new(1);
+        s.maybe_set_own_bit(0, lv(3, 1, 1));
+        let adv = s.update(0, 1, lv(3, 1, 1));
+        assert!(adv >= 1);
+        assert!(s.invariant_holds());
+        assert!(s.max_commit >= 1);
+    }
+
+    #[test]
+    fn merge_takes_max_and_ors_aligned_bitmaps() {
+        let mut a = EpidemicState::new(5);
+        a.bitmap.set(0);
+        a.next_commit = 3;
+        a.max_commit = 1;
+
+        let mut b = EpidemicState::new(5);
+        b.bitmap.set(1);
+        b.bitmap.set(2);
+        b.next_commit = 4; // votes for >= index: OR allowed
+        b.max_commit = 2;
+
+        a.merge(&b);
+        assert_eq!(a.max_commit, 2);
+        assert_eq!(a.next_commit, 3);
+        assert_eq!(a.bitmap.count(), 3);
+        assert!(a.invariant_holds());
+    }
+
+    #[test]
+    fn merge_ignores_bitmap_of_lower_vote() {
+        let mut a = EpidemicState::new(5);
+        a.next_commit = 5;
+        a.max_commit = 2;
+        a.bitmap.set(0);
+
+        let mut b = EpidemicState::new(5);
+        b.next_commit = 3; // lower vote: its bits certify less — no OR
+        b.max_commit = 2;
+        b.bitmap.set(3);
+
+        a.merge(&b);
+        assert_eq!(a.bitmap.count(), 1);
+        assert!(a.bitmap.get(0));
+    }
+
+    #[test]
+    fn merge_adopts_received_when_local_vote_stale() {
+        let mut a = EpidemicState::new(5);
+        a.next_commit = 3;
+        a.max_commit = 1;
+        a.bitmap.set(0);
+
+        let mut b = EpidemicState::new(5);
+        b.max_commit = 4; // majority already confirmed past a.next_commit
+        b.next_commit = 6;
+        b.bitmap.set(2);
+
+        a.merge(&b);
+        assert_eq!(a.max_commit, 4);
+        assert_eq!(a.next_commit, 6);
+        assert!(a.bitmap.get(2) && !a.bitmap.get(0));
+        assert!(a.invariant_holds());
+    }
+
+    #[test]
+    fn merge_equal_boundary_restores_invariant() {
+        // Received max_commit' == local next_commit: pseudocode's strict `<`
+        // would leave next_commit == max_commit; our `<=` adopts and keeps
+        // the invariant.
+        let mut a = EpidemicState::new(5);
+        a.next_commit = 3;
+        a.max_commit = 2;
+
+        let mut b = EpidemicState::new(5);
+        b.max_commit = 3;
+        b.next_commit = 4;
+
+        a.merge(&b);
+        assert!(a.invariant_holds());
+        assert_eq!(a.max_commit, 3);
+        assert_eq!(a.next_commit, 4);
+    }
+
+    #[test]
+    fn merge_with_stale_received_next_commit_keeps_invariant() {
+        // other.next_commit <= merged max_commit — the final guard fires.
+        let mut a = EpidemicState::new(5);
+        a.next_commit = 3;
+        a.max_commit = 2;
+
+        let mut b = EpidemicState::new(5);
+        b.max_commit = 7;
+        b.next_commit = 3; // stale relative to its own max? (can't happen
+                           // for honest peers, but loss/reorder can deliver
+                           // an old message after a newer one)
+        a.merge(&b);
+        assert!(a.invariant_holds());
+        assert_eq!(a.max_commit, 7);
+        assert_eq!(a.next_commit, 8);
+    }
+
+    #[test]
+    fn merge_is_idempotent() {
+        let mut a = EpidemicState::new(7);
+        a.bitmap.set(1);
+        a.next_commit = 2;
+        let mut b = EpidemicState::new(7);
+        b.bitmap.set(3);
+        b.next_commit = 5;
+        b.max_commit = 1;
+        a.merge(&b);
+        let once = a.clone();
+        a.merge(&b);
+        assert_eq!(a, once);
+    }
+
+    #[test]
+    fn reset_for_new_term() {
+        let mut s = EpidemicState::new(5);
+        s.max_commit = 7;
+        s.next_commit = 12;
+        s.bitmap.set(1);
+        s.bitmap.set(2);
+        s.reset_for_new_term();
+        assert_eq!(s.next_commit, 8);
+        assert_eq!(s.bitmap.count(), 0);
+        assert!(s.invariant_holds());
+    }
+
+    #[test]
+    fn commit_bound_respects_term_rule() {
+        let mut s = EpidemicState::new(5);
+        s.max_commit = 10;
+        // Last term == current term: bounded by shorter log.
+        assert_eq!(s.commit_bound(lv(7, 3, 3)), 7);
+        // Longer log: bounded by max_commit.
+        assert_eq!(s.commit_bound(lv(15, 3, 3)), 10);
+        // Stale last term: no commit via epidemic path.
+        assert_eq!(s.commit_bound(lv(15, 2, 3)), 0);
+    }
+}

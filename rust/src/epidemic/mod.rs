@@ -1,0 +1,12 @@
+//! The paper's contribution: epidemic propagation machinery layered on
+//! Raft — permutation gossip rounds (§3.1, Algorithm 1), the `RoundLC`
+//! logical clock (§3.1), and the decentralised-commit structures with
+//! `Update`/`Merge` (§3.2, Algorithms 2–3).
+
+pub mod commit;
+pub mod permutation;
+pub mod round;
+
+pub use commit::{EpidemicState, LogView};
+pub use permutation::Permutation;
+pub use round::{RoundClass, RoundClock};

@@ -1,0 +1,158 @@
+//! Algorithm 1 — epidemic round over a peer permutation.
+//!
+//! Each process holds a random permutation `u` of every other process id
+//! and a cursor `c`. A round sends the message to the next `F` (fanout)
+//! targets `u[(c+i) mod |u|]`, then advances `c` by `F`. Walking a
+//! permutation (instead of sampling independently) makes coverage
+//! deterministic: any window of ⌈(n-1)/F⌉ consecutive rounds contacts every
+//! peer — the Mutable-Consensus trick [Pereira & Oliveira 2004] the paper
+//! reuses.
+//!
+//! Note: the paper's pseudocode writes `u[(c+i) mod F]`, which would only
+//! ever address the first `F` slots; `mod |u|` is the evidently intended
+//! behaviour (the text says the permutation is walked *circularly*), and is
+//! what we implement. Recorded as ambiguity §4 in DESIGN.md.
+
+use crate::raft::types::NodeId;
+use crate::util::rng::Xoshiro256;
+
+/// Cyclic permutation walker with fanout.
+#[derive(Clone, Debug)]
+pub struct Permutation {
+    targets: Vec<NodeId>,
+    cursor: usize,
+}
+
+impl Permutation {
+    /// Build a shuffled permutation of `0..n` excluding `me`.
+    pub fn new(n: usize, me: NodeId, rng: &mut Xoshiro256) -> Self {
+        assert!(n >= 1 && me < n);
+        let mut targets: Vec<NodeId> = (0..n).filter(|&i| i != me).collect();
+        rng.shuffle(&mut targets);
+        Self { targets, cursor: 0 }
+    }
+
+    /// The next `fanout` targets; advances the cursor (one "Ronda").
+    pub fn next_round(&mut self, fanout: usize) -> Vec<NodeId> {
+        let len = self.targets.len();
+        if len == 0 {
+            return Vec::new();
+        }
+        let k = fanout.min(len);
+        let out: Vec<NodeId> = (0..k)
+            .map(|i| self.targets[(self.cursor + i) % len])
+            .collect();
+        self.cursor = (self.cursor + k) % len;
+        out
+    }
+
+    /// Peek without advancing (used by tests and the fleet simulator).
+    pub fn peek_round(&self, fanout: usize) -> Vec<NodeId> {
+        let len = self.targets.len();
+        if len == 0 {
+            return Vec::new();
+        }
+        let k = fanout.min(len);
+        (0..k).map(|i| self.targets[(self.cursor + i) % len]).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Full target list in permutation order (diagnostics).
+    pub fn order(&self) -> &[NodeId] {
+        &self.targets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn excludes_self_and_covers_everyone() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let p = Permutation::new(51, 7, &mut rng);
+        assert_eq!(p.len(), 50);
+        let mut seen: Vec<NodeId> = p.order().to_vec();
+        seen.sort_unstable();
+        let expect: Vec<NodeId> = (0..51).filter(|&i| i != 7).collect();
+        assert_eq!(seen, expect);
+    }
+
+    #[test]
+    fn rounds_cover_all_peers_each_cycle() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let mut p = Permutation::new(10, 0, &mut rng);
+        let fanout = 3;
+        // One full cycle = ceil(9/3) = 3 rounds covers all 9 peers.
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..3 {
+            for t in p.next_round(fanout) {
+                seen.insert(t);
+            }
+        }
+        assert_eq!(seen.len(), 9);
+    }
+
+    #[test]
+    fn cursor_wraps_circularly() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mut p = Permutation::new(5, 2, &mut rng); // 4 peers
+        let r1 = p.next_round(3);
+        let r2 = p.next_round(3);
+        assert_eq!(r1.len(), 3);
+        assert_eq!(r2.len(), 3);
+        // Rounds 1+2 = 6 sends over 4 peers: every peer hit at least once.
+        let mut all = r1.clone();
+        all.extend(&r2);
+        let uniq: std::collections::HashSet<_> = all.iter().collect();
+        assert_eq!(uniq.len(), 4);
+        assert_eq!(p.cursor(), 6 % 4);
+    }
+
+    #[test]
+    fn fanout_larger_than_peers_is_clamped() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let mut p = Permutation::new(3, 1, &mut rng); // 2 peers
+        let r = p.next_round(10);
+        assert_eq!(r.len(), 2);
+        let uniq: std::collections::HashSet<_> = r.iter().collect();
+        assert_eq!(uniq.len(), 2, "no duplicate targets within a round");
+    }
+
+    #[test]
+    fn single_node_cluster_has_no_targets() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut p = Permutation::new(1, 0, &mut rng);
+        assert!(p.is_empty());
+        assert!(p.next_round(3).is_empty());
+    }
+
+    #[test]
+    fn peek_does_not_advance() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let mut p = Permutation::new(8, 0, &mut rng);
+        let peek = p.peek_round(2);
+        let next = p.next_round(2);
+        assert_eq!(peek, next);
+    }
+
+    #[test]
+    fn different_seeds_different_orders() {
+        let mut r1 = Xoshiro256::seed_from_u64(7);
+        let mut r2 = Xoshiro256::seed_from_u64(8);
+        let p1 = Permutation::new(20, 0, &mut r1);
+        let p2 = Permutation::new(20, 0, &mut r2);
+        assert_ne!(p1.order(), p2.order());
+    }
+}

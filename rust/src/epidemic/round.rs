@@ -1,0 +1,114 @@
+//! §3.1 — `RoundLC`, the per-term gossip-round logical clock.
+//!
+//! The leader increments `RoundLC` when it starts a round and stamps every
+//! gossiped AppendEntries with it; processes track the highest round seen
+//! in the current term, so duplicates delivered by the epidemic relay are
+//! recognised and dropped (no re-processing, no re-forwarding). The clock
+//! resets to zero when the term changes.
+
+use crate::raft::types::Term;
+
+/// Round logical clock, scoped to a term.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RoundClock {
+    term: Term,
+    round: u64,
+}
+
+/// Classification of an incoming gossip round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundClass {
+    /// First time we see this round (higher than any seen this term):
+    /// process, respond (variant-dependent) and relay. Counts as a leader
+    /// heartbeat.
+    Fresh,
+    /// Round already seen (duplicate delivery through another gossip path):
+    /// drop silently.
+    Duplicate,
+}
+
+impl RoundClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Highest round observed in `term` (0 if none / other term).
+    pub fn current(&self, term: Term) -> u64 {
+        if self.term == term { self.round } else { 0 }
+    }
+
+    /// Leader side: start the next round in `term`, returning its number.
+    pub fn start_round(&mut self, term: Term) -> u64 {
+        if self.term != term {
+            self.term = term;
+            self.round = 0;
+        }
+        self.round += 1;
+        self.round
+    }
+
+    /// Receiver side: observe round `round` of `term`. Advances the clock
+    /// when fresh. (Term regressions are filtered by Raft's term checks
+    /// before this is called.)
+    pub fn observe(&mut self, term: Term, round: u64) -> RoundClass {
+        if self.term != term {
+            // New term: reset (paper: "repõe o seu RoundLC a zero quando o
+            // mandato muda").
+            self.term = term;
+            self.round = 0;
+        }
+        if round > self.round {
+            self.round = round;
+            RoundClass::Fresh
+        } else {
+            RoundClass::Duplicate
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leader_rounds_monotone() {
+        let mut c = RoundClock::new();
+        assert_eq!(c.start_round(3), 1);
+        assert_eq!(c.start_round(3), 2);
+        assert_eq!(c.start_round(3), 3);
+        assert_eq!(c.current(3), 3);
+    }
+
+    #[test]
+    fn term_change_resets() {
+        let mut c = RoundClock::new();
+        c.start_round(1);
+        c.start_round(1);
+        assert_eq!(c.start_round(2), 1, "new term restarts at round 1");
+        assert_eq!(c.current(1), 0, "old-term rounds no longer visible");
+    }
+
+    #[test]
+    fn observe_fresh_then_duplicate() {
+        let mut c = RoundClock::new();
+        assert_eq!(c.observe(5, 1), RoundClass::Fresh);
+        assert_eq!(c.observe(5, 1), RoundClass::Duplicate);
+        assert_eq!(c.observe(5, 3), RoundClass::Fresh);
+        // Out-of-order older round: duplicate.
+        assert_eq!(c.observe(5, 2), RoundClass::Duplicate);
+    }
+
+    #[test]
+    fn observe_new_term_fresh_even_if_lower_round() {
+        let mut c = RoundClock::new();
+        c.observe(5, 9);
+        assert_eq!(c.observe(6, 1), RoundClass::Fresh);
+        assert_eq!(c.current(6), 1);
+    }
+
+    #[test]
+    fn round_zero_never_fresh() {
+        let mut c = RoundClock::new();
+        assert_eq!(c.observe(1, 0), RoundClass::Duplicate);
+    }
+}

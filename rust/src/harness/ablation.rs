@@ -1,0 +1,101 @@
+//! Ablation studies for the design choices called out in DESIGN.md §4:
+//! gossip fanout / round period sensitivity (A1), V2 success-responses and
+//! classic-Raft coalescing window (A2).
+
+use super::figures::{run_point, Point, Scale};
+use crate::config::presets;
+use crate::raft::Variant;
+
+/// A1a — fanout sweep for V1 and V2 at fixed load.
+pub fn ablate_fanout(scale: Scale, fanouts: &[usize], rate: f64) -> Vec<Point> {
+    let mut out = Vec::new();
+    for variant in [Variant::V1, Variant::V2] {
+        for &f in fanouts {
+            let mut cfg = presets::fig4(variant, rate);
+            cfg.protocol.n = scale.n;
+            cfg.protocol.fanout = f;
+            cfg.workload.duration_us = scale.duration_us;
+            cfg.workload.warmup_us = scale.warmup_us;
+            out.push(run_point(variant.name(), f as f64, &cfg, scale.reps));
+        }
+    }
+    out
+}
+
+/// A1b — round-period sweep (latency/CPU trade-off of gossip cadence).
+pub fn ablate_round_interval(scale: Scale, intervals_us: &[u64], rate: f64) -> Vec<Point> {
+    let mut out = Vec::new();
+    for variant in [Variant::V1, Variant::V2] {
+        for &iv in intervals_us {
+            let mut cfg = presets::fig4(variant, rate);
+            cfg.protocol.n = scale.n;
+            cfg.protocol.round_interval_us = iv;
+            cfg.workload.duration_us = scale.duration_us;
+            cfg.workload.warmup_us = scale.warmup_us;
+            out.push(run_point(variant.name(), iv as f64, &cfg, scale.reps));
+        }
+    }
+    out
+}
+
+/// A2a — V2 with and without first-receipt success responses
+/// (DESIGN.md §4.3). Returns (off, on).
+pub fn ablate_v2_responses(scale: Scale, rate: f64) -> (Point, Point) {
+    let mut base = presets::fig4(Variant::V2, rate);
+    base.protocol.n = scale.n;
+    base.workload.duration_us = scale.duration_us;
+    base.workload.warmup_us = scale.warmup_us;
+    let off = run_point("v2-silent", 0.0, &base, scale.reps);
+    let mut on_cfg = base.clone();
+    on_cfg.protocol.v2_success_responses = true;
+    let on = run_point("v2-ack", 1.0, &on_cfg, scale.reps);
+    (off, on)
+}
+
+/// A2b — classic Raft with a coalescing window (does batching alone close
+/// the gap to V1?).
+pub fn ablate_raft_coalesce(scale: Scale, windows_us: &[u64], rate: f64) -> Vec<Point> {
+    let mut out = Vec::new();
+    for &w in windows_us {
+        let mut cfg = presets::fig4(Variant::Raft, rate);
+        cfg.protocol.n = scale.n;
+        cfg.protocol.raft_coalesce_us = w;
+        cfg.workload.duration_us = scale.duration_us;
+        cfg.workload.warmup_us = scale.warmup_us;
+        out.push(run_point("raft", w as f64, &cfg, scale.reps));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scale {
+        Scale { reps: 1, duration_us: 1_200_000, warmup_us: 300_000, n: 5 }
+    }
+
+    #[test]
+    fn fanout_sweep_runs() {
+        let pts = ablate_fanout(tiny(), &[1, 3], 300.0);
+        assert_eq!(pts.len(), 4);
+        assert!(pts.iter().all(|p| p.throughput > 0.0));
+    }
+
+    #[test]
+    fn v2_response_ablation_increases_leader_load() {
+        let (off, on) = ablate_v2_responses(
+            Scale { reps: 1, duration_us: 2_000_000, warmup_us: 400_000, n: 9 },
+            400.0,
+        );
+        // With success responses on, every follower answers every round —
+        // the leader must do at least as much work.
+        assert!(on.leader_cpu >= off.leader_cpu * 0.9, "on={} off={}", on.leader_cpu, off.leader_cpu);
+    }
+
+    #[test]
+    fn coalesce_sweep_runs() {
+        let pts = ablate_raft_coalesce(tiny(), &[0, 5_000], 300.0);
+        assert_eq!(pts.len(), 2);
+    }
+}

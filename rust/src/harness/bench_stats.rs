@@ -1,0 +1,112 @@
+//! Criterion-lite: a small measurement harness for the `cargo bench`
+//! binaries (criterion itself is unavailable offline). Provides warmup,
+//! repeated sampling, and mean ± stddev reporting for closures, plus
+//! throughput formatting.
+
+use crate::util::stats::{summarize, Summary};
+use std::time::Instant;
+
+/// Measurement result for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Nanoseconds per iteration.
+    pub ns_per_iter: Summary,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.ns_per_iter.mean == 0.0 {
+            return 0.0;
+        }
+        1e9 / self.ns_per_iter.mean
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12.1} ns/iter (±{:>8.1})  {:>14.0} ops/s",
+            self.name,
+            self.ns_per_iter.mean,
+            self.ns_per_iter.std_dev,
+            self.ops_per_sec()
+        )
+    }
+}
+
+/// Benchmark a closure: auto-calibrated iteration count, `samples`
+/// measured samples after warmup.
+pub fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> BenchResult {
+    // Calibrate: find an iteration count that runs >= ~2ms per sample.
+    let mut iters: u64 = 1;
+    loop {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t.elapsed();
+        if dt.as_micros() >= 2_000 || iters >= 1 << 24 {
+            break;
+        }
+        iters *= 4;
+    }
+    // Warmup.
+    for _ in 0..iters {
+        f();
+    }
+    // Measure.
+    let mut per_iter = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        ns_per_iter: summarize(&per_iter),
+        iters_per_sample: iters,
+        samples,
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", 5, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.ns_per_iter.mean > 0.0);
+        assert!(r.iters_per_sample >= 1);
+        assert_eq!(r.samples, 5);
+        assert!(r.ops_per_sec() > 0.0);
+        assert!(r.report_line().contains("noop-ish"));
+    }
+
+    #[test]
+    fn slower_work_measures_slower() {
+        let fast = bench("fast", 3, || {
+            black_box(1u64 + 1);
+        });
+        let slow = bench("slow", 3, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(slow.ns_per_iter.mean > fast.ns_per_iter.mean);
+    }
+}

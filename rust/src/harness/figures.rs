@@ -1,0 +1,343 @@
+//! Figure regeneration harness: one driver per table/figure of the paper's
+//! evaluation (§4.2), each printing the same series the paper plots and
+//! emitting machine-readable JSON under `target/results/`.
+//!
+//! The paper runs every experiment 3× and plots means (§4.1) — `reps`
+//! controls that here.
+
+use crate::config::{presets, Config};
+use crate::raft::Variant;
+use crate::sim::{run_experiment, SimReport};
+use crate::util::json::Json;
+use crate::util::stats::summarize;
+
+/// Aggregate of repeated runs at one experimental point.
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub variant: &'static str,
+    pub x: f64,
+    pub throughput: f64,
+    pub mean_latency_us: f64,
+    pub p99_latency_us: f64,
+    pub leader_cpu: f64,
+    pub follower_cpu_mean: f64,
+    pub follower_cpu_max: f64,
+    pub commit_p50_us: f64,
+    pub commit_p99_us: f64,
+    pub reps: usize,
+}
+
+impl Point {
+    fn from_reports(variant: &'static str, x: f64, reports: &[SimReport]) -> Point {
+        let f = |g: &dyn Fn(&SimReport) -> f64| {
+            summarize(&reports.iter().map(g).collect::<Vec<_>>()).mean
+        };
+        Point {
+            variant,
+            x,
+            throughput: f(&|r| r.throughput),
+            mean_latency_us: f(&|r| r.mean_latency_us),
+            p99_latency_us: f(&|r| r.p99_latency_us as f64),
+            leader_cpu: f(&|r| r.leader_cpu),
+            follower_cpu_mean: f(&|r| r.follower_cpu_mean),
+            follower_cpu_max: f(&|r| r.follower_cpu_max),
+            commit_p50_us: f(&|r| r.commit_interval.p50() as f64),
+            commit_p99_us: f(&|r| r.commit_interval.p99() as f64),
+            reps: reports.len(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(self.variant)),
+            ("x", Json::num(self.x)),
+            ("throughput", Json::num(self.throughput)),
+            ("mean_latency_us", Json::num(self.mean_latency_us)),
+            ("p99_latency_us", Json::num(self.p99_latency_us)),
+            ("leader_cpu", Json::num(self.leader_cpu)),
+            ("follower_cpu_mean", Json::num(self.follower_cpu_mean)),
+            ("follower_cpu_max", Json::num(self.follower_cpu_max)),
+            ("commit_p50_us", Json::num(self.commit_p50_us)),
+            ("commit_p99_us", Json::num(self.commit_p99_us)),
+            ("reps", Json::num(self.reps as f64)),
+        ])
+    }
+}
+
+/// Run `reps` seeds of `cfg` and aggregate.
+pub fn run_point(variant: &'static str, x: f64, cfg: &Config, reps: usize) -> Point {
+    let reports: Vec<SimReport> = (0..reps)
+        .map(|rep| {
+            let mut c = cfg.clone();
+            c.seed = cfg.seed + rep as u64 * 7919;
+            let r = run_experiment(&c);
+            assert!(r.safety_ok, "safety violated at {variant} x={x} rep={rep}");
+            r
+        })
+        .collect();
+    Point::from_reports(variant, x, &reports)
+}
+
+/// Experiment scale knobs (`--quick` shrinks everything for smoke runs).
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub reps: usize,
+    pub duration_us: u64,
+    pub warmup_us: u64,
+    pub n: usize,
+}
+
+impl Scale {
+    pub fn paper() -> Self {
+        Self { reps: 3, duration_us: 10_000_000, warmup_us: 2_000_000, n: 51 }
+    }
+
+    pub fn quick() -> Self {
+        Self { reps: 1, duration_us: 3_000_000, warmup_us: 500_000, n: 51 }
+    }
+
+    fn apply(&self, cfg: &mut Config) {
+        cfg.workload.duration_us = self.duration_us;
+        cfg.workload.warmup_us = self.warmup_us;
+    }
+}
+
+/// Fig 4 — mean latency vs request rate; 51 replicas, 100 clients (§4.2).
+pub fn fig4(scale: Scale, rates: &[f64]) -> Vec<Point> {
+    let mut out = Vec::new();
+    for variant in Variant::ALL {
+        for &rate in rates {
+            let mut cfg = presets::fig4(variant, rate);
+            cfg.protocol.n = scale.n;
+            scale.apply(&mut cfg);
+            out.push(run_point(variant.name(), rate, &cfg, scale.reps));
+        }
+    }
+    out
+}
+
+pub fn fig4_default_rates() -> Vec<f64> {
+    vec![100.0, 200.0, 400.0, 800.0, 1500.0, 2500.0, 4000.0, 6000.0]
+}
+
+/// Fig 5 — CPU usage vs client request rate; 51 replicas, 10 clients.
+pub fn fig5(scale: Scale, rates: &[f64]) -> Vec<Point> {
+    let mut out = Vec::new();
+    for variant in Variant::ALL {
+        for &rate in rates {
+            let mut cfg = presets::fig56(variant, scale.n, rate);
+            scale.apply(&mut cfg);
+            out.push(run_point(variant.name(), rate, &cfg, scale.reps));
+        }
+    }
+    out
+}
+
+pub fn fig5_default_rates() -> Vec<f64> {
+    vec![50.0, 100.0, 200.0, 400.0, 800.0, 1200.0, 1600.0]
+}
+
+/// Fig 6 — CPU usage vs number of replicas; 10 unthrottled clients.
+pub fn fig6(scale: Scale, ns: &[usize]) -> Vec<Point> {
+    fig6_rate(scale, ns, 0.0)
+}
+
+/// Fig 6 at a fixed sub-saturation rate: the unthrottled closed loop pins
+/// saturated leaders at 100% CPU (scaling then shows as throughput
+/// decline); a fixed rate exposes the paper's rising-CPU-with-n curves
+/// directly. EXPERIMENTS.md reports both.
+pub fn fig6_rate(scale: Scale, ns: &[usize], rate: f64) -> Vec<Point> {
+    let mut out = Vec::new();
+    for variant in Variant::ALL {
+        for &n in ns {
+            let mut cfg = presets::fig56(variant, n, rate);
+            scale.apply(&mut cfg);
+            out.push(run_point(variant.name(), n as f64, &cfg, scale.reps));
+        }
+    }
+    out
+}
+
+pub fn fig6_default_ns() -> Vec<usize> {
+    vec![5, 11, 21, 31, 41, 51]
+}
+
+/// Fig 7 — CDF of the leader-receive→replica-commit interval at a fixed
+/// moderate load. Returns `(variant, cdf points)` per variant.
+pub fn fig7(scale: Scale, rate: f64) -> Vec<(&'static str, Vec<(u64, f64)>)> {
+    let mut out = Vec::new();
+    for variant in Variant::ALL {
+        let mut cfg = presets::fig4(variant, rate);
+        cfg.protocol.n = scale.n;
+        scale.apply(&mut cfg);
+        let report = run_experiment(&cfg);
+        assert!(report.safety_ok);
+        out.push((variant.name(), report.commit_interval.cdf()));
+    }
+    out
+}
+
+/// §6 headline numbers: max throughput ratio (V1/Raft) and leader CPU
+/// ratio (V2/Raft at matched feasible load).
+pub struct Headline {
+    pub raft_max_tput: f64,
+    pub v1_max_tput: f64,
+    pub v2_max_tput: f64,
+    pub tput_ratio_v1: f64,
+    pub raft_leader_cpu: f64,
+    pub v2_leader_cpu: f64,
+    pub cpu_ratio_v2: f64,
+}
+
+pub fn headline(scale: Scale) -> Headline {
+    // Max throughput: unthrottled 100 clients.
+    let max_tput = |variant| {
+        let mut cfg = presets::fig4(variant, 0.0);
+        cfg.protocol.n = scale.n;
+        scale.apply(&mut cfg);
+        run_point(Variant::name(variant), 0.0, &cfg, scale.reps).throughput
+    };
+    let raft_max_tput = max_tput(Variant::Raft);
+    let v1_max_tput = max_tput(Variant::V1);
+    let v2_max_tput = max_tput(Variant::V2);
+    // Leader CPU at a load all three sustain (10 clients, unthrottled is
+    // self-limiting for raft; use the paper's 10-client closed loop).
+    let leader_cpu = |variant| {
+        let mut cfg = presets::fig56(variant, scale.n, 0.0);
+        scale.apply(&mut cfg);
+        run_point(Variant::name(variant), 0.0, &cfg, scale.reps).leader_cpu
+    };
+    let raft_leader_cpu = leader_cpu(Variant::Raft);
+    let v2_leader_cpu = leader_cpu(Variant::V2);
+    Headline {
+        raft_max_tput,
+        v1_max_tput,
+        v2_max_tput,
+        tput_ratio_v1: v1_max_tput / raft_max_tput.max(1e-9),
+        raft_leader_cpu,
+        v2_leader_cpu,
+        cpu_ratio_v2: v2_leader_cpu / raft_leader_cpu.max(1e-9),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Output helpers
+// ---------------------------------------------------------------------------
+
+/// Print a series table grouped by variant.
+pub fn print_points(title: &str, x_label: &str, points: &[Point]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<8} {:>10} {:>12} {:>14} {:>12} {:>12} {:>12} {:>12}",
+        "variant", x_label, "tput(req/s)", "lat_mean(us)", "lat_p99", "cpu_lead", "cpu_flw", "commit_p50"
+    );
+    for p in points {
+        println!(
+            "{:<8} {:>10.0} {:>12.1} {:>14.1} {:>12.1} {:>11.1}% {:>11.1}% {:>12.0}",
+            p.variant,
+            p.x,
+            p.throughput,
+            p.mean_latency_us,
+            p.p99_latency_us,
+            p.leader_cpu * 100.0,
+            p.follower_cpu_mean * 100.0,
+            p.commit_p50_us
+        );
+    }
+}
+
+/// Write points as JSON to `target/results/<name>.json`.
+pub fn write_points_json(name: &str, points: &[Point]) -> std::io::Result<String> {
+    let dir = "target/results";
+    std::fs::create_dir_all(dir)?;
+    let path = format!("{dir}/{name}.json");
+    let j = Json::arr(points.iter().map(|p| p.to_json()));
+    std::fs::write(&path, j.to_string_pretty())?;
+    Ok(path)
+}
+
+/// Write Fig-7 CDFs as JSON.
+pub fn write_cdfs_json(
+    name: &str,
+    cdfs: &[(&'static str, Vec<(u64, f64)>)],
+) -> std::io::Result<String> {
+    let dir = "target/results";
+    std::fs::create_dir_all(dir)?;
+    let path = format!("{dir}/{name}.json");
+    let j = Json::arr(cdfs.iter().map(|(variant, pts)| {
+        Json::obj(vec![
+            ("variant", Json::str(variant)),
+            (
+                "cdf",
+                Json::arr(pts.iter().map(|(v, f)| {
+                    Json::arr([Json::num(*v as f64), Json::num(*f)])
+                })),
+            ),
+        ])
+    }));
+    std::fs::write(&path, j.to_string_pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_scale() -> Scale {
+        Scale { reps: 1, duration_us: 1_500_000, warmup_us: 300_000, n: 5 }
+    }
+
+    #[test]
+    fn fig4_points_have_all_variants() {
+        let pts = fig4(tiny_scale(), &[500.0]);
+        assert_eq!(pts.len(), 3);
+        let variants: Vec<&str> = pts.iter().map(|p| p.variant).collect();
+        assert!(variants.contains(&"raft") && variants.contains(&"v1") && variants.contains(&"v2"));
+        for p in &pts {
+            assert!(p.throughput > 0.0);
+            assert!(p.mean_latency_us > 0.0);
+        }
+    }
+
+    #[test]
+    fn raft_leader_cpu_grows_with_n_below_saturation() {
+        // At a fixed sub-saturation rate, the Raft leader's CPU must grow
+        // with cluster size (the Fig 6 mechanism). Unthrottled runs would
+        // saturate at 100% for every n and hide the slope.
+        let cpu_at = |n: usize| {
+            let mut cfg = presets::fig56(Variant::Raft, n, 200.0);
+            cfg.workload.duration_us = 1_500_000;
+            cfg.workload.warmup_us = 300_000;
+            run_point("raft", n as f64, &cfg, 1).leader_cpu
+        };
+        let small = cpu_at(3);
+        let big = cpu_at(9);
+        assert!(big > small, "leader CPU must grow with n: {small} -> {big}");
+    }
+
+    #[test]
+    fn fig6_runs_all_sizes() {
+        let pts = fig6(tiny_scale(), &[3, 7]);
+        assert_eq!(pts.len(), 6);
+        assert!(pts.iter().all(|p| p.leader_cpu > 0.0));
+    }
+
+    #[test]
+    fn fig7_cdfs_reach_one() {
+        let cdfs = fig7(tiny_scale(), 300.0);
+        for (variant, pts) in &cdfs {
+            assert!(!pts.is_empty(), "{variant}: empty CDF");
+            let last = pts.last().unwrap().1;
+            assert!((last - 1.0).abs() < 1e-9, "{variant}: CDF ends at {last}");
+        }
+    }
+
+    #[test]
+    fn json_outputs_written() {
+        let pts = fig4(tiny_scale(), &[400.0]);
+        let path = write_points_json("test_fig4", &pts).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 3);
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment harness: regenerates every figure of the paper's evaluation
+//! (Fig 4–7), the §6 headline numbers, and the ablations, plus the
+//! criterion-lite bench-stats used by `cargo bench`.
+
+pub mod ablation;
+pub mod bench_stats;
+pub mod figures;
+
+pub use bench_stats::{bench, black_box, BenchResult};
+pub use figures::{
+    fig4, fig4_default_rates, fig5, fig5_default_rates, fig6, fig6_default_ns, fig7, headline,
+    print_points, run_point, write_cdfs_json, write_points_json, Headline, Point, Scale,
+};

@@ -1,0 +1,28 @@
+//! # epiraft — Raft with epidemic propagation
+//!
+//! Reproduction of *"Uma extensão de Raft com propagação epidémica"*
+//! (Gonçalves, Alonso, Pereira, Oliveira — INForum'23 / CS.DC 2025):
+//! original Raft plus two extensions —
+//!
+//! * **V1**: AppendEntries disseminated by epidemic (gossip) rounds over a
+//!   peer permutation (§3.1, Algorithm 1);
+//! * **V2**: decentralised commit via gossiped `Bitmap` / `MaxCommit` /
+//!   `NextCommit` structures (§3.2, Algorithms 2–3).
+//!
+//! The crate is organised in the three-layer architecture described in
+//! DESIGN.md: this Rust layer is the coordinator (protocol core, simulator,
+//! live cluster, benchmark harness); the batched V2 merge/update hot-spot
+//! also exists as an AOT-compiled JAX/Pallas kernel executed through PJRT
+//! (see `runtime`).
+
+pub mod config;
+pub mod harness;
+pub mod cli;
+pub mod cluster;
+pub mod sim;
+pub mod epidemic;
+pub mod kvstore;
+pub mod prop;
+pub mod raft;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,279 @@
+//! `epiraft` — leader entrypoint / CLI.
+//!
+//! See [`epiraft::cli::USAGE`] or run `epiraft help`.
+
+use epiraft::cli::{Cli, USAGE};
+use epiraft::config::dump;
+use epiraft::harness::{self, Scale};
+use epiraft::sim::{run_cold_start, run_experiment};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(args: Vec<String>) -> Result<(), String> {
+    let cli = Cli::parse(args)?;
+    if cli.has("help") || cli.command == "help" {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match cli.command.as_str() {
+        "run" => cmd_run(&cli),
+        "fig" => cmd_fig(&cli),
+        "headline" => cmd_headline(&cli),
+        "ablate" => cmd_ablate(&cli),
+        "live" => cmd_live(&cli),
+        "fleet" => cmd_fleet(&cli),
+        "artifacts-check" => cmd_artifacts_check(&cli),
+        "config-dump" => {
+            let cfg = cli.build_config()?;
+            for (k, v) in dump(&cfg) {
+                println!("{k} = {v}");
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n\n{USAGE}")),
+    }
+}
+
+fn scale(cli: &Cli) -> Scale {
+    if cli.has("quick") {
+        Scale::quick()
+    } else {
+        Scale::paper()
+    }
+}
+
+fn cmd_run(cli: &Cli) -> Result<(), String> {
+    let cfg = cli.build_config()?;
+    let report = if cli.has("cold-start") {
+        run_cold_start(&cfg)
+    } else {
+        run_experiment(&cfg)
+    };
+    if cli.has("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        println!("variant            : {}", report.variant);
+        println!("replicas           : {}", report.n);
+        println!("leader             : {}", report.leader);
+        println!("completed requests : {}", report.completed);
+        println!("throughput         : {:.1} req/s", report.throughput);
+        println!(
+            "latency            : mean {:.1} us, p50 {} us, p99 {} us",
+            report.mean_latency_us, report.p50_latency_us, report.p99_latency_us
+        );
+        println!(
+            "leader CPU         : {:.1}%   follower CPU: mean {:.1}%, max {:.1}%",
+            report.leader_cpu * 100.0,
+            report.follower_cpu_mean * 100.0,
+            report.follower_cpu_max * 100.0
+        );
+        println!(
+            "commit interval    : p50 {} us, p99 {} us (follower, from leader append)",
+            report.commit_interval.p50(),
+            report.commit_interval.p99()
+        );
+        println!("elections          : {}", report.elections);
+        println!("messages           : {}", report.messages);
+        println!("max commit index   : {}", report.max_commit);
+        println!("safety             : {}", if report.safety_ok { "OK" } else { "VIOLATED" });
+        println!(
+            "simulator          : {} events in {:.2}s host time ({:.0} ev/s)",
+            report.events_processed,
+            report.host_secs,
+            report.events_processed as f64 / report.host_secs.max(1e-9)
+        );
+    }
+    if !report.safety_ok {
+        return Err("safety check failed".into());
+    }
+    Ok(())
+}
+
+fn cmd_fig(cli: &Cli) -> Result<(), String> {
+    let which = cli
+        .positional
+        .first()
+        .ok_or("fig expects a figure number (4, 5, 6 or 7)")?
+        .as_str();
+    let s = scale(cli);
+    match which {
+        "4" => {
+            let pts = harness::fig4(s, &harness::fig4_default_rates());
+            harness::print_points(
+                "Fig 4 — mean latency vs request rate (51 replicas, 100 clients)",
+                "rate",
+                &pts,
+            );
+            let path = harness::write_points_json("fig4", &pts).map_err(|e| e.to_string())?;
+            println!("\nwrote {path}");
+        }
+        "5" => {
+            let pts = harness::fig5(s, &harness::fig5_default_rates());
+            harness::print_points(
+                "Fig 5 — CPU usage vs client request rate (51 replicas, 10 clients)",
+                "rate",
+                &pts,
+            );
+            let path = harness::write_points_json("fig5", &pts).map_err(|e| e.to_string())?;
+            println!("\nwrote {path}");
+        }
+        "6" => {
+            let pts = harness::fig6(s, &harness::fig6_default_ns());
+            harness::print_points(
+                "Fig 6 — CPU usage vs number of replicas (10 closed-loop clients)",
+                "n",
+                &pts,
+            );
+            let path = harness::write_points_json("fig6", &pts).map_err(|e| e.to_string())?;
+            println!("\nwrote {path}");
+        }
+        "7" => {
+            let cdfs = harness::fig7(s, 2000.0);
+            println!("\n== Fig 7 — CDF of leader-receive -> replica-commit interval ==");
+            for (variant, pts) in &cdfs {
+                println!("\n[{variant}]   (interval us, cumulative fraction)");
+                for frac in [0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+                    if let Some((v, f)) = pts.iter().find(|(_, f)| *f >= frac) {
+                        println!("  p{:<4} {:>10} us  (cdf {:.3})", (frac * 100.0) as u32, v, f);
+                    }
+                }
+            }
+            let path = harness::write_cdfs_json("fig7", &cdfs).map_err(|e| e.to_string())?;
+            println!("\nwrote {path}");
+        }
+        other => return Err(format!("unknown figure '{other}'")),
+    }
+    Ok(())
+}
+
+fn cmd_headline(cli: &Cli) -> Result<(), String> {
+    let h = harness::headline(scale(cli));
+    println!("== §6 headline reproduction (51 replicas) ==");
+    println!("max throughput  raft : {:>10.1} req/s", h.raft_max_tput);
+    println!(
+        "max throughput  v1   : {:>10.1} req/s   ({:.1}x raft; paper: ~6x)",
+        h.v1_max_tput, h.tput_ratio_v1
+    );
+    println!("max throughput  v2   : {:>10.1} req/s", h.v2_max_tput);
+    println!("leader CPU      raft : {:>9.1}%", h.raft_leader_cpu * 100.0);
+    println!(
+        "leader CPU      v2   : {:>9.1}%   ({:.2}x raft; paper: ~1/3)",
+        h.v2_leader_cpu * 100.0,
+        h.cpu_ratio_v2
+    );
+    Ok(())
+}
+
+fn cmd_ablate(cli: &Cli) -> Result<(), String> {
+    use epiraft::harness::ablation;
+    let which = cli
+        .positional
+        .first()
+        .ok_or("ablate expects one of: fanout, round, responses, coalesce, votes")?
+        .as_str();
+    let s = scale(cli);
+    match which {
+        "fanout" => {
+            let pts = ablation::ablate_fanout(s, &[1, 2, 3, 5, 8], 1000.0);
+            harness::print_points("A1a — fanout sweep (rate 1000)", "fanout", &pts);
+            harness::write_points_json("ablate_fanout", &pts).map_err(|e| e.to_string())?;
+        }
+        "round" => {
+            let pts =
+                ablation::ablate_round_interval(s, &[1_000, 2_000, 5_000, 10_000, 20_000], 1000.0);
+            harness::print_points("A1b — round interval sweep (rate 1000)", "interval_us", &pts);
+            harness::write_points_json("ablate_round", &pts).map_err(|e| e.to_string())?;
+        }
+        "responses" => {
+            let (off, on) = ablation::ablate_v2_responses(s, 1000.0);
+            harness::print_points("A2a — V2 success responses off/on", "on", &[off, on]);
+        }
+        "votes" => {
+            // §6 future work: epidemic vote collection. Compare the
+            // candidate's message burst and time-to-leader in a cold-start
+            // election at n=51.
+            use epiraft::config::Config;
+            use epiraft::sim::run_cold_start;
+            for (label, gossip) in [("direct", false), ("gossip", true)] {
+                let mut cfg = Config::default();
+                cfg.protocol.n = 51;
+                cfg.protocol.variant = epiraft::raft::Variant::V2;
+                cfg.protocol.gossip_votes = gossip;
+                cfg.workload.clients = 10;
+                cfg.workload.duration_us = 4_000_000;
+                cfg.workload.warmup_us = 1_000_000;
+                cfg.seed = 31;
+                let r = run_cold_start(&cfg);
+                println!(
+                    "votes={label:<7} elections={} messages={} completed={} safety={}",
+                    r.elections, r.messages, r.completed, r.safety_ok
+                );
+            }
+        }
+        "coalesce" => {
+            let pts = ablation::ablate_raft_coalesce(s, &[0, 1_000, 5_000, 10_000], 1000.0);
+            harness::print_points("A2b — Raft coalescing window", "window_us", &pts);
+            harness::write_points_json("ablate_coalesce", &pts).map_err(|e| e.to_string())?;
+        }
+        other => return Err(format!("unknown ablation '{other}'")),
+    }
+    Ok(())
+}
+
+fn cmd_live(cli: &Cli) -> Result<(), String> {
+    let mut cfg = cli.build_config()?;
+    if cli.get("secs").is_none() {
+        cfg.workload.duration_us = 3_000_000;
+        cfg.workload.warmup_us = 500_000;
+    }
+    let report = epiraft::cluster::run_live(&cfg).map_err(|e| e.to_string())?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+/// Fleet convergence study (A3): rounds for the §3.2 structures to commit
+/// an index at every replica, by fanout — through the native or HLO/PJRT
+/// backend.
+fn cmd_fleet(cli: &Cli) -> Result<(), String> {
+    use epiraft::sim::{converge, Backend};
+    let n = cli.get_u64("n")?.unwrap_or(51) as usize;
+    let seed = cli.get_u64("seed")?.unwrap_or(1);
+    let use_hlo = cli.get("backend") == Some("hlo");
+    let engine;
+    let exec;
+    let backend = if use_hlo {
+        engine = epiraft::runtime::Engine::load(cli.get("dir").unwrap_or("artifacts"))
+            .map_err(|e| e.to_string())?;
+        exec = epiraft::runtime::MergeExecutor::from_engine(&engine).map_err(|e| e.to_string())?;
+        Backend::Hlo(&exec)
+    } else {
+        Backend::Native
+    };
+    println!(
+        "== A3 — epidemic commit convergence (n={n}, backend={}) ==",
+        backend.name()
+    );
+    println!("{:<8} {:>16} {:>16} {:>12}", "fanout", "rounds(first)", "rounds(all)", "messages");
+    for fanout in [1usize, 2, 3, 5, 8, 12] {
+        let r = converge(n, fanout, 1, &backend, seed);
+        println!(
+            "{:<8} {:>16} {:>16} {:>12}",
+            fanout, r.rounds_to_first_commit, r.rounds_to_all_commit, r.messages
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts_check(cli: &Cli) -> Result<(), String> {
+    let dir = cli.get("dir").unwrap_or("artifacts");
+    epiraft::runtime::artifacts_check(dir).map_err(|e| e.to_string())
+}

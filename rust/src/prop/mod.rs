@@ -1,0 +1,105 @@
+//! Minimal property-based testing framework (proptest is unavailable
+//! offline). Runs a property over many seeded cases, reports the failing
+//! seed on panic so every counterexample is reproducible, and provides a
+//! seeded [`Gen`] with the usual combinators.
+
+use crate::util::rng::Xoshiro256;
+
+/// A seeded generator handed to properties.
+pub struct Gen {
+    pub rng: Xoshiro256,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Xoshiro256::seed_from_u64(seed), seed }
+    }
+
+    pub fn u64_in(&mut self, lo: u64, hi_exclusive: u64) -> u64 {
+        self.rng.next_range(lo, hi_exclusive)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_exclusive: usize) -> usize {
+        self.rng.next_range(lo as u64, hi_exclusive as u64) as usize
+    }
+
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.next_bool(p)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len())]
+    }
+
+    /// A vector of `len` items drawn from `f`.
+    pub fn vec_of<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Run `prop` over `cases` seeded generators; on failure re-panics with the
+/// seed so the case can be replayed (`Gen::new(seed)`).
+pub fn forall(label: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    for case in 0..cases {
+        let seed = 0x9E3779B97F4A7C15u64
+            .wrapping_mul(case + 1)
+            .wrapping_add(0xDEADBEEF);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{label}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u64_in range", 50, |g| {
+            let v = g.u64_in(10, 20);
+            assert!((10..20).contains(&v));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed at case 0")]
+    fn forall_reports_failing_seed() {
+        forall("always-fails", 10, |_| panic!("nope"));
+    }
+
+    #[test]
+    fn gen_is_reproducible() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        let xs: Vec<u64> = (0..16).map(|_| a.u64_in(0, 1000)).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.u64_in(0, 1000)).collect();
+        assert_eq!(xs, ys);
+    }
+
+    #[test]
+    fn choice_and_vec_of() {
+        let mut g = Gen::new(3);
+        let opts = [1, 2, 3];
+        for _ in 0..20 {
+            assert!(opts.contains(g.choice(&opts)));
+        }
+        let v = g.vec_of(5, |g| g.usize_in(0, 10));
+        assert_eq!(v.len(), 5);
+    }
+}

@@ -1,0 +1,395 @@
+//! Leader election (Fig 1 state transitions + §5.2/§5.4 of the Raft paper).
+//!
+//! Elections are point-to-point RPC in all three variants as evaluated in
+//! the paper; the §6 future-work idea — collecting votes by epidemic
+//! propagation — is implemented behind `protocol.gossip_votes` (candidates
+//! contact only `F` peers, requests flood via relays, replies return
+//! directly). The V2-specific rule lives in `start_election`/`step_down`:
+//! the epidemic vote structures are reset whenever an election starts or a
+//! new term is discovered (§3.2).
+
+use super::message::{Message, RequestVoteArgs, RequestVoteReply};
+use super::node::{Action, Node};
+use super::types::{Role, Time};
+
+impl Node {
+    /// Election timeout fired: become candidate and solicit votes.
+    pub(crate) fn start_election(&mut self, now: Time, actions: &mut Vec<Action>) {
+        self.current_term += 1;
+        self.role = Role::Candidate;
+        self.voted_for = Some(self.id);
+        self.votes.clear();
+        self.votes.insert(self.id);
+        self.leader_hint = None;
+        self.counters.elections_started += 1;
+        self.election_deadline = self.random_election_deadline(now);
+        // §3.2: reset the epidemic vote when an election is initiated.
+        if self.cfg.variant.has_epidemic_commit() {
+            self.epi.reset_for_new_term();
+        }
+        actions.push(Action::RoleChanged { role: Role::Candidate, term: self.current_term });
+        if self.cfg.n == 1 {
+            // Trivial cluster: self-vote is a majority.
+            self.become_leader(now, actions);
+            return;
+        }
+        let gossip = self.cfg.gossip_votes && self.cfg.variant.is_gossip();
+        let args = RequestVoteArgs {
+            term: self.current_term,
+            candidate: self.id,
+            last_log_index: self.log.last_index(),
+            last_log_term: self.log.last_term(),
+            gossip,
+            hops: 0,
+        };
+        if gossip {
+            // §6 future-work extension: solicit votes epidemically — the
+            // candidate contacts only F peers; the request floods through
+            // relays (see on_request_vote) and replies return directly.
+            let targets = self.perm.next_round(self.cfg.fanout);
+            for peer in targets {
+                self.send(peer, Message::RequestVote(args), actions);
+            }
+        } else {
+            for peer in 0..self.cfg.n {
+                if peer != self.id {
+                    self.send(peer, Message::RequestVote(args), actions);
+                }
+            }
+        }
+    }
+
+    /// Incoming RequestVote. (Terms above ours were already adopted by
+    /// `on_message`.)
+    pub(crate) fn on_request_vote(
+        &mut self,
+        now: Time,
+        args: RequestVoteArgs,
+        actions: &mut Vec<Action>,
+    ) {
+        if args.gossip {
+            // Epidemic vote collection: process+relay a given candidate's
+            // request at most once per term.
+            if self.vote_gossip_term != args.term {
+                self.vote_gossip_term = args.term;
+                self.vote_gossip_seen.clear();
+            }
+            if !self.vote_gossip_seen.insert(args.candidate) {
+                return; // duplicate delivery through another gossip path
+            }
+            if args.term == self.current_term && args.candidate != self.id {
+                let fwd = RequestVoteArgs { hops: args.hops + 1, ..args };
+                let targets = self.perm.next_round(self.cfg.fanout);
+                for peer in targets {
+                    if peer != args.candidate {
+                        self.send(peer, Message::RequestVote(fwd), actions);
+                    }
+                }
+            }
+            if args.candidate == self.id {
+                return; // our own request came back around
+            }
+        }
+        let grant = args.term == self.current_term
+            && (self.voted_for.is_none() || self.voted_for == Some(args.candidate))
+            && self.log.candidate_up_to_date(args.last_log_index, args.last_log_term);
+        if grant {
+            self.voted_for = Some(args.candidate);
+            // Granting a vote resets the election timer (§5.2).
+            self.election_deadline = self.random_election_deadline(now);
+        }
+        let reply = RequestVoteReply { term: self.current_term, from: self.id, granted: grant };
+        self.counters.replies_sent += 1;
+        self.send(args.candidate, Message::RequestVoteReply(reply), actions);
+    }
+
+    /// Incoming vote reply.
+    pub(crate) fn on_vote_reply(
+        &mut self,
+        now: Time,
+        reply: RequestVoteReply,
+        actions: &mut Vec<Action>,
+    ) {
+        if self.role != Role::Candidate || reply.term != self.current_term || !reply.granted {
+            return;
+        }
+        self.votes.insert(reply.from);
+        if self.votes.len() >= self.majority() {
+            self.become_leader(now, actions);
+        }
+    }
+
+    /// Won the election (or bootstrap): initialise leader state.
+    pub(crate) fn become_leader(&mut self, now: Time, actions: &mut Vec<Action>) {
+        debug_assert!(self.role != Role::Leader);
+        self.role = Role::Leader;
+        self.leader_hint = Some(self.id);
+        self.votes.clear();
+        let last = self.log.last_index();
+        for (i, f) in self.followers.iter_mut().enumerate() {
+            f.next_index = last + 1;
+            f.match_index = if i == self.id { last } else { 0 };
+            f.repairing = false;
+            f.last_rpc_at = 0;
+        }
+        self.pending.clear();
+        self.coalesce_deadline = None;
+        self.commit_history.clear();
+        actions.push(Action::RoleChanged { role: Role::Leader, term: self.current_term });
+        if self.cfg.leader_noop {
+            let idx = self.log.append(self.current_term, crate::kvstore::Command::Noop);
+            self.counters.entries_appended += 1;
+            if self.cfg.variant.has_epidemic_commit() {
+                self.epi.maybe_set_own_bit(self.id, self.log_view());
+                self.run_epidemic_update(now, actions);
+            }
+            let _ = idx;
+        }
+        if self.cfg.n == 1 {
+            self.advance_commit_from_matches(actions);
+        }
+        match self.cfg.variant {
+            super::types::Variant::Raft => {
+                self.broadcast_append(now, actions);
+            }
+            super::types::Variant::V1 | super::types::Variant::V2 => {
+                self.start_gossip_round(now, actions);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::node::{Action, Node};
+    use super::super::types::{Role, Variant};
+    use super::*;
+    use crate::config::ProtocolConfig;
+    use crate::kvstore::Command;
+
+    fn cfg(n: usize, v: Variant) -> ProtocolConfig {
+        ProtocolConfig::for_variant(n, v)
+    }
+
+    fn drain_sends(actions: &[Action]) -> Vec<(usize, Message)> {
+        actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::Send { to, msg } => Some((*to, msg.clone())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn election_timeout_starts_election() {
+        let mut node = Node::new(1, cfg(3, Variant::Raft), 42);
+        let deadline = node.next_deadline();
+        let actions = node.tick(deadline);
+        assert_eq!(node.role(), Role::Candidate);
+        assert_eq!(node.term(), 1);
+        let sends = drain_sends(&actions);
+        assert_eq!(sends.len(), 2);
+        assert!(sends.iter().all(|(_, m)| matches!(m, Message::RequestVote(_))));
+    }
+
+    #[test]
+    fn candidate_wins_with_majority() {
+        let mut node = Node::new(0, cfg(5, Variant::Raft), 1);
+        let dl = node.next_deadline();
+        node.tick(dl);
+        assert_eq!(node.role(), Role::Candidate);
+        // Two grants + self = 3 of 5.
+        node.on_message(
+            dl + 1,
+            Message::RequestVoteReply(RequestVoteReply { term: 1, from: 1, granted: true }),
+        );
+        assert_eq!(node.role(), Role::Candidate);
+        let actions = node.on_message(
+            dl + 2,
+            Message::RequestVoteReply(RequestVoteReply { term: 1, from: 2, granted: true }),
+        );
+        assert_eq!(node.role(), Role::Leader);
+        assert!(actions
+            .iter()
+            .any(|a| matches!(a, Action::RoleChanged { role: Role::Leader, .. })));
+        // Leader no-op appended.
+        assert_eq!(node.last_index(), 1);
+    }
+
+    #[test]
+    fn duplicate_votes_do_not_elect() {
+        let mut node = Node::new(0, cfg(5, Variant::Raft), 1);
+        let dl = node.next_deadline();
+        node.tick(dl);
+        for _ in 0..5 {
+            node.on_message(
+                dl + 1,
+                Message::RequestVoteReply(RequestVoteReply { term: 1, from: 1, granted: true }),
+            );
+        }
+        assert_eq!(node.role(), Role::Candidate, "one voter cannot elect");
+    }
+
+    #[test]
+    fn stale_term_vote_replies_ignored() {
+        let mut node = Node::new(0, cfg(3, Variant::Raft), 1);
+        let dl = node.next_deadline();
+        node.tick(dl); // term 1
+        let dl2 = node.next_deadline();
+        node.tick(dl2); // election restart, term 2
+        assert_eq!(node.term(), 2);
+        node.on_message(
+            dl2 + 1,
+            Message::RequestVoteReply(RequestVoteReply { term: 1, from: 1, granted: true }),
+        );
+        assert_eq!(node.role(), Role::Candidate);
+    }
+
+    #[test]
+    fn grants_at_most_one_vote_per_term() {
+        let mut node = Node::new(2, cfg(3, Variant::Raft), 7);
+        let args0 = RequestVoteArgs { term: 1, candidate: 0, last_log_index: 0, last_log_term: 0, gossip: false, hops: 0 };
+        let args1 = RequestVoteArgs { term: 1, candidate: 1, last_log_index: 0, last_log_term: 0, gossip: false, hops: 0 };
+        let a0 = node.on_message(10, Message::RequestVote(args0));
+        let a1 = node.on_message(11, Message::RequestVote(args1));
+        let g0 = matches!(drain_sends(&a0)[0].1, Message::RequestVoteReply(r) if r.granted);
+        let g1 = matches!(drain_sends(&a1)[0].1, Message::RequestVoteReply(r) if r.granted);
+        assert!(g0);
+        assert!(!g1, "second candidate in the same term must be refused");
+        // Re-request by the same candidate is granted again (idempotent).
+        let a0b = node.on_message(12, Message::RequestVote(args0));
+        assert!(matches!(drain_sends(&a0b)[0].1, Message::RequestVoteReply(r) if r.granted));
+    }
+
+    #[test]
+    fn election_restriction_rejects_stale_log() {
+        let mut node = Node::new(1, cfg(3, Variant::Raft), 7);
+        node.bootstrap_follower(0, 0);
+        // Give the follower two entries at term 1.
+        node.log.append(1, Command::Noop);
+        node.log.append(1, Command::Noop);
+        // Candidate with shorter log at same term: refuse.
+        let short = RequestVoteArgs { term: 2, candidate: 2, last_log_index: 1, last_log_term: 1, gossip: false, hops: 0 };
+        let a = node.on_message(10, Message::RequestVote(short));
+        assert!(matches!(drain_sends(&a)[0].1, Message::RequestVoteReply(r) if !r.granted));
+        // Candidate with higher last term: grant.
+        let fresh = RequestVoteArgs { term: 3, candidate: 0, last_log_index: 1, last_log_term: 2, gossip: false, hops: 0 };
+        let a = node.on_message(11, Message::RequestVote(fresh));
+        assert!(matches!(drain_sends(&a)[0].1, Message::RequestVoteReply(r) if r.granted));
+    }
+
+    #[test]
+    fn v2_election_resets_epidemic_structures() {
+        let mut node = Node::new(0, cfg(5, Variant::V2), 1);
+        node.epi.max_commit = 4;
+        node.epi.next_commit = 9;
+        node.epi.bitmap.set(1);
+        let dl = node.next_deadline();
+        node.tick(dl);
+        assert_eq!(node.epidemic().next_commit, 5);
+        assert_eq!(node.epidemic().bitmap.count(), 0);
+    }
+
+    #[test]
+    fn gossip_votes_candidate_contacts_only_fanout() {
+        let mut c = cfg(20, Variant::V1);
+        c.gossip_votes = true;
+        let mut node = Node::new(0, c, 9);
+        let dl = node.next_deadline();
+        let actions = node.tick(dl);
+        let sends = drain_sends(&actions);
+        assert_eq!(sends.len(), 3, "candidate sends only F requests");
+        assert!(sends.iter().all(|(_, m)| matches!(
+            m,
+            Message::RequestVote(a) if a.gossip && a.hops == 0
+        )));
+    }
+
+    #[test]
+    fn gossip_votes_are_relayed_once_and_answered() {
+        let mut c = cfg(20, Variant::V1);
+        c.gossip_votes = true;
+        let mut voter = Node::new(5, c, 11);
+        let args = RequestVoteArgs {
+            term: 1,
+            candidate: 2,
+            last_log_index: 0,
+            last_log_term: 0,
+            gossip: true,
+            hops: 0,
+        };
+        let out = voter.on_message(10, Message::RequestVote(args));
+        let sends = drain_sends(&out);
+        let replies: Vec<_> = sends
+            .iter()
+            .filter(|(to, m)| *to == 2 && matches!(m, Message::RequestVoteReply(_)))
+            .collect();
+        assert_eq!(replies.len(), 1, "vote reply goes straight to the candidate");
+        let relays = sends
+            .iter()
+            .filter(|(_, m)| matches!(m, Message::RequestVote(a) if a.hops == 1))
+            .count();
+        assert!(relays >= 2, "request is relayed over the permutation");
+        // Duplicate delivery: dropped entirely.
+        let out2 = voter.on_message(11, Message::RequestVote(args));
+        assert!(drain_sends(&out2).is_empty());
+    }
+
+    #[test]
+    fn gossip_votes_elect_leader_via_relays() {
+        // 5 nodes, fanout 1: the candidate contacts ONE peer; relays must
+        // carry the request to a majority.
+        let mut c = cfg(5, Variant::V2);
+        c.gossip_votes = true;
+        c.fanout = 1;
+        let mut nodes: Vec<Node> = (0..5).map(|i| Node::new(i, c.clone(), 100 + i as u64)).collect();
+        // Force node 0 to start the election first; with F=1 a relay chain
+        // can die on a duplicate receipt — the protocol recovers by
+        // restarting the election (fresh term, advanced permutation
+        // cursor), which this loop models by ticking node 0 whenever the
+        // wire drains.
+        let mut now = nodes[0].next_deadline();
+        let mut wire: Vec<(usize, Message)> = drain_sends(&nodes[0].tick(now));
+        let mut guard = 0;
+        while !nodes[0].is_leader() && guard < 500 {
+            guard += 1;
+            now += 1;
+            if wire.is_empty() {
+                now = now.max(nodes[0].next_deadline());
+                wire = drain_sends(&nodes[0].tick(now));
+                continue;
+            }
+            let mut next = Vec::new();
+            for (to, msg) in wire.drain(..) {
+                for a in nodes[to].on_message(now, msg) {
+                    if let Action::Send { to, msg } = a {
+                        next.push((to, msg));
+                    }
+                }
+            }
+            wire = next;
+        }
+        assert!(nodes[0].is_leader(), "relayed votes must elect the candidate");
+    }
+
+    #[test]
+    fn v1_leader_starts_round_on_election() {
+        let mut node = Node::new(0, cfg(5, Variant::V1), 3);
+        let dl = node.next_deadline();
+        node.tick(dl);
+        node.on_message(
+            dl + 1,
+            Message::RequestVoteReply(RequestVoteReply { term: 1, from: 1, granted: true }),
+        );
+        let actions = node.on_message(
+            dl + 2,
+            Message::RequestVoteReply(RequestVoteReply { term: 1, from: 2, granted: true }),
+        );
+        let gossip_sends = drain_sends(&actions)
+            .into_iter()
+            .filter(|(_, m)| m.is_gossip())
+            .count();
+        assert_eq!(gossip_sends, node.config().fanout, "first round fires immediately");
+    }
+}

@@ -1,0 +1,271 @@
+//! Replicated log store with Raft's log-matching semantics.
+//!
+//! Indices are 1-based (`0` = empty sentinel, term 0). The store keeps the
+//! whole log in memory — the paper's experiments run the replication phase
+//! only, without snapshots/compaction, and so do we (compaction is listed
+//! as out of scope in DESIGN.md).
+
+use super::types::{LogIndex, Term};
+use crate::kvstore::Command;
+use std::sync::Arc;
+
+/// One log entry: the command plus the term in which the leader received it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LogEntry {
+    pub term: Term,
+    pub index: LogIndex,
+    pub cmd: Command,
+}
+
+/// In-memory log store.
+#[derive(Clone, Debug, Default)]
+pub struct LogStore {
+    entries: Vec<LogEntry>,
+}
+
+impl LogStore {
+    pub fn new() -> Self {
+        Self { entries: Vec::new() }
+    }
+
+    /// Index of the last entry (0 when empty).
+    #[inline]
+    pub fn last_index(&self) -> LogIndex {
+        self.entries.len() as LogIndex
+    }
+
+    /// Term of the last entry (0 when empty).
+    #[inline]
+    pub fn last_term(&self) -> Term {
+        self.entries.last().map_or(0, |e| e.term)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Term of the entry at `index` (`Some(0)` for index 0; `None` if the
+    /// index is past the end of the log).
+    #[inline]
+    pub fn term_at(&self, index: LogIndex) -> Option<Term> {
+        if index == 0 {
+            return Some(0);
+        }
+        self.entries.get(index as usize - 1).map(|e| e.term)
+    }
+
+    #[inline]
+    pub fn get(&self, index: LogIndex) -> Option<&LogEntry> {
+        if index == 0 {
+            return None;
+        }
+        self.entries.get(index as usize - 1)
+    }
+
+    /// Append a fresh entry (leader path). Returns its index.
+    pub fn append(&mut self, term: Term, cmd: Command) -> LogIndex {
+        let index = self.last_index() + 1;
+        self.entries.push(LogEntry { term, index, cmd });
+        index
+    }
+
+    /// Raft log-matching check: does this log contain an entry at
+    /// `prev_index` with term `prev_term`?
+    #[inline]
+    pub fn matches(&self, prev_index: LogIndex, prev_term: Term) -> bool {
+        self.term_at(prev_index) == Some(prev_term)
+    }
+
+    /// Follower append path (AppendEntries §5.3): assuming
+    /// `matches(prev_index, prev_term)`, reconcile `new_entries` into the
+    /// log: skip entries already present with the same term, truncate on the
+    /// first conflict, then append the remainder. Returns the index of the
+    /// last entry covered by the request.
+    pub fn reconcile(&mut self, prev_index: LogIndex, new_entries: &[LogEntry]) -> LogIndex {
+        debug_assert!(self.term_at(prev_index).is_some());
+        let mut idx = prev_index;
+        let mut it = new_entries.iter();
+        // Skip the prefix that already matches.
+        for e in it.by_ref() {
+            idx += 1;
+            debug_assert_eq!(e.index, idx, "entry indices must be contiguous");
+            match self.term_at(idx) {
+                Some(t) if t == e.term => continue, // already have it
+                Some(_) => {
+                    // Conflict: truncate from idx on, then append this entry
+                    // and the rest.
+                    self.entries.truncate(idx as usize - 1);
+                    self.entries.push(e.clone());
+                    break;
+                }
+                None => {
+                    self.entries.push(e.clone());
+                    break;
+                }
+            }
+        }
+        for e in it {
+            idx += 1;
+            debug_assert_eq!(e.index, idx);
+            self.entries.push(e.clone());
+        }
+        prev_index + new_entries.len() as LogIndex
+    }
+
+    /// Clone the entries in `(from, to]` into an `Arc` slice for cheap
+    /// fan-out into gossip messages.
+    pub fn slice(&self, from_exclusive: LogIndex, to_inclusive: LogIndex) -> Arc<Vec<LogEntry>> {
+        let lo = from_exclusive as usize;
+        let hi = (to_inclusive as usize).min(self.entries.len());
+        if lo >= hi {
+            return Arc::new(Vec::new());
+        }
+        Arc::new(self.entries[lo..hi].to_vec())
+    }
+
+    /// Does this log satisfy Raft's election restriction against a
+    /// candidate's `(last_index, last_term)`? True when the candidate's log
+    /// is at least as up-to-date as ours.
+    pub fn candidate_up_to_date(&self, cand_last_index: LogIndex, cand_last_term: Term) -> bool {
+        let (li, lt) = (self.last_index(), self.last_term());
+        cand_last_term > lt || (cand_last_term == lt && cand_last_index >= li)
+    }
+
+    /// Iterate over all entries (tests / state-machine rebuild).
+    pub fn iter(&self) -> impl Iterator<Item = &LogEntry> {
+        self.entries.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::Command;
+
+    fn e(term: Term, index: LogIndex) -> LogEntry {
+        LogEntry { term, index, cmd: Command::Put { key: index, value: term } }
+    }
+
+    #[test]
+    fn empty_log_sentinels() {
+        let log = LogStore::new();
+        assert_eq!(log.last_index(), 0);
+        assert_eq!(log.last_term(), 0);
+        assert_eq!(log.term_at(0), Some(0));
+        assert_eq!(log.term_at(1), None);
+        assert!(log.matches(0, 0));
+        assert!(!log.matches(1, 1));
+    }
+
+    #[test]
+    fn append_assigns_indices() {
+        let mut log = LogStore::new();
+        assert_eq!(log.append(1, Command::Noop), 1);
+        assert_eq!(log.append(1, Command::Noop), 2);
+        assert_eq!(log.append(2, Command::Noop), 3);
+        assert_eq!(log.last_index(), 3);
+        assert_eq!(log.last_term(), 2);
+        assert_eq!(log.term_at(2), Some(1));
+    }
+
+    #[test]
+    fn reconcile_appends_new() {
+        let mut log = LogStore::new();
+        let last = log.reconcile(0, &[e(1, 1), e(1, 2)]);
+        assert_eq!(last, 2);
+        assert_eq!(log.last_index(), 2);
+    }
+
+    #[test]
+    fn reconcile_idempotent_on_duplicates() {
+        let mut log = LogStore::new();
+        log.reconcile(0, &[e(1, 1), e(1, 2), e(1, 3)]);
+        // Re-delivering the same entries (gossip duplicates!) must not
+        // truncate or duplicate anything.
+        let last = log.reconcile(0, &[e(1, 1), e(1, 2), e(1, 3)]);
+        assert_eq!(last, 3);
+        assert_eq!(log.last_index(), 3);
+        assert_eq!(log.term_at(3), Some(1));
+    }
+
+    #[test]
+    fn reconcile_truncates_conflicts() {
+        let mut log = LogStore::new();
+        log.reconcile(0, &[e(1, 1), e(1, 2), e(1, 3)]);
+        // New leader at term 2 overwrites index 2..3.
+        let last = log.reconcile(1, &[e(2, 2)]);
+        assert_eq!(last, 2);
+        assert_eq!(log.last_index(), 2);
+        assert_eq!(log.term_at(2), Some(2));
+        assert_eq!(log.term_at(3), None);
+    }
+
+    #[test]
+    fn reconcile_does_not_truncate_beyond_request() {
+        let mut log = LogStore::new();
+        log.reconcile(0, &[e(1, 1), e(1, 2), e(1, 3), e(1, 4)]);
+        // A *stale* request covering only 1..2 with matching terms must keep
+        // the suffix (Raft §5.3: only conflicts truncate).
+        let last = log.reconcile(0, &[e(1, 1), e(1, 2)]);
+        assert_eq!(last, 2);
+        assert_eq!(log.last_index(), 4, "matching prefix must not truncate suffix");
+    }
+
+    #[test]
+    fn slice_bounds() {
+        let mut log = LogStore::new();
+        for i in 1..=5 {
+            log.append(1, Command::Put { key: i, value: i });
+        }
+        let s = log.slice(2, 4);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].index, 3);
+        assert_eq!(s[1].index, 4);
+        assert!(log.slice(4, 4).is_empty());
+        assert!(log.slice(5, 3).is_empty());
+        // to_inclusive past the end is clamped.
+        assert_eq!(log.slice(0, 99).len(), 5);
+    }
+
+    #[test]
+    fn election_restriction() {
+        let mut log = LogStore::new();
+        log.append(1, Command::Noop); // (1,1)
+        log.append(2, Command::Noop); // (2,2)
+        // Higher last term wins regardless of length.
+        assert!(log.candidate_up_to_date(1, 3));
+        // Same term: needs >= length.
+        assert!(log.candidate_up_to_date(2, 2));
+        assert!(log.candidate_up_to_date(3, 2));
+        assert!(!log.candidate_up_to_date(1, 2));
+        // Lower term loses.
+        assert!(!log.candidate_up_to_date(99, 1));
+    }
+
+    #[test]
+    fn log_matching_property() {
+        // If two logs have the same (index, term) entry then all earlier
+        // entries are identical — by construction of reconcile. Simulate two
+        // followers fed overlapping slices from the same leader log.
+        let mut leader = LogStore::new();
+        for i in 1..=10u64 {
+            leader.append(if i <= 5 { 1 } else { 2 }, Command::Put { key: i, value: i });
+        }
+        let mut f1 = LogStore::new();
+        let mut f2 = LogStore::new();
+        let all: Vec<LogEntry> = leader.iter().cloned().collect();
+        f1.reconcile(0, &all[..7]);
+        f2.reconcile(0, &all[..4]);
+        f2.reconcile(2, &all[2..9]);
+        // Shared index 7 has same term -> prefixes identical.
+        assert_eq!(f1.term_at(7), f2.term_at(7));
+        for i in 1..=7u64 {
+            assert_eq!(f1.get(i), f2.get(i));
+        }
+    }
+}

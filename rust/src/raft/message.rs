@@ -1,0 +1,193 @@
+//! Wire messages. One enum covers the original Raft RPCs and the gossip
+//! extension: a gossiped AppendEntries is the same request with a
+//! [`GossipMeta`] attached (the paper's boolean "came from epidemic
+//! propagation" flag, plus `RoundLC` and — in V2 — the commit structures).
+//!
+//! Entry batches are carried behind an `Arc`: the epidemic relay fans the
+//! *same* payload out to `F` peers, and the simulator moves these messages
+//! by value; sharing the batch keeps the relay O(1) per target. (A real
+//! network stack would serialize per target; the simulator's cost model
+//! charges for that explicitly, so the sharing is a host-side optimisation,
+//! not a modelling shortcut.)
+
+use super::log::LogEntry;
+use super::types::{LogIndex, NodeId, Term};
+use crate::epidemic::EpidemicState;
+use std::sync::Arc;
+
+/// Gossip metadata attached to epidemically propagated AppendEntries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GossipMeta {
+    /// The round logical clock value stamped by the leader (§3.1).
+    pub round: u64,
+    /// Relay hop count (0 = sent by the leader itself). Diagnostic — the
+    /// protocol terminates relaying via RoundLC, not TTL.
+    pub hops: u32,
+    /// V2 commit structures, merged-in by every relayer (§3.2).
+    pub epidemic: Option<EpidemicState>,
+}
+
+/// AppendEntries request (classic RPC when `gossip == None`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppendEntriesArgs {
+    pub term: Term,
+    pub leader: NodeId,
+    pub prev_log_index: LogIndex,
+    pub prev_log_term: Term,
+    pub entries: Arc<Vec<LogEntry>>,
+    pub leader_commit: LogIndex,
+    pub gossip: Option<GossipMeta>,
+    /// Sequence number for RPC retransmission matching (classic path).
+    pub seq: u64,
+}
+
+/// AppendEntries response.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppendEntriesReply {
+    pub term: Term,
+    pub from: NodeId,
+    pub success: bool,
+    /// On success: highest index known replicated on `from`.
+    /// On failure: a hint — the follower's last log index (so the leader
+    /// can jump `next_index` back without the one-at-a-time walk).
+    pub match_hint: LogIndex,
+    /// Round this reply answers (gossip path), if any.
+    pub round: Option<u64>,
+    /// V2: responder's commit structures ride back to the leader.
+    pub epidemic: Option<EpidemicState>,
+    pub seq: u64,
+}
+
+/// RequestVote request. Point-to-point in the paper's evaluated versions;
+/// with `protocol.gossip_votes = true` (the §6 future-work extension,
+/// implemented here) candidates disseminate it epidemically: `gossip` is
+/// set, receivers relay a candidate's request once per term over their own
+/// permutation, and vote replies still travel directly to the candidate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequestVoteArgs {
+    pub term: Term,
+    pub candidate: NodeId,
+    pub last_log_index: LogIndex,
+    pub last_log_term: Term,
+    /// Epidemic dissemination flag + hop count (0 = sent by the candidate).
+    pub gossip: bool,
+    pub hops: u32,
+}
+
+/// RequestVote response.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequestVoteReply {
+    pub term: Term,
+    pub from: NodeId,
+    pub granted: bool,
+}
+
+/// All replica-to-replica messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    AppendEntries(AppendEntriesArgs),
+    AppendEntriesReply(AppendEntriesReply),
+    RequestVote(RequestVoteArgs),
+    RequestVoteReply(RequestVoteReply),
+}
+
+impl Message {
+    /// Entry count carried (for the cost model).
+    pub fn entry_count(&self) -> usize {
+        match self {
+            Message::AppendEntries(a) => a.entries.len(),
+            _ => 0,
+        }
+    }
+
+    /// True for gossiped AppendEntries.
+    pub fn is_gossip(&self) -> bool {
+        matches!(self, Message::AppendEntries(a) if a.gossip.is_some())
+    }
+
+    pub fn term(&self) -> Term {
+        match self {
+            Message::AppendEntries(a) => a.term,
+            Message::AppendEntriesReply(r) => r.term,
+            Message::RequestVote(v) => v.term,
+            Message::RequestVoteReply(r) => r.term,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Message::AppendEntries(a) if a.gossip.is_some() => "gossip",
+            Message::AppendEntries(_) => "append",
+            Message::AppendEntriesReply(_) => "append_reply",
+            Message::RequestVote(_) => "vote",
+            Message::RequestVoteReply(_) => "vote_reply",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::Command;
+
+    fn entries(n: u64) -> Arc<Vec<LogEntry>> {
+        Arc::new(
+            (1..=n)
+                .map(|i| LogEntry { term: 1, index: i, cmd: Command::Noop })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn kinds_and_counters() {
+        let ae = Message::AppendEntries(AppendEntriesArgs {
+            term: 1,
+            leader: 0,
+            prev_log_index: 0,
+            prev_log_term: 0,
+            entries: entries(3),
+            leader_commit: 0,
+            gossip: None,
+            seq: 1,
+        });
+        assert_eq!(ae.kind(), "append");
+        assert_eq!(ae.entry_count(), 3);
+        assert!(!ae.is_gossip());
+        assert_eq!(ae.term(), 1);
+
+        let g = Message::AppendEntries(AppendEntriesArgs {
+            term: 2,
+            leader: 0,
+            prev_log_index: 0,
+            prev_log_term: 0,
+            entries: entries(1),
+            leader_commit: 0,
+            gossip: Some(GossipMeta { round: 7, hops: 0, epidemic: None }),
+            seq: 0,
+        });
+        assert_eq!(g.kind(), "gossip");
+        assert!(g.is_gossip());
+    }
+
+    #[test]
+    fn arc_sharing_across_fanout() {
+        let batch = entries(100);
+        let mk = |_| {
+            Message::AppendEntries(AppendEntriesArgs {
+                term: 1,
+                leader: 0,
+                prev_log_index: 0,
+                prev_log_term: 0,
+                entries: Arc::clone(&batch),
+                leader_commit: 0,
+                gossip: Some(GossipMeta { round: 1, hops: 0, epidemic: None }),
+                seq: 0,
+            })
+        };
+        let msgs: Vec<Message> = (0..5).map(mk).collect();
+        // 5 fanout copies + the original share one allocation.
+        assert_eq!(Arc::strong_count(&batch), 6);
+        drop(msgs);
+        assert_eq!(Arc::strong_count(&batch), 1);
+    }
+}

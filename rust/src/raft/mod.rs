@@ -1,0 +1,16 @@
+//! Raft core: the deterministic protocol state machine plus the paper's
+//! epidemic extensions, behind a sans-io interface (see [`node::Node`]).
+
+pub mod election;
+pub mod log;
+pub mod message;
+pub mod node;
+pub mod replication;
+pub mod types;
+
+pub use log::{LogEntry, LogStore};
+pub use message::{
+    AppendEntriesArgs, AppendEntriesReply, GossipMeta, Message, RequestVoteArgs, RequestVoteReply,
+};
+pub use node::{Action, ClientResult, Counters, Node};
+pub use types::{majority, LogIndex, NodeId, RequestId, Role, Term, Time, Variant};

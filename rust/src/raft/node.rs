@@ -1,0 +1,531 @@
+//! The deterministic, sans-io protocol core.
+//!
+//! A [`Node`] never does I/O and never reads a clock: every entry point
+//! takes `now` and returns a list of [`Action`]s for the host to execute.
+//! The same core is driven by three hosts:
+//!
+//! * the discrete-event simulator (`sim/`) — the paper's experiments;
+//! * the live thread-per-replica cluster (`cluster/`);
+//! * unit/property tests, which call the entry points directly.
+//!
+//! Variant selection ([`Variant`]) switches between original Raft, V1
+//! (epidemic AppendEntries, §3.1) and V2 (decentralised commit, §3.2).
+
+use super::log::LogStore;
+use super::message::Message;
+use super::types::{majority, LogIndex, NodeId, RequestId, Role, Term, Time, Variant};
+use crate::config::ProtocolConfig;
+use crate::epidemic::{EpidemicState, LogView, Permutation, RoundClock};
+use crate::kvstore::{Command, KvStore, Output};
+use crate::util::rng::Xoshiro256;
+use std::collections::{BTreeMap, HashSet};
+
+/// Result delivered to a client.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientResult {
+    Ok(Output),
+    /// Not the leader; hint says who might be.
+    Redirect(Option<NodeId>),
+}
+
+/// Host-executed effects.
+#[derive(Clone, Debug)]
+pub enum Action {
+    Send { to: NodeId, msg: Message },
+    ClientReply { req: RequestId, result: ClientResult },
+    /// Commit index advanced over `(from, to]` (Fig 7 timestamps).
+    Committed { from: LogIndex, to: LogIndex },
+    RoleChanged { role: Role, term: Term },
+}
+
+/// Per-follower replication/repair bookkeeping (leader side).
+#[derive(Clone, Debug, Default)]
+pub(crate) struct FollowerSlot {
+    pub next_index: LogIndex,
+    pub match_index: LogIndex,
+    /// Classic-RPC repair in progress (gossip variants) / outstanding
+    /// heartbeat bookkeeping (original Raft).
+    pub repairing: bool,
+    pub last_rpc_at: Time,
+}
+
+/// Protocol event counters (diagnostics; the simulator's CPU accounting is
+/// cost-model based, not counter based).
+#[derive(Clone, Debug, Default)]
+pub struct Counters {
+    pub msgs_sent: u64,
+    pub msgs_recv: u64,
+    pub gossip_sent: u64,
+    pub gossip_recv_fresh: u64,
+    pub gossip_recv_dup: u64,
+    pub rpcs_sent: u64,
+    pub replies_sent: u64,
+    pub rounds_started: u64,
+    pub elections_started: u64,
+    pub merges: u64,
+    pub entries_appended: u64,
+    pub repair_rpcs: u64,
+}
+
+/// The protocol state machine for one replica.
+pub struct Node {
+    pub(crate) id: NodeId,
+    pub(crate) cfg: ProtocolConfig,
+
+    // Persistent state (in-memory here; experiments run the replication
+    // phase, as in the paper).
+    pub(crate) current_term: Term,
+    pub(crate) voted_for: Option<NodeId>,
+    pub(crate) log: LogStore,
+
+    // Volatile state.
+    pub(crate) role: Role,
+    pub(crate) commit_index: LogIndex,
+    pub(crate) last_applied: LogIndex,
+    pub(crate) kv: KvStore,
+    pub(crate) leader_hint: Option<NodeId>,
+
+    // Leader state.
+    pub(crate) followers: Vec<FollowerSlot>,
+    pub(crate) pending: BTreeMap<LogIndex, RequestId>,
+    pub(crate) coalesce_deadline: Option<Time>,
+    pub(crate) next_round_at: Time,
+
+    // Election state.
+    pub(crate) votes: HashSet<NodeId>,
+    pub(crate) election_deadline: Time,
+    /// Gossip-vote dedup: candidates whose gossiped RequestVote we already
+    /// processed+relayed, scoped to `vote_gossip_term`.
+    pub(crate) vote_gossip_seen: HashSet<NodeId>,
+    pub(crate) vote_gossip_term: Term,
+
+    // Gossip state.
+    pub(crate) rng: Xoshiro256,
+    pub(crate) perm: Permutation,
+    pub(crate) round_clock: RoundClock,
+    /// Commit-index snapshots of the last few rounds. Gossip batches start
+    /// at the *oldest* snapshot, not the current commit index, so a
+    /// follower that misses a round or two still log-matches the next one
+    /// instead of falling into RPC repair (see start_gossip_round).
+    pub(crate) commit_history: std::collections::VecDeque<LogIndex>,
+
+    // V2 state.
+    pub(crate) epi: EpidemicState,
+
+    pub(crate) seq: u64,
+    pub counters: Counters,
+}
+
+impl Node {
+    pub fn new(id: NodeId, cfg: ProtocolConfig, seed: u64) -> Self {
+        assert!(id < cfg.n, "node id {id} out of range for n={}", cfg.n);
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ (id as u64).wrapping_mul(0xA24BAED4963EE407));
+        let perm = Permutation::new(cfg.n, id, &mut rng);
+        let n = cfg.n;
+        let mut node = Self {
+            id,
+            current_term: 0,
+            voted_for: None,
+            log: LogStore::new(),
+            role: Role::Follower,
+            commit_index: 0,
+            last_applied: 0,
+            kv: KvStore::new(),
+            leader_hint: None,
+            followers: vec![FollowerSlot::default(); n],
+            pending: BTreeMap::new(),
+            coalesce_deadline: None,
+            next_round_at: Time::MAX,
+            votes: HashSet::new(),
+            election_deadline: 0,
+            vote_gossip_seen: HashSet::new(),
+            vote_gossip_term: 0,
+            rng,
+            perm,
+            round_clock: RoundClock::new(),
+            commit_history: std::collections::VecDeque::with_capacity(4),
+            epi: EpidemicState::new(n),
+            seq: 0,
+            counters: Counters::default(),
+            cfg,
+        };
+        node.election_deadline = node.random_election_deadline(0);
+        node
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    pub fn id(&self) -> NodeId {
+        self.id
+    }
+
+    pub fn role(&self) -> Role {
+        self.role
+    }
+
+    pub fn is_leader(&self) -> bool {
+        self.role == Role::Leader
+    }
+
+    pub fn term(&self) -> Term {
+        self.current_term
+    }
+
+    pub fn commit_index(&self) -> LogIndex {
+        self.commit_index
+    }
+
+    pub fn last_index(&self) -> LogIndex {
+        self.log.last_index()
+    }
+
+    pub fn leader_hint(&self) -> Option<NodeId> {
+        self.leader_hint
+    }
+
+    pub fn kv(&self) -> &KvStore {
+        &self.kv
+    }
+
+    pub fn log(&self) -> &LogStore {
+        &self.log
+    }
+
+    pub fn epidemic(&self) -> &EpidemicState {
+        &self.epi
+    }
+
+    pub fn config(&self) -> &ProtocolConfig {
+        &self.cfg
+    }
+
+    pub(crate) fn n(&self) -> usize {
+        self.cfg.n
+    }
+
+    pub(crate) fn majority(&self) -> usize {
+        majority(self.cfg.n)
+    }
+
+    pub(crate) fn log_view(&self) -> LogView {
+        LogView {
+            last_index: self.log.last_index(),
+            last_term: self.log.last_term(),
+            current_term: self.current_term,
+        }
+    }
+
+    pub(crate) fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    // ---- bootstrap (stable-leader experiments, §4.1) -----------------------
+
+    /// Install this node as the established leader of term 1 without
+    /// running an election — the paper evaluates "apenas na fase de
+    /// replicação do algoritmo com um líder estável".
+    pub fn bootstrap_leader(&mut self, now: Time) -> Vec<Action> {
+        self.current_term = 1;
+        self.voted_for = Some(self.id);
+        let mut actions = Vec::new();
+        self.become_leader(now, &mut actions);
+        actions
+    }
+
+    /// Matching follower bootstrap: accept `leader` as leader of term 1.
+    pub fn bootstrap_follower(&mut self, now: Time, leader: NodeId) {
+        self.current_term = 1;
+        self.voted_for = Some(leader);
+        self.leader_hint = Some(leader);
+        self.role = Role::Follower;
+        self.election_deadline = self.random_election_deadline(now);
+    }
+
+    // ---- entry points ------------------------------------------------------
+
+    /// A client command arrives (only meaningful at the leader).
+    pub fn client_request(&mut self, now: Time, req: RequestId, cmd: Command) -> Vec<Action> {
+        let mut actions = Vec::new();
+        if self.role != Role::Leader {
+            actions.push(Action::ClientReply {
+                req,
+                result: ClientResult::Redirect(self.leader_hint),
+            });
+            return actions;
+        }
+        let index = self.log.append(self.current_term, cmd);
+        self.counters.entries_appended += 1;
+        self.pending.insert(index, req);
+        if self.cfg.variant.has_epidemic_commit() {
+            self.epi.maybe_set_own_bit(self.id, self.log_view());
+            self.run_epidemic_update(now, &mut actions);
+        }
+        if self.cfg.n == 1 {
+            // Trivial cluster: the leader alone is a majority.
+            self.advance_commit_from_matches(&mut actions);
+        }
+        match self.cfg.variant {
+            Variant::Raft => {
+                if self.cfg.raft_coalesce_us == 0 {
+                    self.broadcast_append(now, &mut actions);
+                } else if self.coalesce_deadline.is_none() {
+                    self.coalesce_deadline = Some(now + self.cfg.raft_coalesce_us);
+                }
+            }
+            Variant::V1 | Variant::V2 => {
+                // Pull an idle-scheduled round in so fresh entries don't wait
+                // out the long heartbeat interval.
+                let active_at = now + self.cfg.round_interval_us;
+                if self.next_round_at > active_at {
+                    self.next_round_at = active_at;
+                }
+            }
+        }
+        actions
+    }
+
+    /// A replica-to-replica message arrives.
+    pub fn on_message(&mut self, now: Time, msg: Message) -> Vec<Action> {
+        self.counters.msgs_recv += 1;
+        let mut actions = Vec::new();
+        // Universal Raft rule: higher term ⇒ step down first.
+        if msg.term() > self.current_term {
+            self.step_down(now, msg.term(), &mut actions);
+        }
+        match msg {
+            Message::AppendEntries(args) => self.on_append_entries(now, args, &mut actions),
+            Message::AppendEntriesReply(r) => self.on_append_reply(now, r, &mut actions),
+            Message::RequestVote(args) => self.on_request_vote(now, args, &mut actions),
+            Message::RequestVoteReply(r) => self.on_vote_reply(now, r, &mut actions),
+        }
+        actions
+    }
+
+    /// Timer tick: the host calls this at (or after) `next_deadline`.
+    pub fn tick(&mut self, now: Time) -> Vec<Action> {
+        let mut actions = Vec::new();
+        match self.role {
+            Role::Leader => {
+                if let Some(dl) = self.coalesce_deadline {
+                    if now >= dl {
+                        self.coalesce_deadline = None;
+                        self.broadcast_append(now, &mut actions);
+                    }
+                }
+                match self.cfg.variant {
+                    Variant::Raft => {
+                        if now >= self.next_round_at {
+                            // Heartbeat / retransmit broadcast.
+                            self.broadcast_append(now, &mut actions);
+                        }
+                    }
+                    Variant::V1 | Variant::V2 => {
+                        if now >= self.next_round_at {
+                            self.start_gossip_round(now, &mut actions);
+                        }
+                        self.retransmit_repairs(now, &mut actions);
+                    }
+                }
+            }
+            Role::Follower | Role::Candidate => {
+                if now >= self.election_deadline {
+                    self.start_election(now, &mut actions);
+                }
+            }
+        }
+        actions
+    }
+
+    /// Earliest time at which `tick` has work to do.
+    pub fn next_deadline(&self) -> Time {
+        match self.role {
+            Role::Leader => {
+                let mut dl = self.next_round_at;
+                if let Some(c) = self.coalesce_deadline {
+                    dl = dl.min(c);
+                }
+                if self.cfg.variant.is_gossip() {
+                    for f in self.followers.iter() {
+                        if f.repairing {
+                            dl = dl.min(f.last_rpc_at + self.cfg.rpc_timeout_us);
+                        }
+                    }
+                }
+                dl
+            }
+            _ => self.election_deadline,
+        }
+    }
+
+    // ---- shared helpers ----------------------------------------------------
+
+    pub(crate) fn random_election_deadline(&mut self, now: Time) -> Time {
+        let lo = self.cfg.election_timeout_min_us;
+        let hi = self.cfg.election_timeout_max_us;
+        now + if hi > lo { self.rng.next_range(lo, hi) } else { lo }
+    }
+
+    /// Adopt a higher `term` and fall back to follower.
+    pub(crate) fn step_down(&mut self, now: Time, term: Term, actions: &mut Vec<Action>) {
+        debug_assert!(term > self.current_term);
+        self.current_term = term;
+        self.voted_for = None;
+        self.role = Role::Follower;
+        self.votes.clear();
+        self.leader_hint = None;
+        self.coalesce_deadline = None;
+        self.next_round_at = Time::MAX;
+        self.commit_history.clear();
+        self.election_deadline = self.random_election_deadline(now);
+        // §3.2: reset the vote structures on discovering a new term.
+        if self.cfg.variant.has_epidemic_commit() {
+            self.epi.reset_for_new_term();
+        }
+        // Dangling client requests will never commit under our leadership.
+        let reqs: Vec<RequestId> = self.pending.values().copied().collect();
+        self.pending.clear();
+        for req in reqs {
+            actions.push(Action::ClientReply { req, result: ClientResult::Redirect(None) });
+        }
+        actions.push(Action::RoleChanged { role: Role::Follower, term });
+    }
+
+    /// Advance `commit_index` to `target` (monotone), applying commands and
+    /// answering pending clients.
+    pub(crate) fn advance_commit(&mut self, target: LogIndex, actions: &mut Vec<Action>) {
+        let target = target.min(self.log.last_index());
+        if target <= self.commit_index {
+            return;
+        }
+        let from = self.commit_index;
+        self.commit_index = target;
+        actions.push(Action::Committed { from, to: target });
+        while self.last_applied < self.commit_index {
+            self.last_applied += 1;
+            let idx = self.last_applied;
+            let out = {
+                let entry = self.log.get(idx).expect("committed entry must exist");
+                let cmd = entry.cmd;
+                self.kv.apply(&cmd)
+            };
+            if self.role == Role::Leader {
+                if let Some(req) = self.pending.remove(&idx) {
+                    actions.push(Action::ClientReply { req, result: ClientResult::Ok(out) });
+                }
+            }
+        }
+    }
+
+    /// V2: run `Update` and apply the follower commit rule.
+    pub(crate) fn run_epidemic_update(&mut self, _now: Time, actions: &mut Vec<Action>) {
+        debug_assert!(self.cfg.variant.has_epidemic_commit());
+        self.epi.update(self.id, self.majority(), self.log_view());
+        let bound = self.epi.commit_bound(self.log_view());
+        if bound > self.commit_index {
+            self.advance_commit(bound, actions);
+        }
+    }
+
+    pub(crate) fn send(&mut self, to: NodeId, msg: Message, actions: &mut Vec<Action>) {
+        debug_assert_ne!(to, self.id, "node must not message itself");
+        self.counters.msgs_sent += 1;
+        actions.push(Action::Send { to, msg });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ProtocolConfig;
+
+    fn cfg(n: usize, variant: Variant) -> ProtocolConfig {
+        ProtocolConfig::for_variant(n, variant)
+    }
+
+    #[test]
+    fn new_node_is_follower_at_term_zero() {
+        let node = Node::new(0, cfg(3, Variant::Raft), 1);
+        assert_eq!(node.role(), Role::Follower);
+        assert_eq!(node.term(), 0);
+        assert_eq!(node.commit_index(), 0);
+        assert_eq!(node.last_index(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn id_out_of_range_panics() {
+        Node::new(5, cfg(3, Variant::Raft), 1);
+    }
+
+    #[test]
+    fn client_request_at_follower_redirects() {
+        let mut node = Node::new(1, cfg(3, Variant::Raft), 1);
+        node.bootstrap_follower(0, 0);
+        let actions = node.client_request(10, 99, Command::Noop);
+        assert!(matches!(
+            actions.as_slice(),
+            [Action::ClientReply { req: 99, result: ClientResult::Redirect(Some(0)) }]
+        ));
+        assert_eq!(node.last_index(), 0, "no append at follower");
+    }
+
+    #[test]
+    fn bootstrap_leader_appends_noop_and_broadcasts() {
+        let mut node = Node::new(0, cfg(3, Variant::Raft), 1);
+        let actions = node.bootstrap_leader(0);
+        assert!(node.is_leader());
+        assert_eq!(node.term(), 1);
+        assert_eq!(node.last_index(), 1, "leader no-op");
+        let sends = actions.iter().filter(|a| matches!(a, Action::Send { .. })).count();
+        assert_eq!(sends, 2, "append broadcast to both followers");
+    }
+
+    #[test]
+    fn single_node_cluster_commits_immediately() {
+        for variant in Variant::ALL {
+            let mut node = Node::new(0, cfg(1, variant), 1);
+            node.bootstrap_leader(0);
+            let actions = node.client_request(5, 1, Command::Put { key: 1, value: 2 });
+            let replied = actions.iter().any(|a| {
+                matches!(a, Action::ClientReply { req: 1, result: ClientResult::Ok(_) })
+            });
+            assert!(replied, "variant {variant:?} must self-commit with n=1");
+            assert_eq!(node.kv().get(1), Some(2));
+        }
+    }
+
+    #[test]
+    fn next_deadline_follower_is_election_deadline() {
+        let node = Node::new(2, cfg(3, Variant::V1), 1);
+        assert_eq!(node.next_deadline(), node.election_deadline);
+        assert!(node.next_deadline() >= node.cfg.election_timeout_min_us);
+    }
+
+    #[test]
+    fn step_down_flushes_pending_clients() {
+        let mut node = Node::new(0, cfg(3, Variant::Raft), 1);
+        node.bootstrap_leader(0);
+        node.client_request(1, 7, Command::Noop);
+        let mut actions = Vec::new();
+        node.step_down(2, 5, &mut actions);
+        assert_eq!(node.role(), Role::Follower);
+        assert_eq!(node.term(), 5);
+        assert!(actions.iter().any(|a| matches!(
+            a,
+            Action::ClientReply { req: 7, result: ClientResult::Redirect(None) }
+        )));
+    }
+
+    #[test]
+    fn v2_step_down_resets_epidemic_vote() {
+        let mut node = Node::new(0, cfg(5, Variant::V2), 1);
+        node.bootstrap_leader(0);
+        node.client_request(1, 1, Command::Noop);
+        assert!(node.epidemic().bitmap.get(0), "leader votes for its entry");
+        let mut actions = Vec::new();
+        node.step_down(2, 9, &mut actions);
+        assert_eq!(node.epidemic().bitmap.count(), 0);
+        assert_eq!(node.epidemic().next_commit, node.epidemic().max_commit + 1);
+    }
+}

@@ -1,0 +1,780 @@
+//! Log replication: the original Raft path (per-request broadcast
+//! AppendEntries RPCs, leader-driven commit) and the paper's epidemic path
+//! (§3.1 gossip rounds + §3.2 decentralised commit), sharing the repair
+//! machinery (per-follower classic RPC catch-up).
+
+use super::message::{AppendEntriesArgs, AppendEntriesReply, GossipMeta, Message};
+use super::node::{Action, Node};
+use super::types::{LogIndex, NodeId, Role, Time, Variant};
+use std::sync::Arc;
+
+impl Node {
+    // =======================================================================
+    // Leader side
+    // =======================================================================
+
+    /// Original Raft: broadcast AppendEntries to every follower with the
+    /// entries it still misses (also the heartbeat/retransmit path).
+    pub(crate) fn broadcast_append(&mut self, now: Time, actions: &mut Vec<Action>) {
+        debug_assert_eq!(self.role, Role::Leader);
+        let last = self.log.last_index();
+        for peer in 0..self.n() {
+            if peer == self.id {
+                continue;
+            }
+            self.send_entries_rpc(now, peer, last, actions);
+        }
+        // Broadcast doubles as heartbeat.
+        self.next_round_at = now + self.cfg.heartbeat_interval_us;
+    }
+
+    /// Send a classic AppendEntries RPC to `peer` covering up to `last`.
+    fn send_entries_rpc(
+        &mut self,
+        now: Time,
+        peer: NodeId,
+        last: LogIndex,
+        actions: &mut Vec<Action>,
+    ) {
+        let next = self.followers[peer].next_index.max(1);
+        let prev = next - 1;
+        let prev_term = self.log.term_at(prev).expect("prev within log");
+        let hi = last.min(prev + self.cfg.max_entries_per_rpc as LogIndex);
+        let entries = self.log.slice(prev, hi);
+        let seq = self.next_seq();
+        let args = AppendEntriesArgs {
+            term: self.current_term,
+            leader: self.id,
+            prev_log_index: prev,
+            prev_log_term: prev_term,
+            entries,
+            leader_commit: self.commit_index,
+            gossip: None,
+            seq,
+        };
+        self.followers[peer].last_rpc_at = now;
+        self.counters.rpcs_sent += 1;
+        self.send(peer, Message::AppendEntries(args), actions);
+    }
+
+    /// §3.1 — start one epidemic round: stamp `RoundLC`, batch the entries
+    /// not yet committed, send to the next `F` permutation targets.
+    pub(crate) fn start_gossip_round(&mut self, now: Time, actions: &mut Vec<Action>) {
+        debug_assert_eq!(self.role, Role::Leader);
+        debug_assert!(self.cfg.variant.is_gossip());
+        let round = self.round_clock.start_round(self.current_term);
+        self.counters.rounds_started += 1;
+        // Batch base: the commit index as of ~3 rounds ago. Using the
+        // *current* commit index would make any follower that missed a
+        // single round log-mismatch the next one (commit races past its
+        // log end under load) and fall into per-follower RPC repair — a
+        // repair storm that collapses throughput. The margin re-sends a
+        // few already-committed entries per round instead (idempotent
+        // reconcile); EXPERIMENTS.md §Perf quantifies the trade.
+        let base = self
+            .commit_history
+            .front()
+            .copied()
+            .unwrap_or(0)
+            .min(self.commit_index);
+        self.commit_history.push_back(self.commit_index);
+        if self.commit_history.len() > 3 {
+            self.commit_history.pop_front();
+        }
+        let last = self.log.last_index();
+        let hi = last.min(base + self.cfg.max_entries_per_rpc as LogIndex);
+        let entries = self.log.slice(base, hi);
+        let prev_term = self.log.term_at(base).expect("commit index within log");
+        let epidemic = if self.cfg.variant.has_epidemic_commit() {
+            Some(self.epi.clone())
+        } else {
+            None
+        };
+        let targets = self.perm.next_round(self.cfg.fanout);
+        for to in targets {
+            let args = AppendEntriesArgs {
+                term: self.current_term,
+                leader: self.id,
+                prev_log_index: base,
+                prev_log_term: prev_term,
+                entries: Arc::clone(&entries),
+                leader_commit: self.commit_index,
+                gossip: Some(GossipMeta { round, hops: 0, epidemic: epidemic.clone() }),
+                seq: 0,
+            };
+            self.counters.gossip_sent += 1;
+            self.send(to, Message::AppendEntries(args), actions);
+        }
+        // Next round: fast cadence while entries are uncommitted, slow
+        // heartbeat cadence when idle (§3.1: "um intervalo de tempo maior").
+        let interval = if self.log.last_index() > self.commit_index {
+            self.cfg.round_interval_us
+        } else {
+            self.cfg.idle_round_interval_us
+        };
+        self.next_round_at = now + interval;
+    }
+
+    /// Gossip variants: resend repair RPCs that timed out.
+    pub(crate) fn retransmit_repairs(&mut self, now: Time, actions: &mut Vec<Action>) {
+        debug_assert_eq!(self.role, Role::Leader);
+        let last = self.log.last_index();
+        for peer in 0..self.n() {
+            if peer == self.id || !self.followers[peer].repairing {
+                continue;
+            }
+            if now.saturating_sub(self.followers[peer].last_rpc_at) >= self.cfg.rpc_timeout_us {
+                self.counters.repair_rpcs += 1;
+                self.send_entries_rpc(now, peer, last, actions);
+            }
+        }
+    }
+
+    /// A reply to AppendEntries (RPC or first-receipt gossip response).
+    pub(crate) fn on_append_reply(
+        &mut self,
+        now: Time,
+        reply: AppendEntriesReply,
+        actions: &mut Vec<Action>,
+    ) {
+        if self.role != Role::Leader || reply.term < self.current_term {
+            return; // stale
+        }
+        debug_assert_eq!(reply.term, self.current_term);
+        // V2: responder's structures ride back on every reply.
+        if let Some(epi) = &reply.epidemic {
+            if self.cfg.variant.has_epidemic_commit() {
+                self.counters.merges += 1;
+                self.epi.merge(epi);
+                self.epi.maybe_set_own_bit(self.id, self.log_view());
+                self.run_epidemic_update(now, actions);
+            }
+        }
+        let last = self.log.last_index();
+        let slot = &mut self.followers[reply.from];
+        if reply.success {
+            slot.match_index = slot.match_index.max(reply.match_hint);
+            slot.next_index = slot.next_index.max(reply.match_hint + 1);
+            if slot.repairing {
+                if slot.match_index >= self.commit_index && slot.next_index > last {
+                    slot.repairing = false;
+                } else {
+                    // Keep feeding the catch-up pipeline.
+                    self.counters.repair_rpcs += 1;
+                    self.send_entries_rpc(now, reply.from, last, actions);
+                }
+            }
+            self.advance_commit_from_matches(actions);
+        } else {
+            // Log mismatch at the follower: jump next_index back to its
+            // hint and repair via classic RPCs.
+            let hint_next = reply.match_hint + 1;
+            slot.next_index = slot.next_index.min(hint_next).max(1);
+            slot.repairing = true;
+            self.counters.repair_rpcs += 1;
+            self.send_entries_rpc(now, reply.from, last, actions);
+        }
+    }
+
+    /// Classic Raft commit rule: the majority-replicated index, committable
+    /// only when its entry is from the current term (§5.4.2).
+    pub(crate) fn advance_commit_from_matches(&mut self, actions: &mut Vec<Action>) {
+        debug_assert_eq!(self.role, Role::Leader);
+        let mut matches: Vec<LogIndex> = (0..self.n())
+            .map(|i| if i == self.id { self.log.last_index() } else { self.followers[i].match_index })
+            .collect();
+        matches.sort_unstable_by(|a, b| b.cmp(a));
+        let candidate = matches[self.majority() - 1];
+        if candidate > self.commit_index
+            && self.log.term_at(candidate) == Some(self.current_term)
+        {
+            // V2: the classic rule is also evidence for the epidemic state —
+            // keep max_commit consistent so gossip carries it outward.
+            if self.cfg.variant.has_epidemic_commit() && candidate > self.epi.max_commit {
+                if self.epi.next_commit <= candidate {
+                    self.epi.bitmap.clear();
+                    self.epi.next_commit = candidate + 1;
+                    self.epi.maybe_set_own_bit(self.id, self.log_view());
+                }
+                self.epi.max_commit = candidate;
+            }
+            self.advance_commit(candidate, actions);
+        }
+    }
+
+    // =======================================================================
+    // Follower side
+    // =======================================================================
+
+    /// Incoming AppendEntries — both the classic RPC (`gossip == None`) and
+    /// the epidemic round message.
+    pub(crate) fn on_append_entries(
+        &mut self,
+        now: Time,
+        args: AppendEntriesArgs,
+        actions: &mut Vec<Action>,
+    ) {
+        if args.term < self.current_term {
+            if args.leader == self.id {
+                // Our own round from a term we led, relayed back after we
+                // stepped down — drop (never reply to ourselves).
+                return;
+            }
+            // Stale leader: tell it about the newer term.
+            let reply = AppendEntriesReply {
+                term: self.current_term,
+                from: self.id,
+                success: false,
+                match_hint: self.log.last_index(),
+                round: args.gossip.as_ref().map(|g| g.round),
+                epidemic: None,
+                seq: args.seq,
+            };
+            self.counters.replies_sent += 1;
+            self.send(args.leader, Message::AppendEntriesReply(reply), actions);
+            return;
+        }
+        debug_assert_eq!(args.term, self.current_term);
+        // Equal-term candidate learns there is an established leader.
+        if self.role == Role::Candidate {
+            self.role = Role::Follower;
+            self.votes.clear();
+            actions.push(Action::RoleChanged { role: Role::Follower, term: self.current_term });
+        }
+        if self.role == Role::Leader {
+            // Only possible for our own relayed round coming back (we are
+            // the leader of this term). Merge the piggybacked structures —
+            // this is exactly how the leader learns remote votes in V2.
+            if let Some(g) = &args.gossip {
+                if let Some(epi) = &g.epidemic {
+                    if self.cfg.variant.has_epidemic_commit() {
+                        self.counters.merges += 1;
+                        self.epi.merge(epi);
+                        self.epi.maybe_set_own_bit(self.id, self.log_view());
+                        self.run_epidemic_update(now, actions);
+                    }
+                }
+            }
+            return;
+        }
+        self.leader_hint = Some(args.leader);
+
+        match args.gossip.clone() {
+            None => self.on_classic_append(now, args, actions),
+            Some(meta) => self.on_gossip_append(now, args, meta, actions),
+        }
+    }
+
+    /// Classic AppendEntries RPC (original Raft; repair path for V1/V2).
+    fn on_classic_append(
+        &mut self,
+        now: Time,
+        args: AppendEntriesArgs,
+        actions: &mut Vec<Action>,
+    ) {
+        // Any valid leader message resets the election timer.
+        self.election_deadline = self.random_election_deadline(now);
+        let (success, match_hint) = if self.log.matches(args.prev_log_index, args.prev_log_term)
+        {
+            let covered = self.log.reconcile(args.prev_log_index, &args.entries);
+            self.counters.entries_appended += args.entries.len() as u64;
+            (true, covered)
+        } else {
+            (false, self.log.last_index())
+        };
+        if success {
+            if self.cfg.variant.has_epidemic_commit() {
+                self.epi.maybe_set_own_bit(self.id, self.log_view());
+                self.run_epidemic_update(now, actions);
+            }
+            let bound = args.leader_commit.min(match_hint);
+            if bound > self.commit_index {
+                self.advance_commit(bound, actions);
+            }
+        }
+        let epidemic = if self.cfg.variant.has_epidemic_commit() {
+            Some(self.epi.clone())
+        } else {
+            None
+        };
+        let reply = AppendEntriesReply {
+            term: self.current_term,
+            from: self.id,
+            success,
+            match_hint,
+            round: None,
+            epidemic,
+            seq: args.seq,
+        };
+        self.counters.replies_sent += 1;
+        self.send(args.leader, Message::AppendEntriesReply(reply), actions);
+    }
+
+    /// §3.1 — gossiped AppendEntries: RoundLC filtering, first-receipt
+    /// response, epidemic relay; §3.2 — Merge/Update on every receipt.
+    fn on_gossip_append(
+        &mut self,
+        now: Time,
+        args: AppendEntriesArgs,
+        meta: GossipMeta,
+        actions: &mut Vec<Action>,
+    ) {
+        use crate::epidemic::RoundClass;
+        // V2: fold the carried structures on *every* receipt — duplicates
+        // still carry fresher relayer state ("atualizadas e partilhadas ...
+        // nos pedidos AppendEntries").
+        if let Some(epi) = &meta.epidemic {
+            if self.cfg.variant.has_epidemic_commit() {
+                self.counters.merges += 1;
+                self.epi.merge(epi);
+                self.epi.maybe_set_own_bit(self.id, self.log_view());
+                self.run_epidemic_update(now, actions);
+            }
+        }
+        match self.round_clock.observe(self.current_term, meta.round) {
+            RoundClass::Duplicate => {
+                self.counters.gossip_recv_dup += 1;
+                // Already processed this round: drop (no response, no relay).
+            }
+            RoundClass::Fresh => {
+                self.counters.gossip_recv_fresh += 1;
+                // A fresh round is a heartbeat (§3.1).
+                self.election_deadline = self.random_election_deadline(now);
+
+                let (success, match_hint) =
+                    if self.log.matches(args.prev_log_index, args.prev_log_term) {
+                        let covered = self.log.reconcile(args.prev_log_index, &args.entries);
+                        self.counters.entries_appended += args.entries.len() as u64;
+                        (true, covered)
+                    } else {
+                        (false, self.log.last_index())
+                    };
+
+                if success {
+                    if self.cfg.variant.has_epidemic_commit() {
+                        self.epi.maybe_set_own_bit(self.id, self.log_view());
+                        self.run_epidemic_update(now, actions);
+                    }
+                    // Leader-driven commit bound still applies (V1 relies on
+                    // it exclusively; for V2 it can only help).
+                    let bound = args.leader_commit.min(match_hint);
+                    if bound > self.commit_index {
+                        self.advance_commit(bound, actions);
+                    }
+                }
+
+                // First-receipt response policy (DESIGN.md §4.3): V1 always;
+                // V2 only on failure (repair trigger) unless the ablation
+                // flag re-enables success responses.
+                let respond = match self.cfg.variant {
+                    Variant::V1 => true,
+                    Variant::V2 => !success || self.cfg.v2_success_responses,
+                    Variant::Raft => unreachable!("gossip message under Raft variant"),
+                };
+                if respond {
+                    let epidemic = if self.cfg.variant.has_epidemic_commit() {
+                        Some(self.epi.clone())
+                    } else {
+                        None
+                    };
+                    let reply = AppendEntriesReply {
+                        term: self.current_term,
+                        from: self.id,
+                        success,
+                        match_hint,
+                        round: Some(meta.round),
+                        epidemic,
+                        seq: args.seq,
+                    };
+                    self.counters.replies_sent += 1;
+                    self.send(args.leader, Message::AppendEntriesReply(reply), actions);
+                }
+
+                // Epidemic relay (Algorithm 1): forward the same round to F
+                // targets of *our* permutation, with our (merged) structures.
+                let epidemic = if self.cfg.variant.has_epidemic_commit() {
+                    Some(self.epi.clone())
+                } else {
+                    None
+                };
+                let targets = self.perm.next_round(self.cfg.fanout);
+                for to in targets {
+                    if to == args.leader && meta.hops > 0 {
+                        // The message originated there; relaying it back is
+                        // only useful in V2 (structures) — skip in V1.
+                        if !self.cfg.variant.has_epidemic_commit() {
+                            continue;
+                        }
+                    }
+                    let fwd = AppendEntriesArgs {
+                        term: args.term,
+                        leader: args.leader,
+                        prev_log_index: args.prev_log_index,
+                        prev_log_term: args.prev_log_term,
+                        entries: Arc::clone(&args.entries),
+                        leader_commit: args.leader_commit,
+                        gossip: Some(GossipMeta {
+                            round: meta.round,
+                            hops: meta.hops + 1,
+                            epidemic: epidemic.clone(),
+                        }),
+                        seq: 0,
+                    };
+                    self.counters.gossip_sent += 1;
+                    self.send(to, Message::AppendEntries(fwd), actions);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::message::Message;
+    use super::super::node::{Action, ClientResult, Node};
+    use super::super::types::{Role, Variant};
+    use super::*;
+    use crate::config::ProtocolConfig;
+    use crate::kvstore::Command;
+
+    fn cfg(n: usize, v: Variant) -> ProtocolConfig {
+        ProtocolConfig::for_variant(n, v)
+    }
+
+    fn sends(actions: &[Action]) -> Vec<(usize, Message)> {
+        actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::Send { to, msg } => Some((*to, msg.clone())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Drive a 3-node classic-Raft commit by hand.
+    #[test]
+    fn raft_request_commit_cycle() {
+        let mut leader = Node::new(0, cfg(3, Variant::Raft), 1);
+        let mut f1 = Node::new(1, cfg(3, Variant::Raft), 2);
+        leader.bootstrap_leader(0);
+        f1.bootstrap_follower(0, 0);
+
+        let actions = leader.client_request(10, 42, Command::Put { key: 1, value: 7 });
+        // Deliver the AppendEntries to follower 1.
+        let to_f1: Vec<Message> =
+            sends(&actions).into_iter().filter(|(to, _)| *to == 1).map(|(_, m)| m).collect();
+        assert_eq!(to_f1.len(), 1);
+        let reply_actions = f1.on_message(20, to_f1[0].clone());
+        assert_eq!(f1.last_index(), 2, "noop + put");
+        let replies = sends(&reply_actions);
+        assert_eq!(replies.len(), 1);
+        // Leader processes the success reply: majority (leader+f1) commits.
+        let commit_actions = leader.on_message(30, replies[0].1.clone());
+        assert_eq!(leader.commit_index(), 2);
+        let client_replies: Vec<_> = commit_actions
+            .iter()
+            .filter(|a| matches!(a, Action::ClientReply { req: 42, result: ClientResult::Ok(_) }))
+            .collect();
+        assert_eq!(client_replies.len(), 1);
+        assert_eq!(leader.kv().get(1), Some(7));
+    }
+
+    #[test]
+    fn raft_follower_rejects_mismatched_prev() {
+        let mut leader = Node::new(0, cfg(3, Variant::Raft), 1);
+        let mut f1 = Node::new(1, cfg(3, Variant::Raft), 2);
+        leader.bootstrap_leader(0);
+        f1.bootstrap_follower(0, 0);
+        // Skip the no-op: feed f1 a request whose prev it doesn't have.
+        for _ in 0..3 {
+            leader.client_request(10, 1, Command::Noop);
+        }
+        // Pretend f1 already acked up to 3 so the RPC starts at prev=3.
+        leader.followers[1].next_index = 4;
+        let actions = {
+            let mut acts = Vec::new();
+            leader.send_entries_rpc(20, 1, leader.log.last_index(), &mut acts);
+            acts
+        };
+        let (_, msg) = &sends(&actions)[0];
+        let reply_actions = f1.on_message(30, msg.clone());
+        let (_, reply) = &sends(&reply_actions)[0];
+        match reply {
+            Message::AppendEntriesReply(r) => {
+                assert!(!r.success);
+                assert_eq!(r.match_hint, 0, "hint = follower's last index");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Leader repairs: next_index jumps back, resends from 1.
+        let repair = leader.on_message(40, reply.clone());
+        let (_, rmsg) = &sends(&repair)[0];
+        match rmsg {
+            Message::AppendEntries(a) => {
+                assert_eq!(a.prev_log_index, 0);
+                assert_eq!(a.entries.len(), 4);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v1_round_sends_fanout_gossip() {
+        let mut leader = Node::new(0, cfg(10, Variant::V1), 1);
+        let actions = leader.bootstrap_leader(0);
+        let gossip: Vec<_> =
+            sends(&actions).into_iter().filter(|(_, m)| m.is_gossip()).collect();
+        assert_eq!(gossip.len(), 3, "fanout=3");
+        // Targets are distinct.
+        let targets: std::collections::HashSet<_> = gossip.iter().map(|(to, _)| *to).collect();
+        assert_eq!(targets.len(), 3);
+    }
+
+    #[test]
+    fn v1_follower_first_receipt_responds_and_relays() {
+        let mut leader = Node::new(0, cfg(10, Variant::V1), 1);
+        let mut f = Node::new(4, cfg(10, Variant::V1), 5);
+        f.bootstrap_follower(0, 0);
+        let actions = leader.bootstrap_leader(0);
+        let (_, g) = sends(&actions).into_iter().find(|(_, m)| m.is_gossip()).unwrap();
+        let out = f.on_message(100, g.clone());
+        let outs = sends(&out);
+        let replies: Vec<_> = outs
+            .iter()
+            .filter(|(to, m)| *to == 0 && matches!(m, Message::AppendEntriesReply(_)))
+            .collect();
+        assert_eq!(replies.len(), 1, "responds to leader on first receipt");
+        let relays: Vec<_> = outs.iter().filter(|(_, m)| m.is_gossip()).collect();
+        assert_eq!(relays.len(), 3, "relays to F targets");
+        // Hop count incremented.
+        for (_, m) in relays {
+            if let Message::AppendEntries(a) = m {
+                assert_eq!(a.gossip.as_ref().unwrap().hops, 1);
+            }
+        }
+        // Duplicate delivery: silent drop.
+        let out2 = f.on_message(101, g);
+        assert!(sends(&out2).is_empty(), "duplicate round is dropped");
+        assert_eq!(f.counters.gossip_recv_dup, 1);
+    }
+
+    #[test]
+    fn v1_commit_via_first_receipt_replies() {
+        // 3 nodes, fanout covers both followers in one round.
+        let mut c = cfg(3, Variant::V1);
+        c.fanout = 2;
+        let mut leader = Node::new(0, c.clone(), 1);
+        let mut f1 = Node::new(1, c.clone(), 2);
+        let mut f2 = Node::new(2, c.clone(), 3);
+        leader.bootstrap_leader(0);
+        f1.bootstrap_follower(0, 0);
+        f2.bootstrap_follower(0, 0);
+
+        leader.client_request(10, 9, Command::Put { key: 5, value: 6 });
+        // Fire the round.
+        let dl = leader.next_deadline();
+        let actions = leader.tick(dl);
+        let gs = sends(&actions);
+        assert_eq!(gs.len(), 2);
+        for (to, msg) in gs {
+            let f = if to == 1 { &mut f1 } else { &mut f2 };
+            let racts = f.on_message(dl + 100, msg);
+            for (_, reply) in sends(&racts).into_iter().filter(|(t, _)| *t == 0) {
+                leader.on_message(dl + 200, reply);
+            }
+        }
+        assert_eq!(leader.commit_index(), 2, "noop + put committed");
+        assert_eq!(leader.kv().get(5), Some(6));
+    }
+
+    #[test]
+    fn v2_success_receipt_is_silent_by_default() {
+        let mut leader = Node::new(0, cfg(10, Variant::V2), 1);
+        let mut f = Node::new(3, cfg(10, Variant::V2), 4);
+        f.bootstrap_follower(0, 0);
+        let actions = leader.bootstrap_leader(0);
+        let (_, g) = sends(&actions).into_iter().find(|(_, m)| m.is_gossip()).unwrap();
+        let out = f.on_message(50, g);
+        let outs = sends(&out);
+        assert!(
+            !outs.iter().any(|(_, m)| matches!(m, Message::AppendEntriesReply(_))),
+            "V2 suppresses success responses"
+        );
+        // But it still relays, carrying its merged structures with its bit.
+        let relays: Vec<_> = outs.iter().filter(|(_, m)| m.is_gossip()).collect();
+        assert_eq!(relays.len(), 3);
+        if let Message::AppendEntries(a) = &relays[0].1 {
+            let epi = a.gossip.as_ref().unwrap().epidemic.as_ref().unwrap();
+            assert!(epi.bitmap.get(3), "relayer's own vote is in the payload");
+            assert!(epi.bitmap.get(0), "leader's vote was carried in");
+        }
+    }
+
+    #[test]
+    fn v2_failure_still_responds_for_repair() {
+        let mut leader = Node::new(0, cfg(10, Variant::V2), 1);
+        let mut f = Node::new(3, cfg(10, Variant::V2), 4);
+        f.bootstrap_follower(0, 0);
+        leader.bootstrap_leader(0);
+        // Fabricate progress: leader commits several entries without f.
+        for i in 0..5 {
+            leader.client_request(10 + i, i, Command::Noop);
+        }
+        leader.commit_index = 3; // simulate majority elsewhere
+        // Warm the commit-history window so the round's batch base reaches
+        // the committed prefix (3 rounds of margin — see start_gossip_round).
+        let mut acts = Vec::new();
+        for t in 0..4 {
+            acts.clear();
+            leader.start_gossip_round(100 + t, &mut acts);
+        }
+        let (_, g) = sends(&acts).into_iter().find(|(_, m)| m.is_gossip()).unwrap();
+        let out = f.on_message(200, g);
+        let replies: Vec<_> = sends(&out)
+            .into_iter()
+            .filter(|(to, m)| *to == 0 && matches!(m, Message::AppendEntriesReply(_)))
+            .collect();
+        assert_eq!(replies.len(), 1, "log mismatch must trigger a repair response");
+        if let Message::AppendEntriesReply(r) = &replies[0].1 {
+            assert!(!r.success);
+        }
+    }
+
+    #[test]
+    fn v2_leader_learns_votes_from_relayed_gossip() {
+        let n = 5;
+        let mut c = cfg(n, Variant::V2);
+        c.fanout = 4; // full fanout for determinism
+        let mut nodes: Vec<Node> = (0..n).map(|i| Node::new(i, c.clone(), i as u64 + 1)).collect();
+        let boot = nodes[0].bootstrap_leader(0);
+        for f in nodes.iter_mut().skip(1) {
+            f.bootstrap_follower(0, 0);
+        }
+        // Round 1: leader -> all followers (fanout 4 covers everyone).
+        let mut inboxes: Vec<Vec<Message>> = vec![Vec::new(); n];
+        for a in &boot {
+            if let Action::Send { to, msg } = a {
+                inboxes[*to].push(msg.clone());
+            }
+        }
+        // Followers process; relays go everywhere including the leader.
+        let mut second_wave: Vec<(usize, Message)> = Vec::new();
+        for i in 1..n {
+            for msg in std::mem::take(&mut inboxes[i]) {
+                let acts = nodes[i].on_message(100, msg);
+                for a in acts {
+                    if let Action::Send { to, msg } = a {
+                        second_wave.push((to, msg));
+                    }
+                }
+            }
+        }
+        for (to, msg) in second_wave {
+            if to == 0 {
+                nodes[0].on_message(200, msg);
+            }
+        }
+        // The leader merged relayed bitmaps: majority reached, no-op committed.
+        assert!(nodes[0].commit_index() >= 1, "decentralised commit reached the leader");
+    }
+
+    #[test]
+    fn gossip_under_raft_variant_never_happens() {
+        // broadcast_append never sets gossip meta.
+        let mut leader = Node::new(0, cfg(5, Variant::Raft), 1);
+        let actions = leader.bootstrap_leader(0);
+        assert!(sends(&actions).iter().all(|(_, m)| !m.is_gossip()));
+    }
+
+    #[test]
+    fn stale_term_append_gets_rejection() {
+        let mut f = Node::new(1, cfg(3, Variant::Raft), 2);
+        f.bootstrap_follower(0, 0);
+        // Push follower to term 3.
+        let mut acts = Vec::new();
+        f.step_down(10, 3, &mut acts);
+        let args = AppendEntriesArgs {
+            term: 1,
+            leader: 0,
+            prev_log_index: 0,
+            prev_log_term: 0,
+            entries: std::sync::Arc::new(vec![]),
+            leader_commit: 0,
+            gossip: None,
+            seq: 7,
+        };
+        let out = f.on_message(20, Message::AppendEntries(args));
+        let (to, reply) = &sends(&out)[0];
+        assert_eq!(*to, 0);
+        if let Message::AppendEntriesReply(r) = reply {
+            assert!(!r.success);
+            assert_eq!(r.term, 3, "informs the stale leader of the newer term");
+        } else {
+            panic!("expected reply");
+        }
+    }
+
+    #[test]
+    fn deposed_leader_drops_its_own_stale_round() {
+        // Regression: a leader's gossip round can be relayed back to it
+        // after it stepped down to a higher term; it must not reply to
+        // itself (debug assertion caught this under partition churn).
+        let mut node = Node::new(0, cfg(5, Variant::V1), 1);
+        let boot = node.bootstrap_leader(0);
+        let own_round = boot
+            .iter()
+            .find_map(|a| match a {
+                Action::Send { msg: Message::AppendEntries(args), .. } if args.gossip.is_some() => {
+                    Some(args.clone())
+                }
+                _ => None,
+            })
+            .expect("bootstrap round");
+        let mut acts = Vec::new();
+        node.step_down(10, 3, &mut acts); // deposed by term 3
+        let out = node.on_message(20, Message::AppendEntries(own_round));
+        assert!(
+            sends(&out).is_empty(),
+            "must not respond to its own stale round"
+        );
+    }
+
+    #[test]
+    fn candidate_steps_down_on_current_leader_append() {
+        let mut node = Node::new(1, cfg(3, Variant::Raft), 2);
+        let dl = node.next_deadline();
+        node.tick(dl); // candidate, term 1
+        assert_eq!(node.role(), Role::Candidate);
+        let args = AppendEntriesArgs {
+            term: 1,
+            leader: 0,
+            prev_log_index: 0,
+            prev_log_term: 0,
+            entries: std::sync::Arc::new(vec![]),
+            leader_commit: 0,
+            gossip: None,
+            seq: 1,
+        };
+        node.on_message(dl + 1, Message::AppendEntries(args));
+        assert_eq!(node.role(), Role::Follower);
+    }
+
+    #[test]
+    fn commit_rule_requires_current_term_entry() {
+        // Leader at term 2 must not commit a term-1 entry by counting.
+        let mut c = cfg(3, Variant::Raft);
+        c.leader_noop = false;
+        let mut leader = Node::new(0, c, 1);
+        leader.current_term = 1;
+        leader.log.append(1, Command::Noop); // term-1 entry
+        leader.current_term = 2;
+        leader.voted_for = Some(0);
+        let mut acts = Vec::new();
+        leader.become_leader(0, &mut acts);
+        leader.followers[1].match_index = 1;
+        leader.followers[2].match_index = 1;
+        let mut acts = Vec::new();
+        leader.advance_commit_from_matches(&mut acts);
+        assert_eq!(leader.commit_index(), 0, "term-1 entry not directly committable at term 2");
+    }
+}

@@ -1,0 +1,108 @@
+//! Core identifier and time types shared across the protocol stack.
+
+/// Process identifier: dense `0..n` (the paper's `P_i, i ∈ 0..n-1`).
+pub type NodeId = usize;
+
+/// Raft term ("mandato"): monotone logical clock ordering leader epochs.
+pub type Term = u64;
+
+/// Log index, 1-based; `0` means "no entry" (empty log sentinel).
+pub type LogIndex = u64;
+
+/// Simulated / wall time in microseconds.
+pub type Time = u64;
+
+/// Client request identifier (unique per experiment).
+pub type RequestId = u64;
+
+/// The three roles of Fig 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Follower,
+    Candidate,
+    Leader,
+}
+
+/// Which protocol variant a node runs.
+///
+/// * `Raft` — original Raft as implemented in Paxi: per-request broadcast
+///   AppendEntries RPCs, leader-driven commit.
+/// * `V1` — epidemic dissemination of AppendEntries (§3.1): periodic gossip
+///   rounds over a peer permutation, `RoundLC` logical clock, first-receipt
+///   responses, RPC repair fallback.
+/// * `V2` — V1 plus the decentralised commit structures (§3.2):
+///   `Bitmap` / `MaxCommit` / `NextCommit` with `Update` and `Merge`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Raft,
+    V1,
+    V2,
+}
+
+impl Variant {
+    pub fn is_gossip(self) -> bool {
+        matches!(self, Variant::V1 | Variant::V2)
+    }
+
+    pub fn has_epidemic_commit(self) -> bool {
+        matches!(self, Variant::V2)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Raft => "raft",
+            Variant::V1 => "v1",
+            Variant::V2 => "v2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s.to_ascii_lowercase().as_str() {
+            "raft" | "original" => Some(Variant::Raft),
+            "v1" | "gossip" => Some(Variant::V1),
+            "v2" | "epidemic" => Some(Variant::V2),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [Variant; 3] = [Variant::Raft, Variant::V1, Variant::V2];
+}
+
+/// Majority size for an `n`-process cluster: ⌊n/2⌋ + 1.
+#[inline]
+pub fn majority(n: usize) -> usize {
+    n / 2 + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn majority_sizes() {
+        assert_eq!(majority(1), 1);
+        assert_eq!(majority(3), 2);
+        assert_eq!(majority(5), 3);
+        assert_eq!(majority(51), 26);
+        assert_eq!(majority(50), 26);
+    }
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::parse(v.name()), Some(v));
+        }
+        assert_eq!(Variant::parse("gossip"), Some(Variant::V1));
+        assert_eq!(Variant::parse("epidemic"), Some(Variant::V2));
+        assert_eq!(Variant::parse("nope"), None);
+    }
+
+    #[test]
+    fn variant_capabilities() {
+        assert!(!Variant::Raft.is_gossip());
+        assert!(Variant::V1.is_gossip());
+        assert!(Variant::V2.is_gossip());
+        assert!(!Variant::V1.has_epidemic_commit());
+        assert!(Variant::V2.has_epidemic_commit());
+    }
+}

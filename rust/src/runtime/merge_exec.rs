@@ -1,0 +1,293 @@
+//! Batched V2 merge/update executor — the "fleet step".
+//!
+//! Two interchangeable backends with bit-identical semantics:
+//!
+//! * **HLO** — the AOT-compiled `cluster_step` artifact executed through
+//!   PJRT (the paper's structures as a vectorised XLA computation);
+//! * **native** — a straight Rust loop over [`EpidemicState`].
+//!
+//! `epiraft artifacts-check` and the integration tests verify equivalence
+//! on golden vectors; `micro_hotpath` benchmarks the crossover (per-call
+//! PJRT dispatch overhead vs batch width — EXPERIMENTS.md §Perf).
+
+use super::{execute_u32, literal_u32, scalar_u32, Artifact, Engine, Geometry};
+use crate::epidemic::{EpidemicState, LogView};
+use crate::util::bitset::Bitmap;
+use anyhow::Result;
+
+/// A batch of replica commit-states in structure-of-arrays layout, exactly
+/// the artifact's calling convention.
+#[derive(Clone, Debug, Default)]
+pub struct FleetState {
+    pub bm: Vec<u32>,
+    pub mc: Vec<u32>,
+    pub nc: Vec<u32>,
+}
+
+impl FleetState {
+    /// Pack `EpidemicState`s (padding up to the geometry's B with empties).
+    pub fn pack(states: &[EpidemicState], geo: Geometry) -> FleetState {
+        assert!(states.len() <= geo.b, "batch larger than artifact geometry");
+        let mut f = FleetState {
+            bm: vec![0; geo.b * geo.w],
+            mc: vec![0; geo.b],
+            nc: vec![1; geo.b], // empty states keep the invariant nc > mc
+        };
+        for (i, s) in states.iter().enumerate() {
+            let words = s.bitmap.words();
+            assert!(words.len() <= geo.w, "bitmap wider than artifact geometry");
+            f.bm[i * geo.w..i * geo.w + words.len()].copy_from_slice(words);
+            f.mc[i] = s.max_commit as u32;
+            f.nc[i] = s.next_commit as u32;
+        }
+        f
+    }
+
+    /// Unpack row `i` back into an `EpidemicState` over `n` processes.
+    pub fn unpack_row(&self, i: usize, geo: Geometry, n: usize) -> EpidemicState {
+        EpidemicState {
+            bitmap: Bitmap::from_words(n, self.bm[i * geo.w..(i + 1) * geo.w].to_vec()),
+            max_commit: self.mc[i] as u64,
+            next_commit: self.nc[i] as u64,
+        }
+    }
+}
+
+/// The executor (owns the compiled artifact).
+pub struct MergeExecutor {
+    pub geometry: Geometry,
+    cluster_step: Artifact,
+}
+
+impl MergeExecutor {
+    pub fn from_engine(engine: &Engine) -> Result<MergeExecutor> {
+        Ok(MergeExecutor {
+            geometry: engine.geometry,
+            cluster_step: engine.compile("cluster_step")?,
+        })
+    }
+
+    /// Run one fleet step through the HLO executable.
+    #[allow(clippy::too_many_arguments)]
+    pub fn hlo_cluster_step(
+        &self,
+        bm: &[u32],
+        mc: &[u32],
+        nc: &[u32],
+        msgs_bm: &[u32],
+        msgs_mc: &[u32],
+        msgs_nc: &[u32],
+        count: &[u32],
+        me: &[u32],
+        majority: u32,
+        last_index: &[u32],
+        last_term_eq: &[u32],
+    ) -> Result<(Vec<u32>, Vec<u32>, Vec<u32>)> {
+        let g = self.geometry;
+        let (b, m, w) = (g.b as i64, g.m as i64, g.w as i64);
+        let inputs = vec![
+            literal_u32(bm, &[b, w])?,
+            literal_u32(mc, &[b])?,
+            literal_u32(nc, &[b])?,
+            literal_u32(msgs_bm, &[b, m, w])?,
+            literal_u32(msgs_mc, &[b, m])?,
+            literal_u32(msgs_nc, &[b, m])?,
+            literal_u32(count, &[b])?,
+            literal_u32(me, &[b])?,
+            scalar_u32(majority),
+            literal_u32(last_index, &[b])?,
+            literal_u32(last_term_eq, &[b])?,
+        ];
+        let mut out = execute_u32(&self.cluster_step, &inputs)?;
+        let nc_out = out.pop().unwrap();
+        let mc_out = out.pop().unwrap();
+        let bm_out = out.pop().unwrap();
+        Ok((bm_out, mc_out, nc_out))
+    }
+
+    /// Native reference with identical semantics (also the scalar hot path
+    /// used by the protocol itself).
+    #[allow(clippy::too_many_arguments)]
+    pub fn native_cluster_step(
+        &self,
+        bm: &[u32],
+        mc: &[u32],
+        nc: &[u32],
+        msgs_bm: &[u32],
+        msgs_mc: &[u32],
+        msgs_nc: &[u32],
+        count: &[u32],
+        me: &[u32],
+        majority: u32,
+        last_index: &[u32],
+        last_term_eq: &[u32],
+    ) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+        let g = self.geometry;
+        let (out_bm, out_mc, out_nc) =
+            native_merge_fold(g, bm, mc, nc, msgs_bm, msgs_mc, msgs_nc, count);
+        native_quorum_update(
+            g, out_bm, out_mc, out_nc, me, majority, last_index, last_term_eq,
+        )
+    }
+}
+
+/// Native merge fold over SoA batches (bit-identical to the kernel).
+#[allow(clippy::too_many_arguments)]
+pub fn native_merge_fold(
+    geo: Geometry,
+    bm: &[u32],
+    mc: &[u32],
+    nc: &[u32],
+    msgs_bm: &[u32],
+    msgs_mc: &[u32],
+    msgs_nc: &[u32],
+    count: &[u32],
+) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+    let (b, m, w) = (geo.b, geo.m, geo.w);
+    let nbits = (w * 32).min(64); // Bitmap capacity for unpack
+    let mut out_bm = bm.to_vec();
+    let mut out_mc = mc.to_vec();
+    let mut out_nc = nc.to_vec();
+    for i in 0..b {
+        let mut s = EpidemicState {
+            bitmap: Bitmap::from_words(nbits, bm[i * w..(i + 1) * w].to_vec()),
+            max_commit: mc[i] as u64,
+            next_commit: nc[i] as u64,
+        };
+        for k in 0..(count[i] as usize).min(m) {
+            let base = (i * m + k) * w;
+            let other = EpidemicState {
+                bitmap: Bitmap::from_words(nbits, msgs_bm[base..base + w].to_vec()),
+                max_commit: msgs_mc[i * m + k] as u64,
+                next_commit: msgs_nc[i * m + k] as u64,
+            };
+            s.merge(&other);
+        }
+        out_bm[i * w..(i + 1) * w].copy_from_slice(s.bitmap.words());
+        out_mc[i] = s.max_commit as u32;
+        out_nc[i] = s.next_commit as u32;
+    }
+    (out_bm, out_mc, out_nc)
+}
+
+/// Native single-pass Update + own-bit over SoA batches.
+#[allow(clippy::too_many_arguments)]
+pub fn native_quorum_update(
+    geo: Geometry,
+    bm: Vec<u32>,
+    mc: Vec<u32>,
+    nc: Vec<u32>,
+    me: &[u32],
+    majority: u32,
+    last_index: &[u32],
+    last_term_eq: &[u32],
+) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+    let (b, w) = (geo.b, geo.w);
+    let nbits = (w * 32).min(64);
+    let mut out_bm = bm;
+    let mut out_mc = mc;
+    let mut out_nc = nc;
+    for i in 0..b {
+        let mut s = EpidemicState {
+            bitmap: Bitmap::from_words(nbits, out_bm[i * w..(i + 1) * w].to_vec()),
+            max_commit: out_mc[i] as u64,
+            next_commit: out_nc[i] as u64,
+        };
+        let log = LogView {
+            last_index: last_index[i] as u64,
+            // Encode "term of last == current term" as equal/unequal pair.
+            last_term: if last_term_eq[i] != 0 { 1 } else { 0 },
+            current_term: 1,
+        };
+        s.update_step(me[i] as usize, majority as usize, log);
+        out_bm[i * w..(i + 1) * w].copy_from_slice(s.bitmap.words());
+        out_mc[i] = s.max_commit as u32;
+        out_nc[i] = s.next_commit as u32;
+    }
+    (out_bm, out_mc, out_nc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geo() -> Geometry {
+        Geometry { b: 4, m: 2, w: 2 }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut s0 = EpidemicState::new(51);
+        s0.bitmap.set(3);
+        s0.bitmap.set(40);
+        s0.max_commit = 7;
+        s0.next_commit = 9;
+        let s1 = EpidemicState::new(51);
+        let f = FleetState::pack(&[s0.clone(), s1.clone()], geo());
+        assert_eq!(f.unpack_row(0, geo(), 51), s0);
+        assert_eq!(f.unpack_row(1, geo(), 51), s1);
+        // Padding rows keep the invariant.
+        let pad = f.unpack_row(3, geo(), 51);
+        assert!(pad.invariant_holds());
+    }
+
+    #[test]
+    fn native_merge_fold_matches_scalar_merge() {
+        // One state, two messages: fold by hand vs batched native.
+        let g = Geometry { b: 1, m: 2, w: 2 };
+        let mut s = EpidemicState::new(51);
+        s.bitmap.set(0);
+        s.next_commit = 3;
+        s.max_commit = 1;
+        let mut a = EpidemicState::new(51);
+        a.bitmap.set(1);
+        a.next_commit = 5;
+        a.max_commit = 2;
+        let mut b2 = EpidemicState::new(51);
+        b2.bitmap.set(2);
+        b2.next_commit = 6;
+        b2.max_commit = 4;
+
+        let mut expect = s.clone();
+        expect.merge(&a);
+        expect.merge(&b2);
+
+        let (bm, mc, nc) = native_merge_fold(
+            g,
+            s.bitmap.words(),
+            &[s.max_commit as u32],
+            &[s.next_commit as u32],
+            &[a.bitmap.words(), b2.bitmap.words()].concat(),
+            &[a.max_commit as u32, b2.max_commit as u32],
+            &[a.next_commit as u32, b2.next_commit as u32],
+            &[2],
+        );
+        assert_eq!(bm, expect.bitmap.words());
+        assert_eq!(mc[0] as u64, expect.max_commit);
+        assert_eq!(nc[0] as u64, expect.next_commit);
+    }
+
+    #[test]
+    fn native_quorum_update_majority() {
+        let g = Geometry { b: 1, m: 1, w: 2 };
+        // 26 votes of 51 = majority; log has entry at nc with current term.
+        let mut s = EpidemicState::new(51);
+        for i in 0..26 {
+            s.bitmap.set(i);
+        }
+        let (bm, mc, nc) = native_quorum_update(
+            g,
+            s.bitmap.words().to_vec(),
+            vec![0],
+            vec![1],
+            &[0],
+            26,
+            &[10],
+            &[1],
+        );
+        assert_eq!(mc[0], 1);
+        assert_eq!(nc[0], 10);
+        assert_eq!(bm[0], 1, "own bit re-set");
+        assert_eq!(bm[1], 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Per-replica CPU cost model.
+//!
+//! The paper pins each replica to one dedicated core of a 128-core host and
+//! measures per-replica CPU usage; this container has a single core, so the
+//! simulator reproduces that setup analytically: every protocol action
+//! consumes µs of the replica's core, replicas queue work when busy, and
+//! CPU usage = busy time / wall time. Costs are calibrated against the
+//! behaviour of Paxi's Go implementation (HTTP client path dominates;
+//! see EXPERIMENTS.md §Calibration) and are fully configurable
+//! (`[cost]` section).
+
+use crate::config::CostConfig;
+use crate::raft::Message;
+
+/// Computes service times (µs) for the simulator.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    cfg: CostConfig,
+}
+
+impl CostModel {
+    pub fn new(cfg: CostConfig) -> Self {
+        Self { cfg }
+    }
+
+    pub fn config(&self) -> &CostConfig {
+        &self.cfg
+    }
+
+    /// Cost to receive + decode + protocol-process an inter-replica message
+    /// (excluding sends it triggers — those are charged separately).
+    pub fn recv_cost(&self, msg: &Message) -> u64 {
+        let mut us = self.cfg.msg_recv_us;
+        us += msg.entry_count() as f64 * self.cfg.entry_recv_us;
+        if carries_epidemic(msg) {
+            us += self.cfg.merge_us;
+        }
+        us.round() as u64
+    }
+
+    /// Cost to serialize + send one inter-replica message.
+    pub fn send_cost(&self, msg: &Message) -> u64 {
+        let us = self.cfg.msg_send_us + msg.entry_count() as f64 * self.cfg.entry_send_us;
+        us.round() as u64
+    }
+
+    /// Cost to receive + decode one client request (leader HTTP path).
+    pub fn client_recv_cost(&self) -> u64 {
+        self.cfg.client_recv_us.round() as u64
+    }
+
+    /// Cost to encode + send one client reply.
+    pub fn client_reply_cost(&self) -> u64 {
+        self.cfg.client_reply_us.round() as u64
+    }
+
+    /// Cost to apply `count` committed entries to the state machine.
+    pub fn apply_cost(&self, count: u64) -> u64 {
+        (count as f64 * self.cfg.entry_apply_us).round() as u64
+    }
+
+    /// Cost of a timer fire.
+    pub fn tick_cost(&self) -> u64 {
+        self.cfg.tick_us.round() as u64
+    }
+}
+
+fn carries_epidemic(msg: &Message) -> bool {
+    match msg {
+        Message::AppendEntries(a) => {
+            a.gossip.as_ref().is_some_and(|g| g.epidemic.is_some())
+        }
+        Message::AppendEntriesReply(r) => r.epidemic.is_some(),
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::epidemic::EpidemicState;
+    use crate::kvstore::Command;
+    use crate::raft::{AppendEntriesArgs, AppendEntriesReply, GossipMeta, LogEntry, Message};
+    use std::sync::Arc;
+
+    fn ae(entries: usize, epidemic: bool) -> Message {
+        Message::AppendEntries(AppendEntriesArgs {
+            term: 1,
+            leader: 0,
+            prev_log_index: 0,
+            prev_log_term: 0,
+            entries: Arc::new(
+                (1..=entries as u64)
+                    .map(|i| LogEntry { term: 1, index: i, cmd: Command::Noop })
+                    .collect(),
+            ),
+            leader_commit: 0,
+            gossip: Some(GossipMeta {
+                round: 1,
+                hops: 0,
+                epidemic: epidemic.then(|| EpidemicState::new(5)),
+            }),
+            seq: 0,
+        })
+    }
+
+    #[test]
+    fn recv_cost_scales_with_entries() {
+        let m = CostModel::new(CostConfig::default());
+        let small = m.recv_cost(&ae(1, false));
+        let big = m.recv_cost(&ae(101, false));
+        let per_entry = (big - small) as f64 / 100.0;
+        assert!((per_entry - m.config().entry_recv_us).abs() < 0.1);
+    }
+
+    #[test]
+    fn epidemic_payload_adds_merge_cost() {
+        let m = CostModel::new(CostConfig::default());
+        let with = m.recv_cost(&ae(0, true));
+        let without = m.recv_cost(&ae(0, false));
+        assert_eq!(with - without, m.config().merge_us.round() as u64);
+        // Replies too.
+        let reply = Message::AppendEntriesReply(AppendEntriesReply {
+            term: 1,
+            from: 1,
+            success: true,
+            match_hint: 0,
+            round: None,
+            epidemic: Some(EpidemicState::new(5)),
+            seq: 0,
+        });
+        assert!(m.recv_cost(&reply) > m.config().msg_recv_us as u64);
+    }
+
+    #[test]
+    fn send_cheaper_than_recv_for_defaults() {
+        let m = CostModel::new(CostConfig::default());
+        assert!(m.send_cost(&ae(10, false)) < m.recv_cost(&ae(10, false)));
+    }
+
+    #[test]
+    fn client_costs_dominate_message_costs() {
+        // The Paxi calibration premise: HTTP client handling is the most
+        // expensive per-event cost (EXPERIMENTS.md §Calibration).
+        let m = CostModel::new(CostConfig::default());
+        assert!(m.client_recv_cost() > m.recv_cost(&ae(0, false)));
+        assert!(m.client_reply_cost() > m.send_cost(&ae(0, false)));
+    }
+
+    #[test]
+    fn apply_cost_linear() {
+        let m = CostModel::new(CostConfig::default());
+        assert_eq!(m.apply_cost(0), 0);
+        assert!(m.apply_cost(1000) >= 100);
+    }
+}

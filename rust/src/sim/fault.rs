@@ -1,0 +1,200 @@
+//! Fault injection schedule for the simulator: crashes, recoveries,
+//! partitions and loss-rate changes, all at scripted (or randomly drawn)
+//! virtual times. Used by the fault-tolerance example and by the
+//! property-based safety tests ("no committed entry is ever lost, no two
+//! replicas disagree on a committed prefix, under any schedule").
+
+use crate::raft::{NodeId, Time};
+use crate::util::rng::Xoshiro256;
+
+/// One scripted fault.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    /// Replica stops processing and drops all traffic.
+    Crash { at: Time, replica: NodeId },
+    /// Replica resumes (state intact — crash models a process pause; the
+    /// protocol state the paper relies on is persisted in real Raft).
+    Recover { at: Time, replica: NodeId },
+    /// Install a partition: `groups[i]` = side of replica i.
+    Partition { at: Time, groups: Vec<u32> },
+    /// Remove all partitions.
+    Heal { at: Time },
+    /// Change the uniform message-loss probability.
+    SetLoss { at: Time, loss: f64 },
+}
+
+impl Fault {
+    pub fn at(&self) -> Time {
+        match self {
+            Fault::Crash { at, .. }
+            | Fault::Recover { at, .. }
+            | Fault::Partition { at, .. }
+            | Fault::Heal { at }
+            | Fault::SetLoss { at, .. } => *at,
+        }
+    }
+}
+
+/// A time-ordered fault schedule.
+#[derive(Clone, Debug, Default)]
+pub struct FaultSchedule {
+    faults: Vec<Fault>,
+}
+
+impl FaultSchedule {
+    pub fn new(mut faults: Vec<Fault>) -> Self {
+        faults.sort_by_key(|f| f.at());
+        Self { faults }
+    }
+
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Fault> {
+        self.faults.iter()
+    }
+
+    pub fn into_vec(self) -> Vec<Fault> {
+        self.faults
+    }
+
+    /// Convenience: crash the bootstrap leader at `at`, recover at `until`.
+    pub fn leader_crash(at: Time, until: Time, leader: NodeId) -> Self {
+        Self::new(vec![
+            Fault::Crash { at, replica: leader },
+            Fault::Recover { at: until, replica: leader },
+        ])
+    }
+
+    /// Random schedule for property tests: up to `max_faults` crash/recover
+    /// pairs and loss bursts, never crashing more than a minority at once.
+    pub fn random(
+        rng: &mut Xoshiro256,
+        n: usize,
+        horizon: Time,
+        max_faults: usize,
+    ) -> Self {
+        let mut faults = Vec::new();
+        let minority = (n - 1) / 2;
+        if minority == 0 || horizon < 1000 {
+            return Self::none();
+        }
+        // Active crash intervals: (victim, recover_at).
+        let mut crashed: Vec<(NodeId, Time)> = Vec::new();
+        let count = rng.next_below(max_faults as u64 + 1) as usize;
+        let mut t: Time = rng.next_range(1, horizon / 2);
+        for _ in 0..count {
+            crashed.retain(|&(_, until)| until > t);
+            match rng.next_below(3) {
+                0 if crashed.len() < minority => {
+                    // Crash a random live replica for a random interval.
+                    let mut victim = rng.next_below(n as u64) as NodeId;
+                    let mut tries = 0;
+                    while crashed.iter().any(|&(r, _)| r == victim) && tries < 8 {
+                        victim = rng.next_below(n as u64) as NodeId;
+                        tries += 1;
+                    }
+                    if !crashed.iter().any(|&(r, _)| r == victim) {
+                        let recover_at = (t + rng.next_range(horizon / 20, horizon / 4))
+                            .min(horizon.saturating_sub(1));
+                        faults.push(Fault::Crash { at: t, replica: victim });
+                        faults.push(Fault::Recover { at: recover_at, replica: victim });
+                        crashed.push((victim, recover_at));
+                    }
+                }
+                1 => {
+                    let start = t;
+                    let stop = (t + rng.next_range(horizon / 50, horizon / 10))
+                        .min(horizon.saturating_sub(1));
+                    faults.push(Fault::SetLoss { at: start, loss: rng.next_f64() * 0.3 });
+                    faults.push(Fault::SetLoss { at: stop, loss: 0.0 });
+                }
+                _ => {
+                    // Short partition separating a random minority.
+                    let cut = rng.next_range(1, minority as u64 + 1) as usize;
+                    let mut groups = vec![0u32; n];
+                    for g in groups.iter_mut().take(cut) {
+                        *g = 1;
+                    }
+                    rng.shuffle(&mut groups);
+                    let stop = (t + rng.next_range(horizon / 50, horizon / 8))
+                        .min(horizon.saturating_sub(1));
+                    faults.push(Fault::Partition { at: t, groups });
+                    faults.push(Fault::Heal { at: stop });
+                }
+            }
+            t += rng.next_range(horizon / 20, horizon / 5);
+            if t >= horizon {
+                break;
+            }
+        }
+        Self::new(faults)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_time_sorted() {
+        let s = FaultSchedule::new(vec![
+            Fault::Heal { at: 500 },
+            Fault::Crash { at: 100, replica: 1 },
+            Fault::SetLoss { at: 300, loss: 0.1 },
+        ]);
+        let times: Vec<Time> = s.iter().map(|f| f.at()).collect();
+        assert_eq!(times, vec![100, 300, 500]);
+    }
+
+    #[test]
+    fn leader_crash_helper() {
+        let s = FaultSchedule::leader_crash(1_000, 5_000, 0);
+        assert_eq!(s.iter().count(), 2);
+        assert_eq!(s.iter().next().unwrap(), &Fault::Crash { at: 1_000, replica: 0 });
+    }
+
+    #[test]
+    fn random_schedules_never_crash_majority() {
+        for seed in 0..50 {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let s = FaultSchedule::random(&mut rng, 5, 10_000_000, 6);
+            // Replay and track concurrently crashed replicas.
+            let mut down = std::collections::HashSet::new();
+            let mut events: Vec<&Fault> = s.iter().collect();
+            events.sort_by_key(|f| f.at());
+            for f in events {
+                match f {
+                    Fault::Crash { replica, .. } => {
+                        down.insert(*replica);
+                        assert!(down.len() <= 2, "seed {seed}: majority crashed");
+                    }
+                    Fault::Recover { replica, .. } => {
+                        down.remove(replica);
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_faults_within_horizon() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let s = FaultSchedule::random(&mut rng, 7, 1_000_000, 8);
+        for f in s.iter() {
+            assert!(f.at() < 1_000_000);
+        }
+    }
+
+    #[test]
+    fn tiny_cluster_gets_no_faults() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        assert!(FaultSchedule::random(&mut rng, 1, 1_000_000, 8).is_empty());
+    }
+}

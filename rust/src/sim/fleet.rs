@@ -1,0 +1,273 @@
+//! Fleet simulator: vectorised convergence analysis of the V2 commit
+//! structures (§3.2) in isolation from the full protocol.
+//!
+//! Models exactly the epidemic layer: every replica holds an
+//! `EpidemicState`, each round every replica pushes its state to `F`
+//! permutation targets, receivers fold what arrived (Merge) and run one
+//! Update pass. The question answered: **how many gossip rounds ("saltos")
+//! until an index is majority-committed everywhere?** — the mechanism
+//! behind V2's latency premium in Fig 4 and its flat leader CPU in Fig 6.
+//!
+//! The per-round fold+update runs through either backend of
+//! [`MergeExecutor`] — the native Rust loop or the AOT-compiled
+//! Pallas/JAX `cluster_step` executable via PJRT — with bit-identical
+//! results (asserted in tests).
+
+use crate::epidemic::{EpidemicState, Permutation};
+use crate::raft::types::majority;
+use crate::runtime::{Geometry, MergeExecutor};
+use crate::util::rng::Xoshiro256;
+
+/// Which engine folds the per-round message batches.
+pub enum Backend<'a> {
+    Native,
+    Hlo(&'a MergeExecutor),
+}
+
+impl Backend<'_> {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Hlo(_) => "hlo",
+        }
+    }
+}
+
+/// Result of one convergence run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvergenceReport {
+    pub n: usize,
+    pub fanout: usize,
+    /// Rounds until *some* replica first observed a majority (max_commit
+    /// reaches the target index anywhere).
+    pub rounds_to_first_commit: usize,
+    /// Rounds until *every* replica's max_commit reaches the target.
+    pub rounds_to_all_commit: usize,
+    /// Messages exchanged until full convergence.
+    pub messages: u64,
+}
+
+/// Fleet of epidemic states gossiping in lockstep rounds.
+pub struct FleetSim {
+    n: usize,
+    fanout: usize,
+    states: Vec<EpidemicState>,
+    perms: Vec<Permutation>,
+    geometry: Geometry,
+}
+
+impl FleetSim {
+    /// All replicas hold a log up to `last_index` in the current term and
+    /// have set their own bit for index 1 — the state right after a leader
+    /// batch has been disseminated.
+    pub fn new(n: usize, fanout: usize, last_index: u32, seed: u64) -> Self {
+        assert!(n >= 1);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut states = Vec::with_capacity(n);
+        let mut perms = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut s = EpidemicState::new(n);
+            s.maybe_set_own_bit(
+                i,
+                crate::epidemic::LogView { last_index: last_index as u64, last_term: 1, current_term: 1 },
+            );
+            states.push(s);
+            perms.push(Permutation::new(n, i, &mut rng.fork(i as u64)));
+        }
+        Self {
+            n,
+            fanout,
+            states,
+            perms,
+            // Geometry for batched native folding (HLO overrides with the
+            // artifact's geometry).
+            geometry: Geometry { b: n, m: 16, w: 2 },
+        }
+    }
+
+    pub fn states(&self) -> &[EpidemicState] {
+        &self.states
+    }
+
+    /// Run one lockstep gossip round, folding with `backend`. Returns the
+    /// number of messages sent. `last_index` is every replica's log end.
+    pub fn round(&mut self, backend: &Backend, last_index: u32) -> u64 {
+        let n = self.n;
+        let maj = majority(n) as u32;
+        // Deliver: per-target message lists (snapshot of sender states).
+        let mut inbox: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut messages = 0u64;
+        for (i, perm) in self.perms.iter_mut().enumerate() {
+            for t in perm.next_round(self.fanout) {
+                inbox[t].push(i);
+                messages += 1;
+            }
+        }
+        let geo = match backend {
+            Backend::Native => self.geometry,
+            Backend::Hlo(exec) => exec.geometry,
+        };
+        let w = geo.w;
+        let m_cap = geo.m;
+        // Process replicas in chunks of geo.b rows.
+        let snapshot: Vec<EpidemicState> = self.states.clone();
+        let mut row = 0usize;
+        while row < n {
+            let rows = (n - row).min(geo.b);
+            let mut bm = vec![0u32; geo.b * w];
+            let mut mc = vec![0u32; geo.b];
+            let mut nc = vec![1u32; geo.b];
+            let mut msgs_bm = vec![0u32; geo.b * m_cap * w];
+            let mut msgs_mc = vec![0u32; geo.b * m_cap];
+            let mut msgs_nc = vec![1u32; geo.b * m_cap];
+            let mut count = vec![0u32; geo.b];
+            let mut me = vec![0u32; geo.b];
+            let last_ix = vec![last_index; geo.b];
+            let last_eq = vec![1u32; geo.b];
+            for r in 0..rows {
+                let i = row + r;
+                let s = &self.states[i];
+                bm[r * w..r * w + s.bitmap.words().len()].copy_from_slice(s.bitmap.words());
+                mc[r] = s.max_commit as u32;
+                nc[r] = s.next_commit as u32;
+                me[r] = i as u32;
+                let senders = &inbox[i];
+                count[r] = senders.len().min(m_cap) as u32;
+                for (k, &from) in senders.iter().take(m_cap).enumerate() {
+                    let src = &snapshot[from];
+                    let base = (r * m_cap + k) * w;
+                    msgs_bm[base..base + src.bitmap.words().len()]
+                        .copy_from_slice(src.bitmap.words());
+                    msgs_mc[r * m_cap + k] = src.max_commit as u32;
+                    msgs_nc[r * m_cap + k] = src.next_commit as u32;
+                }
+            }
+            let (out_bm, out_mc, out_nc) = match backend {
+                Backend::Native => {
+                    let (fb, fm, fnc) = crate::runtime::merge_exec::native_merge_fold(
+                        geo, &bm, &mc, &nc, &msgs_bm, &msgs_mc, &msgs_nc, &count,
+                    );
+                    crate::runtime::merge_exec::native_quorum_update(
+                        geo, fb, fm, fnc, &me, maj, &last_ix, &last_eq,
+                    )
+                }
+                Backend::Hlo(exec) => exec
+                    .hlo_cluster_step(
+                        &bm, &mc, &nc, &msgs_bm, &msgs_mc, &msgs_nc, &count, &me, maj,
+                        &last_ix, &last_eq,
+                    )
+                    .expect("hlo fleet step"),
+            };
+            for r in 0..rows {
+                let i = row + r;
+                self.states[i] = crate::runtime::FleetState {
+                    bm: out_bm.clone(),
+                    mc: out_mc.clone(),
+                    nc: out_nc.clone(),
+                }
+                .unpack_row(r, geo, n);
+            }
+            row += rows;
+        }
+        messages
+    }
+}
+
+/// Run to convergence: rounds until every replica's `max_commit` reaches
+/// `target` (caps at `max_rounds`).
+pub fn converge(
+    n: usize,
+    fanout: usize,
+    target: u32,
+    backend: &Backend,
+    seed: u64,
+) -> ConvergenceReport {
+    let last_index = target;
+    let mut sim = FleetSim::new(n, fanout, last_index, seed);
+    let mut first = 0usize;
+    let mut messages = 0u64;
+    let max_rounds = 10_000;
+    for round in 1..=max_rounds {
+        messages += sim.round(backend, last_index);
+        let max_any = sim.states.iter().map(|s| s.max_commit).max().unwrap();
+        let min_all = sim.states.iter().map(|s| s.max_commit).min().unwrap();
+        if first == 0 && max_any >= target as u64 {
+            first = round;
+        }
+        if min_all >= target as u64 {
+            return ConvergenceReport {
+                n,
+                fanout,
+                rounds_to_first_commit: first,
+                rounds_to_all_commit: round,
+                messages,
+            };
+        }
+    }
+    ConvergenceReport {
+        n,
+        fanout,
+        rounds_to_first_commit: first,
+        rounds_to_all_commit: max_rounds,
+        messages,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_replica_converges_immediately() {
+        let r = converge(1, 1, 1, &Backend::Native, 1);
+        assert!(r.rounds_to_all_commit <= 2);
+    }
+
+    #[test]
+    fn convergence_is_faster_with_larger_fanout() {
+        let slow = converge(51, 1, 1, &Backend::Native, 7);
+        let fast = converge(51, 8, 1, &Backend::Native, 7);
+        assert!(
+            fast.rounds_to_all_commit < slow.rounds_to_all_commit,
+            "F=8 {} rounds !< F=1 {} rounds",
+            fast.rounds_to_all_commit,
+            slow.rounds_to_all_commit
+        );
+        assert!(fast.rounds_to_first_commit >= 1);
+    }
+
+    #[test]
+    fn all_replicas_reach_target() {
+        let target = 5;
+        let mut sim = FleetSim::new(21, 3, target, 3);
+        for _ in 0..200 {
+            sim.round(&Backend::Native, target);
+        }
+        for s in sim.states() {
+            assert!(s.max_commit >= target as u64, "stuck at {}", s.max_commit);
+            assert!(s.invariant_holds());
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = converge(31, 3, 2, &Backend::Native, 5);
+        let b = converge(31, 3, 2, &Backend::Native, 5);
+        assert_eq!(a, b);
+        let c = converge(31, 3, 2, &Backend::Native, 6);
+        // Different permutations; usually different message count.
+        assert!(a.messages > 0 && c.messages > 0);
+    }
+
+    #[test]
+    fn hlo_backend_matches_native() {
+        let Ok(engine) = crate::runtime::Engine::load("artifacts") else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let exec = MergeExecutor::from_engine(&engine).unwrap();
+        let native = converge(33, 3, 1, &Backend::Native, 9);
+        let hlo = converge(33, 3, 1, &Backend::Hlo(&exec), 9);
+        assert_eq!(native, hlo, "backends must be bit-identical");
+    }
+}

@@ -1,0 +1,219 @@
+//! Metrics collected by a simulation run — exactly the measurements of
+//! §4.1: mean response latency, request throughput, per-replica CPU usage,
+//! and the leader-receive→replica-commit interval distribution (Fig 7).
+
+use crate::raft::{NodeId, Time};
+use crate::util::histogram::Histogram;
+use crate::util::json::Json;
+
+/// Everything measured in one run (post-warmup window).
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub variant: &'static str,
+    pub n: usize,
+    pub leader: NodeId,
+    /// Requests completed in the measurement window.
+    pub completed: u64,
+    /// Aggregate throughput (req/s).
+    pub throughput: f64,
+    /// Client-observed latency (µs).
+    pub mean_latency_us: f64,
+    pub p50_latency_us: u64,
+    pub p99_latency_us: u64,
+    pub latency_hist: Histogram,
+    /// Per-replica CPU usage in [0,1].
+    pub cpu: Vec<f64>,
+    pub leader_cpu: f64,
+    pub follower_cpu_mean: f64,
+    pub follower_cpu_max: f64,
+    /// Fig 7: interval between leader receive and commit at each follower.
+    pub commit_interval: Histogram,
+    /// Same, at the leader itself.
+    pub leader_commit_interval: Histogram,
+    pub elections: u64,
+    pub messages: u64,
+    /// Cross-replica committed-prefix agreement held at end of run.
+    pub safety_ok: bool,
+    /// Highest commit index across replicas at end of run.
+    pub max_commit: u64,
+    /// Simulated events processed (host-side performance diagnostics).
+    pub events_processed: u64,
+    /// Wall-clock host time to run the simulation (s).
+    pub host_secs: f64,
+}
+
+impl SimReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(self.variant)),
+            ("n", Json::num(self.n as f64)),
+            ("leader", Json::num(self.leader as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("throughput", Json::num(self.throughput)),
+            ("mean_latency_us", Json::num(self.mean_latency_us)),
+            ("p50_latency_us", Json::num(self.p50_latency_us as f64)),
+            ("p99_latency_us", Json::num(self.p99_latency_us as f64)),
+            ("leader_cpu", Json::num(self.leader_cpu)),
+            ("follower_cpu_mean", Json::num(self.follower_cpu_mean)),
+            ("follower_cpu_max", Json::num(self.follower_cpu_max)),
+            ("cpu", Json::from_f64_slice(&self.cpu)),
+            (
+                "commit_interval_p50_us",
+                Json::num(self.commit_interval.p50() as f64),
+            ),
+            (
+                "commit_interval_p99_us",
+                Json::num(self.commit_interval.p99() as f64),
+            ),
+            ("elections", Json::num(self.elections as f64)),
+            ("messages", Json::num(self.messages as f64)),
+            ("safety_ok", Json::Bool(self.safety_ok)),
+            ("max_commit", Json::num(self.max_commit as f64)),
+            ("events_processed", Json::num(self.events_processed as f64)),
+            ("host_secs", Json::num(self.host_secs)),
+        ])
+    }
+}
+
+/// Accumulates raw measurements during a run; `finish` produces the report.
+#[derive(Debug)]
+pub struct Collector {
+    pub warmup_us: Time,
+    pub duration_us: Time,
+    pub latency: Histogram,
+    pub completed: u64,
+    /// Busy µs per replica, clipped to the measurement window.
+    pub busy_us: Vec<u64>,
+    /// Leader append time per log index (for Fig 7).
+    pub append_at: Vec<Time>,
+    pub commit_interval: Histogram,
+    pub leader_commit_interval: Histogram,
+    pub messages: u64,
+    pub events: u64,
+}
+
+impl Collector {
+    pub fn new(n: usize, warmup_us: Time, duration_us: Time) -> Self {
+        Self {
+            warmup_us,
+            duration_us,
+            latency: Histogram::default(),
+            completed: 0,
+            busy_us: vec![0; n],
+            append_at: Vec::with_capacity(1 << 16),
+            commit_interval: Histogram::default(),
+            leader_commit_interval: Histogram::default(),
+            messages: 0,
+            events: 0,
+        }
+    }
+
+    #[inline]
+    pub fn in_window(&self, t: Time) -> bool {
+        t >= self.warmup_us && t <= self.duration_us
+    }
+
+    /// Record a client request completion.
+    pub fn record_request(&mut self, sent_at: Time, done_at: Time) {
+        if self.in_window(done_at) && sent_at >= self.warmup_us {
+            self.completed += 1;
+            self.latency.record(done_at.saturating_sub(sent_at));
+        }
+    }
+
+    /// Record replica busy interval [from, to), clipped to the window.
+    #[inline]
+    pub fn record_busy(&mut self, replica: NodeId, from: Time, to: Time) {
+        let lo = from.max(self.warmup_us);
+        let hi = to.min(self.duration_us);
+        if hi > lo {
+            self.busy_us[replica] += hi - lo;
+        }
+    }
+
+    /// The leader appended log index `index` at time `t`.
+    pub fn record_append(&mut self, index: u64, t: Time) {
+        let idx = index as usize;
+        if self.append_at.len() <= idx {
+            self.append_at.resize(idx + 1, Time::MAX);
+        }
+        // Keep the first append time (a re-append after leader change would
+        // be a different entry; experiments with a stable leader never hit
+        // this).
+        if self.append_at[idx] == Time::MAX {
+            self.append_at[idx] = t;
+        }
+    }
+
+    /// Replica `replica` committed log indices `(from, to]` at time `t`.
+    pub fn record_commit(&mut self, replica: NodeId, is_leader: bool, from: u64, to: u64, t: Time) {
+        if !self.in_window(t) {
+            return;
+        }
+        for idx in (from + 1)..=to {
+            let Some(&appended) = self.append_at.get(idx as usize) else { continue };
+            if appended == Time::MAX || appended < self.warmup_us {
+                continue;
+            }
+            let dt = t.saturating_sub(appended);
+            if is_leader {
+                self.leader_commit_interval.record(dt);
+            } else {
+                self.commit_interval.record(dt);
+            }
+        }
+        let _ = replica;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_clipping() {
+        let mut c = Collector::new(3, 1_000, 10_000);
+        c.record_busy(0, 0, 500); // fully before warmup
+        assert_eq!(c.busy_us[0], 0);
+        c.record_busy(0, 500, 1_500); // straddles warmup
+        assert_eq!(c.busy_us[0], 500);
+        c.record_busy(0, 9_900, 11_000); // straddles end
+        assert_eq!(c.busy_us[0], 600);
+    }
+
+    #[test]
+    fn request_filtering() {
+        let mut c = Collector::new(1, 1_000, 10_000);
+        c.record_request(500, 900); // entirely in warmup
+        c.record_request(500, 1_200); // sent during warmup: excluded
+        c.record_request(2_000, 2_500); // counted
+        assert_eq!(c.completed, 1);
+        assert_eq!(c.latency.count(), 1);
+        assert_eq!(c.latency.max(), 500);
+    }
+
+    #[test]
+    fn commit_interval_tracking() {
+        let mut c = Collector::new(3, 1_000, 100_000);
+        c.record_append(1, 2_000);
+        c.record_append(2, 2_500);
+        // Follower commits both at t=4000: intervals 2000 and 1500.
+        c.record_commit(1, false, 0, 2, 4_000);
+        assert_eq!(c.commit_interval.count(), 2);
+        assert_eq!(c.commit_interval.max(), 2_000);
+        // Leader separately.
+        c.record_commit(0, true, 0, 2, 3_000);
+        assert_eq!(c.leader_commit_interval.count(), 2);
+        // Unknown index: skipped.
+        c.record_commit(1, false, 5, 6, 5_000);
+        assert_eq!(c.commit_interval.count(), 2);
+    }
+
+    #[test]
+    fn append_keeps_first_timestamp() {
+        let mut c = Collector::new(1, 0, 10_000);
+        c.record_append(3, 100);
+        c.record_append(3, 999);
+        assert_eq!(c.append_at[3], 100);
+    }
+}

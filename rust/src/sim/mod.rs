@@ -1,0 +1,19 @@
+//! Discrete-event simulation of the paper's testbed: one dedicated core
+//! per replica (cost-model service times + work queues), lossy network,
+//! Paxi-style clients, fault injection, and the §4.1 measurements.
+
+pub mod cost;
+pub mod fault;
+pub mod fleet;
+pub mod metrics;
+pub mod net;
+pub mod runner;
+pub mod workload;
+
+pub use cost::CostModel;
+pub use fault::{Fault, FaultSchedule};
+pub use fleet::{converge, Backend, ConvergenceReport, FleetSim};
+pub use metrics::{Collector, SimReport};
+pub use net::SimNet;
+pub use runner::{run_cold_start, run_experiment, run_with_faults, Simulation};
+pub use workload::{Client, Workload};

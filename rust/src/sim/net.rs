@@ -1,0 +1,123 @@
+//! Simulated network: latency distribution, independent loss, and
+//! partitions. Replica-to-replica and client-to-replica messages share the
+//! latency model; partitions apply to replica links only (clients run on
+//! separate cores/hosts in the paper's setup).
+
+use crate::config::NetworkConfig;
+use crate::raft::{NodeId, Time};
+use crate::util::rng::Xoshiro256;
+
+/// Network model with dynamic partitions.
+#[derive(Clone, Debug)]
+pub struct SimNet {
+    cfg: NetworkConfig,
+    n: usize,
+    /// Partition group per replica; links across groups are cut.
+    /// `None` = fully connected.
+    groups: Option<Vec<u32>>,
+    rng: Xoshiro256,
+}
+
+impl SimNet {
+    pub fn new(cfg: NetworkConfig, n: usize, rng: Xoshiro256) -> Self {
+        Self { cfg, n, groups: None, rng }
+    }
+
+    /// Sample a one-way latency.
+    pub fn latency(&mut self) -> Time {
+        let l = self
+            .rng
+            .next_normal(self.cfg.latency_mean_us, self.cfg.latency_stddev_us);
+        (l.max(self.cfg.latency_min_us as f64)) as Time
+    }
+
+    /// Should this replica-to-replica message be dropped?
+    pub fn drops(&mut self, from: NodeId, to: NodeId) -> bool {
+        if let Some(groups) = &self.groups {
+            if groups[from] != groups[to] {
+                return true;
+            }
+        }
+        self.cfg.loss > 0.0 && self.rng.next_bool(self.cfg.loss)
+    }
+
+    /// Should this client-to-replica (or reply) message be dropped?
+    pub fn client_drops(&mut self) -> bool {
+        self.cfg.loss > 0.0 && self.rng.next_bool(self.cfg.loss)
+    }
+
+    /// Install a partition: `groups[i]` is replica i's side.
+    pub fn set_partition(&mut self, groups: Vec<u32>) {
+        assert_eq!(groups.len(), self.n);
+        self.groups = Some(groups);
+    }
+
+    /// Heal all partitions.
+    pub fn heal(&mut self) {
+        self.groups = None;
+    }
+
+    pub fn is_partitioned(&self) -> bool {
+        self.groups.is_some()
+    }
+
+    /// Change the loss rate mid-run (fault injection).
+    pub fn set_loss(&mut self, loss: f64) {
+        self.cfg.loss = loss.clamp(0.0, 1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(loss: f64) -> SimNet {
+        let cfg = NetworkConfig { loss, ..Default::default() };
+        SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(1))
+    }
+
+    #[test]
+    fn latency_respects_floor() {
+        let mut n = net(0.0);
+        for _ in 0..1000 {
+            assert!(n.latency() >= 20);
+        }
+    }
+
+    #[test]
+    fn latency_mean_close_to_config() {
+        let mut n = net(0.0);
+        let total: u64 = (0..20000).map(|_| n.latency()).sum();
+        let mean = total as f64 / 20000.0;
+        assert!((mean - 120.0).abs() < 3.0, "mean {mean}");
+    }
+
+    #[test]
+    fn no_loss_no_drops() {
+        let mut n = net(0.0);
+        for _ in 0..1000 {
+            assert!(!n.drops(0, 1));
+        }
+    }
+
+    #[test]
+    fn loss_rate_approximately_honored() {
+        let mut n = net(0.3);
+        let dropped = (0..20000).filter(|_| n.drops(0, 1)).count();
+        let rate = dropped as f64 / 20000.0;
+        assert!((rate - 0.3).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn partition_cuts_cross_group_links_only() {
+        let mut n = net(0.0);
+        n.set_partition(vec![0, 0, 0, 1, 1]);
+        assert!(!n.drops(0, 1), "same side survives");
+        assert!(n.drops(0, 3), "cross-partition dropped");
+        assert!(n.drops(4, 2));
+        assert!(!n.drops(3, 4));
+        assert!(!n.client_drops(), "clients unaffected by replica partitions");
+        n.heal();
+        assert!(!n.drops(0, 3));
+    }
+}

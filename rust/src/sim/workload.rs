@@ -1,0 +1,150 @@
+//! The Paxi-style benchmark client: `workload.clients` concurrent
+//! closed-loop clients, optionally throttled to an aggregate target rate
+//! ("com ou sem uma taxa de pedidos determinada", §4.1). Each client sends
+//! one request, waits for the reply, then sends the next — no sooner than
+//! its rate-derived period allows.
+
+use crate::config::WorkloadConfig;
+use crate::kvstore::Command;
+use crate::raft::{NodeId, RequestId, Time};
+use crate::util::rng::Xoshiro256;
+
+/// One simulated client.
+#[derive(Clone, Debug)]
+pub struct Client {
+    pub id: usize,
+    /// Replica currently believed to be leader.
+    pub target: NodeId,
+    /// Outstanding request, if any.
+    pub inflight: Option<RequestId>,
+    /// Time the outstanding request was (first) sent.
+    pub sent_at: Time,
+    /// Earliest time the next request may be issued (rate throttling).
+    pub next_allowed: Time,
+    /// Inter-request period (µs); 0 = unthrottled closed loop.
+    pub period_us: u64,
+}
+
+/// Generates commands and manages client pacing.
+#[derive(Debug)]
+pub struct Workload {
+    cfg: WorkloadConfig,
+    rng: Xoshiro256,
+    next_req: RequestId,
+    pub clients: Vec<Client>,
+}
+
+impl Workload {
+    pub fn new(cfg: WorkloadConfig, leader: NodeId, mut rng: Xoshiro256) -> Self {
+        let period_us = if cfg.rate > 0.0 {
+            ((cfg.clients as f64 / cfg.rate) * 1e6).round() as u64
+        } else {
+            0
+        };
+        let clients = (0..cfg.clients)
+            .map(|id| {
+                // Stagger first sends across one period to avoid lockstep.
+                let jitter = if period_us > 0 { rng.next_below(period_us.max(1)) } else { 0 };
+                Client {
+                    id,
+                    target: leader,
+                    inflight: None,
+                    sent_at: 0,
+                    next_allowed: jitter,
+                    period_us,
+                }
+            })
+            .collect();
+        Self { cfg, rng, next_req: 0, clients }
+    }
+
+    /// Fresh request id (request ids are globally unique; the low bits
+    /// carry the client id so replies route back).
+    pub fn fresh_request(&mut self, client: usize) -> RequestId {
+        self.next_req += 1;
+        (self.next_req << 16) | client as RequestId
+    }
+
+    /// Which client does a request id belong to?
+    pub fn client_of(req: RequestId) -> usize {
+        (req & 0xFFFF) as usize
+    }
+
+    /// Draw the next command per the configured read/write mix.
+    pub fn next_command(&mut self) -> Command {
+        let key = self.rng.next_below(self.cfg.keys.max(1));
+        if self.rng.next_f64() < self.cfg.write_fraction {
+            Command::Put { key, value: self.rng.next_u64() }
+        } else {
+            Command::Get { key }
+        }
+    }
+
+    pub fn config(&self) -> &WorkloadConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl(clients: usize, rate: f64) -> Workload {
+        let cfg = WorkloadConfig { clients, rate, ..Default::default() };
+        Workload::new(cfg, 0, Xoshiro256::seed_from_u64(9))
+    }
+
+    #[test]
+    fn request_ids_route_back_to_clients() {
+        let mut w = wl(100, 0.0);
+        for c in 0..100 {
+            let req = w.fresh_request(c);
+            assert_eq!(Workload::client_of(req), c);
+        }
+        // Uniqueness.
+        let a = w.fresh_request(3);
+        let b = w.fresh_request(3);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn throttled_period_matches_rate() {
+        let w = wl(100, 2000.0);
+        // 100 clients at 2000 req/s aggregate = 50 ms per client.
+        assert_eq!(w.clients[0].period_us, 50_000);
+        // Jittered starts spread over a period.
+        let distinct: std::collections::HashSet<_> =
+            w.clients.iter().map(|c| c.next_allowed).collect();
+        assert!(distinct.len() > 50);
+        assert!(w.clients.iter().all(|c| c.next_allowed < 50_000));
+    }
+
+    #[test]
+    fn unthrottled_clients_start_immediately() {
+        let w = wl(10, 0.0);
+        assert!(w.clients.iter().all(|c| c.period_us == 0 && c.next_allowed == 0));
+    }
+
+    #[test]
+    fn command_mix_follows_write_fraction() {
+        let cfg = WorkloadConfig { write_fraction: 0.25, ..Default::default() };
+        let mut w = Workload::new(cfg, 0, Xoshiro256::seed_from_u64(5));
+        let writes = (0..10_000)
+            .filter(|_| matches!(w.next_command(), Command::Put { .. }))
+            .count();
+        let frac = writes as f64 / 10_000.0;
+        assert!((frac - 0.25).abs() < 0.02, "write fraction {frac}");
+    }
+
+    #[test]
+    fn keys_within_keyspace() {
+        let cfg = WorkloadConfig { keys: 10, write_fraction: 1.0, ..Default::default() };
+        let mut w = Workload::new(cfg, 0, Xoshiro256::seed_from_u64(6));
+        for _ in 0..1000 {
+            match w.next_command() {
+                Command::Put { key, .. } => assert!(key < 10),
+                _ => unreachable!(),
+            }
+        }
+    }
+}

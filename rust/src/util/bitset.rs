@@ -1,0 +1,222 @@
+//! Fixed-width bitmap used by the V2 epidemic commit structures.
+//!
+//! One bit per replica; the paper's `Bitmap` records which replicas have
+//! voted for `NextCommit`. Backed by `u32` words so the exact same layout is
+//! shared with the AOT-compiled Pallas/JAX kernels (which operate on
+//! `uint32` lanes) — rust-native and HLO paths are bit-identical.
+
+pub const WORD_BITS: usize = 32;
+
+/// A fixed-capacity bitmap over `n` process ids.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Bitmap {
+    n: usize,
+    words: Vec<u32>,
+}
+
+impl std::fmt::Debug for Bitmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Bitmap[")?;
+        for i in 0..self.n {
+            write!(f, "{}", if self.get(i) { '1' } else { '0' })?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Bitmap {
+    /// All-zeros bitmap over `n` ids.
+    pub fn zeros(n: usize) -> Self {
+        let nwords = n.div_ceil(WORD_BITS);
+        Self { n, words: vec![0; nwords] }
+    }
+
+    /// Number of ids this bitmap covers.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Raw word view (shared layout with the HLO kernel).
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// Build from raw words (e.g. returned from the HLO executor). Bits above
+    /// `n` are masked off.
+    pub fn from_words(n: usize, mut words: Vec<u32>) -> Self {
+        let nwords = n.div_ceil(WORD_BITS);
+        words.resize(nwords, 0);
+        let mut b = Self { n, words };
+        b.mask_tail();
+        b
+    }
+
+    fn mask_tail(&mut self) {
+        let rem = self.n % WORD_BITS;
+        if rem != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u32 << rem) - 1;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.n);
+        (self.words[i / WORD_BITS] >> (i % WORD_BITS)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.n);
+        self.words[i / WORD_BITS] |= 1 << (i % WORD_BITS);
+    }
+
+    #[inline]
+    pub fn clear_bit(&mut self, i: usize) {
+        debug_assert!(i < self.n);
+        self.words[i / WORD_BITS] &= !(1 << (i % WORD_BITS));
+    }
+
+    /// Reset every bit to zero (Algorithm 2 line 3).
+    pub fn clear(&mut self) {
+        for w in &mut self.words {
+            *w = 0;
+        }
+    }
+
+    /// Population count (votes recorded).
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Bitwise OR with another bitmap (Algorithm 3 line 3). Panics if sizes
+    /// differ — merging bitmaps from different cluster sizes is a logic bug.
+    pub fn or_with(&mut self, other: &Bitmap) {
+        assert_eq!(self.n, other.n, "bitmap size mismatch");
+        for (a, b) in self.words.iter_mut().zip(other.words.iter()) {
+            *a |= *b;
+        }
+    }
+
+    /// True when the vote count reaches `majority` (⌊n/2⌋+1 for the caller).
+    #[inline]
+    pub fn has_majority(&self, majority: usize) -> bool {
+        self.count() >= majority
+    }
+
+    /// Iterator over the set bit positions.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.n).filter(move |&i| self.get(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_set_get() {
+        let mut b = Bitmap::zeros(51);
+        assert_eq!(b.count(), 0);
+        for i in [0, 1, 31, 32, 50] {
+            assert!(!b.get(i));
+            b.set(i);
+            assert!(b.get(i));
+        }
+        assert_eq!(b.count(), 5);
+    }
+
+    #[test]
+    fn clear_resets_all() {
+        let mut b = Bitmap::zeros(40);
+        for i in 0..40 {
+            b.set(i);
+        }
+        assert_eq!(b.count(), 40);
+        b.clear();
+        assert_eq!(b.count(), 0);
+    }
+
+    #[test]
+    fn clear_bit_individual() {
+        let mut b = Bitmap::zeros(10);
+        b.set(3);
+        b.set(7);
+        b.clear_bit(3);
+        assert!(!b.get(3));
+        assert!(b.get(7));
+    }
+
+    #[test]
+    fn or_unions_votes() {
+        let mut a = Bitmap::zeros(51);
+        let mut b = Bitmap::zeros(51);
+        a.set(0);
+        a.set(33);
+        b.set(1);
+        b.set(33);
+        a.or_with(&b);
+        assert!(a.get(0) && a.get(1) && a.get(33));
+        assert_eq!(a.count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "bitmap size mismatch")]
+    fn or_size_mismatch_panics() {
+        let mut a = Bitmap::zeros(5);
+        let b = Bitmap::zeros(6);
+        a.or_with(&b);
+    }
+
+    #[test]
+    fn majority_boundary() {
+        let mut b = Bitmap::zeros(51);
+        let majority = 51 / 2 + 1; // 26
+        for i in 0..25 {
+            b.set(i);
+        }
+        assert!(!b.has_majority(majority));
+        b.set(25);
+        assert!(b.has_majority(majority));
+    }
+
+    #[test]
+    fn from_words_masks_tail() {
+        // 51 ids -> 2 words; set garbage above bit 50.
+        let b = Bitmap::from_words(51, vec![u32::MAX, u32::MAX]);
+        assert_eq!(b.count(), 51);
+        assert_eq!(b.words()[1] >> (51 - 32), 0);
+    }
+
+    #[test]
+    fn words_roundtrip() {
+        let mut b = Bitmap::zeros(51);
+        b.set(2);
+        b.set(40);
+        let c = Bitmap::from_words(51, b.words().to_vec());
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn iter_ones_yields_positions() {
+        let mut b = Bitmap::zeros(64);
+        for i in [5, 31, 32, 63] {
+            b.set(i);
+        }
+        let ones: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(ones, vec![5, 31, 32, 63]);
+    }
+
+    #[test]
+    fn debug_format_compact() {
+        let mut b = Bitmap::zeros(4);
+        b.set(1);
+        assert_eq!(format!("{b:?}"), "Bitmap[0100]");
+    }
+}

@@ -1,0 +1,272 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, built in-tree).
+//!
+//! Records `u64` values (we use microseconds) with bounded relative error
+//! and supports quantiles, mean and CDF extraction — the primitives behind
+//! Fig 4 (mean latency), Fig 7 (commit-interval CDF) and the bench harness.
+
+/// Histogram with `2^sub_bits` linear sub-buckets per power-of-two bucket,
+/// giving relative error ≤ 1/2^sub_bits.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    sub_bits: u32,
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new(7) // ~0.8% relative error
+    }
+}
+
+impl Histogram {
+    pub fn new(sub_bits: u32) -> Self {
+        assert!((1..=12).contains(&sub_bits));
+        // 64 power-of-two buckets × 2^sub_bits sub-buckets is plenty for µs.
+        let nbuckets = (64 - sub_bits as usize) << sub_bits;
+        Self {
+            sub_bits,
+            counts: vec![0; nbuckets],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    fn index_of(&self, value: u64) -> usize {
+        let sb = self.sub_bits;
+        if value < (1 << sb) {
+            return value as usize;
+        }
+        let msb = 63 - value.leading_zeros();
+        let bucket = (msb - sb) as usize; // ≥ 0
+        let sub = ((value >> (msb - sb)) - (1 << sb)) as usize;
+        ((bucket + 1) << sb) + sub
+    }
+
+    /// Representative (lower-bound) value of a bucket index.
+    fn value_of(&self, idx: usize) -> u64 {
+        let sb = self.sub_bits as usize;
+        let bucket = idx >> sb;
+        let sub = (idx & ((1 << sb) - 1)) as u64;
+        if bucket == 0 {
+            sub
+        } else {
+            let shift = bucket - 1;
+            ((1u64 << sb) + sub) << shift
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, value: u64) {
+        let idx = self.index_of(value).min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += value as u128;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    pub fn record_n(&mut self, value: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let idx = self.index_of(value).min(self.counts.len() - 1);
+        self.counts[idx] += n;
+        self.total += n;
+        self.sum += value as u128 * n as u128;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.sub_bits, other.sub_bits);
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.min }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile in [0,1]; returns the lower bound of the bucket holding it.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.total as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.value_of(idx);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Extract a CDF as `(value, cumulative_fraction)` points over occupied
+    /// buckets — exactly what Fig 7 plots.
+    pub fn cdf(&self) -> Vec<(u64, f64)> {
+        let mut out = Vec::new();
+        if self.total == 0 {
+            return out;
+        }
+        let mut acc = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            acc += c;
+            out.push((self.value_of(idx), acc as f64 / self.total as f64));
+        }
+        out
+    }
+
+    /// Sample the CDF at fixed fractions (for compact table output).
+    pub fn cdf_at(&self, fractions: &[f64]) -> Vec<(f64, u64)> {
+        fractions.iter().map(|&f| (f, self.quantile(f))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_exact() {
+        let mut h = Histogram::new(7);
+        for v in 0..100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 99);
+        assert!((h.mean() - 49.5).abs() < 1e-9);
+        // Values < 2^7 land in exact buckets; nearest-rank median of
+        // {0..99} is the 50th smallest value = 49.
+        assert_eq!(h.quantile(0.5), 49);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut h = Histogram::new(7);
+        for v in [1_000u64, 10_000, 100_000, 1_000_000, 10_000_000] {
+            h.record(v);
+        }
+        for (q, expect) in [(0.2, 1_000u64), (0.4, 10_000), (0.6, 100_000), (0.8, 1_000_000), (1.0, 10_000_000)] {
+            let got = h.quantile(q) as f64;
+            let rel = (got - expect as f64).abs() / expect as f64;
+            assert!(rel < 0.01, "q={q} got={got} expect={expect} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn quantile_order_monotone() {
+        let mut h = Histogram::default();
+        let mut x = 1u64;
+        for _ in 0..1000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            h.record(x % 1_000_000);
+        }
+        let mut last = 0;
+        for i in 0..=100 {
+            let q = h.quantile(i as f64 / 100.0);
+            assert!(q >= last);
+            last = q;
+        }
+    }
+
+    #[test]
+    fn cdf_ends_at_one() {
+        let mut h = Histogram::default();
+        for v in [5u64, 5, 7, 100, 2000] {
+            h.record(v);
+        }
+        let cdf = h.cdf();
+        assert!(!cdf.is_empty());
+        let (_, f) = *cdf.last().unwrap();
+        assert!((f - 1.0).abs() < 1e-12);
+        // Fractions monotone.
+        for w in cdf.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+            assert!(w[1].0 >= w[0].0);
+        }
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = Histogram::new(7);
+        let mut b = Histogram::new(7);
+        let mut c = Histogram::new(7);
+        for v in 0..500u64 {
+            a.record(v * 3);
+            c.record(v * 3);
+        }
+        for v in 0..500u64 {
+            b.record(v * 7 + 1);
+            c.record(v * 7 + 1);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.quantile(0.5), c.quantile(0.5));
+        assert_eq!(a.max(), c.max());
+        assert!((a.mean() - c.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn record_n_weights() {
+        let mut h = Histogram::default();
+        h.record_n(10, 99);
+        h.record_n(1_000_000, 1);
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile(0.5), 10);
+        assert!(h.quantile(1.0) >= 990_000);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.cdf().is_empty());
+    }
+}

@@ -1,0 +1,15 @@
+//! In-tree substrates: deterministic RNG, bitmaps, histograms, statistics
+//! and JSON — the pieces a crates.io project would pull in as dependencies,
+//! built from scratch here for the offline environment.
+
+pub mod bitset;
+pub mod histogram;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use bitset::Bitmap;
+pub use histogram::Histogram;
+pub use json::Json;
+pub use rng::{SplitMix64, Xoshiro256};
+pub use stats::{summarize, Summary, Welford};

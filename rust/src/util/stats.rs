@@ -1,0 +1,169 @@
+//! Small statistics toolkit: running moments (Welford), summaries and
+//! confidence intervals for the bench harness, plus simple aggregation
+//! across experiment repetitions (the paper runs each experiment 3× and
+//! plots the mean — we do the same).
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+
+    /// Half-width of an ~95% normal-approximation confidence interval.
+    pub fn ci95_half_width(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        1.96 * self.std_dev() / (self.n as f64).sqrt()
+    }
+}
+
+/// Summary of a set of repeated measurements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: u64,
+    pub mean: f64,
+    pub std_dev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub ci95: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    let mut w = Welford::new();
+    for &x in xs {
+        w.push(x);
+    }
+    Summary {
+        n: w.count(),
+        mean: w.mean(),
+        std_dev: w.std_dev(),
+        min: w.min(),
+        max: w.max(),
+        ci95: w.ci95_half_width(),
+    }
+}
+
+/// Percentile of a slice (nearest-rank); copies and sorts.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p.clamp(0.0, 1.0) * v.len() as f64).ceil() as usize).max(1);
+    v[rank - 1]
+}
+
+/// Linear regression slope (for "CPU grows ~linearly with n" checks).
+pub fn linreg_slope(points: &[(f64, f64)]) -> f64 {
+    let n = points.len() as f64;
+    if points.len() < 2 {
+        return 0.0;
+    }
+    let sx: f64 = points.iter().map(|p| p.0).sum();
+    let sy: f64 = points.iter().map(|p| p.1).sum();
+    let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        0.0
+    } else {
+        (n * sxy - sx * sy) / denom
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let s = summarize(&xs);
+        assert_eq!(s.n, 8);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        // Naive sample variance = 32/7.
+        assert!((s.std_dev - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let s = summarize(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+        let s1 = summarize(&[3.5]);
+        assert_eq!(s1.mean, 3.5);
+        assert_eq!(s1.std_dev, 0.0);
+        assert_eq!(s1.ci95, 0.0);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let a = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        let many: Vec<f64> = (0..400).map(|i| 1.0 + (i % 4) as f64).collect();
+        let b = summarize(&many);
+        assert!(b.ci95 < a.ci95);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile(&xs, 0.5), 30.0);
+        assert_eq!(percentile(&xs, 1.0), 50.0);
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn slope_of_line() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 3.0 * i as f64 + 1.0)).collect();
+        assert!((linreg_slope(&pts) - 3.0).abs() < 1e-9);
+        assert_eq!(linreg_slope(&pts[..1]), 0.0);
+    }
+}

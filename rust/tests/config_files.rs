@@ -1,0 +1,58 @@
+//! The shipped scenario configs (`configs/*.toml`) must parse, validate,
+//! and actually run — they are part of the public interface.
+
+use epiraft::config::Config;
+use epiraft::sim::run_experiment;
+
+fn load(name: &str) -> Config {
+    let path = format!("configs/{name}.toml");
+    Config::from_file(&path).unwrap_or_else(|e| panic!("{path}: {e}"))
+}
+
+#[test]
+fn all_shipped_configs_parse_and_validate() {
+    for name in ["paper51", "lan", "wan", "lossy"] {
+        let cfg = load(name);
+        cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+#[test]
+fn paper51_matches_the_papers_setup() {
+    let cfg = load("paper51");
+    assert_eq!(cfg.protocol.n, 51);
+    assert_eq!(cfg.workload.clients, 100);
+    assert_eq!(cfg.seed, 20230713);
+}
+
+#[test]
+fn wan_config_slows_timeouts_consistently() {
+    let cfg = load("wan");
+    assert!(cfg.network.latency_mean_us >= 10_000.0);
+    assert!(
+        cfg.protocol.election_timeout_min_us > cfg.protocol.heartbeat_interval_us,
+        "WAN timeouts must stay consistent"
+    );
+}
+
+#[test]
+fn lossy_config_runs_and_stays_safe() {
+    let mut cfg = load("lossy");
+    // Shrink for test time.
+    cfg.workload.duration_us = 2_000_000;
+    cfg.workload.warmup_us = 400_000;
+    let report = run_experiment(&cfg);
+    assert!(report.safety_ok);
+    assert!(report.completed > 0, "progress under 10% loss");
+}
+
+#[test]
+fn lan_config_runs_quickly() {
+    let mut cfg = load("lan");
+    cfg.protocol.n = 11; // shrink for test time
+    cfg.workload.duration_us = 1_500_000;
+    cfg.workload.warmup_us = 300_000;
+    let report = run_experiment(&cfg);
+    assert!(report.safety_ok);
+    assert!(report.throughput > 0.0);
+}

@@ -1,0 +1,47 @@
+//! Live-cluster integration: the same Node core under real threads, real
+//! channels and the real clock. Kept small — wall-clock tests on a
+//! single-core CI box; the simulator carries the heavy scenarios.
+
+use epiraft::cluster::run_live;
+use epiraft::config::Config;
+use epiraft::raft::Variant;
+
+fn cfg(variant: Variant, n: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.protocol.n = n;
+    cfg.protocol.variant = variant;
+    cfg.protocol.round_interval_us = 2_000;
+    cfg.workload.clients = 3;
+    cfg.workload.duration_us = 1_500_000;
+    cfg.workload.warmup_us = 300_000;
+    cfg.seed = 99;
+    cfg
+}
+
+#[test]
+fn live_v2_end_to_end() {
+    let report = run_live(&cfg(Variant::V2, 5)).expect("live run");
+    assert!(report.completed > 20, "completed {}", report.completed);
+    assert!(report.logs_consistent);
+    // Decentralised commit reached every replica.
+    assert!(report.commit_index.iter().all(|&c| c > 0), "{:?}", report.commit_index);
+    assert!(report.mean_latency_us > 0.0);
+}
+
+#[test]
+fn live_raft_vs_v1_both_serve() {
+    let raft = run_live(&cfg(Variant::Raft, 3)).expect("raft");
+    let v1 = run_live(&cfg(Variant::V1, 3)).expect("v1");
+    for (name, r) in [("raft", &raft), ("v1", &v1)] {
+        assert!(r.completed > 20, "{name}: {}", r.completed);
+        assert!(r.logs_consistent, "{name}");
+    }
+}
+
+#[test]
+fn live_report_renders() {
+    let report = run_live(&cfg(Variant::V1, 3)).expect("run");
+    let text = report.render();
+    assert!(text.contains("live cluster"));
+    assert!(text.contains("replica 0"));
+}

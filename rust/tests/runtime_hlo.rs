@@ -1,0 +1,186 @@
+//! Native ≡ HLO equivalence on randomly generated batches (beyond the
+//! golden vectors baked by aot.py): the PJRT-executed `cluster_step`
+//! artifact must agree bit-for-bit with the native Rust implementation.
+//!
+//! Requires `make artifacts`; tests skip (with a note) when the artifacts
+//! directory is absent so `cargo test` stays green in a fresh checkout.
+
+use epiraft::prop::{forall, Gen};
+use epiraft::runtime::{Engine, MergeExecutor};
+
+fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(dir).join("meta.json").exists() {
+            return Some(dir.to_string());
+        }
+    }
+    None
+}
+
+fn random_batch(g: &mut Gen, b: usize, m: usize, w: usize, n_procs: usize) -> Batch {
+    let mask = |g: &mut Gen, wi: usize| -> u32 {
+        let lo = wi * 32;
+        let bits = n_procs.saturating_sub(lo).min(32);
+        if bits == 0 {
+            0
+        } else {
+            let full = g.u64_in(0, 1 << 32) as u32;
+            if bits == 32 {
+                full
+            } else {
+                full & ((1u32 << bits) - 1)
+            }
+        }
+    };
+    let mut bm = Vec::with_capacity(b * w);
+    let mut msgs_bm = Vec::with_capacity(b * m * w);
+    for _ in 0..b {
+        for wi in 0..w {
+            bm.push(mask(g, wi));
+        }
+    }
+    for _ in 0..(b * m) {
+        for wi in 0..w {
+            msgs_bm.push(mask(g, wi));
+        }
+    }
+    let mc: Vec<u32> = (0..b).map(|_| g.u64_in(0, 1000) as u32).collect();
+    let nc: Vec<u32> = mc.iter().map(|&x| x + g.u64_in(1, 50) as u32).collect();
+    let msgs_mc: Vec<u32> = (0..b * m).map(|_| g.u64_in(0, 1000) as u32).collect();
+    let msgs_nc: Vec<u32> = msgs_mc.iter().map(|&x| x + g.u64_in(1, 50) as u32).collect();
+    Batch {
+        bm,
+        mc,
+        nc,
+        msgs_bm,
+        msgs_mc,
+        msgs_nc,
+        count: (0..b).map(|_| g.u64_in(0, m as u64 + 1) as u32).collect(),
+        me: (0..b).map(|_| g.u64_in(0, n_procs as u64) as u32).collect(),
+        majority: (n_procs / 2 + 1) as u32,
+        last_index: (0..b).map(|_| g.u64_in(0, 1100) as u32).collect(),
+        last_term_eq: (0..b).map(|_| g.u64_in(0, 2) as u32).collect(),
+    }
+}
+
+struct Batch {
+    bm: Vec<u32>,
+    mc: Vec<u32>,
+    nc: Vec<u32>,
+    msgs_bm: Vec<u32>,
+    msgs_mc: Vec<u32>,
+    msgs_nc: Vec<u32>,
+    count: Vec<u32>,
+    me: Vec<u32>,
+    majority: u32,
+    last_index: Vec<u32>,
+    last_term_eq: Vec<u32>,
+}
+
+#[test]
+fn hlo_cluster_step_matches_native_on_random_batches() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let engine = Engine::load(&dir).expect("engine");
+    let exec = MergeExecutor::from_engine(&engine).expect("executor");
+    let geo = engine.geometry;
+    forall("hlo == native cluster_step", 10, |g| {
+        let batch = random_batch(g, geo.b, geo.m, geo.w, 51);
+        let hlo = exec
+            .hlo_cluster_step(
+                &batch.bm,
+                &batch.mc,
+                &batch.nc,
+                &batch.msgs_bm,
+                &batch.msgs_mc,
+                &batch.msgs_nc,
+                &batch.count,
+                &batch.me,
+                batch.majority,
+                &batch.last_index,
+                &batch.last_term_eq,
+            )
+            .expect("hlo exec");
+        let native = exec.native_cluster_step(
+            &batch.bm,
+            &batch.mc,
+            &batch.nc,
+            &batch.msgs_bm,
+            &batch.msgs_mc,
+            &batch.msgs_nc,
+            &batch.count,
+            &batch.me,
+            batch.majority,
+            &batch.last_index,
+            &batch.last_term_eq,
+        );
+        assert_eq!(hlo.0, native.0, "bitmap mismatch");
+        assert_eq!(hlo.1, native.1, "max_commit mismatch");
+        assert_eq!(hlo.2, native.2, "next_commit mismatch");
+    });
+}
+
+#[test]
+fn golden_vectors_pass() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    epiraft::runtime::artifacts_check(&dir).expect("artifacts-check");
+}
+
+#[test]
+fn fleet_state_roundtrip_through_hlo() {
+    use epiraft::epidemic::EpidemicState;
+    use epiraft::runtime::FleetState;
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let engine = Engine::load(&dir).expect("engine");
+    let exec = MergeExecutor::from_engine(&engine).expect("executor");
+    let geo = engine.geometry;
+
+    // A realistic scenario: 26 of 51 replicas voted for index 5.
+    let n = 51;
+    let mut state = EpidemicState::new(n);
+    state.max_commit = 4;
+    state.next_commit = 5;
+    for i in 0..25 {
+        state.bitmap.set(i);
+    }
+    // One incoming message carries the 26th vote.
+    let mut msg = EpidemicState::new(n);
+    msg.max_commit = 4;
+    msg.next_commit = 5;
+    msg.bitmap.set(30);
+
+    let f = FleetState::pack(&[state.clone()], geo);
+    let mut msgs_bm = vec![0u32; geo.b * geo.m * geo.w];
+    let mut msgs_mc = vec![0u32; geo.b * geo.m];
+    let mut msgs_nc = vec![1u32; geo.b * geo.m];
+    msgs_bm[..geo.w].copy_from_slice(msg.bitmap.words());
+    msgs_mc[0] = msg.max_commit as u32;
+    msgs_nc[0] = msg.next_commit as u32;
+    let mut count = vec![0u32; geo.b];
+    count[0] = 1;
+    let me = vec![0u32; geo.b];
+    let last_index = vec![8u32; geo.b];
+    let last_term_eq = vec![1u32; geo.b];
+
+    let (bm, mc, nc) = exec
+        .hlo_cluster_step(
+            &f.bm, &f.mc, &f.nc, &msgs_bm, &msgs_mc, &msgs_nc, &count, &me,
+            26, &last_index, &last_term_eq,
+        )
+        .expect("exec");
+    let out = FleetState { bm, mc, nc }.unpack_row(0, geo, n);
+    // 25 + 1 = 26 votes = majority: commit advances to 5, vote moves to the
+    // log end (8), own bit re-set.
+    assert_eq!(out.max_commit, 5);
+    assert_eq!(out.next_commit, 8);
+    assert!(out.bitmap.get(0));
+    assert_eq!(out.bitmap.count(), 1);
+}
