@@ -1,25 +1,85 @@
 //! Per-thread CPU time via `clock_gettime(CLOCK_THREAD_CPUTIME_ID)` — the
 //! live-cluster analogue of the paper's per-core CPU measurements.
+//!
+//! The `clock_gettime` binding is declared directly against the platform C
+//! library (the crate builds offline with zero dependencies, so the `libc`
+//! crate is not available). Clock ids differ per OS; unsupported platforms
+//! report 0, which degrades the live report's CPU column but nothing else.
 
-/// CPU time consumed by the calling thread, in microseconds.
-pub fn thread_cpu_us() -> u64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::c_long;
+
+    /// Matches `struct timespec` on the supported targets: `time_t` and
+    /// the nanosecond field are both `long` there (32-bit on 32-bit Unix),
+    /// so hardcoding `i64` would corrupt reads off 64-bit platforms.
+    #[repr(C)]
+    pub struct Timespec {
+        pub tv_sec: c_long,
+        pub tv_nsec: c_long,
+    }
+
+    extern "C" {
+        pub fn clock_gettime(clk_id: i32, tp: *mut Timespec) -> i32;
+    }
+
+    #[cfg(target_os = "linux")]
+    pub const CLOCK_PROCESS_CPUTIME_ID: i32 = 2;
+    #[cfg(target_os = "linux")]
+    pub const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+
+    #[cfg(target_os = "macos")]
+    pub const CLOCK_PROCESS_CPUTIME_ID: i32 = 12;
+    #[cfg(target_os = "macos")]
+    pub const CLOCK_THREAD_CPUTIME_ID: i32 = 16;
+
+    #[cfg(not(any(target_os = "linux", target_os = "macos")))]
+    pub const CLOCK_PROCESS_CPUTIME_ID: i32 = -1;
+    #[cfg(not(any(target_os = "linux", target_os = "macos")))]
+    pub const CLOCK_THREAD_CPUTIME_ID: i32 = -1;
+}
+
+#[cfg(unix)]
+fn cpu_us(clock: i32) -> u64 {
+    if clock < 0 {
+        return 0;
+    }
+    let mut ts = sys::Timespec { tv_sec: 0, tv_nsec: 0 };
     // SAFETY: ts is a valid, writable timespec; the clock id is a constant.
-    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    let rc = unsafe { sys::clock_gettime(clock, &mut ts) };
     if rc != 0 {
         return 0;
     }
     ts.tv_sec as u64 * 1_000_000 + ts.tv_nsec as u64 / 1_000
 }
 
+#[cfg(not(unix))]
+fn cpu_us(_clock: i32) -> u64 {
+    0
+}
+
+/// CPU time consumed by the calling thread, in microseconds.
+pub fn thread_cpu_us() -> u64 {
+    #[cfg(unix)]
+    {
+        cpu_us(sys::CLOCK_THREAD_CPUTIME_ID)
+    }
+    #[cfg(not(unix))]
+    {
+        cpu_us(-1)
+    }
+}
+
 /// CPU time consumed by the whole process, in microseconds.
 pub fn process_cpu_us() -> u64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-    let rc = unsafe { libc::clock_gettime(libc::CLOCK_PROCESS_CPUTIME_ID, &mut ts) };
-    if rc != 0 {
-        return 0;
+    #[cfg(unix)]
+    {
+        cpu_us(sys::CLOCK_PROCESS_CPUTIME_ID)
     }
-    ts.tv_sec as u64 * 1_000_000 + ts.tv_nsec as u64 / 1_000
+    #[cfg(not(unix))]
+    {
+        cpu_us(-1)
+    }
 }
 
 #[cfg(test)]

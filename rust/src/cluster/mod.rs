@@ -3,6 +3,11 @@
 //! paper's one-core-per-replica deployment), `std::sync::mpsc` as the
 //! transport, client threads running the Paxi closed loop.
 //!
+//! The replica event loop is the shared [`crate::driver`] cycle: build a
+//! [`NodeInput`], `step` it through the core, and let a [`LiveSink`] route
+//! the actions onto the mpsc channels — the same dispatch the simulator
+//! uses, minus the cost model.
+//!
 //! The discrete-event simulator produces the paper's figures; this runtime
 //! proves the protocol core composes end-to-end outside the simulator, and
 //! powers the `live_cluster` example and the `epiraft live` subcommand.
@@ -10,8 +15,9 @@
 pub mod cpu;
 
 use crate::config::Config;
+use crate::driver::{self, ActionSink, NodeInput};
 use crate::kvstore::Command;
-use crate::raft::{Action, ClientResult, Message, Node, NodeId, RequestId, Time};
+use crate::raft::{ClientResult, Message, Node, NodeId, RequestId, Time};
 use crate::util::histogram::Histogram;
 use crate::util::rng::Xoshiro256;
 use std::collections::HashMap;
@@ -69,6 +75,26 @@ impl LiveReport {
     }
 }
 
+/// Routes node actions onto the cluster's mpsc channels.
+struct LiveSink<'a> {
+    peers: &'a [Option<Sender<Input>>],
+    reply_channels: &'a mut HashMap<RequestId, Sender<(RequestId, ClientResult)>>,
+}
+
+impl ActionSink for LiveSink<'_> {
+    fn send(&mut self, _from: NodeId, to: NodeId, msg: Message) {
+        if let Some(Some(tx)) = self.peers.get(to) {
+            let _ = tx.send(Input::Msg(msg));
+        }
+    }
+
+    fn client_reply(&mut self, _from: NodeId, req: RequestId, result: ClientResult) {
+        if let Some(tx) = self.reply_channels.remove(&req) {
+            let _ = tx.send((req, result));
+        }
+    }
+}
+
 struct ReplicaHandle {
     sender: Sender<Input>,
     join: thread::JoinHandle<(Node, u64)>,
@@ -90,43 +116,26 @@ fn spawn_replica(
             let deadline = node.next_deadline();
             let wait = Duration::from_micros(deadline.saturating_sub(now).min(50_000).max(100));
             let input = match rx.recv_timeout(wait) {
-                Ok(i) => Some(i),
-                Err(RecvTimeoutError::Timeout) => None,
+                Ok(Input::Stop) => break,
+                Ok(Input::Msg(m)) => NodeInput::Message(m),
+                Ok(Input::Client { req, cmd, reply_to }) => {
+                    reply_channels.insert(req, reply_to);
+                    NodeInput::Client { req, cmd }
+                }
+                Err(RecvTimeoutError::Timeout) => NodeInput::Tick,
                 Err(RecvTimeoutError::Disconnected) => break,
             };
             let now = now_us(&epoch);
-            let actions = match input {
-                Some(Input::Stop) => break,
-                Some(Input::Msg(m)) => node.on_message(now, m),
-                Some(Input::Client { req, cmd, reply_to }) => {
-                    reply_channels.insert(req, reply_to);
-                    node.client_request(now, req, cmd)
-                }
-                None => node.tick(now),
-            };
-            for a in actions {
-                match a {
-                    Action::Send { to, msg } => {
-                        if let Some(Some(tx)) = peers.get(to) {
-                            let _ = tx.send(Input::Msg(msg));
-                        }
-                    }
-                    Action::ClientReply { req, result } => {
-                        if let Some(tx) = reply_channels.remove(&req) {
-                            let _ = tx.send((req, result));
-                        }
-                    }
-                    Action::Committed { .. } | Action::RoleChanged { .. } => {}
-                }
-            }
+            let mut sink = LiveSink { peers: &peers, reply_channels: &mut reply_channels };
+            driver::step(&mut node, now, input, &mut sink);
         }
         (node, cpu::thread_cpu_us())
     })
 }
 
 /// Run a live cluster per `cfg` and drive it with closed-loop clients.
-pub fn run_live(cfg: &Config) -> anyhow::Result<LiveReport> {
-    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+pub fn run_live(cfg: &Config) -> Result<LiveReport, String> {
+    cfg.validate()?;
     let n = cfg.protocol.n;
     let epoch = Instant::now();
 
@@ -154,10 +163,10 @@ pub fn run_live(cfg: &Config) -> anyhow::Result<LiveReport> {
             .map(|(j, tx)| if j == id { None } else { Some(tx.clone()) })
             .collect();
         // Deliver bootstrap sends (leader's first broadcast/round).
-        for a in boot_actions {
-            if let Action::Send { to, msg } = a {
-                let _ = senders[to].send(Input::Msg(msg));
-            }
+        {
+            let mut boot_replies = HashMap::new();
+            let mut sink = LiveSink { peers: &peers, reply_channels: &mut boot_replies };
+            driver::dispatch(id, node.is_leader(), boot_actions, &mut sink);
         }
         let join = spawn_replica(node, rx, peers, epoch);
         handles.push(ReplicaHandle { sender: senders[id].clone(), join });

@@ -109,11 +109,35 @@ pub struct NetworkConfig {
     pub latency_min_us: u64,
     /// Independent message-loss probability.
     pub loss: f64,
+    /// Probability a delivered replica-to-replica message is duplicated:
+    /// the copy gets its own latency draw, so duplicates may arrive out of
+    /// order. Default off (0.0).
+    pub duplicate: f64,
+    /// Gilbert–Elliott burst-loss chain, kept per directed replica link
+    /// (so each link sees the configured burst lengths), enabled when
+    /// `ge_good_to_bad > 0` (composes with the independent `loss`): per
+    /// packet the chain moves good→bad with probability `ge_good_to_bad`
+    /// and bad→good with `ge_bad_to_good`, then drops with `ge_loss_good`
+    /// or `ge_loss_bad` depending on the state. Defaults model off.
+    pub ge_good_to_bad: f64,
+    pub ge_bad_to_good: f64,
+    pub ge_loss_good: f64,
+    pub ge_loss_bad: f64,
 }
 
 impl Default for NetworkConfig {
     fn default() -> Self {
-        Self { latency_mean_us: 120.0, latency_stddev_us: 30.0, latency_min_us: 20, loss: 0.0 }
+        Self {
+            latency_mean_us: 120.0,
+            latency_stddev_us: 30.0,
+            latency_min_us: 20,
+            loss: 0.0,
+            duplicate: 0.0,
+            ge_good_to_bad: 0.0,
+            ge_bad_to_good: 0.1,
+            ge_loss_good: 0.0,
+            ge_loss_bad: 1.0,
+        }
     }
 }
 
@@ -204,8 +228,17 @@ pub struct Config {
 impl Config {
     pub fn validate(&self) -> Result<(), String> {
         self.protocol.validate()?;
-        if !(0.0..=1.0).contains(&self.network.loss) {
-            return Err("network.loss must be in [0,1]".into());
+        for (name, p) in [
+            ("network.loss", self.network.loss),
+            ("network.duplicate", self.network.duplicate),
+            ("network.ge_good_to_bad", self.network.ge_good_to_bad),
+            ("network.ge_bad_to_good", self.network.ge_bad_to_good),
+            ("network.ge_loss_good", self.network.ge_loss_good),
+            ("network.ge_loss_bad", self.network.ge_loss_bad),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("{name} must be in [0,1]"));
+            }
         }
         if !(0.0..=1.0).contains(&self.workload.write_fraction) {
             return Err("workload.write_fraction must be in [0,1]".into());
@@ -235,8 +268,13 @@ impl Config {
             "seed" => self.seed = parse_u64(v)?,
             "protocol.n" => self.protocol.n = parse_u64(v)? as usize,
             "protocol.variant" => {
-                self.protocol.variant =
-                    Variant::parse(v).ok_or_else(|| format!("unknown variant {v}"))?
+                // The strategy registry is the authoritative name → variant
+                // map; `Variant::parse` keeps the historical aliases
+                // ("original", "gossip", "epidemic") working.
+                self.protocol.variant = crate::raft::strategy::by_name(v)
+                    .map(|info| info.variant)
+                    .or_else(|| Variant::parse(v))
+                    .ok_or_else(|| format!("unknown variant {v}"))?
             }
             "protocol.fanout" => self.protocol.fanout = parse_u64(v)? as usize,
             "protocol.round_interval_us" => self.protocol.round_interval_us = parse_u64(v)?,
@@ -266,6 +304,11 @@ impl Config {
             "network.latency_stddev_us" => self.network.latency_stddev_us = parse_f64(v)?,
             "network.latency_min_us" => self.network.latency_min_us = parse_u64(v)?,
             "network.loss" => self.network.loss = parse_f64(v)?,
+            "network.duplicate" => self.network.duplicate = parse_f64(v)?,
+            "network.ge_good_to_bad" => self.network.ge_good_to_bad = parse_f64(v)?,
+            "network.ge_bad_to_good" => self.network.ge_bad_to_good = parse_f64(v)?,
+            "network.ge_loss_good" => self.network.ge_loss_good = parse_f64(v)?,
+            "network.ge_loss_bad" => self.network.ge_loss_bad = parse_f64(v)?,
             "cost.client_recv_us" => self.cost.client_recv_us = parse_f64(v)?,
             "cost.client_reply_us" => self.cost.client_reply_us = parse_f64(v)?,
             "cost.msg_send_us" => self.cost.msg_send_us = parse_f64(v)?,
@@ -397,6 +440,11 @@ pub fn dump(cfg: &Config) -> BTreeMap<String, String> {
     m.insert("network.latency_stddev_us".into(), cfg.network.latency_stddev_us.to_string());
     m.insert("network.latency_min_us".into(), cfg.network.latency_min_us.to_string());
     m.insert("network.loss".into(), cfg.network.loss.to_string());
+    m.insert("network.duplicate".into(), cfg.network.duplicate.to_string());
+    m.insert("network.ge_good_to_bad".into(), cfg.network.ge_good_to_bad.to_string());
+    m.insert("network.ge_bad_to_good".into(), cfg.network.ge_bad_to_good.to_string());
+    m.insert("network.ge_loss_good".into(), cfg.network.ge_loss_good.to_string());
+    m.insert("network.ge_loss_bad".into(), cfg.network.ge_loss_bad.to_string());
     m.insert("cost.client_recv_us".into(), cfg.cost.client_recv_us.to_string());
     m.insert("cost.client_reply_us".into(), cfg.cost.client_reply_us.to_string());
     m.insert("cost.msg_send_us".into(), cfg.cost.msg_send_us.to_string());
@@ -481,6 +529,19 @@ rate = 2500.5
         let mut cfg = Config::default();
         cfg.workload.warmup_us = cfg.workload.duration_us;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn network_impairment_keys_parse_and_validate() {
+        let mut cfg = Config::default();
+        cfg.set("network.duplicate", "0.25").unwrap();
+        cfg.set("network.ge_good_to_bad", "0.01").unwrap();
+        cfg.set("network.ge_bad_to_good", "0.2").unwrap();
+        cfg.set("network.ge_loss_good", "0.05").unwrap();
+        cfg.set("network.ge_loss_bad", "0.9").unwrap();
+        cfg.validate().unwrap();
+        cfg.set("network.duplicate", "1.5").unwrap();
+        assert!(cfg.validate().is_err(), "probabilities outside [0,1] rejected");
     }
 
     #[test]

@@ -9,16 +9,21 @@
 //! * **V2**: decentralised commit via gossiped `Bitmap` / `MaxCommit` /
 //!   `NextCommit` structures (§3.2, Algorithms 2–3).
 //!
-//! The crate is organised in the three-layer architecture described in
-//! DESIGN.md: this Rust layer is the coordinator (protocol core, simulator,
-//! live cluster, benchmark harness); the batched V2 merge/update hot-spot
-//! also exists as an AOT-compiled JAX/Pallas kernel executed through PJRT
-//! (see `runtime`).
+//! The crate is organised in the layered architecture described in
+//! DESIGN.md (repo root): the sans-io protocol core (`raft`) delegates all
+//! variant-specific behaviour to a pluggable
+//! [`raft::strategy::ReplicationStrategy`], and both runtimes — the
+//! discrete-event simulator (`sim`) and the live thread-per-replica
+//! cluster (`cluster`) — drive the core through the shared `driver`
+//! abstraction. The batched V2 merge/update hot-spot also exists as an
+//! AOT-compiled JAX/Pallas kernel executed through PJRT (see `runtime`;
+//! gated behind the `xla` feature).
 
 pub mod config;
 pub mod harness;
 pub mod cli;
 pub mod cluster;
+pub mod driver;
 pub mod sim;
 pub mod epidemic;
 pub mod kvstore;

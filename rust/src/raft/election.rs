@@ -23,17 +23,16 @@ impl Node {
         self.leader_hint = None;
         self.counters.elections_started += 1;
         self.election_deadline = self.random_election_deadline(now);
-        // §3.2: reset the epidemic vote when an election is initiated.
-        if self.cfg.variant.has_epidemic_commit() {
-            self.epi.reset_for_new_term();
-        }
+        // Reset per-term strategy state — §3.2 requires the epidemic vote
+        // structures to reset when an election is initiated.
+        self.strategy.as_mut().expect("strategy attached").on_term_change();
         actions.push(Action::RoleChanged { role: Role::Candidate, term: self.current_term });
         if self.cfg.n == 1 {
             // Trivial cluster: self-vote is a majority.
             self.become_leader(now, actions);
             return;
         }
-        let gossip = self.cfg.gossip_votes && self.cfg.variant.is_gossip();
+        let gossip = self.cfg.gossip_votes && self.strategy().is_gossip();
         let args = RequestVoteArgs {
             term: self.current_term,
             candidate: self.id,
@@ -133,29 +132,19 @@ impl Node {
             f.last_rpc_at = 0;
         }
         self.pending.clear();
-        self.coalesce_deadline = None;
-        self.commit_history.clear();
         actions.push(Action::RoleChanged { role: Role::Leader, term: self.current_term });
+        // Replication kick-off is strategy-specific: the no-op append feeds
+        // the strategy's local vote state (V2), then the strategy resets its
+        // per-leadership state, handles the trivial n=1 commit, and fires
+        // the first broadcast / gossip round.
+        let mut strategy = self.strategy.take().expect("strategy attached");
         if self.cfg.leader_noop {
-            let idx = self.log.append(self.current_term, crate::kvstore::Command::Noop);
+            self.log.append(self.current_term, crate::kvstore::Command::Noop);
             self.counters.entries_appended += 1;
-            if self.cfg.variant.has_epidemic_commit() {
-                self.epi.maybe_set_own_bit(self.id, self.log_view());
-                self.run_epidemic_update(now, actions);
-            }
-            let _ = idx;
+            strategy.on_local_append(self, now, actions);
         }
-        if self.cfg.n == 1 {
-            self.advance_commit_from_matches(actions);
-        }
-        match self.cfg.variant {
-            super::types::Variant::Raft => {
-                self.broadcast_append(now, actions);
-            }
-            super::types::Variant::V1 | super::types::Variant::V2 => {
-                self.start_gossip_round(now, actions);
-            }
-        }
+        strategy.on_become_leader(self, now, actions);
+        self.strategy = Some(strategy);
     }
 }
 
@@ -282,13 +271,16 @@ mod tests {
     #[test]
     fn v2_election_resets_epidemic_structures() {
         let mut node = Node::new(0, cfg(5, Variant::V2), 1);
-        node.epi.max_commit = 4;
-        node.epi.next_commit = 9;
-        node.epi.bitmap.set(1);
+        {
+            let epi = node.epidemic_mut().expect("v2 keeps epidemic state");
+            epi.max_commit = 4;
+            epi.next_commit = 9;
+            epi.bitmap.set(1);
+        }
         let dl = node.next_deadline();
         node.tick(dl);
-        assert_eq!(node.epidemic().next_commit, 5);
-        assert_eq!(node.epidemic().bitmap.count(), 0);
+        assert_eq!(node.epidemic().unwrap().next_commit, 5);
+        assert_eq!(node.epidemic().unwrap().bitmap.count(), 0);
     }
 
     #[test]

@@ -6,6 +6,7 @@ pub mod log;
 pub mod message;
 pub mod node;
 pub mod replication;
+pub mod strategy;
 pub mod types;
 
 pub use log::{LogEntry, LogStore};
@@ -13,4 +14,5 @@ pub use message::{
     AppendEntriesArgs, AppendEntriesReply, GossipMeta, Message, RequestVoteArgs, RequestVoteReply,
 };
 pub use node::{Action, ClientResult, Counters, Node};
+pub use strategy::ReplicationStrategy;
 pub use types::{majority, LogIndex, NodeId, RequestId, Role, Term, Time, Variant};

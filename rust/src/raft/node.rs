@@ -2,20 +2,25 @@
 //!
 //! A [`Node`] never does I/O and never reads a clock: every entry point
 //! takes `now` and returns a list of [`Action`]s for the host to execute.
-//! The same core is driven by three hosts:
+//! The same core is driven by three hosts (all through `crate::driver`):
 //!
 //! * the discrete-event simulator (`sim/`) — the paper's experiments;
 //! * the live thread-per-replica cluster (`cluster/`);
 //! * unit/property tests, which call the entry points directly.
 //!
-//! Variant selection ([`Variant`]) switches between original Raft, V1
-//! (epidemic AppendEntries, §3.1) and V2 (decentralised commit, §3.2).
+//! The node holds only variant-independent Raft state. Everything
+//! replication-variant-specific — classic broadcast, V1 gossip rounds,
+//! V2's decentralised commit — lives in the node's
+//! [`ReplicationStrategy`](super::strategy::ReplicationStrategy), selected
+//! once at construction from [`Variant`] via the strategy registry
+//! (`super::strategy::build`).
 
 use super::log::LogStore;
 use super::message::Message;
-use super::types::{majority, LogIndex, NodeId, RequestId, Role, Term, Time, Variant};
+use super::strategy::ReplicationStrategy;
+use super::types::{majority, LogIndex, NodeId, RequestId, Role, Term, Time};
 use crate::config::ProtocolConfig;
-use crate::epidemic::{EpidemicState, LogView, Permutation, RoundClock};
+use crate::epidemic::{EpidemicState, LogView, Permutation};
 use crate::kvstore::{Command, KvStore, Output};
 use crate::util::rng::Xoshiro256;
 use std::collections::{BTreeMap, HashSet};
@@ -88,8 +93,6 @@ pub struct Node {
     // Leader state.
     pub(crate) followers: Vec<FollowerSlot>,
     pub(crate) pending: BTreeMap<LogIndex, RequestId>,
-    pub(crate) coalesce_deadline: Option<Time>,
-    pub(crate) next_round_at: Time,
 
     // Election state.
     pub(crate) votes: HashSet<NodeId>,
@@ -99,18 +102,16 @@ pub struct Node {
     pub(crate) vote_gossip_seen: HashSet<NodeId>,
     pub(crate) vote_gossip_term: Term,
 
-    // Gossip state.
+    // Shared gossip infrastructure (the permutation also drives the §6
+    // epidemic vote-collection extension, so it lives here rather than in
+    // the gossip strategy).
     pub(crate) rng: Xoshiro256,
     pub(crate) perm: Permutation,
-    pub(crate) round_clock: RoundClock,
-    /// Commit-index snapshots of the last few rounds. Gossip batches start
-    /// at the *oldest* snapshot, not the current commit index, so a
-    /// follower that misses a round or two still log-matches the next one
-    /// instead of falling into RPC repair (see start_gossip_round).
-    pub(crate) commit_history: std::collections::VecDeque<LogIndex>,
 
-    // V2 state.
-    pub(crate) epi: EpidemicState,
+    /// The replication variant. `Option` only so the node can detach it
+    /// during dispatch (hooks receive `&mut Node`); it is always `Some`
+    /// between entry points.
+    pub(crate) strategy: Option<Box<dyn ReplicationStrategy>>,
 
     pub(crate) seq: u64,
     pub counters: Counters,
@@ -121,6 +122,7 @@ impl Node {
         assert!(id < cfg.n, "node id {id} out of range for n={}", cfg.n);
         let mut rng = Xoshiro256::seed_from_u64(seed ^ (id as u64).wrapping_mul(0xA24BAED4963EE407));
         let perm = Permutation::new(cfg.n, id, &mut rng);
+        let strategy = super::strategy::build(&cfg);
         let n = cfg.n;
         let mut node = Self {
             id,
@@ -134,17 +136,13 @@ impl Node {
             leader_hint: None,
             followers: vec![FollowerSlot::default(); n],
             pending: BTreeMap::new(),
-            coalesce_deadline: None,
-            next_round_at: Time::MAX,
             votes: HashSet::new(),
             election_deadline: 0,
             vote_gossip_seen: HashSet::new(),
             vote_gossip_term: 0,
             rng,
             perm,
-            round_clock: RoundClock::new(),
-            commit_history: std::collections::VecDeque::with_capacity(4),
-            epi: EpidemicState::new(n),
+            strategy: Some(strategy),
             seq: 0,
             counters: Counters::default(),
             cfg,
@@ -191,12 +189,33 @@ impl Node {
         &self.log
     }
 
-    pub fn epidemic(&self) -> &EpidemicState {
-        &self.epi
+    /// The §3.2 decentralised-commit state, if this node's strategy keeps
+    /// one (V2).
+    pub fn epidemic(&self) -> Option<&EpidemicState> {
+        self.strategy().epidemic()
+    }
+
+    /// Mutable §3.2 state (tests, fault injection).
+    pub fn epidemic_mut(&mut self) -> Option<&mut EpidemicState> {
+        self.strategy.as_mut().expect("strategy attached").epidemic_mut()
     }
 
     pub fn config(&self) -> &ProtocolConfig {
         &self.cfg
+    }
+
+    /// Name of the replication strategy driving this node.
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy().name()
+    }
+
+    /// Strategy-specific diagnostic counters.
+    pub fn strategy_counters(&self) -> Vec<(&'static str, u64)> {
+        self.strategy().counters(&self.counters)
+    }
+
+    pub(crate) fn strategy(&self) -> &dyn ReplicationStrategy {
+        self.strategy.as_deref().expect("strategy attached")
     }
 
     pub(crate) fn n(&self) -> usize {
@@ -218,6 +237,18 @@ impl Node {
     pub(crate) fn next_seq(&mut self) -> u64 {
         self.seq += 1;
         self.seq
+    }
+
+    /// Run `f` with the strategy detached from the node, so the hook can
+    /// borrow the node mutably. Every dispatch point funnels through here.
+    fn with_strategy<R>(
+        &mut self,
+        f: impl FnOnce(&mut dyn ReplicationStrategy, &mut Node) -> R,
+    ) -> R {
+        let mut s = self.strategy.take().expect("strategy attached");
+        let out = f(s.as_mut(), self);
+        self.strategy = Some(s);
+        out
     }
 
     // ---- bootstrap (stable-leader experiments, §4.1) -----------------------
@@ -257,31 +288,7 @@ impl Node {
         let index = self.log.append(self.current_term, cmd);
         self.counters.entries_appended += 1;
         self.pending.insert(index, req);
-        if self.cfg.variant.has_epidemic_commit() {
-            self.epi.maybe_set_own_bit(self.id, self.log_view());
-            self.run_epidemic_update(now, &mut actions);
-        }
-        if self.cfg.n == 1 {
-            // Trivial cluster: the leader alone is a majority.
-            self.advance_commit_from_matches(&mut actions);
-        }
-        match self.cfg.variant {
-            Variant::Raft => {
-                if self.cfg.raft_coalesce_us == 0 {
-                    self.broadcast_append(now, &mut actions);
-                } else if self.coalesce_deadline.is_none() {
-                    self.coalesce_deadline = Some(now + self.cfg.raft_coalesce_us);
-                }
-            }
-            Variant::V1 | Variant::V2 => {
-                // Pull an idle-scheduled round in so fresh entries don't wait
-                // out the long heartbeat interval.
-                let active_at = now + self.cfg.round_interval_us;
-                if self.next_round_at > active_at {
-                    self.next_round_at = active_at;
-                }
-            }
-        }
+        self.with_strategy(|s, node| s.on_client_request(node, now, &mut actions));
         actions
     }
 
@@ -294,8 +301,43 @@ impl Node {
             self.step_down(now, msg.term(), &mut actions);
         }
         match msg {
-            Message::AppendEntries(args) => self.on_append_entries(now, args, &mut actions),
-            Message::AppendEntriesReply(r) => self.on_append_reply(now, r, &mut actions),
+            Message::AppendEntries(args) => {
+                if args.term < self.current_term {
+                    if args.leader == self.id {
+                        // Our own round from a term we led, relayed back
+                        // after we stepped down — drop (never reply to
+                        // ourselves).
+                        return actions;
+                    }
+                    // Stale leader: tell it about the newer term.
+                    let reply = super::message::AppendEntriesReply {
+                        term: self.current_term,
+                        from: self.id,
+                        success: false,
+                        match_hint: self.log.last_index(),
+                        round: args.gossip.as_ref().map(|g| g.round),
+                        epidemic: None,
+                        seq: args.seq,
+                    };
+                    self.counters.replies_sent += 1;
+                    self.send(args.leader, Message::AppendEntriesReply(reply), &mut actions);
+                    return actions;
+                }
+                debug_assert_eq!(args.term, self.current_term);
+                // Equal-term candidate learns there is an established leader.
+                if self.role == Role::Candidate {
+                    self.role = Role::Follower;
+                    self.votes.clear();
+                    actions.push(Action::RoleChanged {
+                        role: Role::Follower,
+                        term: self.current_term,
+                    });
+                }
+                self.with_strategy(|s, node| s.on_append_entries(node, now, args, &mut actions));
+            }
+            Message::AppendEntriesReply(r) => {
+                self.with_strategy(|s, node| s.on_append_reply(node, now, r, &mut actions));
+            }
             Message::RequestVote(args) => self.on_request_vote(now, args, &mut actions),
             Message::RequestVoteReply(r) => self.on_vote_reply(now, r, &mut actions),
         }
@@ -307,26 +349,7 @@ impl Node {
         let mut actions = Vec::new();
         match self.role {
             Role::Leader => {
-                if let Some(dl) = self.coalesce_deadline {
-                    if now >= dl {
-                        self.coalesce_deadline = None;
-                        self.broadcast_append(now, &mut actions);
-                    }
-                }
-                match self.cfg.variant {
-                    Variant::Raft => {
-                        if now >= self.next_round_at {
-                            // Heartbeat / retransmit broadcast.
-                            self.broadcast_append(now, &mut actions);
-                        }
-                    }
-                    Variant::V1 | Variant::V2 => {
-                        if now >= self.next_round_at {
-                            self.start_gossip_round(now, &mut actions);
-                        }
-                        self.retransmit_repairs(now, &mut actions);
-                    }
-                }
+                self.with_strategy(|s, node| s.on_leader_tick(node, now, &mut actions));
             }
             Role::Follower | Role::Candidate => {
                 if now >= self.election_deadline {
@@ -340,20 +363,7 @@ impl Node {
     /// Earliest time at which `tick` has work to do.
     pub fn next_deadline(&self) -> Time {
         match self.role {
-            Role::Leader => {
-                let mut dl = self.next_round_at;
-                if let Some(c) = self.coalesce_deadline {
-                    dl = dl.min(c);
-                }
-                if self.cfg.variant.is_gossip() {
-                    for f in self.followers.iter() {
-                        if f.repairing {
-                            dl = dl.min(f.last_rpc_at + self.cfg.rpc_timeout_us);
-                        }
-                    }
-                }
-                dl
-            }
+            Role::Leader => self.strategy().leader_deadline(self),
             _ => self.election_deadline,
         }
     }
@@ -374,14 +384,10 @@ impl Node {
         self.role = Role::Follower;
         self.votes.clear();
         self.leader_hint = None;
-        self.coalesce_deadline = None;
-        self.next_round_at = Time::MAX;
-        self.commit_history.clear();
         self.election_deadline = self.random_election_deadline(now);
-        // §3.2: reset the vote structures on discovering a new term.
-        if self.cfg.variant.has_epidemic_commit() {
-            self.epi.reset_for_new_term();
-        }
+        // Strategy-side per-term state: round schedule, commit history,
+        // §3.2 vote structures.
+        self.strategy.as_mut().expect("strategy attached").on_term_change();
         // Dangling client requests will never commit under our leadership.
         let reqs: Vec<RequestId> = self.pending.values().copied().collect();
         self.pending.clear();
@@ -417,16 +423,6 @@ impl Node {
         }
     }
 
-    /// V2: run `Update` and apply the follower commit rule.
-    pub(crate) fn run_epidemic_update(&mut self, _now: Time, actions: &mut Vec<Action>) {
-        debug_assert!(self.cfg.variant.has_epidemic_commit());
-        self.epi.update(self.id, self.majority(), self.log_view());
-        let bound = self.epi.commit_bound(self.log_view());
-        if bound > self.commit_index {
-            self.advance_commit(bound, actions);
-        }
-    }
-
     pub(crate) fn send(&mut self, to: NodeId, msg: Message, actions: &mut Vec<Action>) {
         debug_assert_ne!(to, self.id, "node must not message itself");
         self.counters.msgs_sent += 1;
@@ -438,6 +434,7 @@ impl Node {
 mod tests {
     use super::*;
     use crate::config::ProtocolConfig;
+    use crate::raft::types::Variant;
 
     fn cfg(n: usize, variant: Variant) -> ProtocolConfig {
         ProtocolConfig::for_variant(n, variant)
@@ -456,6 +453,15 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn id_out_of_range_panics() {
         Node::new(5, cfg(3, Variant::Raft), 1);
+    }
+
+    #[test]
+    fn strategy_matches_variant() {
+        for variant in Variant::ALL {
+            let node = Node::new(0, cfg(3, variant), 1);
+            assert_eq!(node.strategy_name(), variant.name());
+            assert_eq!(node.epidemic().is_some(), variant == Variant::V2);
+        }
     }
 
     #[test]
@@ -522,10 +528,11 @@ mod tests {
         let mut node = Node::new(0, cfg(5, Variant::V2), 1);
         node.bootstrap_leader(0);
         node.client_request(1, 1, Command::Noop);
-        assert!(node.epidemic().bitmap.get(0), "leader votes for its entry");
+        assert!(node.epidemic().unwrap().bitmap.get(0), "leader votes for its entry");
         let mut actions = Vec::new();
         node.step_down(2, 9, &mut actions);
-        assert_eq!(node.epidemic().bitmap.count(), 0);
-        assert_eq!(node.epidemic().next_commit, node.epidemic().max_commit + 1);
+        let epi = node.epidemic().unwrap();
+        assert_eq!(epi.bitmap.count(), 0);
+        assert_eq!(epi.next_commit, epi.max_commit + 1);
     }
 }

@@ -1,35 +1,17 @@
-//! Log replication: the original Raft path (per-request broadcast
-//! AppendEntries RPCs, leader-driven commit) and the paper's epidemic path
-//! (§3.1 gossip rounds + §3.2 decentralised commit), sharing the repair
-//! machinery (per-follower classic RPC catch-up).
+//! Variant-independent replication machinery shared by every
+//! [`ReplicationStrategy`](super::strategy::ReplicationStrategy):
+//! the classic AppendEntries RPC sender, the follower-side log reconcile,
+//! the per-follower repair bookkeeping, and the classic majority-match
+//! commit rule. The variant-specific paths (per-request broadcast, §3.1
+//! gossip rounds, §3.2 decentralised commit) live in `super::strategy`.
 
-use super::message::{AppendEntriesArgs, AppendEntriesReply, GossipMeta, Message};
+use super::message::{AppendEntriesArgs, AppendEntriesReply, Message};
 use super::node::{Action, Node};
-use super::types::{LogIndex, NodeId, Role, Time, Variant};
-use std::sync::Arc;
+use super::types::{LogIndex, NodeId, Time};
 
 impl Node {
-    // =======================================================================
-    // Leader side
-    // =======================================================================
-
-    /// Original Raft: broadcast AppendEntries to every follower with the
-    /// entries it still misses (also the heartbeat/retransmit path).
-    pub(crate) fn broadcast_append(&mut self, now: Time, actions: &mut Vec<Action>) {
-        debug_assert_eq!(self.role, Role::Leader);
-        let last = self.log.last_index();
-        for peer in 0..self.n() {
-            if peer == self.id {
-                continue;
-            }
-            self.send_entries_rpc(now, peer, last, actions);
-        }
-        // Broadcast doubles as heartbeat.
-        self.next_round_at = now + self.cfg.heartbeat_interval_us;
-    }
-
     /// Send a classic AppendEntries RPC to `peer` covering up to `last`.
-    fn send_entries_rpc(
+    pub(crate) fn send_entries_rpc(
         &mut self,
         now: Time,
         peer: NodeId,
@@ -57,67 +39,9 @@ impl Node {
         self.send(peer, Message::AppendEntries(args), actions);
     }
 
-    /// §3.1 — start one epidemic round: stamp `RoundLC`, batch the entries
-    /// not yet committed, send to the next `F` permutation targets.
-    pub(crate) fn start_gossip_round(&mut self, now: Time, actions: &mut Vec<Action>) {
-        debug_assert_eq!(self.role, Role::Leader);
-        debug_assert!(self.cfg.variant.is_gossip());
-        let round = self.round_clock.start_round(self.current_term);
-        self.counters.rounds_started += 1;
-        // Batch base: the commit index as of ~3 rounds ago. Using the
-        // *current* commit index would make any follower that missed a
-        // single round log-mismatch the next one (commit races past its
-        // log end under load) and fall into per-follower RPC repair — a
-        // repair storm that collapses throughput. The margin re-sends a
-        // few already-committed entries per round instead (idempotent
-        // reconcile); EXPERIMENTS.md §Perf quantifies the trade.
-        let base = self
-            .commit_history
-            .front()
-            .copied()
-            .unwrap_or(0)
-            .min(self.commit_index);
-        self.commit_history.push_back(self.commit_index);
-        if self.commit_history.len() > 3 {
-            self.commit_history.pop_front();
-        }
-        let last = self.log.last_index();
-        let hi = last.min(base + self.cfg.max_entries_per_rpc as LogIndex);
-        let entries = self.log.slice(base, hi);
-        let prev_term = self.log.term_at(base).expect("commit index within log");
-        let epidemic = if self.cfg.variant.has_epidemic_commit() {
-            Some(self.epi.clone())
-        } else {
-            None
-        };
-        let targets = self.perm.next_round(self.cfg.fanout);
-        for to in targets {
-            let args = AppendEntriesArgs {
-                term: self.current_term,
-                leader: self.id,
-                prev_log_index: base,
-                prev_log_term: prev_term,
-                entries: Arc::clone(&entries),
-                leader_commit: self.commit_index,
-                gossip: Some(GossipMeta { round, hops: 0, epidemic: epidemic.clone() }),
-                seq: 0,
-            };
-            self.counters.gossip_sent += 1;
-            self.send(to, Message::AppendEntries(args), actions);
-        }
-        // Next round: fast cadence while entries are uncommitted, slow
-        // heartbeat cadence when idle (§3.1: "um intervalo de tempo maior").
-        let interval = if self.log.last_index() > self.commit_index {
-            self.cfg.round_interval_us
-        } else {
-            self.cfg.idle_round_interval_us
-        };
-        self.next_round_at = now + interval;
-    }
-
-    /// Gossip variants: resend repair RPCs that timed out.
+    /// Resend repair RPCs that timed out (strategies with out-of-band
+    /// repair call this from their leader tick).
     pub(crate) fn retransmit_repairs(&mut self, now: Time, actions: &mut Vec<Action>) {
-        debug_assert_eq!(self.role, Role::Leader);
         let last = self.log.last_index();
         for peer in 0..self.n() {
             if peer == self.id || !self.followers[peer].repairing {
@@ -130,26 +54,28 @@ impl Node {
         }
     }
 
-    /// A reply to AppendEntries (RPC or first-receipt gossip response).
-    pub(crate) fn on_append_reply(
+    /// Follower-side AppendEntries processing: log-matching check plus
+    /// reconcile. Returns `(success, match_hint)` exactly as the reply
+    /// should carry them.
+    pub(crate) fn apply_append_entries(&mut self, args: &AppendEntriesArgs) -> (bool, LogIndex) {
+        if self.log.matches(args.prev_log_index, args.prev_log_term) {
+            let covered = self.log.reconcile(args.prev_log_index, &args.entries);
+            self.counters.entries_appended += args.entries.len() as u64;
+            (true, covered)
+        } else {
+            (false, self.log.last_index())
+        }
+    }
+
+    /// Leader-side reply bookkeeping shared by all strategies: advance the
+    /// follower slot on success (feeding the catch-up pipeline while it is
+    /// repairing), or jump `next_index` back and enter repair on failure.
+    pub(crate) fn update_follower_on_reply(
         &mut self,
         now: Time,
-        reply: AppendEntriesReply,
+        reply: &AppendEntriesReply,
         actions: &mut Vec<Action>,
     ) {
-        if self.role != Role::Leader || reply.term < self.current_term {
-            return; // stale
-        }
-        debug_assert_eq!(reply.term, self.current_term);
-        // V2: responder's structures ride back on every reply.
-        if let Some(epi) = &reply.epidemic {
-            if self.cfg.variant.has_epidemic_commit() {
-                self.counters.merges += 1;
-                self.epi.merge(epi);
-                self.epi.maybe_set_own_bit(self.id, self.log_view());
-                self.run_epidemic_update(now, actions);
-            }
-        }
         let last = self.log.last_index();
         let slot = &mut self.followers[reply.from];
         if reply.success {
@@ -164,7 +90,6 @@ impl Node {
                     self.send_entries_rpc(now, reply.from, last, actions);
                 }
             }
-            self.advance_commit_from_matches(actions);
         } else {
             // Log mismatch at the follower: jump next_index back to its
             // hint and repair via classic RPCs.
@@ -176,254 +101,28 @@ impl Node {
         }
     }
 
-    /// Classic Raft commit rule: the majority-replicated index, committable
-    /// only when its entry is from the current term (§5.4.2).
-    pub(crate) fn advance_commit_from_matches(&mut self, actions: &mut Vec<Action>) {
-        debug_assert_eq!(self.role, Role::Leader);
+    /// Classic Raft commit rule (§5.4.2): the majority-replicated index,
+    /// committable only when its entry is from the current term. Returns
+    /// the new commit candidate, if any (does not commit — the strategy
+    /// decides what else the evidence feeds).
+    pub(crate) fn classic_commit_candidate(&self) -> Option<LogIndex> {
+        debug_assert_eq!(self.role, super::types::Role::Leader);
         let mut matches: Vec<LogIndex> = (0..self.n())
-            .map(|i| if i == self.id { self.log.last_index() } else { self.followers[i].match_index })
+            .map(|i| {
+                if i == self.id {
+                    self.log.last_index()
+                } else {
+                    self.followers[i].match_index
+                }
+            })
             .collect();
         matches.sort_unstable_by(|a, b| b.cmp(a));
         let candidate = matches[self.majority() - 1];
-        if candidate > self.commit_index
-            && self.log.term_at(candidate) == Some(self.current_term)
+        if candidate > self.commit_index && self.log.term_at(candidate) == Some(self.current_term)
         {
-            // V2: the classic rule is also evidence for the epidemic state —
-            // keep max_commit consistent so gossip carries it outward.
-            if self.cfg.variant.has_epidemic_commit() && candidate > self.epi.max_commit {
-                if self.epi.next_commit <= candidate {
-                    self.epi.bitmap.clear();
-                    self.epi.next_commit = candidate + 1;
-                    self.epi.maybe_set_own_bit(self.id, self.log_view());
-                }
-                self.epi.max_commit = candidate;
-            }
-            self.advance_commit(candidate, actions);
-        }
-    }
-
-    // =======================================================================
-    // Follower side
-    // =======================================================================
-
-    /// Incoming AppendEntries — both the classic RPC (`gossip == None`) and
-    /// the epidemic round message.
-    pub(crate) fn on_append_entries(
-        &mut self,
-        now: Time,
-        args: AppendEntriesArgs,
-        actions: &mut Vec<Action>,
-    ) {
-        if args.term < self.current_term {
-            if args.leader == self.id {
-                // Our own round from a term we led, relayed back after we
-                // stepped down — drop (never reply to ourselves).
-                return;
-            }
-            // Stale leader: tell it about the newer term.
-            let reply = AppendEntriesReply {
-                term: self.current_term,
-                from: self.id,
-                success: false,
-                match_hint: self.log.last_index(),
-                round: args.gossip.as_ref().map(|g| g.round),
-                epidemic: None,
-                seq: args.seq,
-            };
-            self.counters.replies_sent += 1;
-            self.send(args.leader, Message::AppendEntriesReply(reply), actions);
-            return;
-        }
-        debug_assert_eq!(args.term, self.current_term);
-        // Equal-term candidate learns there is an established leader.
-        if self.role == Role::Candidate {
-            self.role = Role::Follower;
-            self.votes.clear();
-            actions.push(Action::RoleChanged { role: Role::Follower, term: self.current_term });
-        }
-        if self.role == Role::Leader {
-            // Only possible for our own relayed round coming back (we are
-            // the leader of this term). Merge the piggybacked structures —
-            // this is exactly how the leader learns remote votes in V2.
-            if let Some(g) = &args.gossip {
-                if let Some(epi) = &g.epidemic {
-                    if self.cfg.variant.has_epidemic_commit() {
-                        self.counters.merges += 1;
-                        self.epi.merge(epi);
-                        self.epi.maybe_set_own_bit(self.id, self.log_view());
-                        self.run_epidemic_update(now, actions);
-                    }
-                }
-            }
-            return;
-        }
-        self.leader_hint = Some(args.leader);
-
-        match args.gossip.clone() {
-            None => self.on_classic_append(now, args, actions),
-            Some(meta) => self.on_gossip_append(now, args, meta, actions),
-        }
-    }
-
-    /// Classic AppendEntries RPC (original Raft; repair path for V1/V2).
-    fn on_classic_append(
-        &mut self,
-        now: Time,
-        args: AppendEntriesArgs,
-        actions: &mut Vec<Action>,
-    ) {
-        // Any valid leader message resets the election timer.
-        self.election_deadline = self.random_election_deadline(now);
-        let (success, match_hint) = if self.log.matches(args.prev_log_index, args.prev_log_term)
-        {
-            let covered = self.log.reconcile(args.prev_log_index, &args.entries);
-            self.counters.entries_appended += args.entries.len() as u64;
-            (true, covered)
-        } else {
-            (false, self.log.last_index())
-        };
-        if success {
-            if self.cfg.variant.has_epidemic_commit() {
-                self.epi.maybe_set_own_bit(self.id, self.log_view());
-                self.run_epidemic_update(now, actions);
-            }
-            let bound = args.leader_commit.min(match_hint);
-            if bound > self.commit_index {
-                self.advance_commit(bound, actions);
-            }
-        }
-        let epidemic = if self.cfg.variant.has_epidemic_commit() {
-            Some(self.epi.clone())
+            Some(candidate)
         } else {
             None
-        };
-        let reply = AppendEntriesReply {
-            term: self.current_term,
-            from: self.id,
-            success,
-            match_hint,
-            round: None,
-            epidemic,
-            seq: args.seq,
-        };
-        self.counters.replies_sent += 1;
-        self.send(args.leader, Message::AppendEntriesReply(reply), actions);
-    }
-
-    /// §3.1 — gossiped AppendEntries: RoundLC filtering, first-receipt
-    /// response, epidemic relay; §3.2 — Merge/Update on every receipt.
-    fn on_gossip_append(
-        &mut self,
-        now: Time,
-        args: AppendEntriesArgs,
-        meta: GossipMeta,
-        actions: &mut Vec<Action>,
-    ) {
-        use crate::epidemic::RoundClass;
-        // V2: fold the carried structures on *every* receipt — duplicates
-        // still carry fresher relayer state ("atualizadas e partilhadas ...
-        // nos pedidos AppendEntries").
-        if let Some(epi) = &meta.epidemic {
-            if self.cfg.variant.has_epidemic_commit() {
-                self.counters.merges += 1;
-                self.epi.merge(epi);
-                self.epi.maybe_set_own_bit(self.id, self.log_view());
-                self.run_epidemic_update(now, actions);
-            }
-        }
-        match self.round_clock.observe(self.current_term, meta.round) {
-            RoundClass::Duplicate => {
-                self.counters.gossip_recv_dup += 1;
-                // Already processed this round: drop (no response, no relay).
-            }
-            RoundClass::Fresh => {
-                self.counters.gossip_recv_fresh += 1;
-                // A fresh round is a heartbeat (§3.1).
-                self.election_deadline = self.random_election_deadline(now);
-
-                let (success, match_hint) =
-                    if self.log.matches(args.prev_log_index, args.prev_log_term) {
-                        let covered = self.log.reconcile(args.prev_log_index, &args.entries);
-                        self.counters.entries_appended += args.entries.len() as u64;
-                        (true, covered)
-                    } else {
-                        (false, self.log.last_index())
-                    };
-
-                if success {
-                    if self.cfg.variant.has_epidemic_commit() {
-                        self.epi.maybe_set_own_bit(self.id, self.log_view());
-                        self.run_epidemic_update(now, actions);
-                    }
-                    // Leader-driven commit bound still applies (V1 relies on
-                    // it exclusively; for V2 it can only help).
-                    let bound = args.leader_commit.min(match_hint);
-                    if bound > self.commit_index {
-                        self.advance_commit(bound, actions);
-                    }
-                }
-
-                // First-receipt response policy (DESIGN.md §4.3): V1 always;
-                // V2 only on failure (repair trigger) unless the ablation
-                // flag re-enables success responses.
-                let respond = match self.cfg.variant {
-                    Variant::V1 => true,
-                    Variant::V2 => !success || self.cfg.v2_success_responses,
-                    Variant::Raft => unreachable!("gossip message under Raft variant"),
-                };
-                if respond {
-                    let epidemic = if self.cfg.variant.has_epidemic_commit() {
-                        Some(self.epi.clone())
-                    } else {
-                        None
-                    };
-                    let reply = AppendEntriesReply {
-                        term: self.current_term,
-                        from: self.id,
-                        success,
-                        match_hint,
-                        round: Some(meta.round),
-                        epidemic,
-                        seq: args.seq,
-                    };
-                    self.counters.replies_sent += 1;
-                    self.send(args.leader, Message::AppendEntriesReply(reply), actions);
-                }
-
-                // Epidemic relay (Algorithm 1): forward the same round to F
-                // targets of *our* permutation, with our (merged) structures.
-                let epidemic = if self.cfg.variant.has_epidemic_commit() {
-                    Some(self.epi.clone())
-                } else {
-                    None
-                };
-                let targets = self.perm.next_round(self.cfg.fanout);
-                for to in targets {
-                    if to == args.leader && meta.hops > 0 {
-                        // The message originated there; relaying it back is
-                        // only useful in V2 (structures) — skip in V1.
-                        if !self.cfg.variant.has_epidemic_commit() {
-                            continue;
-                        }
-                    }
-                    let fwd = AppendEntriesArgs {
-                        term: args.term,
-                        leader: args.leader,
-                        prev_log_index: args.prev_log_index,
-                        prev_log_term: args.prev_log_term,
-                        entries: Arc::clone(&args.entries),
-                        leader_commit: args.leader_commit,
-                        gossip: Some(GossipMeta {
-                            round: meta.round,
-                            hops: meta.hops + 1,
-                            epidemic: epidemic.clone(),
-                        }),
-                        seq: 0,
-                    };
-                    self.counters.gossip_sent += 1;
-                    self.send(to, Message::AppendEntries(fwd), actions);
-                }
-            }
         }
     }
 }
@@ -621,15 +320,16 @@ mod tests {
             leader.client_request(10 + i, i, Command::Noop);
         }
         leader.commit_index = 3; // simulate majority elsewhere
-        // Warm the commit-history window so the round's batch base reaches
-        // the committed prefix (3 rounds of margin — see start_gossip_round).
+        // Warm the commit-history window by firing four gossip rounds via
+        // the leader tick, so the round's batch base reaches the committed
+        // prefix (3 rounds of margin — see GossipStrategy::start_round).
         let mut acts = Vec::new();
-        for t in 0..4 {
-            acts.clear();
-            leader.start_gossip_round(100 + t, &mut acts);
+        for _ in 0..4 {
+            let dl = leader.next_deadline();
+            acts = leader.tick(dl);
         }
         let (_, g) = sends(&acts).into_iter().find(|(_, m)| m.is_gossip()).unwrap();
-        let out = f.on_message(200, g);
+        let out = f.on_message(200_000, g);
         let replies: Vec<_> = sends(&out)
             .into_iter()
             .filter(|(to, m)| *to == 0 && matches!(m, Message::AppendEntriesReply(_)))
@@ -680,7 +380,7 @@ mod tests {
 
     #[test]
     fn gossip_under_raft_variant_never_happens() {
-        // broadcast_append never sets gossip meta.
+        // The classic broadcast never sets gossip meta.
         let mut leader = Node::new(0, cfg(5, Variant::Raft), 1);
         let actions = leader.bootstrap_leader(0);
         assert!(sends(&actions).iter().all(|(_, m)| !m.is_gossip()));
@@ -773,8 +473,11 @@ mod tests {
         leader.become_leader(0, &mut acts);
         leader.followers[1].match_index = 1;
         leader.followers[2].match_index = 1;
-        let mut acts = Vec::new();
-        leader.advance_commit_from_matches(&mut acts);
-        assert_eq!(leader.commit_index(), 0, "term-1 entry not directly committable at term 2");
+        assert_eq!(
+            leader.classic_commit_candidate(),
+            None,
+            "term-1 entry not directly committable at term 2"
+        );
+        assert_eq!(leader.commit_index(), 0);
     }
 }

@@ -1,0 +1,165 @@
+//! Original Raft replication (as implemented in Paxi): per-request
+//! broadcast AppendEntries RPCs, leader-driven commit, heartbeat
+//! retransmits, plus the optional coalescing-window ablation
+//! (`protocol.raft_coalesce_us`).
+
+use super::super::message::{AppendEntriesArgs, AppendEntriesReply, Message};
+use super::super::node::{Action, Counters, Node};
+use super::super::types::{Role, Time};
+use super::ReplicationStrategy;
+
+/// Classic leader-broadcast replication.
+pub struct ClassicStrategy {
+    /// Pending coalescing-window deadline (ablation; `None` = no batch open).
+    coalesce_deadline: Option<Time>,
+    /// Next heartbeat/retransmit broadcast.
+    next_heartbeat_at: Time,
+}
+
+impl ClassicStrategy {
+    pub fn new() -> Self {
+        Self { coalesce_deadline: None, next_heartbeat_at: Time::MAX }
+    }
+
+    /// Broadcast AppendEntries to every follower with the entries it still
+    /// misses (also the heartbeat/retransmit path).
+    fn broadcast(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        debug_assert_eq!(node.role, Role::Leader);
+        let last = node.log.last_index();
+        let n = node.n();
+        for peer in 0..n {
+            if peer == node.id {
+                continue;
+            }
+            node.send_entries_rpc(now, peer, last, actions);
+        }
+        // Broadcast doubles as heartbeat.
+        self.next_heartbeat_at = now + node.cfg.heartbeat_interval_us;
+    }
+
+    /// Classic Raft commit rule (§5.4.2): commit the majority-replicated
+    /// index when its entry is from the current term.
+    fn advance(&mut self, node: &mut Node, actions: &mut Vec<Action>) {
+        if let Some(candidate) = node.classic_commit_candidate() {
+            node.advance_commit(candidate, actions);
+        }
+    }
+}
+
+impl Default for ClassicStrategy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReplicationStrategy for ClassicStrategy {
+    fn name(&self) -> &'static str {
+        "raft"
+    }
+
+    fn on_become_leader(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        self.coalesce_deadline = None;
+        if node.n() == 1 {
+            // Trivial cluster: the leader alone is a majority.
+            self.advance(node, actions);
+        }
+        self.broadcast(node, now, actions);
+    }
+
+    fn on_client_request(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        if node.n() == 1 {
+            self.advance(node, actions);
+        }
+        if node.cfg.raft_coalesce_us == 0 {
+            self.broadcast(node, now, actions);
+        } else if self.coalesce_deadline.is_none() {
+            self.coalesce_deadline = Some(now + node.cfg.raft_coalesce_us);
+        }
+    }
+
+    fn on_leader_tick(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        if let Some(dl) = self.coalesce_deadline {
+            if now >= dl {
+                self.coalesce_deadline = None;
+                self.broadcast(node, now, actions);
+            }
+        }
+        if now >= self.next_heartbeat_at {
+            // Heartbeat / retransmit broadcast.
+            self.broadcast(node, now, actions);
+        }
+    }
+
+    fn leader_deadline(&self, _node: &Node) -> Time {
+        let mut dl = self.next_heartbeat_at;
+        if let Some(c) = self.coalesce_deadline {
+            dl = dl.min(c);
+        }
+        dl
+    }
+
+    fn on_append_entries(
+        &mut self,
+        node: &mut Node,
+        now: Time,
+        args: AppendEntriesArgs,
+        actions: &mut Vec<Action>,
+    ) {
+        if node.role == Role::Leader {
+            // Equal-term message back at the leader: only possible for a
+            // relayed copy of our own traffic — classic never relays; drop.
+            return;
+        }
+        node.leader_hint = Some(args.leader);
+        // Any valid leader message resets the election timer.
+        node.election_deadline = node.random_election_deadline(now);
+        let (success, match_hint) = node.apply_append_entries(&args);
+        if success {
+            let bound = args.leader_commit.min(match_hint);
+            if bound > node.commit_index {
+                node.advance_commit(bound, actions);
+            }
+        }
+        let reply = AppendEntriesReply {
+            term: node.current_term,
+            from: node.id,
+            success,
+            match_hint,
+            round: None,
+            epidemic: None,
+            seq: args.seq,
+        };
+        node.counters.replies_sent += 1;
+        node.send(args.leader, Message::AppendEntriesReply(reply), actions);
+    }
+
+    fn on_append_reply(
+        &mut self,
+        node: &mut Node,
+        now: Time,
+        reply: AppendEntriesReply,
+        actions: &mut Vec<Action>,
+    ) {
+        if node.role != Role::Leader || reply.term < node.current_term {
+            return; // stale
+        }
+        debug_assert_eq!(reply.term, node.current_term);
+        node.update_follower_on_reply(now, &reply, actions);
+        if reply.success {
+            self.advance(node, actions);
+        }
+    }
+
+    fn on_term_change(&mut self) {
+        self.coalesce_deadline = None;
+        self.next_heartbeat_at = Time::MAX;
+    }
+
+    fn counters(&self, c: &Counters) -> Vec<(&'static str, u64)> {
+        vec![
+            ("rpcs_sent", c.rpcs_sent),
+            ("replies_sent", c.replies_sent),
+            ("repair_rpcs", c.repair_rpcs),
+        ]
+    }
+}

@@ -1,0 +1,408 @@
+//! Epidemic replication — the paper's two extensions on one chassis.
+//!
+//! [`GossipStrategy::v1`] is §3.1: AppendEntries disseminated in periodic
+//! gossip rounds over the peer permutation, `RoundLC` duplicate filtering,
+//! first-receipt responses, classic-RPC repair fallback. Commit remains
+//! leader-driven.
+//!
+//! [`GossipStrategy::v2`] adds §3.2: the strategy owns the node's
+//! [`EpidemicState`] (`Bitmap` / `MaxCommit` / `NextCommit`), folds received
+//! structures with `Merge`, advances them with `Update`, and lets every
+//! replica commit decentralised — success responses to the leader are
+//! suppressed (DESIGN.md §4.3) unless `protocol.v2_success_responses`
+//! re-enables them.
+
+use super::super::message::{AppendEntriesArgs, AppendEntriesReply, GossipMeta, Message};
+use super::super::node::{Action, Counters, Node};
+use super::super::types::{LogIndex, Role, Time};
+use super::ReplicationStrategy;
+use crate::epidemic::{EpidemicState, RoundClass, RoundClock};
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Epidemic dissemination; decentralised commit when `epi` is present.
+pub struct GossipStrategy {
+    name: &'static str,
+    /// §3.2 commit structures — `Some` for V2, `None` for V1.
+    epi: Option<EpidemicState>,
+    /// §3.1 round logical clock (leader stamps, receivers filter).
+    round_clock: RoundClock,
+    /// Next gossip round (leader only; `Time::MAX` when not leading).
+    next_round_at: Time,
+    /// Commit-index snapshots of the last few rounds. Gossip batches start
+    /// at the *oldest* snapshot, not the current commit index, so a
+    /// follower that misses a round or two still log-matches the next one
+    /// instead of falling into RPC repair (see `start_round`).
+    commit_history: VecDeque<LogIndex>,
+}
+
+impl GossipStrategy {
+    /// V1 — epidemic AppendEntries, leader-driven commit (§3.1).
+    pub fn v1() -> Self {
+        Self {
+            name: "v1",
+            epi: None,
+            round_clock: RoundClock::new(),
+            next_round_at: Time::MAX,
+            commit_history: VecDeque::with_capacity(4),
+        }
+    }
+
+    /// V2 — V1 plus decentralised commit over `n` processes (§3.2).
+    pub fn v2(n: usize) -> Self {
+        Self { epi: Some(EpidemicState::new(n)), name: "v2", ..Self::v1() }
+    }
+
+    /// §3.2 `Update` + follower commit rule, after any structure change.
+    fn run_update(epi: &mut EpidemicState, node: &mut Node, actions: &mut Vec<Action>) {
+        epi.update(node.id, node.majority(), node.log_view());
+        let bound = epi.commit_bound(node.log_view());
+        if bound > node.commit_index {
+            node.advance_commit(bound, actions);
+        }
+    }
+
+    /// The local log grew: vote for the entry under ballot (V2 only).
+    fn local_append_update(&mut self, node: &mut Node, actions: &mut Vec<Action>) {
+        if let Some(epi) = self.epi.as_mut() {
+            epi.maybe_set_own_bit(node.id, node.log_view());
+            Self::run_update(epi, node, actions);
+        }
+    }
+
+    /// §3.2 `Merge` of a received structure triple, then `Update` (V2 only).
+    fn merge_and_update(
+        &mut self,
+        node: &mut Node,
+        other: &EpidemicState,
+        actions: &mut Vec<Action>,
+    ) {
+        if let Some(epi) = self.epi.as_mut() {
+            node.counters.merges += 1;
+            epi.merge(other);
+            epi.maybe_set_own_bit(node.id, node.log_view());
+            Self::run_update(epi, node, actions);
+        }
+    }
+
+    /// Classic majority-match commit rule at the leader. For V2 the classic
+    /// evidence also feeds the epidemic state — `max_commit` is kept
+    /// consistent so gossip carries it outward.
+    fn classic_advance(&mut self, node: &mut Node, actions: &mut Vec<Action>) {
+        let Some(candidate) = node.classic_commit_candidate() else { return };
+        if let Some(epi) = self.epi.as_mut() {
+            if candidate > epi.max_commit {
+                if epi.next_commit <= candidate {
+                    epi.bitmap.clear();
+                    epi.next_commit = candidate + 1;
+                    epi.maybe_set_own_bit(node.id, node.log_view());
+                }
+                epi.max_commit = candidate;
+            }
+        }
+        node.advance_commit(candidate, actions);
+    }
+
+    /// §3.1 — start one epidemic round: stamp `RoundLC`, batch the entries
+    /// not yet committed, send to the next `F` permutation targets.
+    fn start_round(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        debug_assert_eq!(node.role, Role::Leader);
+        let round = self.round_clock.start_round(node.current_term);
+        node.counters.rounds_started += 1;
+        // Batch base: the commit index as of ~3 rounds ago. Using the
+        // *current* commit index would make any follower that missed a
+        // single round log-mismatch the next one (commit races past its
+        // log end under load) and fall into per-follower RPC repair — a
+        // repair storm that collapses throughput. The margin re-sends a
+        // few already-committed entries per round instead (idempotent
+        // reconcile); EXPERIMENTS.md §Perf quantifies the trade.
+        let base = self
+            .commit_history
+            .front()
+            .copied()
+            .unwrap_or(0)
+            .min(node.commit_index);
+        self.commit_history.push_back(node.commit_index);
+        if self.commit_history.len() > 3 {
+            self.commit_history.pop_front();
+        }
+        let last = node.log.last_index();
+        let hi = last.min(base + node.cfg.max_entries_per_rpc as LogIndex);
+        let entries = node.log.slice(base, hi);
+        let prev_term = node.log.term_at(base).expect("commit index within log");
+        let epidemic = self.epi.clone();
+        let fanout = node.cfg.fanout;
+        let targets = node.perm.next_round(fanout);
+        for to in targets {
+            let args = AppendEntriesArgs {
+                term: node.current_term,
+                leader: node.id,
+                prev_log_index: base,
+                prev_log_term: prev_term,
+                entries: Arc::clone(&entries),
+                leader_commit: node.commit_index,
+                gossip: Some(GossipMeta { round, hops: 0, epidemic: epidemic.clone() }),
+                seq: 0,
+            };
+            node.counters.gossip_sent += 1;
+            node.send(to, Message::AppendEntries(args), actions);
+        }
+        // Next round: fast cadence while entries are uncommitted, slow
+        // heartbeat cadence when idle (§3.1: "um intervalo de tempo maior").
+        let interval = if node.log.last_index() > node.commit_index {
+            node.cfg.round_interval_us
+        } else {
+            node.cfg.idle_round_interval_us
+        };
+        self.next_round_at = now + interval;
+    }
+
+    /// Classic AppendEntries RPC at a gossip follower — the repair path.
+    fn on_classic_append(
+        &mut self,
+        node: &mut Node,
+        now: Time,
+        args: AppendEntriesArgs,
+        actions: &mut Vec<Action>,
+    ) {
+        // Any valid leader message resets the election timer.
+        node.election_deadline = node.random_election_deadline(now);
+        let (success, match_hint) = node.apply_append_entries(&args);
+        if success {
+            self.local_append_update(node, actions);
+            // Leader-driven commit bound (V1 relies on it exclusively; for
+            // V2 it can only help).
+            let bound = args.leader_commit.min(match_hint);
+            if bound > node.commit_index {
+                node.advance_commit(bound, actions);
+            }
+        }
+        let reply = AppendEntriesReply {
+            term: node.current_term,
+            from: node.id,
+            success,
+            match_hint,
+            round: None,
+            epidemic: self.epi.clone(),
+            seq: args.seq,
+        };
+        node.counters.replies_sent += 1;
+        node.send(args.leader, Message::AppendEntriesReply(reply), actions);
+    }
+
+    /// §3.1 — gossiped AppendEntries: RoundLC filtering, first-receipt
+    /// response, epidemic relay; §3.2 — Merge/Update on every receipt.
+    fn on_gossip_append(
+        &mut self,
+        node: &mut Node,
+        now: Time,
+        args: AppendEntriesArgs,
+        meta: GossipMeta,
+        actions: &mut Vec<Action>,
+    ) {
+        // V2: fold the carried structures on *every* receipt — duplicates
+        // still carry fresher relayer state ("atualizadas e partilhadas ...
+        // nos pedidos AppendEntries").
+        if let Some(epi_msg) = &meta.epidemic {
+            self.merge_and_update(node, epi_msg, actions);
+        }
+        match self.round_clock.observe(node.current_term, meta.round) {
+            RoundClass::Duplicate => {
+                node.counters.gossip_recv_dup += 1;
+                // Already processed this round: drop (no response, no relay).
+            }
+            RoundClass::Fresh => {
+                node.counters.gossip_recv_fresh += 1;
+                // A fresh round is a heartbeat (§3.1).
+                node.election_deadline = node.random_election_deadline(now);
+
+                let (success, match_hint) = node.apply_append_entries(&args);
+                if success {
+                    self.local_append_update(node, actions);
+                    let bound = args.leader_commit.min(match_hint);
+                    if bound > node.commit_index {
+                        node.advance_commit(bound, actions);
+                    }
+                }
+
+                // First-receipt response policy (DESIGN.md §4.3): V1 always;
+                // V2 only on failure (repair trigger) unless the ablation
+                // flag re-enables success responses.
+                let respond =
+                    self.epi.is_none() || !success || node.cfg.v2_success_responses;
+                if respond {
+                    let reply = AppendEntriesReply {
+                        term: node.current_term,
+                        from: node.id,
+                        success,
+                        match_hint,
+                        round: Some(meta.round),
+                        epidemic: self.epi.clone(),
+                        seq: args.seq,
+                    };
+                    node.counters.replies_sent += 1;
+                    node.send(args.leader, Message::AppendEntriesReply(reply), actions);
+                }
+
+                // Epidemic relay (Algorithm 1): forward the same round to F
+                // targets of *our* permutation, with our (merged) structures.
+                let epidemic = self.epi.clone();
+                let fanout = node.cfg.fanout;
+                let targets = node.perm.next_round(fanout);
+                for to in targets {
+                    if to == args.leader && meta.hops > 0 && self.epi.is_none() {
+                        // The message originated there; relaying it back is
+                        // only useful in V2 (structures) — skip in V1.
+                        continue;
+                    }
+                    let fwd = AppendEntriesArgs {
+                        term: args.term,
+                        leader: args.leader,
+                        prev_log_index: args.prev_log_index,
+                        prev_log_term: args.prev_log_term,
+                        entries: Arc::clone(&args.entries),
+                        leader_commit: args.leader_commit,
+                        gossip: Some(GossipMeta {
+                            round: meta.round,
+                            hops: meta.hops + 1,
+                            epidemic: epidemic.clone(),
+                        }),
+                        seq: 0,
+                    };
+                    node.counters.gossip_sent += 1;
+                    node.send(to, Message::AppendEntries(fwd), actions);
+                }
+            }
+        }
+    }
+}
+
+impl ReplicationStrategy for GossipStrategy {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn is_gossip(&self) -> bool {
+        true
+    }
+
+    fn epidemic(&self) -> Option<&EpidemicState> {
+        self.epi.as_ref()
+    }
+
+    fn epidemic_mut(&mut self) -> Option<&mut EpidemicState> {
+        self.epi.as_mut()
+    }
+
+    fn on_become_leader(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        self.commit_history.clear();
+        if node.n() == 1 {
+            // Trivial cluster: the leader alone is a majority.
+            self.classic_advance(node, actions);
+        }
+        self.start_round(node, now, actions);
+    }
+
+    fn on_client_request(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        self.local_append_update(node, actions);
+        if node.n() == 1 {
+            self.classic_advance(node, actions);
+        }
+        // Pull an idle-scheduled round in so fresh entries don't wait out
+        // the long heartbeat interval.
+        let active_at = now + node.cfg.round_interval_us;
+        if self.next_round_at > active_at {
+            self.next_round_at = active_at;
+        }
+    }
+
+    fn on_local_append(&mut self, node: &mut Node, _now: Time, actions: &mut Vec<Action>) {
+        self.local_append_update(node, actions);
+    }
+
+    fn on_leader_tick(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        if now >= self.next_round_at {
+            self.start_round(node, now, actions);
+        }
+        node.retransmit_repairs(now, actions);
+    }
+
+    fn leader_deadline(&self, node: &Node) -> Time {
+        let mut dl = self.next_round_at;
+        for f in node.followers.iter() {
+            if f.repairing {
+                dl = dl.min(f.last_rpc_at + node.cfg.rpc_timeout_us);
+            }
+        }
+        dl
+    }
+
+    fn on_append_entries(
+        &mut self,
+        node: &mut Node,
+        now: Time,
+        args: AppendEntriesArgs,
+        actions: &mut Vec<Action>,
+    ) {
+        if node.role == Role::Leader {
+            // Only possible for our own relayed round coming back (we are
+            // the leader of this term). Merge the piggybacked structures —
+            // this is exactly how the leader learns remote votes in V2.
+            if let Some(g) = &args.gossip {
+                if let Some(epi_msg) = &g.epidemic {
+                    self.merge_and_update(node, epi_msg, actions);
+                }
+            }
+            return;
+        }
+        node.leader_hint = Some(args.leader);
+        match args.gossip.clone() {
+            None => self.on_classic_append(node, now, args, actions),
+            Some(meta) => self.on_gossip_append(node, now, args, meta, actions),
+        }
+    }
+
+    fn on_append_reply(
+        &mut self,
+        node: &mut Node,
+        now: Time,
+        reply: AppendEntriesReply,
+        actions: &mut Vec<Action>,
+    ) {
+        if node.role != Role::Leader || reply.term < node.current_term {
+            return; // stale
+        }
+        debug_assert_eq!(reply.term, node.current_term);
+        // V2: responder's structures ride back on every reply.
+        if let Some(epi_msg) = &reply.epidemic {
+            self.merge_and_update(node, epi_msg, actions);
+        }
+        node.update_follower_on_reply(now, &reply, actions);
+        if reply.success {
+            self.classic_advance(node, actions);
+        }
+    }
+
+    fn on_term_change(&mut self) {
+        self.next_round_at = Time::MAX;
+        self.commit_history.clear();
+        // §3.2: reset the vote structures on discovering a new term.
+        if let Some(epi) = self.epi.as_mut() {
+            epi.reset_for_new_term();
+        }
+    }
+
+    fn counters(&self, c: &Counters) -> Vec<(&'static str, u64)> {
+        let mut out = vec![
+            ("rounds_started", c.rounds_started),
+            ("gossip_sent", c.gossip_sent),
+            ("gossip_recv_fresh", c.gossip_recv_fresh),
+            ("gossip_recv_dup", c.gossip_recv_dup),
+            ("repair_rpcs", c.repair_rpcs),
+        ];
+        if self.epi.is_some() {
+            out.push(("merges", c.merges));
+        }
+        out
+    }
+}

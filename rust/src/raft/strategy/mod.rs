@@ -1,0 +1,182 @@
+//! The pluggable replication layer (DESIGN.md §3).
+//!
+//! One Raft core ([`super::node::Node`]) can swap its replication
+//! machinery: classic leader broadcast, the paper's V1 epidemic rounds
+//! (§3.1, Algorithm 1), or V2's decentralised commit (§3.2, Algorithms
+//! 2–3). Each variant is a [`ReplicationStrategy`] — a state machine owning
+//! the variant-specific per-node state (round clocks, commit history,
+//! V2's epidemic commit structures) and driven by the `Node` through a
+//! fixed set of hooks. The `Node` keeps everything variant-independent:
+//! term/vote/log state, the follower slots and classic-RPC repair
+//! machinery, the peer permutation (shared with epidemic vote collection),
+//! and the commit/apply pipeline.
+//!
+//! Variant selection happens exactly once, at strategy construction,
+//! through the [`REGISTRY`]. The simulator, the live cluster, the harness
+//! and the CLI never branch on the variant — adding a fourth variant means
+//! adding one strategy module and one registry row.
+
+pub mod classic;
+pub mod gossip;
+
+pub use classic::ClassicStrategy;
+pub use gossip::GossipStrategy;
+
+use super::message::{AppendEntriesArgs, AppendEntriesReply};
+use super::node::{Action, Counters, Node};
+use super::types::{Time, Variant};
+use crate::config::ProtocolConfig;
+use crate::epidemic::EpidemicState;
+
+/// Hooks a replication variant implements. All `&mut Node` methods are
+/// invoked with the strategy temporarily detached from the node (the node
+/// takes it out of its `Option` slot for the duration of the call), so a
+/// hook may freely use the node's shared helpers — none of which dispatch
+/// back into the strategy.
+pub trait ReplicationStrategy: Send {
+    /// Short name for reports (`"raft"`, `"v1"`, `"v2"`, ...).
+    fn name(&self) -> &'static str;
+
+    /// True for strategies that disseminate AppendEntries epidemically
+    /// (enables the §6 epidemic vote-collection extension).
+    fn is_gossip(&self) -> bool {
+        false
+    }
+
+    /// The §3.2 decentralised-commit state, if this strategy keeps one.
+    fn epidemic(&self) -> Option<&EpidemicState> {
+        None
+    }
+
+    /// Mutable access to the §3.2 state (tests, fault injection).
+    fn epidemic_mut(&mut self) -> Option<&mut EpidemicState> {
+        None
+    }
+
+    /// The node just initialised leader state for the current term (fresh
+    /// follower slots, cleared pending table, optional no-op appended).
+    /// Kick off replication: first broadcast / first gossip round.
+    fn on_become_leader(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>);
+
+    /// The leader appended a client command to its log. Schedule or perform
+    /// its dissemination.
+    fn on_client_request(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>);
+
+    /// The leader appended an entry locally (no-op or client command) —
+    /// strategies with local vote state update it here.
+    fn on_local_append(&mut self, _node: &mut Node, _now: Time, _actions: &mut Vec<Action>) {}
+
+    /// Leader timer fired (the host guarantees `now >=
+    /// leader_deadline()` eventually, not exactly).
+    fn on_leader_tick(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>);
+
+    /// Earliest time at which `on_leader_tick` has work to do.
+    fn leader_deadline(&self, node: &Node) -> Time;
+
+    /// Incoming AppendEntries with `args.term == node.current_term`
+    /// (stale-term rejection and candidate step-down already handled by the
+    /// node). Covers the follower paths and the leader receiving its own
+    /// relayed round.
+    fn on_append_entries(
+        &mut self,
+        node: &mut Node,
+        now: Time,
+        args: AppendEntriesArgs,
+        actions: &mut Vec<Action>,
+    );
+
+    /// Incoming AppendEntries reply (any term; the strategy performs the
+    /// leader/stale checks itself, mirroring classic Raft).
+    fn on_append_reply(
+        &mut self,
+        node: &mut Node,
+        now: Time,
+        reply: AppendEntriesReply,
+        actions: &mut Vec<Action>,
+    );
+
+    /// The node's term changed (stepped down or started an election).
+    /// Reset per-term strategy state.
+    fn on_term_change(&mut self);
+
+    /// Strategy-specific diagnostic counters, selected from the node's
+    /// event counters plus any strategy-owned ones.
+    fn counters(&self, _c: &Counters) -> Vec<(&'static str, u64)> {
+        Vec::new()
+    }
+}
+
+/// One registry row: how to build a strategy for a config.
+pub struct StrategyInfo {
+    pub variant: Variant,
+    pub name: &'static str,
+    pub build: fn(&ProtocolConfig) -> Box<dyn ReplicationStrategy>,
+}
+
+fn build_classic(_cfg: &ProtocolConfig) -> Box<dyn ReplicationStrategy> {
+    Box::new(ClassicStrategy::new())
+}
+
+fn build_v1(_cfg: &ProtocolConfig) -> Box<dyn ReplicationStrategy> {
+    Box::new(GossipStrategy::v1())
+}
+
+fn build_v2(cfg: &ProtocolConfig) -> Box<dyn ReplicationStrategy> {
+    Box::new(GossipStrategy::v2(cfg.n))
+}
+
+/// The strategy registry: every protocol variant maps to a constructor.
+/// This is the single point where `Variant` is resolved to behaviour.
+pub static REGISTRY: &[StrategyInfo] = &[
+    StrategyInfo { variant: Variant::Raft, name: "raft", build: build_classic },
+    StrategyInfo { variant: Variant::V1, name: "v1", build: build_v1 },
+    StrategyInfo { variant: Variant::V2, name: "v2", build: build_v2 },
+];
+
+/// Build the strategy for `cfg.variant`.
+pub fn build(cfg: &ProtocolConfig) -> Box<dyn ReplicationStrategy> {
+    let info = REGISTRY
+        .iter()
+        .find(|i| i.variant == cfg.variant)
+        .expect("every Variant has a registered strategy");
+    (info.build)(cfg)
+}
+
+/// Look a registry row up by its CLI/report name.
+pub fn by_name(name: &str) -> Option<&'static StrategyInfo> {
+    REGISTRY.iter().find(|i| i.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_variant() {
+        for v in Variant::ALL {
+            let cfg = ProtocolConfig::for_variant(5, v);
+            let s = build(&cfg);
+            assert_eq!(s.name(), v.name());
+        }
+    }
+
+    #[test]
+    fn registry_names_resolve() {
+        for v in Variant::ALL {
+            let info = by_name(v.name()).expect("name registered");
+            assert_eq!(info.variant, v);
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn capabilities_match_variants() {
+        let cfg = |v| ProtocolConfig::for_variant(5, v);
+        assert!(!build(&cfg(Variant::Raft)).is_gossip());
+        assert!(build(&cfg(Variant::V1)).is_gossip());
+        assert!(build(&cfg(Variant::V2)).is_gossip());
+        assert!(build(&cfg(Variant::Raft)).epidemic().is_none());
+        assert!(build(&cfg(Variant::V1)).epidemic().is_none());
+        assert!(build(&cfg(Variant::V2)).epidemic().is_some());
+    }
+}

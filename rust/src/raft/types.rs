@@ -40,12 +40,10 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// Gossip-based dissemination (used by config validation; behavioural
+    /// capabilities live on `raft::strategy::ReplicationStrategy`).
     pub fn is_gossip(self) -> bool {
         matches!(self, Variant::V1 | Variant::V2)
-    }
-
-    pub fn has_epidemic_commit(self) -> bool {
-        matches!(self, Variant::V2)
     }
 
     pub fn name(self) -> &'static str {
@@ -102,7 +100,5 @@ mod tests {
         assert!(!Variant::Raft.is_gossip());
         assert!(Variant::V1.is_gossip());
         assert!(Variant::V2.is_gossip());
-        assert!(!Variant::V1.has_epidemic_commit());
-        assert!(Variant::V2.has_epidemic_commit());
     }
 }

@@ -10,10 +10,9 @@
 //! on golden vectors; `micro_hotpath` benchmarks the crossover (per-call
 //! PJRT dispatch overhead vs batch width — EXPERIMENTS.md §Perf).
 
-use super::{execute_u32, literal_u32, scalar_u32, Artifact, Engine, Geometry};
+use super::{Engine, Geometry, RtResult};
 use crate::epidemic::{EpidemicState, LogView};
 use crate::util::bitset::Bitmap;
-use anyhow::Result;
 
 /// A batch of replica commit-states in structure-of-arrays layout, exactly
 /// the artifact's calling convention.
@@ -53,21 +52,34 @@ impl FleetState {
     }
 }
 
-/// The executor (owns the compiled artifact).
+/// The executor (owns the compiled artifact when the `xla` feature is on;
+/// without it only the native path is reachable — `from_engine` errors).
 pub struct MergeExecutor {
     pub geometry: Geometry,
-    cluster_step: Artifact,
+    #[cfg(feature = "xla")]
+    cluster_step: super::Artifact,
 }
 
 impl MergeExecutor {
-    pub fn from_engine(engine: &Engine) -> Result<MergeExecutor> {
+    #[cfg(feature = "xla")]
+    pub fn from_engine(engine: &Engine) -> RtResult<MergeExecutor> {
         Ok(MergeExecutor {
             geometry: engine.geometry,
             cluster_step: engine.compile("cluster_step")?,
         })
     }
 
+    #[cfg(not(feature = "xla"))]
+    pub fn from_engine(_engine: &Engine) -> RtResult<MergeExecutor> {
+        Err(
+            "epiraft was built without the `xla` feature; MergeExecutor's HLO \
+             backend is unavailable"
+                .to_string(),
+        )
+    }
+
     /// Run one fleet step through the HLO executable.
+    #[cfg(feature = "xla")]
     #[allow(clippy::too_many_arguments)]
     pub fn hlo_cluster_step(
         &self,
@@ -82,7 +94,8 @@ impl MergeExecutor {
         majority: u32,
         last_index: &[u32],
         last_term_eq: &[u32],
-    ) -> Result<(Vec<u32>, Vec<u32>, Vec<u32>)> {
+    ) -> RtResult<(Vec<u32>, Vec<u32>, Vec<u32>)> {
+        use super::{execute_u32, literal_u32, scalar_u32};
         let g = self.geometry;
         let (b, m, w) = (g.b as i64, g.m as i64, g.w as i64);
         let inputs = vec![
@@ -103,6 +116,27 @@ impl MergeExecutor {
         let mc_out = out.pop().unwrap();
         let bm_out = out.pop().unwrap();
         Ok((bm_out, mc_out, nc_out))
+    }
+
+    /// Stub without the `xla` feature (unreachable in practice: the executor
+    /// cannot be constructed without an engine).
+    #[cfg(not(feature = "xla"))]
+    #[allow(clippy::too_many_arguments)]
+    pub fn hlo_cluster_step(
+        &self,
+        _bm: &[u32],
+        _mc: &[u32],
+        _nc: &[u32],
+        _msgs_bm: &[u32],
+        _msgs_mc: &[u32],
+        _msgs_nc: &[u32],
+        _count: &[u32],
+        _me: &[u32],
+        _majority: u32,
+        _last_index: &[u32],
+        _last_term_eq: &[u32],
+    ) -> RtResult<(Vec<u32>, Vec<u32>, Vec<u32>)> {
+        Err("built without the `xla` feature".to_string())
     }
 
     /// Native reference with identical semantics (also the scalar hot path

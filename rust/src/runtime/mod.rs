@@ -9,14 +9,23 @@
 //! * [`artifacts_check`] — golden-vector equivalence: numpy-oracle outputs
 //!   (baked into `artifacts/golden.json`) vs the HLO executables vs the
 //!   native Rust implementation.
+//!
+//! The PJRT path needs the external `xla` crate, which is not vendored (the
+//! crate builds offline with zero dependencies), so everything that touches
+//! PJRT is gated behind the `xla` cargo feature (see DESIGN.md §6). Without
+//! the feature the native batched implementation — used by the simulator,
+//! the fleet study's default backend, and all tests — is fully functional,
+//! and the HLO entry points return a descriptive error at load time.
 
 pub mod merge_exec;
 
 pub use merge_exec::{FleetState, MergeExecutor};
 
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::Path;
+
+/// Runtime results carry plain-string errors (no error-crate dependency).
+pub type RtResult<T> = Result<T, String>;
 
 /// Batch geometry of the compiled artifacts (from `meta.json`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -30,218 +39,286 @@ pub struct Geometry {
 }
 
 impl Geometry {
-    pub fn from_meta(path: &Path) -> Result<Geometry> {
+    pub fn from_meta(path: &Path) -> RtResult<Geometry> {
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("read {}", path.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("parse meta.json: {e}"))?;
-        let get = |k: &str| -> Result<usize> {
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("parse meta.json: {e}"))?;
+        let get = |k: &str| -> RtResult<usize> {
             j.get(k)
                 .and_then(Json::as_u64)
                 .map(|v| v as usize)
-                .ok_or_else(|| anyhow!("meta.json missing {k}"))
+                .ok_or_else(|| format!("meta.json missing {k}"))
         };
         Ok(Geometry { b: get("B")?, m: get("M")?, w: get("W")? })
     }
 }
 
-/// A compiled HLO executable plus its source path.
-pub struct Artifact {
-    pub name: String,
-    pub path: PathBuf,
-    pub exe: xla::PjRtLoadedExecutable,
-}
+// ===========================================================================
+// PJRT-backed implementation (requires the external `xla` crate).
+// ===========================================================================
 
-/// PJRT client + compiled artifacts.
-pub struct Engine {
-    pub client: xla::PjRtClient,
-    pub geometry: Geometry,
-    dir: PathBuf,
-}
+#[cfg(feature = "xla")]
+mod hlo {
+    use super::{Geometry, MergeExecutor, RtResult};
+    use crate::util::json::Json;
+    use std::path::{Path, PathBuf};
 
-impl Engine {
-    /// Create a CPU PJRT client and read the artifact geometry.
-    pub fn load(dir: &str) -> Result<Engine> {
-        let dir = PathBuf::from(dir);
-        let geometry = Geometry::from_meta(&dir.join("meta.json"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Engine { client, geometry, dir })
+    /// A compiled HLO executable plus its source path.
+    pub struct Artifact {
+        pub name: String,
+        pub path: PathBuf,
+        pub exe: xla::PjRtLoadedExecutable,
     }
 
-    /// Compile one artifact by function name (e.g. `"cluster_step"`).
-    pub fn compile(&self, name: &str) -> Result<Artifact> {
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        if !path.exists() {
-            bail!(
-                "artifact {} not found — run `make artifacts` first",
-                path.display()
-            );
+    /// PJRT client + compiled artifacts.
+    pub struct Engine {
+        pub client: xla::PjRtClient,
+        pub geometry: Geometry,
+        dir: PathBuf,
+    }
+
+    impl Engine {
+        /// Create a CPU PJRT client and read the artifact geometry.
+        pub fn load(dir: &str) -> RtResult<Engine> {
+            let dir = PathBuf::from(dir);
+            let geometry = Geometry::from_meta(&dir.join("meta.json"))?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| format!("PJRT cpu client: {e:?}"))?;
+            Ok(Engine { client, geometry, dir })
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        Ok(Artifact { name: name.to_string(), path, exe })
+
+        /// Compile one artifact by function name (e.g. `"cluster_step"`).
+        pub fn compile(&self, name: &str) -> RtResult<Artifact> {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                return Err(format!(
+                    "artifact {} not found — run `make artifacts` first",
+                    path.display()
+                ));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| "non-utf8 path".to_string())?,
+            )
+            .map_err(|e| format!("parse HLO text {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| format!("compile {name}: {e:?}"))?;
+            Ok(Artifact { name: name.to_string(), path, exe })
+        }
+    }
+
+    /// Build a u32 literal of the given shape.
+    pub fn literal_u32(data: &[u32], dims: &[i64]) -> RtResult<xla::Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != data.len() {
+            return Err(format!("literal shape {:?} != data len {}", dims, data.len()));
+        }
+        let lit = xla::Literal::vec1(data);
+        if dims.len() == 1 {
+            return Ok(lit);
+        }
+        lit.reshape(dims).map_err(|e| format!("reshape: {e:?}"))
+    }
+
+    /// Build a u32 scalar literal.
+    pub fn scalar_u32(v: u32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// Execute an artifact over u32 literals; returns the flattened u32
+    /// outputs of the result tuple.
+    pub fn execute_u32(artifact: &Artifact, inputs: &[xla::Literal]) -> RtResult<Vec<Vec<u32>>> {
+        let result = artifact
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| format!("execute {}: {e:?}", artifact.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch result: {e:?}"))?;
+        // Lowered with return_tuple=True.
+        let parts = lit.to_tuple().map_err(|e| format!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<u32>().map_err(|e| format!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// `epiraft artifacts-check`: golden-vector equivalence of oracle
+    /// (python numpy), HLO executables, and the native Rust implementation.
+    pub fn artifacts_check(dir: &str) -> RtResult<()> {
+        let engine = Engine::load(dir)?;
+        let g = engine.geometry;
+        println!("artifacts: dir={dir} geometry B={} M={} W={}", g.b, g.m, g.w);
+        let golden_text = std::fs::read_to_string(Path::new(dir).join("golden.json"))
+            .map_err(|e| format!("read golden.json: {e}"))?;
+        let golden =
+            Json::parse(&golden_text).map_err(|e| format!("parse golden.json: {e}"))?;
+        let cases = golden
+            .get("cases")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "golden.json: no cases".to_string())?;
+
+        let merge_fold = engine.compile("merge_fold")?;
+        let cluster_step = engine.compile("cluster_step")?;
+        println!(
+            "compiled merge_fold + cluster_step on {}",
+            engine.client.platform_name()
+        );
+
+        let exec = MergeExecutor::from_engine(&engine)?;
+        for (i, case) in cases.iter().enumerate() {
+            check_case(&engine, &merge_fold, &cluster_step, &exec, case)
+                .map_err(|e| format!("golden case {i}: {e}"))?;
+            println!("golden case {i}: HLO == oracle == native OK");
+        }
+        println!("artifacts-check: all {} cases passed", cases.len());
+        Ok(())
+    }
+
+    fn get_u32s(j: &Json, key: &str) -> RtResult<Vec<u32>> {
+        j.get(key)
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_u64).map(|v| v as u32).collect())
+            .ok_or_else(|| format!("golden.json missing {key}"))
+    }
+
+    fn check_case(
+        engine: &Engine,
+        merge_fold: &Artifact,
+        cluster_step: &Artifact,
+        exec: &MergeExecutor,
+        case: &Json,
+    ) -> RtResult<()> {
+        let g = engine.geometry;
+        let (b, m, w) = (g.b as i64, g.m as i64, g.w as i64);
+        let input = case.get("in").ok_or_else(|| "case missing 'in'".to_string())?;
+        let bm = get_u32s(input, "bm")?;
+        let mc = get_u32s(input, "mc")?;
+        let nc = get_u32s(input, "nc")?;
+        let msgs_bm = get_u32s(input, "msgs_bm")?;
+        let msgs_mc = get_u32s(input, "msgs_mc")?;
+        let msgs_nc = get_u32s(input, "msgs_nc")?;
+        let count = get_u32s(input, "count")?;
+        let me = get_u32s(input, "me")?;
+        let majority = get_u32s(input, "majority")?[0];
+        let last_index = get_u32s(input, "last_index")?;
+        let last_term_eq = get_u32s(input, "last_term_eq")?;
+
+        // --- merge_fold: HLO vs oracle vs native ----------------------------
+        let inputs = vec![
+            literal_u32(&bm, &[b, w])?,
+            literal_u32(&mc, &[b])?,
+            literal_u32(&nc, &[b])?,
+            literal_u32(&msgs_bm, &[b, m, w])?,
+            literal_u32(&msgs_mc, &[b, m])?,
+            literal_u32(&msgs_nc, &[b, m])?,
+            literal_u32(&count, &[b])?,
+        ];
+        let out = execute_u32(merge_fold, &inputs)?;
+        let want = case
+            .get("merge_fold_out")
+            .ok_or_else(|| "no merge_fold_out".to_string())?;
+        ensure_eq(&out[0], &get_u32s(want, "bm")?, "merge_fold bm")?;
+        ensure_eq(&out[1], &get_u32s(want, "mc")?, "merge_fold mc")?;
+        ensure_eq(&out[2], &get_u32s(want, "nc")?, "merge_fold nc")?;
+
+        let native = super::merge_exec::native_merge_fold(
+            g, &bm, &mc, &nc, &msgs_bm, &msgs_mc, &msgs_nc, &count,
+        );
+        ensure_eq(&out[0], &native.0, "native merge_fold bm")?;
+        ensure_eq(&out[1], &native.1, "native merge_fold mc")?;
+        ensure_eq(&out[2], &native.2, "native merge_fold nc")?;
+
+        // --- cluster_step: HLO vs oracle vs native executor -----------------
+        let inputs = vec![
+            literal_u32(&bm, &[b, w])?,
+            literal_u32(&mc, &[b])?,
+            literal_u32(&nc, &[b])?,
+            literal_u32(&msgs_bm, &[b, m, w])?,
+            literal_u32(&msgs_mc, &[b, m])?,
+            literal_u32(&msgs_nc, &[b, m])?,
+            literal_u32(&count, &[b])?,
+            literal_u32(&me, &[b])?,
+            scalar_u32(majority),
+            literal_u32(&last_index, &[b])?,
+            literal_u32(&last_term_eq, &[b])?,
+        ];
+        let out = execute_u32(cluster_step, &inputs)?;
+        let want = case
+            .get("cluster_step_out")
+            .ok_or_else(|| "no cluster_step_out".to_string())?;
+        ensure_eq(&out[0], &get_u32s(want, "bm")?, "cluster_step bm")?;
+        ensure_eq(&out[1], &get_u32s(want, "mc")?, "cluster_step mc")?;
+        ensure_eq(&out[2], &get_u32s(want, "nc")?, "cluster_step nc")?;
+
+        let native = exec.native_cluster_step(
+            &bm, &mc, &nc, &msgs_bm, &msgs_mc, &msgs_nc, &count, &me, majority,
+            &last_index, &last_term_eq,
+        );
+        ensure_eq(&out[0], &native.0, "native cluster_step bm")?;
+        ensure_eq(&out[1], &native.1, "native cluster_step mc")?;
+        ensure_eq(&out[2], &native.2, "native cluster_step nc")?;
+        Ok(())
+    }
+
+    fn ensure_eq(got: &[u32], want: &[u32], what: &str) -> RtResult<()> {
+        if got != want {
+            let idx = got.iter().zip(want).position(|(a, b)| a != b);
+            return Err(format!(
+                "{what}: mismatch at {:?}: got={:?}... want={:?}...",
+                idx,
+                &got[..8.min(got.len())],
+                &want[..8.min(want.len())]
+            ));
+        }
+        Ok(())
     }
 }
 
-/// Build a u32 literal of the given shape.
-pub fn literal_u32(data: &[u32], dims: &[i64]) -> Result<xla::Literal> {
-    let numel: i64 = dims.iter().product();
-    if numel as usize != data.len() {
-        bail!("literal shape {:?} != data len {}", dims, data.len());
+#[cfg(feature = "xla")]
+pub use hlo::{artifacts_check, execute_u32, literal_u32, scalar_u32, Artifact, Engine};
+
+// ===========================================================================
+// Offline stub: same API surface, errors at load time.
+// ===========================================================================
+
+#[cfg(not(feature = "xla"))]
+mod hlo_stub {
+    use super::{Geometry, RtResult};
+
+    pub(crate) const UNAVAILABLE: &str =
+        "epiraft was built without the `xla` feature; the PJRT/HLO runtime is \
+         unavailable (the native backend works everywhere — rebuild with \
+         `--features xla` and the external `xla` crate for the HLO path)";
+
+    /// Stub for the compiled-executable handle (never constructed).
+    pub struct Artifact {
+        pub name: String,
     }
-    let lit = xla::Literal::vec1(data);
-    if dims.len() == 1 {
-        return Ok(lit);
+
+    /// Stub engine: `load` always errors; the type exists so hosts and
+    /// tests that gate on `Engine::load(..)` succeeding compile unchanged.
+    pub struct Engine {
+        pub geometry: Geometry,
     }
-    lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
-}
 
-/// Build a u32 scalar literal.
-pub fn scalar_u32(v: u32) -> xla::Literal {
-    xla::Literal::scalar(v)
-}
+    impl Engine {
+        pub fn load(_dir: &str) -> RtResult<Engine> {
+            Err(UNAVAILABLE.to_string())
+        }
 
-/// Execute an artifact over u32 literals; returns the flattened u32 outputs
-/// of the result tuple.
-pub fn execute_u32(artifact: &Artifact, inputs: &[xla::Literal]) -> Result<Vec<Vec<u32>>> {
-    let result = artifact
-        .exe
-        .execute::<xla::Literal>(inputs)
-        .map_err(|e| anyhow!("execute {}: {e:?}", artifact.name))?;
-    let lit = result[0][0]
-        .to_literal_sync()
-        .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-    // Lowered with return_tuple=True.
-    let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-    parts
-        .into_iter()
-        .map(|p| p.to_vec::<u32>().map_err(|e| anyhow!("to_vec: {e:?}")))
-        .collect()
-}
-
-/// `epiraft artifacts-check`: golden-vector equivalence of oracle (python
-/// numpy), HLO executables, and the native Rust implementation.
-pub fn artifacts_check(dir: &str) -> Result<()> {
-    let engine = Engine::load(dir)?;
-    let g = engine.geometry;
-    println!(
-        "artifacts: dir={dir} geometry B={} M={} W={}",
-        g.b, g.m, g.w
-    );
-    let golden_text = std::fs::read_to_string(Path::new(dir).join("golden.json"))
-        .context("read golden.json")?;
-    let golden = Json::parse(&golden_text).map_err(|e| anyhow!("parse golden.json: {e}"))?;
-    let cases = golden
-        .get("cases")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("golden.json: no cases"))?;
-
-    let merge_fold = engine.compile("merge_fold")?;
-    let cluster_step = engine.compile("cluster_step")?;
-    println!("compiled merge_fold + cluster_step on {}", engine.client.platform_name());
-
-    let exec = MergeExecutor::from_engine(&engine)?;
-    for (i, case) in cases.iter().enumerate() {
-        check_case(&engine, &merge_fold, &cluster_step, &exec, case)
-            .with_context(|| format!("golden case {i}"))?;
-        println!("golden case {i}: HLO == oracle == native OK");
+        pub fn compile(&self, _name: &str) -> RtResult<Artifact> {
+            Err(UNAVAILABLE.to_string())
+        }
     }
-    println!("artifacts-check: all {} cases passed", cases.len());
-    Ok(())
-}
 
-fn get_u32s(j: &Json, key: &str) -> Result<Vec<u32>> {
-    j.get(key)
-        .and_then(Json::as_arr)
-        .map(|a| a.iter().filter_map(Json::as_u64).map(|v| v as u32).collect())
-        .ok_or_else(|| anyhow!("golden.json missing {key}"))
-}
-
-fn check_case(
-    engine: &Engine,
-    merge_fold: &Artifact,
-    cluster_step: &Artifact,
-    exec: &MergeExecutor,
-    case: &Json,
-) -> Result<()> {
-    let g = engine.geometry;
-    let (b, m, w) = (g.b as i64, g.m as i64, g.w as i64);
-    let input = case.get("in").ok_or_else(|| anyhow!("case missing 'in'"))?;
-    let bm = get_u32s(input, "bm")?;
-    let mc = get_u32s(input, "mc")?;
-    let nc = get_u32s(input, "nc")?;
-    let msgs_bm = get_u32s(input, "msgs_bm")?;
-    let msgs_mc = get_u32s(input, "msgs_mc")?;
-    let msgs_nc = get_u32s(input, "msgs_nc")?;
-    let count = get_u32s(input, "count")?;
-    let me = get_u32s(input, "me")?;
-    let majority = get_u32s(input, "majority")?[0];
-    let last_index = get_u32s(input, "last_index")?;
-    let last_term_eq = get_u32s(input, "last_term_eq")?;
-
-    // --- merge_fold: HLO vs oracle vs native --------------------------------
-    let inputs = vec![
-        literal_u32(&bm, &[b, w])?,
-        literal_u32(&mc, &[b])?,
-        literal_u32(&nc, &[b])?,
-        literal_u32(&msgs_bm, &[b, m, w])?,
-        literal_u32(&msgs_mc, &[b, m])?,
-        literal_u32(&msgs_nc, &[b, m])?,
-        literal_u32(&count, &[b])?,
-    ];
-    let out = execute_u32(merge_fold, &inputs)?;
-    let want = case.get("merge_fold_out").ok_or_else(|| anyhow!("no merge_fold_out"))?;
-    ensure_eq(&out[0], &get_u32s(want, "bm")?, "merge_fold bm")?;
-    ensure_eq(&out[1], &get_u32s(want, "mc")?, "merge_fold mc")?;
-    ensure_eq(&out[2], &get_u32s(want, "nc")?, "merge_fold nc")?;
-
-    let native = merge_exec::native_merge_fold(
-        g, &bm, &mc, &nc, &msgs_bm, &msgs_mc, &msgs_nc, &count,
-    );
-    ensure_eq(&out[0], &native.0, "native merge_fold bm")?;
-    ensure_eq(&out[1], &native.1, "native merge_fold mc")?;
-    ensure_eq(&out[2], &native.2, "native merge_fold nc")?;
-
-    // --- cluster_step: HLO vs oracle vs native executor ---------------------
-    let inputs = vec![
-        literal_u32(&bm, &[b, w])?,
-        literal_u32(&mc, &[b])?,
-        literal_u32(&nc, &[b])?,
-        literal_u32(&msgs_bm, &[b, m, w])?,
-        literal_u32(&msgs_mc, &[b, m])?,
-        literal_u32(&msgs_nc, &[b, m])?,
-        literal_u32(&count, &[b])?,
-        literal_u32(&me, &[b])?,
-        scalar_u32(majority),
-        literal_u32(&last_index, &[b])?,
-        literal_u32(&last_term_eq, &[b])?,
-    ];
-    let out = execute_u32(cluster_step, &inputs)?;
-    let want = case.get("cluster_step_out").ok_or_else(|| anyhow!("no cluster_step_out"))?;
-    ensure_eq(&out[0], &get_u32s(want, "bm")?, "cluster_step bm")?;
-    ensure_eq(&out[1], &get_u32s(want, "mc")?, "cluster_step mc")?;
-    ensure_eq(&out[2], &get_u32s(want, "nc")?, "cluster_step nc")?;
-
-    let native = exec.native_cluster_step(
-        &bm, &mc, &nc, &msgs_bm, &msgs_mc, &msgs_nc, &count, &me, majority, &last_index,
-        &last_term_eq,
-    );
-    ensure_eq(&out[0], &native.0, "native cluster_step bm")?;
-    ensure_eq(&out[1], &native.1, "native cluster_step mc")?;
-    ensure_eq(&out[2], &native.2, "native cluster_step nc")?;
-    Ok(())
-}
-
-fn ensure_eq(got: &[u32], want: &[u32], what: &str) -> Result<()> {
-    if got != want {
-        let idx = got.iter().zip(want).position(|(a, b)| a != b);
-        bail!("{what}: mismatch at {:?}: got={:?}... want={:?}...", idx, &got[..8.min(got.len())], &want[..8.min(want.len())]);
+    /// `epiraft artifacts-check` without the HLO runtime: report why.
+    pub fn artifacts_check(_dir: &str) -> RtResult<()> {
+        Err(UNAVAILABLE.to_string())
     }
-    Ok(())
 }
+
+#[cfg(not(feature = "xla"))]
+pub use hlo_stub::{artifacts_check, Artifact, Engine};

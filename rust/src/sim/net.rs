@@ -1,7 +1,15 @@
-//! Simulated network: latency distribution, independent loss, and
-//! partitions. Replica-to-replica and client-to-replica messages share the
-//! latency model; partitions apply to replica links only (clients run on
-//! separate cores/hosts in the paper's setup).
+//! Simulated network: latency distribution, independent loss, partitions,
+//! and two config-gated impairments (both default-off) following the usual
+//! network-simulator idiom: per-packet duplication and a Gilbert–Elliott
+//! burst-loss chain. Replica-to-replica and client-to-replica messages
+//! share the latency model; partitions, duplication and burst loss apply
+//! to replica links only (clients run on separate cores/hosts in the
+//! paper's setup).
+//!
+//! Determinism note: every impairment draws from the RNG only while its
+//! gate is open (probability > 0 / chain enabled), so runs with the
+//! default config consume the exact same random sequence as before these
+//! options existed — seed-for-seed identical reports.
 
 use crate::config::NetworkConfig;
 use crate::raft::{NodeId, Time};
@@ -15,12 +23,17 @@ pub struct SimNet {
     /// Partition group per replica; links across groups are cut.
     /// `None` = fully connected.
     groups: Option<Vec<u32>>,
+    /// Gilbert–Elliott chain state per directed link (`from * n + to`):
+    /// is that link currently in the bad (bursty) state? Keeping the chain
+    /// per-link means each link sees the configured burst lengths
+    /// regardless of aggregate cluster traffic.
+    ge_bad: Vec<bool>,
     rng: Xoshiro256,
 }
 
 impl SimNet {
     pub fn new(cfg: NetworkConfig, n: usize, rng: Xoshiro256) -> Self {
-        Self { cfg, n, groups: None, rng }
+        Self { cfg, n, groups: None, ge_bad: vec![false; n * n], rng }
     }
 
     /// Sample a one-way latency.
@@ -31,6 +44,10 @@ impl SimNet {
         (l.max(self.cfg.latency_min_us as f64)) as Time
     }
 
+    fn ge_enabled(&self) -> bool {
+        self.cfg.ge_good_to_bad > 0.0
+    }
+
     /// Should this replica-to-replica message be dropped?
     pub fn drops(&mut self, from: NodeId, to: NodeId) -> bool {
         if let Some(groups) = &self.groups {
@@ -38,7 +55,32 @@ impl SimNet {
                 return true;
             }
         }
+        if self.ge_enabled() {
+            // Advance this link's chain one step per packet, then sample
+            // the loss probability of the state the packet sees.
+            let link = from * self.n + to;
+            if self.ge_bad[link] {
+                if self.rng.next_bool(self.cfg.ge_bad_to_good) {
+                    self.ge_bad[link] = false;
+                }
+            } else if self.rng.next_bool(self.cfg.ge_good_to_bad) {
+                self.ge_bad[link] = true;
+            }
+            let p = if self.ge_bad[link] {
+                self.cfg.ge_loss_bad
+            } else {
+                self.cfg.ge_loss_good
+            };
+            if p > 0.0 && self.rng.next_bool(p) {
+                return true;
+            }
+        }
         self.cfg.loss > 0.0 && self.rng.next_bool(self.cfg.loss)
+    }
+
+    /// Should a (not-dropped) replica-to-replica message be duplicated?
+    pub fn duplicates(&mut self) -> bool {
+        self.cfg.duplicate > 0.0 && self.rng.next_bool(self.cfg.duplicate)
     }
 
     /// Should this client-to-replica (or reply) message be dropped?
@@ -119,5 +161,121 @@ mod tests {
         assert!(!n.client_drops(), "clients unaffected by replica partitions");
         n.heal();
         assert!(!n.drops(0, 3));
+    }
+
+    #[test]
+    fn duplication_defaults_off_and_draws_nothing() {
+        let mut n = net(0.0);
+        for _ in 0..1000 {
+            assert!(!n.duplicates());
+        }
+        // Gate closed: no RNG consumption, so the latency stream is
+        // unchanged relative to a net that never asked about duplicates.
+        let mut a = net(0.0);
+        let mut b = net(0.0);
+        for _ in 0..100 {
+            assert!(!a.duplicates());
+            assert_eq!(a.latency(), b.latency());
+        }
+    }
+
+    #[test]
+    fn duplication_rate_approximately_honored() {
+        let cfg = NetworkConfig { duplicate: 0.5, ..Default::default() };
+        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(2));
+        let dup = (0..20000).filter(|_| n.duplicates()).count();
+        let rate = dup as f64 / 20000.0;
+        assert!((rate - 0.5).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn gilbert_elliott_burst_drops_while_bad() {
+        // Deterministic chain: always enter bad, never leave, bad drops all.
+        let cfg = NetworkConfig {
+            ge_good_to_bad: 1.0,
+            ge_bad_to_good: 0.0,
+            ge_loss_good: 0.0,
+            ge_loss_bad: 1.0,
+            ..Default::default()
+        };
+        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(3));
+        for _ in 0..100 {
+            assert!(n.drops(0, 1), "every packet sees the bad state");
+        }
+    }
+
+    #[test]
+    fn gilbert_elliott_recovers_to_good() {
+        // Alternating chain: good->bad (drop), bad->good (pass), ...
+        let cfg = NetworkConfig {
+            ge_good_to_bad: 1.0,
+            ge_bad_to_good: 1.0,
+            ge_loss_good: 0.0,
+            ge_loss_bad: 1.0,
+            ..Default::default()
+        };
+        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(4));
+        for i in 0..50 {
+            let dropped = n.drops(0, 1);
+            assert_eq!(dropped, i % 2 == 0, "packet {i}: chain must alternate");
+        }
+    }
+
+    #[test]
+    fn gilbert_elliott_chains_are_independent_per_link() {
+        // Alternating chain (always transition): each link must alternate
+        // drop/pass on its own schedule, regardless of interleaved traffic
+        // on other links — a single shared chain would alternate per call.
+        let cfg = NetworkConfig {
+            ge_good_to_bad: 1.0,
+            ge_bad_to_good: 1.0,
+            ge_loss_good: 0.0,
+            ge_loss_bad: 1.0,
+            ..Default::default()
+        };
+        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(6));
+        assert!(n.drops(0, 1), "link (0,1) packet 1: bad");
+        assert!(n.drops(2, 3), "link (2,3) packet 1: bad on its own chain");
+        assert!(!n.drops(0, 1), "link (0,1) packet 2: recovered");
+        assert!(!n.drops(2, 3), "link (2,3) packet 2: recovered");
+    }
+
+    #[test]
+    fn gilbert_elliott_loss_is_burstier_than_independent() {
+        // Same long-run loss rate (~1/3), very different clustering: the
+        // mean run-length of consecutive drops must be clearly longer for
+        // the GE chain than for independent loss.
+        let run_mean = |mut f: Box<dyn FnMut() -> bool>| {
+            let (mut runs, mut dropped, mut in_run) = (0u64, 0u64, false);
+            for _ in 0..60_000 {
+                if f() {
+                    dropped += 1;
+                    if !in_run {
+                        runs += 1;
+                        in_run = true;
+                    }
+                } else {
+                    in_run = false;
+                }
+            }
+            dropped as f64 / runs.max(1) as f64
+        };
+        let ge_cfg = NetworkConfig {
+            // ~1/3 of packets in the bad state (p/(p+r) with p=.05, r=.1),
+            // which drops everything.
+            ge_good_to_bad: 0.05,
+            ge_bad_to_good: 0.1,
+            ge_loss_good: 0.0,
+            ge_loss_bad: 1.0,
+            ..Default::default()
+        };
+        let mut ge = SimNet::new(ge_cfg, 5, Xoshiro256::seed_from_u64(5));
+        let mut ind = net(1.0 / 3.0);
+        let ge_runs = run_mean(Box::new(move || ge.drops(0, 1)));
+        let ind_runs = run_mean(Box::new(move || ind.drops(0, 1)));
+        assert!(
+            ge_runs > ind_runs * 2.0,
+            "GE bursts ({ge_runs:.2}) must be much longer than independent ({ind_runs:.2})"
+        );
     }
 }

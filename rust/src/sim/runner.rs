@@ -3,6 +3,11 @@
 //! latency-modelled network, Paxi-style clients, and a fault injector —
 //! a faithful analogue of the paper's 128-core testbed (§4.1), reproducible
 //! from a single seed.
+//!
+//! The per-replica drive cycle is the shared [`crate::driver`] abstraction:
+//! a [`NodeInput`] is applied to the sans-io core, the action list is
+//! costed against the CPU model, and a [`SimSink`] routes the actions into
+//! the event queue — the same dispatch the live cluster uses.
 
 use super::cost::CostModel;
 use super::fault::{Fault, FaultSchedule};
@@ -10,9 +15,10 @@ use super::metrics::{Collector, SimReport};
 use super::net::SimNet;
 use super::workload::Workload;
 use crate::config::Config;
+use crate::driver::{self, ActionSink, NodeInput};
 use crate::kvstore::Command;
 use crate::raft::{
-    Action, ClientResult, Message, Node, NodeId, RequestId, Role, Time,
+    Action, ClientResult, Message, Node, NodeId, RequestId, Role, Term, Time,
 };
 use crate::util::rng::Xoshiro256;
 use std::collections::{BinaryHeap, VecDeque};
@@ -76,6 +82,73 @@ impl Ord for Scheduled {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         // Min-heap via reverse compare.
         (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+/// Push an event onto the queue with a fresh tiebreak sequence number.
+fn push_ev(queue: &mut BinaryHeap<Scheduled>, seq: &mut u64, at: Time, ev: Ev) {
+    *seq += 1;
+    queue.push(Scheduled { at, seq: *seq, ev });
+}
+
+/// The simulator's [`ActionSink`]: actions depart at `departs_at` and
+/// become future events, subject to the network model (loss, partitions,
+/// duplication, latency).
+struct SimSink<'a> {
+    net: &'a mut SimNet,
+    queue: &'a mut BinaryHeap<Scheduled>,
+    seq: &'a mut u64,
+    collector: &'a mut Collector,
+    elections: &'a mut u64,
+    departs_at: Time,
+}
+
+impl ActionSink for SimSink<'_> {
+    fn send(&mut self, from: NodeId, to: NodeId, msg: Message) {
+        self.collector.messages += 1;
+        if self.net.drops(from, to) {
+            return;
+        }
+        if self.net.duplicates() {
+            // Second copy with its own latency draw (arbitrary reordering).
+            let lat = self.net.latency();
+            push_ev(
+                self.queue,
+                self.seq,
+                self.departs_at + lat,
+                Ev::Deliver { to, msg: Box::new(msg.clone()) },
+            );
+        }
+        let lat = self.net.latency();
+        push_ev(
+            self.queue,
+            self.seq,
+            self.departs_at + lat,
+            Ev::Deliver { to, msg: Box::new(msg) },
+        );
+    }
+
+    fn client_reply(&mut self, _from: NodeId, req: RequestId, result: ClientResult) {
+        if !self.net.client_drops() {
+            let lat = self.net.latency();
+            let client = Workload::client_of(req);
+            push_ev(
+                self.queue,
+                self.seq,
+                self.departs_at + lat,
+                Ev::ReplyDeliver { client, req, result },
+            );
+        }
+    }
+
+    fn committed(&mut self, at: NodeId, is_leader: bool, from: u64, to: u64) {
+        self.collector.record_commit(at, is_leader, from, to, self.departs_at);
+    }
+
+    fn role_changed(&mut self, _at: NodeId, role: Role, _term: Term) {
+        if role == Role::Candidate {
+            *self.elections += 1;
+        }
     }
 }
 
@@ -149,7 +222,16 @@ impl Simulation {
                 r.node.bootstrap_follower(0, 0);
             }
             sim.replicas = replicas;
-            sim.apply_actions(0, actions, 0);
+            let is_leader = sim.replicas[0].node.is_leader();
+            let mut sink = SimSink {
+                net: &mut sim.net,
+                queue: &mut sim.queue,
+                seq: &mut sim.seq,
+                collector: &mut sim.collector,
+                elections: &mut sim.elections,
+                departs_at: 0,
+            };
+            driver::dispatch(0, is_leader, actions, &mut sink);
         } else {
             sim.replicas = replicas;
         }
@@ -169,8 +251,7 @@ impl Simulation {
     }
 
     fn push(&mut self, at: Time, ev: Ev) {
-        self.seq += 1;
-        self.queue.push(Scheduled { at, seq: self.seq, ev });
+        push_ev(&mut self.queue, &mut self.seq, at, ev);
     }
 
     fn schedule_timer(&mut self, replica: NodeId) {
@@ -205,37 +286,6 @@ impl Simulation {
         cost
     }
 
-    /// Dispatch `actions` produced by `replica`, all departing at `done`.
-    fn apply_actions(&mut self, replica: NodeId, actions: Vec<Action>, done: Time) {
-        for a in actions {
-            match a {
-                Action::Send { to, msg } => {
-                    self.collector.messages += 1;
-                    if !self.net.drops(replica, to) {
-                        let lat = self.net.latency();
-                        self.push(done + lat, Ev::Deliver { to, msg: Box::new(msg) });
-                    }
-                }
-                Action::ClientReply { req, result } => {
-                    if !self.net.client_drops() {
-                        let lat = self.net.latency();
-                        let client = Workload::client_of(req);
-                        self.push(done + lat, Ev::ReplyDeliver { client, req, result });
-                    }
-                }
-                Action::Committed { from, to } => {
-                    let is_leader = self.replicas[replica].node.is_leader();
-                    self.collector.record_commit(replica, is_leader, from, to, done);
-                }
-                Action::RoleChanged { role, .. } => {
-                    if role == Role::Candidate {
-                        self.elections += 1;
-                    }
-                }
-            }
-        }
-    }
-
     /// Start the next queued work item on `replica` if it is idle.
     fn try_start(&mut self, replica: NodeId) {
         let r = &mut self.replicas[replica];
@@ -245,20 +295,15 @@ impl Simulation {
         let Some(work) = r.inbox.pop_front() else { return };
         r.busy = true;
         let now = self.now;
-        let recv_cost = match &work {
-            Work::Msg(m) => self.cost.recv_cost(m),
-            Work::Client { .. } => self.cost.client_recv_cost(),
-            Work::Tick => self.cost.tick_cost(),
+        let (recv_cost, input) = match work {
+            Work::Msg(m) => (self.cost.recv_cost(&m), NodeInput::Message(*m)),
+            Work::Client { req, cmd } => {
+                (self.cost.client_recv_cost(), NodeInput::Client { req, cmd })
+            }
+            Work::Tick => (self.cost.tick_cost(), NodeInput::Tick),
         };
         let last_before = self.replicas[replica].node.last_index();
-        let actions = {
-            let node = &mut self.replicas[replica].node;
-            match work {
-                Work::Msg(m) => node.on_message(now, *m),
-                Work::Client { req, cmd } => node.client_request(now, req, cmd),
-                Work::Tick => node.tick(now),
-            }
-        };
+        let actions = input.apply(&mut self.replicas[replica].node, now);
         let total = recv_cost + self.actions_cost(&actions);
         let done = now + total.max(1);
         // Leader appends feed the Fig 7 interval clock.
@@ -271,7 +316,16 @@ impl Simulation {
             }
         }
         self.collector.record_busy(replica, now, done);
-        self.apply_actions(replica, actions, done);
+        let is_leader = self.replicas[replica].node.is_leader();
+        let mut sink = SimSink {
+            net: &mut self.net,
+            queue: &mut self.queue,
+            seq: &mut self.seq,
+            collector: &mut self.collector,
+            elections: &mut self.elections,
+            departs_at: done,
+        };
+        driver::dispatch(replica, is_leader, actions, &mut sink);
         self.push(done, Ev::ProcDone { replica });
         self.schedule_timer(replica);
     }
@@ -413,9 +467,11 @@ impl Simulation {
             for (i, r) in self.replicas.iter().enumerate() {
                 if r.node.is_leader() || i <= 1 {
                     eprintln!(
-                        "replica {i} ({:?}): {:?} busy_us={}",
+                        "replica {i} ({:?}, strategy={}): {:?} {:?} busy_us={}",
                         r.node.role(),
+                        r.node.strategy_name(),
                         r.node.counters,
+                        r.node.strategy_counters(),
                         self.collector.busy_us[i]
                     );
                 }
@@ -581,6 +637,36 @@ mod tests {
             let report = run_experiment(&cfg);
             assert!(report.safety_ok, "{variant:?} under 5% loss");
             assert!(report.completed > 0, "{variant:?} must make progress under loss");
+        }
+    }
+
+    #[test]
+    fn packet_duplication_does_not_violate_safety() {
+        // RoundLC filtering and idempotent reconcile make duplicate
+        // delivery harmless for every variant (gossip dedups by round;
+        // classic RPCs are idempotent).
+        for variant in Variant::ALL {
+            let mut cfg = quick_cfg(5, variant);
+            cfg.network.duplicate = 0.3;
+            let report = run_experiment(&cfg);
+            assert!(report.safety_ok, "{variant:?} under 30% duplication");
+            assert!(report.completed > 0, "{variant:?} must serve under duplication");
+        }
+    }
+
+    #[test]
+    fn burst_loss_does_not_violate_safety() {
+        // Gilbert–Elliott bursts: ~1% of packets enter a bad state that
+        // drops ~80% and lasts ~20 packets on average.
+        for variant in Variant::ALL {
+            let mut cfg = quick_cfg(5, variant);
+            cfg.network.ge_good_to_bad = 0.01;
+            cfg.network.ge_bad_to_good = 0.05;
+            cfg.network.ge_loss_good = 0.0;
+            cfg.network.ge_loss_bad = 0.8;
+            let report = run_experiment(&cfg);
+            assert!(report.safety_ok, "{variant:?} under burst loss");
+            assert!(report.completed > 0, "{variant:?} must serve under burst loss");
         }
     }
 

@@ -1,0 +1,313 @@
+//! The strategy-layer contract: every registered `Variant` must drive the
+//! same scenarios to the same safety invariants — committed-prefix
+//! agreement (log-prefix consistency) and commit monotonicity — and every
+//! gossip variant must fall back to classic-RPC catch-up when a follower
+//! misses rounds.
+//!
+//! Two levels:
+//!
+//! * simulator matrix — each variant through an identical `run_experiment`
+//!   scenario (same seed, same workload);
+//! * driver-level harness — a hand-rolled host built on `epiraft::driver`
+//!   (the same `NodeInput`/`ActionSink` cycle the simulator and the live
+//!   cluster use), recording every `Committed` action to check
+//!   monotonicity directly.
+
+use epiraft::config::{Config, ProtocolConfig};
+use epiraft::driver::{self, ActionSink, NodeInput};
+use epiraft::kvstore::Command;
+use epiraft::raft::{Message, Node, NodeId, Variant};
+use epiraft::sim::run_experiment;
+use std::collections::VecDeque;
+
+// ---------------------------------------------------------------------------
+// Simulator matrix: one scenario, every variant, same invariants.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_variant_passes_the_same_sim_scenario() {
+    for variant in Variant::ALL {
+        let mut cfg = Config::default();
+        cfg.protocol.n = 7;
+        cfg.protocol.variant = variant;
+        cfg.workload.clients = 10;
+        cfg.workload.duration_us = 2_500_000;
+        cfg.workload.warmup_us = 300_000;
+        cfg.seed = 0xA11CE;
+        let report = run_experiment(&cfg);
+        assert!(report.safety_ok, "{variant:?}: committed prefixes diverged");
+        assert!(report.completed > 50, "{variant:?}: only {} completed", report.completed);
+        assert_eq!(report.elections, 0, "{variant:?}: stable leader deposed");
+        assert!(report.max_commit > 0, "{variant:?}: nothing committed");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver-level harness with direct commit-monotonicity checks.
+// ---------------------------------------------------------------------------
+
+/// Routes sends onto an in-memory wire and records commit ranges.
+struct WireSink<'a> {
+    inboxes: &'a mut Vec<VecDeque<Message>>,
+    commits: &'a mut Vec<Vec<(u64, u64)>>,
+}
+
+impl ActionSink for WireSink<'_> {
+    fn send(&mut self, _from: NodeId, to: NodeId, msg: Message) {
+        self.inboxes[to].push_back(msg);
+    }
+
+    fn client_reply(
+        &mut self,
+        _from: NodeId,
+        _req: u64,
+        _result: epiraft::raft::ClientResult,
+    ) {
+    }
+
+    fn committed(&mut self, at: NodeId, _is_leader: bool, from: u64, to: u64) {
+        self.commits[at].push((from, to));
+    }
+}
+
+#[test]
+fn commit_monotonicity_and_prefix_agreement_for_every_variant() {
+    for variant in Variant::ALL {
+        let n = 5;
+        let cfg = ProtocolConfig::for_variant(n, variant);
+        let mut nodes: Vec<Node> =
+            (0..n).map(|i| Node::new(i, cfg.clone(), 0xBEEF + i as u64)).collect();
+        let mut inboxes: Vec<VecDeque<Message>> = vec![VecDeque::new(); n];
+        let mut commits: Vec<Vec<(u64, u64)>> = vec![Vec::new(); n];
+
+        // Stable-leader bootstrap, actions routed through the shared driver.
+        let boot = nodes[0].bootstrap_leader(0);
+        for f in nodes.iter_mut().skip(1) {
+            f.bootstrap_follower(0, 0);
+        }
+        {
+            let mut sink = WireSink { inboxes: &mut inboxes, commits: &mut commits };
+            driver::dispatch(0, true, boot, &mut sink);
+        }
+
+        let mut t: u64 = 1;
+        let mut next_req: u64 = 1;
+        for round in 0..400u32 {
+            // Inject a client command at the leader every few iterations.
+            if round % 10 == 0 && next_req <= 20 {
+                t += 1;
+                let mut sink = WireSink { inboxes: &mut inboxes, commits: &mut commits };
+                driver::step(
+                    &mut nodes[0],
+                    t,
+                    NodeInput::Client {
+                        req: next_req,
+                        cmd: Command::Put { key: next_req, value: next_req * 3 },
+                    },
+                    &mut sink,
+                );
+                next_req += 1;
+            }
+            // Deliver at most one queued message per node.
+            let mut delivered = false;
+            for i in 0..n {
+                if let Some(msg) = inboxes[i].pop_front() {
+                    delivered = true;
+                    t += 1;
+                    let mut sink = WireSink { inboxes: &mut inboxes, commits: &mut commits };
+                    driver::step(&mut nodes[i], t, NodeInput::Message(msg), &mut sink);
+                }
+            }
+            if !delivered {
+                // Wire idle: fire the earliest pending timer (the leader's
+                // next round/heartbeat — election timeouts are far larger
+                // than the simulated horizon, so the leader stays stable).
+                let (i, dl) = (0..n)
+                    .map(|i| (i, nodes[i].next_deadline()))
+                    .min_by_key(|&(_, dl)| dl)
+                    .unwrap();
+                t = t.max(dl);
+                let mut sink = WireSink { inboxes: &mut inboxes, commits: &mut commits };
+                driver::step(&mut nodes[i], t, NodeInput::Tick, &mut sink);
+            }
+        }
+
+        // Commit monotonicity: per node, ranges are contiguous and increasing.
+        for (i, ranges) in commits.iter().enumerate() {
+            let mut prev = 0u64;
+            for &(from, to) in ranges {
+                assert_eq!(
+                    from, prev,
+                    "{variant:?} node {i}: commit ranges must be contiguous"
+                );
+                assert!(to > from, "{variant:?} node {i}: commit must advance");
+                prev = to;
+            }
+            assert_eq!(
+                prev,
+                nodes[i].commit_index(),
+                "{variant:?} node {i}: recorded ranges must cover the commit index"
+            );
+        }
+
+        // Progress: the leader committed every injected request (+ no-op).
+        assert_eq!(
+            nodes[0].commit_index(),
+            21,
+            "{variant:?}: leader must commit the full workload"
+        );
+        assert!(
+            (1..n).any(|i| nodes[i].commit_index() > 0),
+            "{variant:?}: commits must propagate beyond the leader"
+        );
+
+        // Log-prefix consistency: every committed prefix agrees with the
+        // most-committed replica.
+        let reference = (0..n).max_by_key(|&i| nodes[i].commit_index()).unwrap();
+        for i in 0..n {
+            for idx in 1..=nodes[i].commit_index() {
+                assert_eq!(
+                    nodes[i].log().get(idx),
+                    nodes[reference].log().get(idx),
+                    "{variant:?}: node {i} disagrees on committed index {idx}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Repair path: a follower that misses gossip rounds recovers via classic
+// RPC catch-up.
+// ---------------------------------------------------------------------------
+
+fn sends_of(actions: &[epiraft::raft::Action]) -> Vec<(usize, Message)> {
+    actions
+        .iter()
+        .filter_map(|a| match a {
+            epiraft::raft::Action::Send { to, msg } => Some((*to, msg.clone())),
+            _ => None,
+        })
+        .collect()
+}
+
+#[test]
+fn follower_missing_rounds_recovers_via_classic_rpc_catch_up() {
+    for variant in [Variant::V1, Variant::V2] {
+        let mut cfg = ProtocolConfig::for_variant(3, variant);
+        cfg.fanout = 2; // every round targets both followers
+        let mut leader = Node::new(0, cfg.clone(), 1);
+        let mut f1 = Node::new(1, cfg.clone(), 2);
+        let mut f2 = Node::new(2, cfg.clone(), 3);
+        let boot = leader.bootstrap_leader(0);
+        f1.bootstrap_follower(0, 0);
+        f2.bootstrap_follower(0, 0);
+
+        // Deliver a batch of leader sends: everything for f1 flows (its
+        // replies and relays back to the leader too); f2's copies are lost.
+        fn deliver_except_f2(
+            leader: &mut Node,
+            f1: &mut Node,
+            t: &mut u64,
+            msgs: Vec<(usize, Message)>,
+        ) {
+            for (to, msg) in msgs {
+                if to == 1 {
+                    *t += 1;
+                    let acts = f1.on_message(*t, msg);
+                    for (to2, m2) in sends_of(&acts) {
+                        if to2 == 0 {
+                            *t += 1;
+                            leader.on_message(*t, m2);
+                        }
+                    }
+                }
+                // to == 2: dropped (f2 misses the round entirely)
+            }
+        }
+        let mut t: u64 = 10;
+        deliver_except_f2(&mut leader, &mut f1, &mut t, sends_of(&boot));
+
+        // Six rounds of traffic f2 never sees; the commit index races ahead
+        // of f2's (empty) log, past the gossip batch-base margin.
+        let mut last_round_msgs = Vec::new();
+        for k in 0..6u64 {
+            t += 1;
+            leader.client_request(t, 100 + k, Command::Put { key: k, value: k });
+            let dl = leader.next_deadline();
+            t = t.max(dl) + 1;
+            let acts = leader.tick(t);
+            last_round_msgs = sends_of(&acts);
+            deliver_except_f2(&mut leader, &mut f1, &mut t, last_round_msgs.clone());
+        }
+        assert!(
+            leader.commit_index() >= 2,
+            "{variant:?}: leader+f1 majority must commit without f2 (commit={})",
+            leader.commit_index()
+        );
+        assert_eq!(f2.last_index(), 0, "{variant:?}: f2 missed everything");
+
+        // f2 finally receives a round: the batch base has moved past its
+        // log end, so it must NACK (both variants respond on failure).
+        let (_, round_msg) = last_round_msgs
+            .iter()
+            .find(|(to, m)| *to == 2 && m.is_gossip())
+            .cloned()
+            .expect("fanout 2 targets f2 every round");
+        t += 1;
+        let nack_acts = f2.on_message(t, round_msg);
+        let nacks: Vec<_> = sends_of(&nack_acts)
+            .into_iter()
+            .filter(|(to, m)| *to == 0 && matches!(m, Message::AppendEntriesReply(_)))
+            .collect();
+        assert_eq!(nacks.len(), 1, "{variant:?}: mismatch must trigger a repair NACK");
+        if let Message::AppendEntriesReply(r) = &nacks[0].1 {
+            assert!(!r.success, "{variant:?}: the round must log-mismatch at f2");
+        }
+
+        // Leader answers with classic (non-gossip) catch-up RPCs; walk the
+        // repair conversation until it converges.
+        t += 1;
+        let mut repair_msgs = sends_of(&leader.on_message(t, nacks[0].1.clone()));
+        let mut classic_rpcs = 0;
+        let mut guard = 0;
+        while !repair_msgs.is_empty() && guard < 16 {
+            guard += 1;
+            let mut next = Vec::new();
+            for (to, msg) in repair_msgs.drain(..) {
+                if to != 2 {
+                    continue;
+                }
+                if let Message::AppendEntries(args) = &msg {
+                    assert!(
+                        args.gossip.is_none(),
+                        "{variant:?}: repair must use classic RPCs"
+                    );
+                    classic_rpcs += 1;
+                }
+                t += 1;
+                for (to2, m2) in sends_of(&f2.on_message(t, msg)) {
+                    if to2 == 0 {
+                        t += 1;
+                        next.extend(sends_of(&leader.on_message(t, m2)));
+                    }
+                }
+            }
+            repair_msgs = next;
+        }
+        assert!(classic_rpcs >= 1, "{variant:?}: at least one classic repair RPC");
+        assert_eq!(
+            f2.last_index(),
+            leader.last_index(),
+            "{variant:?}: f2 must catch up to the leader's log"
+        );
+        for idx in 1..=leader.commit_index() {
+            assert_eq!(
+                f2.log().get(idx),
+                leader.log().get(idx),
+                "{variant:?}: repaired log must match at {idx}"
+            );
+        }
+        assert!(leader.counters.repair_rpcs >= 1, "{variant:?}: repair path exercised");
+    }
+}
