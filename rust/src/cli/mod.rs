@@ -6,6 +6,7 @@
 //! epiraft fig        <4|5|6|7> [--quick] [--out NAME]
 //! epiraft headline   [--quick]
 //! epiraft ablate     <fanout|round|responses|coalesce|votes> [--quick]
+//! epiraft bench-pr2  [--quick] [--n N] [--rate R] [--seed S] [--out FILE]
 //! epiraft live       [--variant v] [--n N] [--clients C] [--secs S]
 //! epiraft artifacts-check [--dir artifacts]
 //! epiraft config-dump
@@ -121,7 +122,7 @@ impl Cli {
 pub const USAGE: &str = r#"epiraft — Raft with epidemic propagation (paper reproduction)
 
 USAGE:
-  epiraft run [--variant raft|v1|v2] [--n N] [--clients C] [--rate R]
+  epiraft run [--variant raft|v1|v2|pull] [--n N] [--clients C] [--rate R]
               [--secs S] [--seed X] [--config FILE] [--set k=v]... [--cold-start]
       Run one simulated experiment and print the report.
 
@@ -134,6 +135,11 @@ USAGE:
 
   epiraft ablate <fanout|round|responses|coalesce|votes> [--quick]
       Run an ablation study.
+
+  epiraft bench-pr2 [--quick] [--n N] [--rate R] [--seed S] [--out FILE]
+      Leader-egress comparison across all registered variants (default
+      n=51); writes BENCH_PR2.json and fails unless the pull variant's
+      leader egress is strictly below classic Raft's.
 
   epiraft live [--variant v] [--n N] [--clients C] [--secs S]
       Run the live thread-per-replica cluster (real time, real channels).

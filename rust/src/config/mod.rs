@@ -43,6 +43,13 @@ pub struct ProtocolConfig {
     /// effective for the gossip variants. Default off (as evaluated in the
     /// paper).
     pub gossip_votes: bool,
+    /// Anti-entropy pull (`pull` variant): period between a follower's pull
+    /// batches (µs).
+    pub pull_interval_us: u64,
+    /// Pull: how many random peers a follower asks per pull batch.
+    pub pull_fanout: usize,
+    /// Pull: cap on entries served per `PullReply`.
+    pub pull_reply_budget: usize,
 }
 
 impl Default for ProtocolConfig {
@@ -62,6 +69,9 @@ impl Default for ProtocolConfig {
             v2_success_responses: false,
             raft_coalesce_us: 0,
             gossip_votes: false,
+            pull_interval_us: 5_000,
+            pull_fanout: 2,
+            pull_reply_budget: 512,
         }
     }
 }
@@ -85,13 +95,20 @@ impl ProtocolConfig {
             return Err("intervals must be > 0".into());
         }
         if self.election_timeout_min_us <= self.heartbeat_interval_us
-            || (self.variant.is_gossip()
+            || (self.variant.uses_rounds()
                 && self.election_timeout_min_us <= self.idle_round_interval_us)
         {
             return Err("election timeout must exceed heartbeat/idle-round interval".into());
         }
         if self.max_entries_per_rpc == 0 {
             return Err("protocol.max_entries_per_rpc must be >= 1".into());
+        }
+        if self.pull_interval_us == 0 || self.pull_fanout == 0 || self.pull_reply_budget == 0 {
+            return Err("protocol.pull_* parameters must be >= 1".into());
+        }
+        if self.variant == Variant::Pull && self.election_timeout_min_us <= self.pull_interval_us
+        {
+            return Err("election timeout must exceed the pull interval".into());
         }
         Ok(())
     }
@@ -300,6 +317,11 @@ impl Config {
             }
             "protocol.raft_coalesce_us" => self.protocol.raft_coalesce_us = parse_u64(v)?,
             "protocol.gossip_votes" => self.protocol.gossip_votes = parse_bool(v)?,
+            "protocol.pull_interval_us" => self.protocol.pull_interval_us = parse_u64(v)?,
+            "protocol.pull_fanout" => self.protocol.pull_fanout = parse_u64(v)? as usize,
+            "protocol.pull_reply_budget" => {
+                self.protocol.pull_reply_budget = parse_u64(v)? as usize
+            }
             "network.latency_mean_us" => self.network.latency_mean_us = parse_f64(v)?,
             "network.latency_stddev_us" => self.network.latency_stddev_us = parse_f64(v)?,
             "network.latency_min_us" => self.network.latency_min_us = parse_u64(v)?,
@@ -436,6 +458,9 @@ pub fn dump(cfg: &Config) -> BTreeMap<String, String> {
     m.insert("protocol.v2_success_responses".into(), p.v2_success_responses.to_string());
     m.insert("protocol.raft_coalesce_us".into(), p.raft_coalesce_us.to_string());
     m.insert("protocol.gossip_votes".into(), p.gossip_votes.to_string());
+    m.insert("protocol.pull_interval_us".into(), p.pull_interval_us.to_string());
+    m.insert("protocol.pull_fanout".into(), p.pull_fanout.to_string());
+    m.insert("protocol.pull_reply_budget".into(), p.pull_reply_budget.to_string());
     m.insert("network.latency_mean_us".into(), cfg.network.latency_mean_us.to_string());
     m.insert("network.latency_stddev_us".into(), cfg.network.latency_stddev_us.to_string());
     m.insert("network.latency_min_us".into(), cfg.network.latency_min_us.to_string());
@@ -528,6 +553,26 @@ rate = 2500.5
 
         let mut cfg = Config::default();
         cfg.workload.warmup_us = cfg.workload.duration_us;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn pull_keys_parse_and_validate() {
+        let mut cfg = Config::default();
+        cfg.set("protocol.variant", "pull").unwrap();
+        cfg.set("protocol.pull_interval_us", "8000").unwrap();
+        cfg.set("protocol.pull_fanout", "3").unwrap();
+        cfg.set("protocol.pull_reply_budget", "256").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.protocol.variant, Variant::Pull);
+        assert_eq!(cfg.protocol.pull_interval_us, 8_000);
+        assert_eq!(cfg.protocol.pull_fanout, 3);
+        assert_eq!(cfg.protocol.pull_reply_budget, 256);
+        // A pull interval at/above the election timeout is rejected.
+        cfg.set("protocol.pull_interval_us", "200000").unwrap();
+        assert!(cfg.validate().is_err());
+        let mut cfg = Config::default();
+        cfg.set("protocol.pull_fanout", "0").unwrap();
         assert!(cfg.validate().is_err());
     }
 

@@ -1,0 +1,222 @@
+//! PR 2 measurement plumbing: the leader-egress comparison across every
+//! registered replication variant at the paper's n=51 scale.
+//!
+//! This is the scenario behind `epiraft bench-pr2`, the committed
+//! `BENCH_PR2.json`, and CI's `bench-smoke` gate (the pull variant's
+//! leader egress must be *strictly below* classic Raft's). Every later
+//! variant lands one registry row and shows up here automatically —
+//! the harness iterates the strategy registry, not a variant list.
+
+use super::figures::Scale;
+use crate::config::Config;
+use crate::raft::{strategy, Variant};
+use crate::sim::{run_experiment, SimReport};
+use crate::util::json::Json;
+
+/// One variant's egress measurements at the shared scenario point.
+#[derive(Clone, Debug)]
+pub struct EgressPoint {
+    pub variant: &'static str,
+    pub leader_egress_bytes: u64,
+    pub peer_egress_bytes_total: u64,
+    pub peer_egress_bytes_max: u64,
+    /// Leader bytes per committed entry — the normalized form of the claim
+    /// (robust to small throughput differences between variants).
+    pub leader_bytes_per_commit: f64,
+    pub throughput: f64,
+    pub completed: u64,
+    pub max_commit: u64,
+    pub safety_ok: bool,
+}
+
+impl EgressPoint {
+    fn from_report(r: &SimReport) -> EgressPoint {
+        EgressPoint {
+            variant: r.variant,
+            leader_egress_bytes: r.leader_egress_bytes,
+            peer_egress_bytes_total: r.peer_egress_bytes_total,
+            peer_egress_bytes_max: r.peer_egress_bytes_max,
+            leader_bytes_per_commit: r.leader_egress_bytes as f64 / r.max_commit.max(1) as f64,
+            throughput: r.throughput,
+            completed: r.completed,
+            max_commit: r.max_commit,
+            safety_ok: r.safety_ok,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(self.variant)),
+            ("leader_egress_bytes", Json::num(self.leader_egress_bytes as f64)),
+            (
+                "peer_egress_bytes_total",
+                Json::num(self.peer_egress_bytes_total as f64),
+            ),
+            ("peer_egress_bytes_max", Json::num(self.peer_egress_bytes_max as f64)),
+            ("leader_bytes_per_commit", Json::num(self.leader_bytes_per_commit)),
+            ("throughput", Json::num(self.throughput)),
+            ("completed", Json::num(self.completed as f64)),
+            ("max_commit", Json::num(self.max_commit as f64)),
+            ("safety_ok", Json::Bool(self.safety_ok)),
+        ])
+    }
+}
+
+/// The deterministic scenario: every registered variant under one config
+/// (same n, same seed, same rate-throttled workload), differing only in
+/// `protocol.variant`. Rate-throttled so each variant replicates the same
+/// offered load and raw egress bytes are directly comparable.
+pub fn leader_egress_comparison(scale: Scale, rate: f64, seed: u64) -> Vec<EgressPoint> {
+    strategy::REGISTRY
+        .iter()
+        .map(|info| {
+            let mut cfg = Config::default();
+            cfg.protocol = crate::config::ProtocolConfig::for_variant(scale.n, info.variant);
+            cfg.workload.clients = 10;
+            cfg.workload.rate = rate;
+            cfg.workload.duration_us = scale.duration_us;
+            cfg.workload.warmup_us = scale.warmup_us;
+            cfg.seed = seed;
+            let report = run_experiment(&cfg);
+            assert!(report.safety_ok, "{}: safety violated", info.name);
+            EgressPoint::from_report(&report)
+        })
+        .collect()
+}
+
+/// The CI gate: the pull variant's leader egress strictly below classic's
+/// (raw bytes *and* normalized per committed entry).
+pub fn egress_gate(points: &[EgressPoint]) -> Result<(), String> {
+    let find = |name: &str| {
+        points
+            .iter()
+            .find(|p| p.variant == name)
+            .ok_or_else(|| format!("gate: variant '{name}' missing from results"))
+    };
+    let raft = find(Variant::Raft.name())?;
+    let pull = find(Variant::Pull.name())?;
+    if !pull.safety_ok || !raft.safety_ok {
+        return Err("gate: safety violated in an egress run".into());
+    }
+    if pull.completed == 0 {
+        return Err("gate: pull variant served no requests".into());
+    }
+    if pull.leader_egress_bytes >= raft.leader_egress_bytes {
+        return Err(format!(
+            "gate: pull leader egress {} is not strictly below classic's {}",
+            pull.leader_egress_bytes, raft.leader_egress_bytes
+        ));
+    }
+    if pull.leader_bytes_per_commit >= raft.leader_bytes_per_commit {
+        return Err(format!(
+            "gate: pull leader bytes/commit {:.1} not below classic's {:.1}",
+            pull.leader_bytes_per_commit, raft.leader_bytes_per_commit
+        ));
+    }
+    Ok(())
+}
+
+/// Render the whole scenario (config + per-variant points + gate verdict)
+/// as the `BENCH_PR2.json` document.
+pub fn bench_pr2_json(
+    scale: Scale,
+    rate: f64,
+    seed: u64,
+    points: &[EgressPoint],
+) -> Json {
+    let gate = egress_gate(points);
+    Json::obj(vec![
+        ("bench", Json::str("leader-egress-by-variant")),
+        ("n", Json::num(scale.n as f64)),
+        ("rate", Json::num(rate)),
+        ("duration_us", Json::num(scale.duration_us as f64)),
+        ("warmup_us", Json::num(scale.warmup_us as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("variants", Json::arr(points.iter().map(|p| p.to_json()))),
+        ("gate_pull_below_raft", Json::Bool(gate.is_ok())),
+        (
+            "gate_detail",
+            match gate {
+                Ok(()) => Json::str("pull leader egress strictly below classic"),
+                Err(e) => Json::str(&e),
+            },
+        ),
+    ])
+}
+
+/// Print the comparison table.
+pub fn print_egress(points: &[EgressPoint]) {
+    println!("\n== leader egress by variant (replica-to-replica bytes, whole run) ==");
+    println!(
+        "{:<8} {:>16} {:>18} {:>16} {:>12} {:>10}",
+        "variant", "leader_bytes", "bytes/commit", "peer_total", "tput(req/s)", "safety"
+    );
+    for p in points {
+        println!(
+            "{:<8} {:>16} {:>18.1} {:>16} {:>12.1} {:>10}",
+            p.variant,
+            p.leader_egress_bytes,
+            p.leader_bytes_per_commit,
+            p.peer_egress_bytes_total,
+            p.throughput,
+            if p.safety_ok { "OK" } else { "VIOLATED" }
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scale {
+        Scale { reps: 1, duration_us: 1_500_000, warmup_us: 300_000, n: 7 }
+    }
+
+    #[test]
+    fn comparison_covers_every_registered_variant() {
+        let pts = leader_egress_comparison(tiny(), 300.0, 7);
+        assert_eq!(pts.len(), strategy::REGISTRY.len());
+        for p in &pts {
+            assert!(p.safety_ok, "{}", p.variant);
+            assert!(p.leader_egress_bytes > 0, "{}", p.variant);
+            assert!(p.max_commit > 0, "{}", p.variant);
+        }
+    }
+
+    #[test]
+    fn gate_passes_at_moderate_scale_and_rejects_tampering() {
+        // n=15, not the tiny n=7: the leader-egress gap scales with n
+        // (classic broadcasts to n-1; pull's seed fanout is constant), and
+        // at very small n the seed rounds' batch-base redundancy can eat
+        // the margin. CI's gate runs the claim at the paper's n=51.
+        let scale = Scale { reps: 1, duration_us: 1_500_000, warmup_us: 300_000, n: 15 };
+        let pts = leader_egress_comparison(scale, 500.0, 7);
+        egress_gate(&pts).expect("pull must beat classic on leader egress");
+        // Tamper: inflate pull's egress — the gate must fail loudly.
+        let mut bad = pts.clone();
+        for p in bad.iter_mut() {
+            if p.variant == "pull" {
+                p.leader_egress_bytes = u64::MAX;
+                p.leader_bytes_per_commit = f64::MAX;
+            }
+        }
+        assert!(egress_gate(&bad).is_err());
+    }
+
+    #[test]
+    fn bench_json_has_gate_and_variants() {
+        let pts = leader_egress_comparison(tiny(), 300.0, 7);
+        let j = bench_pr2_json(tiny(), 300.0, 7, &pts);
+        assert_eq!(
+            j.get("variants").and_then(|v| v.as_arr()).unwrap().len(),
+            strategy::REGISTRY.len()
+        );
+        // The verdict is present either way (its value at tiny n is not the
+        // claim — see gate_passes_at_moderate_scale_and_rejects_tampering).
+        assert!(j.get("gate_pull_below_raft").and_then(|g| g.as_bool()).is_some());
+        // Round-trips through the in-tree parser.
+        let text = j.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("bench").and_then(|b| b.as_str()), Some("leader-egress-by-variant"));
+    }
+}

@@ -290,9 +290,11 @@ mod tests {
     #[test]
     fn fig4_points_have_all_variants() {
         let pts = fig4(tiny_scale(), &[500.0]);
-        assert_eq!(pts.len(), 3);
+        assert_eq!(pts.len(), Variant::ALL.len());
         let variants: Vec<&str> = pts.iter().map(|p| p.variant).collect();
-        assert!(variants.contains(&"raft") && variants.contains(&"v1") && variants.contains(&"v2"));
+        for v in Variant::ALL {
+            assert!(variants.contains(&v.name()), "missing {v:?}");
+        }
         for p in &pts {
             assert!(p.throughput > 0.0);
             assert!(p.mean_latency_us > 0.0);
@@ -318,7 +320,7 @@ mod tests {
     #[test]
     fn fig6_runs_all_sizes() {
         let pts = fig6(tiny_scale(), &[3, 7]);
-        assert_eq!(pts.len(), 6);
+        assert_eq!(pts.len(), 2 * Variant::ALL.len());
         assert!(pts.iter().all(|p| p.leader_cpu > 0.0));
     }
 
@@ -338,6 +340,6 @@ mod tests {
         let path = write_points_json("test_fig4", &pts).unwrap();
         let text = std::fs::read_to_string(path).unwrap();
         let parsed = Json::parse(&text).unwrap();
-        assert_eq!(parsed.as_arr().unwrap().len(), 3);
+        assert_eq!(parsed.as_arr().unwrap().len(), Variant::ALL.len());
     }
 }

@@ -4,9 +4,13 @@
 
 pub mod ablation;
 pub mod bench_stats;
+pub mod egress;
 pub mod figures;
 
 pub use bench_stats::{bench, black_box, BenchResult};
+pub use egress::{
+    bench_pr2_json, egress_gate, leader_egress_comparison, print_egress, EgressPoint,
+};
 pub use figures::{
     fig4, fig4_default_rates, fig5, fig5_default_rates, fig6, fig6_default_ns, fig7, headline,
     print_points, run_point, write_cdfs_json, write_points_json, Headline, Point, Scale,

@@ -29,6 +29,7 @@ fn run(args: Vec<String>) -> Result<(), String> {
         "fig" => cmd_fig(&cli),
         "headline" => cmd_headline(&cli),
         "ablate" => cmd_ablate(&cli),
+        "bench-pr2" => cmd_bench_pr2(&cli),
         "live" => cmd_live(&cli),
         "fleet" => cmd_fleet(&cli),
         "artifacts-check" => cmd_artifacts_check(&cli),
@@ -83,6 +84,12 @@ fn cmd_run(cli: &Cli) -> Result<(), String> {
         );
         println!("elections          : {}", report.elections);
         println!("messages           : {}", report.messages);
+        println!(
+            "egress             : leader {} B, peers total {} B (max {} B)",
+            report.leader_egress_bytes,
+            report.peer_egress_bytes_total,
+            report.peer_egress_bytes_max
+        );
         println!("max commit index   : {}", report.max_commit);
         println!("safety             : {}", if report.safety_ok { "OK" } else { "VIOLATED" });
         println!(
@@ -226,6 +233,35 @@ fn cmd_ablate(cli: &Cli) -> Result<(), String> {
         }
         other => return Err(format!("unknown ablation '{other}'")),
     }
+    Ok(())
+}
+
+/// PR 2 bench: the deterministic n=51 leader-egress comparison across
+/// every registered variant. Writes `BENCH_PR2.json` (CI uploads it as an
+/// artifact) and exits non-zero if the pull variant's leader egress is not
+/// strictly below classic's — the `bench-smoke` gate.
+fn cmd_bench_pr2(cli: &Cli) -> Result<(), String> {
+    let mut s = scale(cli);
+    if let Some(n) = cli.get_u64("n")? {
+        s.n = n as usize;
+    }
+    let rate = cli.get_f64("rate")?.unwrap_or(500.0);
+    let seed = cli.get_u64("seed")?.unwrap_or(20230713);
+    let out = cli.get("out").unwrap_or("BENCH_PR2.json");
+    println!(
+        "== bench-pr2: leader egress by variant (n={}, rate={}, seed={}, {}s sim) ==",
+        s.n,
+        rate,
+        seed,
+        s.duration_us as f64 / 1e6
+    );
+    let points = harness::leader_egress_comparison(s, rate, seed);
+    harness::print_egress(&points);
+    let doc = harness::bench_pr2_json(s, rate, seed, &points);
+    std::fs::write(out, doc.to_string_pretty()).map_err(|e| format!("write {out}: {e}"))?;
+    println!("\nwrote {out}");
+    harness::egress_gate(&points)?;
+    println!("gate OK: pull leader egress strictly below classic");
     Ok(())
 }
 

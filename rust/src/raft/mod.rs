@@ -11,7 +11,8 @@ pub mod types;
 
 pub use log::{LogEntry, LogStore};
 pub use message::{
-    AppendEntriesArgs, AppendEntriesReply, GossipMeta, Message, RequestVoteArgs, RequestVoteReply,
+    AppendEntriesArgs, AppendEntriesReply, GossipMeta, Message, PullReplyArgs, PullRequestArgs,
+    RequestVoteArgs, RequestVoteReply,
 };
 pub use node::{Action, ClientResult, Counters, Node};
 pub use strategy::ReplicationStrategy;

@@ -70,6 +70,11 @@ pub struct Counters {
     pub merges: u64,
     pub entries_appended: u64,
     pub repair_rpcs: u64,
+    /// Anti-entropy pull traffic (the `pull` strategy).
+    pub pull_reqs_sent: u64,
+    pub pull_replies_sent: u64,
+    /// Pull replies that carried nothing new (duplicate/stale deliveries).
+    pub pull_stale: u64,
 }
 
 /// The protocol state machine for one replica.
@@ -340,6 +345,37 @@ impl Node {
             }
             Message::RequestVote(args) => self.on_request_vote(now, args, &mut actions),
             Message::RequestVoteReply(r) => self.on_vote_reply(now, r, &mut actions),
+            Message::PullRequest(req) => {
+                if req.term < self.current_term {
+                    // Teach a stale-term requester the current term with a
+                    // payload-free reply (its universal term rule steps it
+                    // up); never serve entries across terms.
+                    let reply = super::message::PullReplyArgs {
+                        term: self.current_term,
+                        from: self.id,
+                        prev_log_index: req.from_index,
+                        prev_log_term: req.from_term,
+                        matched: false,
+                        diverged: false,
+                        entries: std::sync::Arc::new(Vec::new()),
+                        commit_index: self.commit_index,
+                        leader_hint: self.leader_hint,
+                        known_round: 0,
+                    };
+                    self.counters.pull_replies_sent += 1;
+                    self.send(req.from, Message::PullReply(reply), &mut actions);
+                    return actions;
+                }
+                debug_assert_eq!(req.term, self.current_term);
+                self.with_strategy(|s, node| s.on_pull_request(node, now, req, &mut actions));
+            }
+            Message::PullReply(r) => {
+                if r.term < self.current_term {
+                    return actions; // stale reply from an old term
+                }
+                debug_assert_eq!(r.term, self.current_term);
+                self.with_strategy(|s, node| s.on_pull_reply(node, now, r, &mut actions));
+            }
         }
         actions
     }
@@ -354,6 +390,9 @@ impl Node {
             Role::Follower | Role::Candidate => {
                 if now >= self.election_deadline {
                     self.start_election(now, &mut actions);
+                } else if self.role == Role::Follower {
+                    // Strategy-side follower work (anti-entropy pulls).
+                    self.with_strategy(|s, node| s.on_follower_tick(node, now, &mut actions));
                 }
             }
         }
@@ -364,7 +403,10 @@ impl Node {
     pub fn next_deadline(&self) -> Time {
         match self.role {
             Role::Leader => self.strategy().leader_deadline(self),
-            _ => self.election_deadline,
+            Role::Follower => {
+                self.election_deadline.min(self.strategy().follower_deadline(self))
+            }
+            Role::Candidate => self.election_deadline,
         }
     }
 

@@ -18,11 +18,13 @@
 
 pub mod classic;
 pub mod gossip;
+pub mod pull;
 
 pub use classic::ClassicStrategy;
 pub use gossip::GossipStrategy;
+pub use pull::PullStrategy;
 
-use super::message::{AppendEntriesArgs, AppendEntriesReply};
+use super::message::{AppendEntriesArgs, AppendEntriesReply, PullReplyArgs, PullRequestArgs};
 use super::node::{Action, Counters, Node};
 use super::types::{Time, Variant};
 use crate::config::ProtocolConfig;
@@ -73,6 +75,18 @@ pub trait ReplicationStrategy: Send {
     /// Earliest time at which `on_leader_tick` has work to do.
     fn leader_deadline(&self, node: &Node) -> Time;
 
+    /// Follower timer fired (the node dispatches this before checking the
+    /// election timeout). Default: followers are purely reactive — only
+    /// strategies with follower-initiated traffic (anti-entropy pull)
+    /// override this pair of hooks.
+    fn on_follower_tick(&mut self, _node: &mut Node, _now: Time, _actions: &mut Vec<Action>) {}
+
+    /// Earliest time at which `on_follower_tick` has work to do
+    /// (`Time::MAX` = never; the node still arms the election timeout).
+    fn follower_deadline(&self, _node: &Node) -> Time {
+        Time::MAX
+    }
+
     /// Incoming AppendEntries with `args.term == node.current_term`
     /// (stale-term rejection and candidate step-down already handled by the
     /// node). Covers the follower paths and the leader receiving its own
@@ -94,6 +108,30 @@ pub trait ReplicationStrategy: Send {
         reply: AppendEntriesReply,
         actions: &mut Vec<Action>,
     );
+
+    /// Incoming anti-entropy `PullRequest` with `args.term ==
+    /// node.current_term` (stale terms answered by the node itself).
+    /// Default: drop — only the pull strategy speaks this protocol, and a
+    /// homogeneous cluster never cross-delivers it.
+    fn on_pull_request(
+        &mut self,
+        _node: &mut Node,
+        _now: Time,
+        _req: PullRequestArgs,
+        _actions: &mut Vec<Action>,
+    ) {
+    }
+
+    /// Incoming anti-entropy `PullReply` with `reply.term ==
+    /// node.current_term`. Default: drop.
+    fn on_pull_reply(
+        &mut self,
+        _node: &mut Node,
+        _now: Time,
+        _reply: PullReplyArgs,
+        _actions: &mut Vec<Action>,
+    ) {
+    }
 
     /// The node's term changed (stepped down or started an election).
     /// Reset per-term strategy state.
@@ -125,12 +163,17 @@ fn build_v2(cfg: &ProtocolConfig) -> Box<dyn ReplicationStrategy> {
     Box::new(GossipStrategy::v2(cfg.n))
 }
 
+fn build_pull(_cfg: &ProtocolConfig) -> Box<dyn ReplicationStrategy> {
+    Box::new(PullStrategy::new())
+}
+
 /// The strategy registry: every protocol variant maps to a constructor.
 /// This is the single point where `Variant` is resolved to behaviour.
 pub static REGISTRY: &[StrategyInfo] = &[
     StrategyInfo { variant: Variant::Raft, name: "raft", build: build_classic },
     StrategyInfo { variant: Variant::V1, name: "v1", build: build_v1 },
     StrategyInfo { variant: Variant::V2, name: "v2", build: build_v2 },
+    StrategyInfo { variant: Variant::Pull, name: "pull", build: build_pull },
 ];
 
 /// Build the strategy for `cfg.variant`.
@@ -175,8 +218,23 @@ mod tests {
         assert!(!build(&cfg(Variant::Raft)).is_gossip());
         assert!(build(&cfg(Variant::V1)).is_gossip());
         assert!(build(&cfg(Variant::V2)).is_gossip());
+        assert!(!build(&cfg(Variant::Pull)).is_gossip());
         assert!(build(&cfg(Variant::Raft)).epidemic().is_none());
         assert!(build(&cfg(Variant::V1)).epidemic().is_none());
         assert!(build(&cfg(Variant::V2)).epidemic().is_some());
+        assert!(build(&cfg(Variant::Pull)).epidemic().is_none());
+    }
+
+    #[test]
+    fn only_pull_has_follower_side_work() {
+        let node = |v| crate::raft::Node::new(1, ProtocolConfig::for_variant(5, v), 1);
+        for v in [Variant::Raft, Variant::V1, Variant::V2] {
+            let n = node(v);
+            let cfg = ProtocolConfig::for_variant(5, v);
+            assert_eq!(build(&cfg).follower_deadline(&n), Time::MAX, "{v:?}");
+        }
+        let n = node(Variant::Pull);
+        let cfg = ProtocolConfig::for_variant(5, Variant::Pull);
+        assert!(build(&cfg).follower_deadline(&n) < Time::MAX);
     }
 }

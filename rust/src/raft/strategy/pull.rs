@@ -1,0 +1,543 @@
+//! Anti-entropy **pull** replication (ROADMAP follow-on to the paper's
+//! push variants; cf. Fast Raft's network-adaptive dissemination,
+//! arXiv:2506.17793, and BlackWater Raft's off-critical-path laggards,
+//! arXiv:2203.07920).
+//!
+//! The paper's V1/V2 still have the leader *push* every round to `F`
+//! targets and the relays amplify from there. Here the flow inverts:
+//!
+//! * **Seed rounds (leader)** — the leader periodically pushes one bounded
+//!   batch to the next `F` targets of its permutation, exactly like a §3.1
+//!   round (same `RoundLC` stamp, same commit-history batch base), so new
+//!   entries always have at least one source besides the leader. Receivers
+//!   do **not** relay.
+//! * **Pulls (followers)** — every `pull_interval_us` a follower sends
+//!   `PullRequest{from_index, from_term, known_round}` to the next
+//!   `pull_fanout` targets of its own permutation. The leader *or any
+//!   fresher follower* answers with a `PullReply` of at most
+//!   `pull_reply_budget` entries continuing the requester's log.
+//! * **Liveness (push-pull round spreading)** — requests and replies both
+//!   advertise the highest seed round the sender has heard of. Learning a
+//!   fresher round is evidence the leader was alive after our previous
+//!   evidence, so it resets the election timer; when the leader dies the
+//!   advertised round stops advancing, timers expire, and an election
+//!   proceeds normally.
+//! * **Commit** — leader-driven (classic majority match). Followers ack
+//!   the leader only when their durable current-term prefix *advances*
+//!   (deduplicated by `last_acked`), and the leader additionally harvests
+//!   free match evidence from current-term pull-request anchors it serves.
+//!
+//! Safety notes, since entries now arrive from non-leader peers:
+//!
+//! * a responder only serves entries when its log holds the requester's
+//!   `(from_index, from_term)` anchor — Raft's log-matching argument then
+//!   makes the served continuation consistent with the requester's prefix;
+//! * a follower only *acks* indices whose entry term equals the current
+//!   term: only the current leader creates current-term entries, so a
+//!   matching `(index, current_term)` entry pins the whole prefix to the
+//!   leader's log (stale tails are never claimed, so the leader's
+//!   majority-match commit rule never counts divergent logs);
+//! * commit indices are adopted from a matched reply only up to the prefix
+//!   verified through that reply (`min(reply.commit_index, covered)`).
+
+use super::super::message::{
+    AppendEntriesArgs, AppendEntriesReply, GossipMeta, Message, PullReplyArgs, PullRequestArgs,
+};
+use super::super::node::{Action, Counters, Node};
+use super::super::types::{LogIndex, Role, Time};
+use super::ReplicationStrategy;
+use crate::epidemic::{RoundClass, RoundClock};
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Follower-initiated anti-entropy replication with leader seed rounds.
+pub struct PullStrategy {
+    /// Seed-round logical clock — also tracks the freshest round this node
+    /// has *heard of* (directly or via pull advertisements), which is the
+    /// leader-liveness signal.
+    round_clock: RoundClock,
+    /// Next seed round (leader only; `Time::MAX` when not leading).
+    next_round_at: Time,
+    /// Commit-index snapshots of the last few seed rounds (same batch-base
+    /// margin as `GossipStrategy::start_round`: keeps a follower that missed
+    /// a round log-matching the next one instead of NACKing into repair).
+    commit_history: VecDeque<LogIndex>,
+    /// Next follower pull (any node starts pulling as soon as it is a
+    /// follower; jittered per interval from the node's RNG).
+    next_pull_at: Time,
+    /// Highest index already acked to the leader (ack dedup; per term).
+    last_acked: LogIndex,
+    /// A responder reported our anchor diverged: re-anchor the next pull at
+    /// our commit index (the committed prefix is globally agreed).
+    anchor_at_commit: bool,
+}
+
+impl PullStrategy {
+    pub fn new() -> Self {
+        Self {
+            round_clock: RoundClock::new(),
+            next_round_at: Time::MAX,
+            commit_history: VecDeque::with_capacity(4),
+            next_pull_at: 0,
+            last_acked: 0,
+            anchor_at_commit: false,
+        }
+    }
+
+    /// Fold an advertised seed round in; a fresher round is leader-liveness
+    /// evidence and resets the follower's election timer.
+    fn note_round(&mut self, node: &mut Node, now: Time, round: u64) {
+        if round == 0 {
+            return;
+        }
+        if self.round_clock.observe(node.current_term, round) == RoundClass::Fresh
+            && node.role == Role::Follower
+        {
+            node.election_deadline = node.random_election_deadline(now);
+        }
+    }
+
+    /// Classic majority-match commit at the leader.
+    fn advance(&mut self, node: &mut Node, actions: &mut Vec<Action>) {
+        if let Some(candidate) = node.classic_commit_candidate() {
+            node.advance_commit(candidate, actions);
+        }
+    }
+
+    /// Leader seed round: stamp `RoundLC`, batch from the lagged commit
+    /// base, push to the next `F` permutation targets (no relaying).
+    fn start_round(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        debug_assert_eq!(node.role, Role::Leader);
+        let round = self.round_clock.start_round(node.current_term);
+        node.counters.rounds_started += 1;
+        let base = self
+            .commit_history
+            .front()
+            .copied()
+            .unwrap_or(0)
+            .min(node.commit_index);
+        self.commit_history.push_back(node.commit_index);
+        if self.commit_history.len() > 3 {
+            self.commit_history.pop_front();
+        }
+        let last = node.log.last_index();
+        let hi = last.min(base + node.cfg.max_entries_per_rpc as LogIndex);
+        let entries = node.log.slice(base, hi);
+        let prev_term = node.log.term_at(base).expect("commit index within log");
+        let fanout = node.cfg.fanout;
+        let targets = node.perm.next_round(fanout);
+        for to in targets {
+            let args = AppendEntriesArgs {
+                term: node.current_term,
+                leader: node.id,
+                prev_log_index: base,
+                prev_log_term: prev_term,
+                entries: Arc::clone(&entries),
+                leader_commit: node.commit_index,
+                gossip: Some(GossipMeta { round, hops: 0, epidemic: None }),
+                seq: 0,
+            };
+            node.counters.gossip_sent += 1;
+            node.send(to, Message::AppendEntries(args), actions);
+        }
+        let interval = if node.log.last_index() > node.commit_index {
+            node.cfg.round_interval_us
+        } else {
+            node.cfg.idle_round_interval_us
+        };
+        self.next_round_at = now + interval;
+    }
+
+    /// Ack durable progress to the leader — but only the prefix pinned to
+    /// the leader's log by a current-term entry, and only when it advanced.
+    fn ack_progress(&mut self, node: &mut Node, actions: &mut Vec<Action>) {
+        if node.role != Role::Follower {
+            return;
+        }
+        let Some(leader) = node.leader_hint else { return };
+        if leader == node.id {
+            return;
+        }
+        // Log terms are monotone, so the log holds a current-term entry iff
+        // its last entry is from the current term — and then the whole
+        // prefix up to last_index matches the leader's log.
+        if node.log.last_term() != node.current_term {
+            return;
+        }
+        let m = node.log.last_index();
+        if m <= self.last_acked {
+            return;
+        }
+        self.last_acked = m;
+        let reply = AppendEntriesReply {
+            term: node.current_term,
+            from: node.id,
+            success: true,
+            match_hint: m,
+            round: None,
+            epidemic: None,
+            seq: 0,
+        };
+        node.counters.replies_sent += 1;
+        node.send(leader, Message::AppendEntriesReply(reply), actions);
+    }
+
+    /// Shared follower append handling (classic repair RPCs and fresh seed
+    /// rounds): apply, bound commit by the leader's, fold the covered
+    /// prefix into the ack dedup, reply to the leader.
+    fn apply_and_reply(
+        &mut self,
+        node: &mut Node,
+        args: &AppendEntriesArgs,
+        round: Option<u64>,
+        actions: &mut Vec<Action>,
+    ) {
+        let (success, match_hint) = node.apply_append_entries(args);
+        if success {
+            self.anchor_at_commit = false;
+            let bound = args.leader_commit.min(match_hint);
+            if bound > node.commit_index {
+                node.advance_commit(bound, actions);
+            }
+            self.last_acked = self.last_acked.max(match_hint);
+        }
+        let reply = AppendEntriesReply {
+            term: node.current_term,
+            from: node.id,
+            success,
+            match_hint,
+            round,
+            epidemic: None,
+            seq: args.seq,
+        };
+        node.counters.replies_sent += 1;
+        node.send(args.leader, Message::AppendEntriesReply(reply), actions);
+    }
+
+    /// Classic (non-gossip) AppendEntries at a follower — the repair path,
+    /// identical to the gossip variants' handling.
+    fn on_classic_append(
+        &mut self,
+        node: &mut Node,
+        now: Time,
+        args: AppendEntriesArgs,
+        actions: &mut Vec<Action>,
+    ) {
+        node.election_deadline = node.random_election_deadline(now);
+        self.apply_and_reply(node, &args, None, actions);
+    }
+
+    /// Seed round at a follower: apply once per round (RoundLC dedup),
+    /// respond to the leader, never relay.
+    fn on_seed_round(
+        &mut self,
+        node: &mut Node,
+        now: Time,
+        args: AppendEntriesArgs,
+        round: u64,
+        actions: &mut Vec<Action>,
+    ) {
+        match self.round_clock.observe(node.current_term, round) {
+            RoundClass::Duplicate => {
+                node.counters.gossip_recv_dup += 1;
+                // The round number may have been learned through a pull
+                // advertisement *before* the seed itself arrived (or the
+                // network duplicated the seed) — the batch can still be
+                // new. Reconcile silently (idempotent); durable progress
+                // flows to the leader through the deduplicated ack path,
+                // and the election timer is untouched (the advertisement
+                // already was the liveness evidence for this round).
+                let (success, match_hint) = node.apply_append_entries(&args);
+                if success {
+                    self.anchor_at_commit = false;
+                    let bound = args.leader_commit.min(match_hint);
+                    if bound > node.commit_index {
+                        node.advance_commit(bound, actions);
+                    }
+                    self.ack_progress(node, actions);
+                }
+            }
+            RoundClass::Fresh => {
+                node.counters.gossip_recv_fresh += 1;
+                // A fresh round is a leader heartbeat.
+                node.election_deadline = node.random_election_deadline(now);
+                self.apply_and_reply(node, &args, Some(round), actions);
+            }
+        }
+    }
+
+    /// Send one batch of pull requests over the permutation.
+    fn send_pulls(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        let (from_index, from_term) = if self.anchor_at_commit {
+            let ci = node.commit_index;
+            (ci, node.log.term_at(ci).unwrap_or(0))
+        } else {
+            (node.log.last_index(), node.log.last_term())
+        };
+        let req = PullRequestArgs {
+            term: node.current_term,
+            from: node.id,
+            from_index,
+            from_term,
+            known_round: self.round_clock.current(node.current_term),
+        };
+        let fanout = node.cfg.pull_fanout;
+        for to in node.perm.next_round(fanout) {
+            node.counters.pull_reqs_sent += 1;
+            node.send(to, Message::PullRequest(req), actions);
+        }
+        // Jitter the next pull so a cohort bootstrapped together
+        // desynchronises (deterministic per node seed).
+        let interval = node.cfg.pull_interval_us;
+        let jitter = node.rng.next_below((interval / 4).max(1));
+        self.next_pull_at = now + interval + jitter;
+    }
+}
+
+impl Default for PullStrategy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReplicationStrategy for PullStrategy {
+    fn name(&self) -> &'static str {
+        "pull"
+    }
+
+    fn on_become_leader(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        self.commit_history.clear();
+        self.anchor_at_commit = false;
+        if node.n() == 1 {
+            // Trivial cluster: the leader alone is a majority.
+            self.advance(node, actions);
+        }
+        self.start_round(node, now, actions);
+    }
+
+    fn on_client_request(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        if node.n() == 1 {
+            self.advance(node, actions);
+        }
+        // Pull an idle-scheduled seed round in so fresh entries get a
+        // source promptly.
+        let active_at = now + node.cfg.round_interval_us;
+        if self.next_round_at > active_at {
+            self.next_round_at = active_at;
+        }
+    }
+
+    fn on_leader_tick(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        if now >= self.next_round_at {
+            self.start_round(node, now, actions);
+        }
+        node.retransmit_repairs(now, actions);
+    }
+
+    fn leader_deadline(&self, node: &Node) -> Time {
+        let mut dl = self.next_round_at;
+        for f in node.followers.iter() {
+            if f.repairing {
+                dl = dl.min(f.last_rpc_at + node.cfg.rpc_timeout_us);
+            }
+        }
+        dl
+    }
+
+    fn on_follower_tick(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        if now >= self.next_pull_at {
+            self.send_pulls(node, now, actions);
+        }
+    }
+
+    fn follower_deadline(&self, _node: &Node) -> Time {
+        self.next_pull_at
+    }
+
+    fn on_append_entries(
+        &mut self,
+        node: &mut Node,
+        now: Time,
+        args: AppendEntriesArgs,
+        actions: &mut Vec<Action>,
+    ) {
+        if node.role == Role::Leader {
+            // Equal-term message back at the leader: pull never relays, so
+            // this is only reachable via network duplication — drop.
+            return;
+        }
+        node.leader_hint = Some(args.leader);
+        match args.gossip.as_ref().map(|g| g.round) {
+            None => self.on_classic_append(node, now, args, actions),
+            Some(round) => self.on_seed_round(node, now, args, round, actions),
+        }
+    }
+
+    fn on_append_reply(
+        &mut self,
+        node: &mut Node,
+        now: Time,
+        reply: AppendEntriesReply,
+        actions: &mut Vec<Action>,
+    ) {
+        if node.role != Role::Leader || reply.term < node.current_term {
+            return; // stale
+        }
+        debug_assert_eq!(reply.term, node.current_term);
+        node.update_follower_on_reply(now, &reply, actions);
+        if reply.success {
+            self.advance(node, actions);
+        }
+    }
+
+    fn on_pull_request(
+        &mut self,
+        node: &mut Node,
+        now: Time,
+        req: PullRequestArgs,
+        actions: &mut Vec<Action>,
+    ) {
+        debug_assert_eq!(req.term, node.current_term);
+        // Liveness news flows requester -> responder too (push-pull).
+        self.note_round(node, now, req.known_round);
+        // The leader harvests free match evidence: a current-term anchor it
+        // also holds pins the requester's prefix to the leader's log.
+        if node.role == Role::Leader
+            && req.from_term == node.current_term
+            && node.log.matches(req.from_index, req.from_term)
+        {
+            let slot = &mut node.followers[req.from];
+            slot.match_index = slot.match_index.max(req.from_index);
+            slot.next_index = slot.next_index.max(req.from_index + 1);
+            self.advance(node, actions);
+        }
+        let have = node.log.last_index();
+        let our_round = self.round_clock.current(node.current_term);
+        let reply = if have > req.from_index {
+            match node.log.term_at(req.from_index) {
+                Some(t) if t == req.from_term => {
+                    // Serve a bounded continuation of the requester's log.
+                    let hi = have.min(req.from_index + node.cfg.pull_reply_budget as LogIndex);
+                    let entries = node.log.slice(req.from_index, hi);
+                    Some(PullReplyArgs {
+                        term: node.current_term,
+                        from: node.id,
+                        prev_log_index: req.from_index,
+                        prev_log_term: req.from_term,
+                        matched: true,
+                        diverged: false,
+                        entries,
+                        commit_index: node.commit_index,
+                        leader_hint: node.leader_hint,
+                        known_round: our_round,
+                    })
+                }
+                Some(_) => {
+                    // Positive divergence at the anchor: tell the requester
+                    // to re-anchor at its commit index.
+                    Some(PullReplyArgs {
+                        term: node.current_term,
+                        from: node.id,
+                        prev_log_index: req.from_index,
+                        prev_log_term: req.from_term,
+                        matched: false,
+                        diverged: true,
+                        entries: Arc::new(Vec::new()),
+                        commit_index: node.commit_index,
+                        leader_hint: node.leader_hint,
+                        known_round: our_round,
+                    })
+                }
+                None => None, // anchor past our log despite a longer log: unreachable
+            }
+        } else if our_round > req.known_round {
+            // Nothing to serve, but we have fresher leader-liveness news:
+            // send a payload-free advertisement.
+            Some(PullReplyArgs {
+                term: node.current_term,
+                from: node.id,
+                prev_log_index: req.from_index,
+                prev_log_term: req.from_term,
+                matched: false,
+                diverged: false,
+                entries: Arc::new(Vec::new()),
+                commit_index: node.commit_index,
+                leader_hint: node.leader_hint,
+                known_round: our_round,
+            })
+        } else {
+            None // both equally informed: stay silent (idle steady state)
+        };
+        if let Some(r) = reply {
+            node.counters.pull_replies_sent += 1;
+            node.send(req.from, Message::PullReply(r), actions);
+        }
+    }
+
+    fn on_pull_reply(
+        &mut self,
+        node: &mut Node,
+        now: Time,
+        reply: PullReplyArgs,
+        actions: &mut Vec<Action>,
+    ) {
+        debug_assert_eq!(reply.term, node.current_term);
+        self.note_round(node, now, reply.known_round);
+        if node.role != Role::Follower {
+            return;
+        }
+        if node.leader_hint.is_none() {
+            node.leader_hint = reply.leader_hint;
+        }
+        if !reply.matched {
+            if reply.diverged {
+                self.anchor_at_commit = true;
+            }
+            return;
+        }
+        // The anchor may have moved since we asked (another reply landed
+        // first, or repair truncated our tail) — re-verify before use.
+        if !node.log.matches(reply.prev_log_index, reply.prev_log_term) {
+            node.counters.pull_stale += 1;
+            return;
+        }
+        if reply.entries.is_empty() {
+            return;
+        }
+        let before = node.log.last_index();
+        let covered = node.log.reconcile(reply.prev_log_index, &reply.entries);
+        node.counters.entries_appended += reply.entries.len() as u64;
+        if node.log.last_index() <= before && covered <= before {
+            // Overlapping duplicate: nothing new (idempotent reconcile).
+            node.counters.pull_stale += 1;
+        }
+        self.anchor_at_commit = false;
+        // Adopt the responder's commit index, but only over the prefix this
+        // reply verified as shared.
+        let bound = reply.commit_index.min(covered);
+        if bound > node.commit_index {
+            node.advance_commit(bound, actions);
+        }
+        self.ack_progress(node, actions);
+    }
+
+    fn on_term_change(&mut self) {
+        self.next_round_at = Time::MAX;
+        self.commit_history.clear();
+        self.last_acked = 0;
+        self.anchor_at_commit = false;
+        // round_clock scopes itself to the term on the next observe/stamp;
+        // next_pull_at is kept — anti-entropy continues across terms.
+    }
+
+    fn counters(&self, c: &Counters) -> Vec<(&'static str, u64)> {
+        vec![
+            ("rounds_started", c.rounds_started),
+            ("seed_sent", c.gossip_sent),
+            ("pull_reqs_sent", c.pull_reqs_sent),
+            ("pull_replies_sent", c.pull_replies_sent),
+            ("pull_stale", c.pull_stale),
+            ("repair_rpcs", c.repair_rpcs),
+        ]
+    }
+}

@@ -32,11 +32,15 @@ pub enum Role {
 ///   responses, RPC repair fallback.
 /// * `V2` — V1 plus the decentralised commit structures (§3.2):
 ///   `Bitmap` / `MaxCommit` / `NextCommit` with `Update` and `Merge`.
+/// * `Pull` — anti-entropy pull (ROADMAP follow-on): the leader only seeds
+///   each round to `F` peers; followers fetch missing batches from random
+///   peers with `PullRequest`/`PullReply`, cutting leader egress further.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Variant {
     Raft,
     V1,
     V2,
+    Pull,
 }
 
 impl Variant {
@@ -46,11 +50,19 @@ impl Variant {
         matches!(self, Variant::V1 | Variant::V2)
     }
 
+    /// Leader paced by periodic rounds (gossip variants and pull's seed
+    /// rounds) — these need the election timeout to exceed the idle round
+    /// interval (config validation).
+    pub fn uses_rounds(self) -> bool {
+        matches!(self, Variant::V1 | Variant::V2 | Variant::Pull)
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             Variant::Raft => "raft",
             Variant::V1 => "v1",
             Variant::V2 => "v2",
+            Variant::Pull => "pull",
         }
     }
 
@@ -59,11 +71,12 @@ impl Variant {
             "raft" | "original" => Some(Variant::Raft),
             "v1" | "gossip" => Some(Variant::V1),
             "v2" | "epidemic" => Some(Variant::V2),
+            "pull" | "anti-entropy" => Some(Variant::Pull),
             _ => None,
         }
     }
 
-    pub const ALL: [Variant; 3] = [Variant::Raft, Variant::V1, Variant::V2];
+    pub const ALL: [Variant; 4] = [Variant::Raft, Variant::V1, Variant::V2, Variant::Pull];
 }
 
 /// Majority size for an `n`-process cluster: ⌊n/2⌋ + 1.
@@ -92,6 +105,7 @@ mod tests {
         }
         assert_eq!(Variant::parse("gossip"), Some(Variant::V1));
         assert_eq!(Variant::parse("epidemic"), Some(Variant::V2));
+        assert_eq!(Variant::parse("anti-entropy"), Some(Variant::Pull));
         assert_eq!(Variant::parse("nope"), None);
     }
 
@@ -100,5 +114,8 @@ mod tests {
         assert!(!Variant::Raft.is_gossip());
         assert!(Variant::V1.is_gossip());
         assert!(Variant::V2.is_gossip());
+        assert!(!Variant::Pull.is_gossip(), "pull disseminates by request, not relay");
+        assert!(!Variant::Raft.uses_rounds());
+        assert!(Variant::Pull.uses_rounds());
     }
 }

@@ -32,6 +32,13 @@ pub struct SimReport {
     pub leader_commit_interval: Histogram,
     pub elections: u64,
     pub messages: u64,
+    /// Replica-to-replica egress, split leader vs peers (PR 2: the pull
+    /// variant's claim is lower *leader* egress; `Message::wire_bytes` is
+    /// the size model). Whole-run totals, not warmup-clipped: egress is a
+    /// capacity claim about the leader's NIC, not a latency statistic.
+    pub leader_egress_bytes: u64,
+    pub peer_egress_bytes_total: u64,
+    pub peer_egress_bytes_max: u64,
     /// Cross-replica committed-prefix agreement held at end of run.
     pub safety_ok: bool,
     /// Highest commit index across replicas at end of run.
@@ -67,6 +74,12 @@ impl SimReport {
             ),
             ("elections", Json::num(self.elections as f64)),
             ("messages", Json::num(self.messages as f64)),
+            ("leader_egress_bytes", Json::num(self.leader_egress_bytes as f64)),
+            (
+                "peer_egress_bytes_total",
+                Json::num(self.peer_egress_bytes_total as f64),
+            ),
+            ("peer_egress_bytes_max", Json::num(self.peer_egress_bytes_max as f64)),
             ("safety_ok", Json::Bool(self.safety_ok)),
             ("max_commit", Json::num(self.max_commit as f64)),
             ("events_processed", Json::num(self.events_processed as f64)),
@@ -90,6 +103,10 @@ pub struct Collector {
     pub leader_commit_interval: Histogram,
     pub messages: u64,
     pub events: u64,
+    /// Replica-to-replica bytes sent per replica (`Message::wire_bytes`
+    /// model), charged at send time whether or not the network drops the
+    /// message — egress is what leaves the NIC.
+    pub egress_bytes: Vec<u64>,
 }
 
 impl Collector {
@@ -105,6 +122,7 @@ impl Collector {
             leader_commit_interval: Histogram::default(),
             messages: 0,
             events: 0,
+            egress_bytes: vec![0; n],
         }
     }
 

@@ -106,6 +106,9 @@ struct SimSink<'a> {
 impl ActionSink for SimSink<'_> {
     fn send(&mut self, from: NodeId, to: NodeId, msg: Message) {
         self.collector.messages += 1;
+        // Egress accounting happens before the loss model: the bytes left
+        // the sender's NIC either way.
+        self.collector.egress_bytes[from] += msg.wire_bytes();
         if self.net.drops(from, to) {
             return;
         }
@@ -512,6 +515,16 @@ impl Simulation {
             followers.iter().sum::<f64>() / followers.len() as f64
         };
         let follower_cpu_max = followers.iter().cloned().fold(0.0, f64::max);
+        let leader_egress_bytes = self.collector.egress_bytes[leader];
+        let peer_egress_bytes_total = (0..n)
+            .filter(|&i| i != leader)
+            .map(|i| self.collector.egress_bytes[i])
+            .sum();
+        let peer_egress_bytes_max = (0..n)
+            .filter(|&i| i != leader)
+            .map(|i| self.collector.egress_bytes[i])
+            .max()
+            .unwrap_or(0);
         SimReport {
             variant: self.cfg.protocol.variant.name(),
             n,
@@ -530,6 +543,9 @@ impl Simulation {
             leader_commit_interval: self.collector.leader_commit_interval.clone(),
             elections: self.elections,
             messages: self.collector.messages,
+            leader_egress_bytes,
+            peer_egress_bytes_total,
+            peer_egress_bytes_max,
             safety_ok,
             max_commit: ref_node.commit_index(),
             events_processed: self.events,
@@ -668,6 +684,49 @@ mod tests {
             assert!(report.safety_ok, "{variant:?} under burst loss");
             assert!(report.completed > 0, "{variant:?} must serve under burst loss");
         }
+    }
+
+    #[test]
+    fn egress_accounting_is_populated_and_split() {
+        let report = run_experiment(&quick_cfg(5, Variant::V1));
+        assert!(report.leader_egress_bytes > 0, "leader sent rounds");
+        assert!(report.peer_egress_bytes_total > 0, "followers replied/relayed");
+        assert!(report.peer_egress_bytes_max <= report.peer_egress_bytes_total);
+    }
+
+    #[test]
+    fn pull_cuts_leader_egress_vs_classic() {
+        // The PR 2 claim at sim-test scale: with the leader only seeding F
+        // targets per round while followers pull from each other, its
+        // egress must come in below classic Raft's per-request broadcast.
+        let mk = |variant| {
+            let mut cfg = quick_cfg(15, variant);
+            cfg.workload.rate = 300.0;
+            cfg
+        };
+        let raft = run_experiment(&mk(Variant::Raft));
+        let pull = run_experiment(&mk(Variant::Pull));
+        assert!(pull.safety_ok && pull.completed > 0);
+        assert!(raft.leader_egress_bytes > 0 && pull.leader_egress_bytes > 0);
+        assert!(
+            pull.leader_egress_bytes < raft.leader_egress_bytes,
+            "pull leader egress {} must be below classic {}",
+            pull.leader_egress_bytes,
+            raft.leader_egress_bytes
+        );
+        // The work does not vanish — it moves to the peers.
+        assert!(pull.peer_egress_bytes_total > pull.leader_egress_bytes);
+    }
+
+    #[test]
+    fn pull_variant_completes_requests_with_tiny_seed_fanout() {
+        // Dissemination is follower-driven: even seed fanout 1 must serve.
+        let mut cfg = quick_cfg(9, Variant::Pull);
+        cfg.protocol.fanout = 1;
+        let report = run_experiment(&cfg);
+        assert!(report.safety_ok);
+        assert!(report.completed > 50, "only {} completed", report.completed);
+        assert_eq!(report.elections, 0, "pull liveness must hold the leader stable");
     }
 
     #[test]

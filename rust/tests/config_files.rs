@@ -11,10 +11,26 @@ fn load(name: &str) -> Config {
 
 #[test]
 fn all_shipped_configs_parse_and_validate() {
-    for name in ["paper51", "lan", "wan", "lossy"] {
+    for name in ["paper51", "lan", "wan", "lossy", "pull"] {
         let cfg = load(name);
         cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
     }
+}
+
+#[test]
+fn pull_config_selects_the_pull_strategy_and_runs() {
+    let mut cfg = load("pull");
+    assert_eq!(cfg.protocol.variant, epiraft::raft::Variant::Pull);
+    assert_eq!(cfg.protocol.fanout, 1, "seed fanout is the preset's point");
+    // Shrink for test time.
+    cfg.protocol.n = 7;
+    cfg.workload.clients = 5;
+    cfg.workload.duration_us = 2_000_000;
+    cfg.workload.warmup_us = 400_000;
+    let report = run_experiment(&cfg);
+    assert!(report.safety_ok);
+    assert!(report.completed > 0, "pull preset must serve requests");
+    assert_eq!(report.variant, "pull");
 }
 
 #[test]

@@ -41,6 +41,11 @@ fn safety_under_random_faults_v2() {
     safety_under_random_faults(Variant::V2);
 }
 
+#[test]
+fn safety_under_random_faults_pull() {
+    safety_under_random_faults(Variant::Pull);
+}
+
 fn safety_under_random_faults(variant: Variant) {
     forall(&format!("safety-{}", variant.name()), 12, |g| {
         let cfg = random_cfg(g, variant);

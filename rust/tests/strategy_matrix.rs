@@ -193,7 +193,10 @@ fn sends_of(actions: &[epiraft::raft::Action]) -> Vec<(usize, Message)> {
 
 #[test]
 fn follower_missing_rounds_recovers_via_classic_rpc_catch_up() {
-    for variant in [Variant::V1, Variant::V2] {
+    // Pull rides along: its leader *seed* rounds are stamped and batched
+    // exactly like V1 rounds, so a follower that missed them NACKs into
+    // the same classic-RPC repair path.
+    for variant in [Variant::V1, Variant::V2, Variant::Pull] {
         let mut cfg = ProtocolConfig::for_variant(3, variant);
         cfg.fanout = 2; // every round targets both followers
         let mut leader = Node::new(0, cfg.clone(), 1);
@@ -310,4 +313,184 @@ fn follower_missing_rounds_recovers_via_classic_rpc_catch_up() {
         }
         assert!(leader.counters.repair_rpcs >= 1, "{variant:?}: repair path exercised");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Anti-entropy pull: request/reply mechanics, duplicate and stale replies,
+// and progress under the PR 1 Gilbert–Elliott burst-loss knobs.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pull_follower_fetches_batches_and_acks_durable_progress() {
+    let cfg = ProtocolConfig::for_variant(3, Variant::Pull);
+    let mut leader = Node::new(0, cfg.clone(), 1);
+    let mut f2 = Node::new(2, cfg.clone(), 3);
+    leader.bootstrap_leader(0);
+    f2.bootstrap_follower(0, 0);
+    for k in 0..3u64 {
+        leader.client_request(1 + k, k, Command::Put { key: k, value: k });
+    }
+
+    // The follower's first pull fires from its strategy-side timer.
+    let dl = f2.next_deadline();
+    assert!(dl < f2.config().election_timeout_min_us, "pull timer precedes elections");
+    let acts = f2.tick(dl);
+    let reqs: Vec<_> = sends_of(&acts)
+        .into_iter()
+        .filter(|(_, m)| matches!(m, Message::PullRequest(_)))
+        .collect();
+    assert_eq!(reqs.len(), 2, "pull_fanout=2 asks both peers");
+    let (_, req_msg) = reqs
+        .iter()
+        .find(|(to, _)| *to == 0)
+        .cloned()
+        .expect("n=3: both peers asked, leader among them");
+
+    // The leader serves a matched continuation of the empty log.
+    let racts = leader.on_message(5, req_msg);
+    let replies: Vec<_> = sends_of(&racts)
+        .into_iter()
+        .filter(|(to, m)| *to == 2 && matches!(m, Message::PullReply(_)))
+        .collect();
+    assert_eq!(replies.len(), 1);
+    if let Message::PullReply(r) = &replies[0].1 {
+        assert!(r.matched);
+        assert_eq!(r.entries.len(), 4, "noop + three puts");
+        assert_eq!(r.prev_log_index, 0);
+    }
+
+    // The follower reconciles the batch, then acks the leader once with
+    // the highest current-term index.
+    let reply = replies[0].1.clone();
+    let out1 = f2.on_message(6, reply.clone());
+    assert_eq!(f2.last_index(), 4);
+    let acks: Vec<_> = sends_of(&out1)
+        .into_iter()
+        .filter(|(to, m)| {
+            *to == 0 && matches!(m, Message::AppendEntriesReply(r) if r.success && r.match_hint == 4)
+        })
+        .collect();
+    assert_eq!(acks.len(), 1, "durable progress must be acked to the leader");
+
+    // The leader folds the ack into its majority-match commit rule.
+    let commit_acts = leader.on_message(7, acks[0].1.clone());
+    assert_eq!(leader.commit_index(), 4, "leader + f2 = majority of 3");
+    assert!(commit_acts
+        .iter()
+        .any(|a| matches!(a, epiraft::raft::Action::Committed { .. })));
+}
+
+#[test]
+fn pull_reply_duplicates_and_stale_terms_are_inert() {
+    let cfg = ProtocolConfig::for_variant(3, Variant::Pull);
+    let mut leader = Node::new(0, cfg.clone(), 1);
+    let mut f2 = Node::new(2, cfg.clone(), 3);
+    leader.bootstrap_leader(0);
+    f2.bootstrap_follower(0, 0);
+    for k in 0..3u64 {
+        leader.client_request(1 + k, k, Command::Put { key: k, value: k });
+    }
+    let dl = f2.next_deadline();
+    let acts = f2.tick(dl);
+    let (_, req_msg) = sends_of(&acts)
+        .into_iter()
+        .find(|(to, m)| *to == 0 && matches!(m, Message::PullRequest(_)))
+        .expect("pull to the leader");
+    let (_, reply) = sends_of(&leader.on_message(5, req_msg))
+        .into_iter()
+        .find(|(_, m)| matches!(m, Message::PullReply(_)))
+        .expect("served reply");
+
+    // First delivery applies and acks.
+    let out1 = f2.on_message(6, reply.clone());
+    assert_eq!(f2.last_index(), 4);
+    assert_eq!(sends_of(&out1).len(), 1, "exactly one ack");
+
+    // Duplicate delivery (the network may duplicate): idempotent reconcile,
+    // no double ack, no commit movement.
+    let commit_before = f2.commit_index();
+    let out2 = f2.on_message(7, reply.clone());
+    assert_eq!(f2.last_index(), 4, "no re-append");
+    assert!(sends_of(&out2).is_empty(), "duplicate reply must not re-ack");
+    assert_eq!(f2.commit_index(), commit_before);
+    assert!(f2.counters.pull_stale >= 1, "duplicate counted as stale");
+
+    // A reply from a superseded term is dropped outright. Push f2 to term
+    // 2 via a higher-term vote request (the universal step-up rule).
+    f2.on_message(
+        8,
+        Message::RequestVote(epiraft::raft::RequestVoteArgs {
+            term: 2,
+            candidate: 1,
+            last_log_index: 99,
+            last_log_term: 9,
+            gossip: false,
+            hops: 0,
+        }),
+    );
+    assert_eq!(f2.term(), 2);
+    let out3 = f2.on_message(9, reply);
+    assert!(sends_of(&out3).is_empty(), "stale-term reply dropped");
+    assert_eq!(f2.last_index(), 4);
+}
+
+#[test]
+fn stale_term_pull_request_teaches_the_requester_the_term() {
+    let cfg = ProtocolConfig::for_variant(3, Variant::Pull);
+    let mut responder = Node::new(1, cfg.clone(), 2);
+    responder.bootstrap_follower(0, 0);
+    // Push the responder to term 4 via a higher-term vote request.
+    responder.on_message(
+        1,
+        Message::RequestVote(epiraft::raft::RequestVoteArgs {
+            term: 4,
+            candidate: 0,
+            last_log_index: 99,
+            last_log_term: 9,
+            gossip: false,
+            hops: 0,
+        }),
+    );
+    assert_eq!(responder.term(), 4);
+    let req = epiraft::raft::PullRequestArgs {
+        term: 1,
+        from: 2,
+        from_index: 0,
+        from_term: 0,
+        known_round: 0,
+    };
+    let out = responder.on_message(2, Message::PullRequest(req));
+    let (to, msg) = &sends_of(&out)[0];
+    assert_eq!(*to, 2);
+    match msg {
+        Message::PullReply(r) => {
+            assert_eq!(r.term, 4, "reply carries the newer term");
+            assert!(!r.matched && r.entries.is_empty(), "no entries across terms");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn pull_progress_and_safety_under_burst_loss() {
+    // PR 1's Gilbert–Elliott knobs: ~2% of packets enter a bad state that
+    // drops 90% and lasts ~20 packets, plus 5% duplication to exercise the
+    // duplicate-reply path at sim scale. Elections are allowed (bursts can
+    // legitimately depose a leader); safety and progress are not optional.
+    let mut cfg = Config::default();
+    cfg.protocol.n = 9;
+    cfg.protocol.variant = Variant::Pull;
+    cfg.workload.clients = 8;
+    cfg.workload.duration_us = 4_000_000;
+    cfg.workload.warmup_us = 500_000;
+    cfg.network.ge_good_to_bad = 0.02;
+    cfg.network.ge_bad_to_good = 0.05;
+    cfg.network.ge_loss_good = 0.0;
+    cfg.network.ge_loss_bad = 0.9;
+    cfg.network.duplicate = 0.05;
+    cfg.seed = 0xB1457;
+    let report = run_experiment(&cfg);
+    assert!(report.safety_ok, "committed prefixes diverged under burst loss");
+    assert!(report.completed > 0, "no requests served under burst loss");
+    assert!(report.max_commit > 0, "nothing committed under burst loss");
 }
