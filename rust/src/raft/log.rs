@@ -117,6 +117,39 @@ impl LogStore {
         prev_index + new_entries.len() as LogIndex
     }
 
+    /// Anti-entropy append path (pull replies): like [`reconcile`], but
+    /// **never truncates**. Entries already present with the same term are
+    /// skipped, entries past the end of the log are appended, and the walk
+    /// stops at the first term conflict, leaving the local log untouched
+    /// from there — a pulled batch may come from a stale peer whose log
+    /// matches the anchor while its *tail* is older than ours, and rolling
+    /// our tail back is only safe for the leader's AppendEntries repair.
+    ///
+    /// Returns `(covered, conflicted)`: `covered` is the highest contiguous
+    /// index through which this log is verified term-identical to the
+    /// sender's batch (the prefix a commit index may be adopted over);
+    /// `conflicted` is true when a term conflict stopped the walk early.
+    ///
+    /// [`reconcile`]: LogStore::reconcile
+    pub fn extend_matching(
+        &mut self,
+        prev_index: LogIndex,
+        new_entries: &[LogEntry],
+    ) -> (LogIndex, bool) {
+        debug_assert!(self.term_at(prev_index).is_some());
+        let mut idx = prev_index;
+        for e in new_entries {
+            debug_assert_eq!(e.index, idx + 1, "entry indices must be contiguous");
+            match self.term_at(idx + 1) {
+                Some(t) if t == e.term => {} // already have it
+                Some(_) => return (idx, true), // conflict: stop, never truncate
+                None => self.entries.push(e.clone()),
+            }
+            idx += 1;
+        }
+        (idx, false)
+    }
+
     /// Clone the entries in `(from, to]` into an `Arc` slice for cheap
     /// fan-out into gossip messages.
     pub fn slice(&self, from_exclusive: LogIndex, to_inclusive: LogIndex) -> Arc<Vec<LogEntry>> {
@@ -214,6 +247,33 @@ mod tests {
         let last = log.reconcile(0, &[e(1, 1), e(1, 2)]);
         assert_eq!(last, 2);
         assert_eq!(log.last_index(), 4, "matching prefix must not truncate suffix");
+    }
+
+    #[test]
+    fn extend_matching_appends_and_skips() {
+        let mut log = LogStore::new();
+        log.reconcile(0, &[e(1, 1), e(1, 2)]);
+        // Overlap at index 2 is skipped, 3..4 appended.
+        let (covered, conflicted) = log.extend_matching(1, &[e(1, 2), e(1, 3), e(1, 4)]);
+        assert_eq!((covered, conflicted), (4, false));
+        assert_eq!(log.last_index(), 4);
+        // Full-duplicate batch: idempotent, full coverage.
+        let (covered, conflicted) = log.extend_matching(0, &[e(1, 1), e(1, 2)]);
+        assert_eq!((covered, conflicted), (2, false));
+        assert_eq!(log.last_index(), 4);
+    }
+
+    #[test]
+    fn extend_matching_stops_at_conflict_without_truncating() {
+        let mut log = LogStore::new();
+        log.reconcile(0, &[e(1, 1), e(2, 2), e(2, 3)]);
+        // A stale peer's old-term tail matches at the anchor but conflicts
+        // at index 2: nothing is lost, coverage stops before the conflict.
+        let (covered, conflicted) = log.extend_matching(1, &[e(1, 2), e(1, 3)]);
+        assert_eq!((covered, conflicted), (1, true));
+        assert_eq!(log.last_index(), 3);
+        assert_eq!(log.term_at(2), Some(2));
+        assert_eq!(log.term_at(3), Some(2));
     }
 
     #[test]

@@ -112,10 +112,13 @@ pub struct PullReplyArgs {
     /// True iff the responder's log matched the anchor; commit adoption and
     /// entry reconcile are only valid on matched replies.
     pub matched: bool,
-    /// True when the responder positively observed a *different* term at the
-    /// anchor index — the requester's uncommitted tail diverges and it
-    /// should re-anchor its next pull at its commit index. (`matched ==
-    /// false && !diverged` is a payload-free liveness advertisement.)
+    /// True when the responder positively observed a *different* term at
+    /// the anchor index — the two logs diverge there, but either side may
+    /// be the stale one. The requester re-anchors its next pull at its
+    /// commit index only when its own tail is not pinned to the current
+    /// term (a current-term tail matches the leader's log, so the report
+    /// then just identifies a laggard responder). (`matched == false &&
+    /// !diverged` is a payload-free liveness advertisement.)
     pub diverged: bool,
     pub entries: Arc<Vec<LogEntry>>,
     /// Responder's commit index (requester may adopt up to the prefix it

@@ -104,57 +104,17 @@ impl GossipStrategy {
     }
 
     /// §3.1 — start one epidemic round: stamp `RoundLC`, batch the entries
-    /// not yet committed, send to the next `F` permutation targets.
+    /// not yet committed, send to the next `F` permutation targets (shared
+    /// machinery: [`super::start_seed_round`]).
     fn start_round(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
-        debug_assert_eq!(node.role, Role::Leader);
-        let round = self.round_clock.start_round(node.current_term);
-        node.counters.rounds_started += 1;
-        // Batch base: the commit index as of ~3 rounds ago. Using the
-        // *current* commit index would make any follower that missed a
-        // single round log-mismatch the next one (commit races past its
-        // log end under load) and fall into per-follower RPC repair — a
-        // repair storm that collapses throughput. The margin re-sends a
-        // few already-committed entries per round instead (idempotent
-        // reconcile); EXPERIMENTS.md §Perf quantifies the trade.
-        let base = self
-            .commit_history
-            .front()
-            .copied()
-            .unwrap_or(0)
-            .min(node.commit_index);
-        self.commit_history.push_back(node.commit_index);
-        if self.commit_history.len() > 3 {
-            self.commit_history.pop_front();
-        }
-        let last = node.log.last_index();
-        let hi = last.min(base + node.cfg.max_entries_per_rpc as LogIndex);
-        let entries = node.log.slice(base, hi);
-        let prev_term = node.log.term_at(base).expect("commit index within log");
-        let epidemic = self.epi.clone();
-        let fanout = node.cfg.fanout;
-        let targets = node.perm.next_round(fanout);
-        for to in targets {
-            let args = AppendEntriesArgs {
-                term: node.current_term,
-                leader: node.id,
-                prev_log_index: base,
-                prev_log_term: prev_term,
-                entries: Arc::clone(&entries),
-                leader_commit: node.commit_index,
-                gossip: Some(GossipMeta { round, hops: 0, epidemic: epidemic.clone() }),
-                seq: 0,
-            };
-            node.counters.gossip_sent += 1;
-            node.send(to, Message::AppendEntries(args), actions);
-        }
-        // Next round: fast cadence while entries are uncommitted, slow
-        // heartbeat cadence when idle (§3.1: "um intervalo de tempo maior").
-        let interval = if node.log.last_index() > node.commit_index {
-            node.cfg.round_interval_us
-        } else {
-            node.cfg.idle_round_interval_us
-        };
-        self.next_round_at = now + interval;
+        self.next_round_at = super::start_seed_round(
+            &mut self.round_clock,
+            &mut self.commit_history,
+            node,
+            now,
+            self.epi.clone(),
+            actions,
+        );
     }
 
     /// Classic AppendEntries RPC at a gossip follower — the repair path.

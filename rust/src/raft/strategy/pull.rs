@@ -32,6 +32,15 @@
 //! * a responder only serves entries when its log holds the requester's
 //!   `(from_index, from_term)` anchor — Raft's log-matching argument then
 //!   makes the served continuation consistent with the requester's prefix;
+//! * a matched anchor pins the shared *prefix*, not the served suffix: the
+//!   responder may be a stale laggard whose old-term tail happens to start
+//!   at the anchor. Pulled batches are therefore folded in with
+//!   `LogStore::extend_matching`, which skips duplicates and appends past
+//!   the end but **never truncates** — a conflicting suffix is dropped
+//!   (counted `pull_stale`) and repair is left to the leader's
+//!   AppendEntries path. Truncating here could roll back entries already
+//!   acked into the leader's monotone `match_index`, letting it commit an
+//!   index a counted majority member no longer holds;
 //! * a follower only *acks* indices whose entry term equals the current
 //!   term: only the current leader creates current-term entries, so a
 //!   matching `(index, current_term)` entry pins the whole prefix to the
@@ -41,7 +50,7 @@
 //!   verified through that reply (`min(reply.commit_index, covered)`).
 
 use super::super::message::{
-    AppendEntriesArgs, AppendEntriesReply, GossipMeta, Message, PullReplyArgs, PullRequestArgs,
+    AppendEntriesArgs, AppendEntriesReply, Message, PullReplyArgs, PullRequestArgs,
 };
 use super::super::node::{Action, Counters, Node};
 use super::super::types::{LogIndex, Role, Time};
@@ -68,7 +77,10 @@ pub struct PullStrategy {
     /// Highest index already acked to the leader (ack dedup; per term).
     last_acked: LogIndex,
     /// A responder reported our anchor diverged: re-anchor the next pull at
-    /// our commit index (the committed prefix is globally agreed).
+    /// our commit index (the committed prefix is globally agreed). Only
+    /// honored while our tail is *not* pinned to the current term — a
+    /// current-term tail matches the leader's log, so a diverged report
+    /// against it just identifies the responder as the stale party.
     anchor_at_commit: bool,
 }
 
@@ -105,47 +117,18 @@ impl PullStrategy {
     }
 
     /// Leader seed round: stamp `RoundLC`, batch from the lagged commit
-    /// base, push to the next `F` permutation targets (no relaying).
+    /// base, push to the next `F` permutation targets. Wire-identical to a
+    /// §3.1 round (shared machinery: [`super::start_seed_round`]) — the
+    /// difference is entirely at the receivers, which never relay.
     fn start_round(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
-        debug_assert_eq!(node.role, Role::Leader);
-        let round = self.round_clock.start_round(node.current_term);
-        node.counters.rounds_started += 1;
-        let base = self
-            .commit_history
-            .front()
-            .copied()
-            .unwrap_or(0)
-            .min(node.commit_index);
-        self.commit_history.push_back(node.commit_index);
-        if self.commit_history.len() > 3 {
-            self.commit_history.pop_front();
-        }
-        let last = node.log.last_index();
-        let hi = last.min(base + node.cfg.max_entries_per_rpc as LogIndex);
-        let entries = node.log.slice(base, hi);
-        let prev_term = node.log.term_at(base).expect("commit index within log");
-        let fanout = node.cfg.fanout;
-        let targets = node.perm.next_round(fanout);
-        for to in targets {
-            let args = AppendEntriesArgs {
-                term: node.current_term,
-                leader: node.id,
-                prev_log_index: base,
-                prev_log_term: prev_term,
-                entries: Arc::clone(&entries),
-                leader_commit: node.commit_index,
-                gossip: Some(GossipMeta { round, hops: 0, epidemic: None }),
-                seq: 0,
-            };
-            node.counters.gossip_sent += 1;
-            node.send(to, Message::AppendEntries(args), actions);
-        }
-        let interval = if node.log.last_index() > node.commit_index {
-            node.cfg.round_interval_us
-        } else {
-            node.cfg.idle_round_interval_us
-        };
-        self.next_round_at = now + interval;
+        self.next_round_at = super::start_seed_round(
+            &mut self.round_clock,
+            &mut self.commit_history,
+            node,
+            now,
+            None,
+            actions,
+        );
     }
 
     /// Ack durable progress to the leader — but only the prefix pinned to
@@ -182,6 +165,28 @@ impl PullStrategy {
         node.send(leader, Message::AppendEntriesReply(reply), actions);
     }
 
+    /// Fold one leader-sourced AppendEntries batch in (every append path —
+    /// classic repair, fresh seed, duplicate-classified seed — runs exactly
+    /// this): apply, and on success clear the pull re-anchor flag and adopt
+    /// the leader's commit bound over the matched prefix. Returns
+    /// `(success, match_hint)` for the caller's reply/ack policy.
+    fn apply_leader_batch(
+        &mut self,
+        node: &mut Node,
+        args: &AppendEntriesArgs,
+        actions: &mut Vec<Action>,
+    ) -> (bool, LogIndex) {
+        let (success, match_hint) = node.apply_append_entries(args);
+        if success {
+            self.anchor_at_commit = false;
+            let bound = args.leader_commit.min(match_hint);
+            if bound > node.commit_index {
+                node.advance_commit(bound, actions);
+            }
+        }
+        (success, match_hint)
+    }
+
     /// Shared follower append handling (classic repair RPCs and fresh seed
     /// rounds): apply, bound commit by the leader's, fold the covered
     /// prefix into the ack dedup, reply to the leader.
@@ -192,13 +197,8 @@ impl PullStrategy {
         round: Option<u64>,
         actions: &mut Vec<Action>,
     ) {
-        let (success, match_hint) = node.apply_append_entries(args);
+        let (success, match_hint) = self.apply_leader_batch(node, args, actions);
         if success {
-            self.anchor_at_commit = false;
-            let bound = args.leader_commit.min(match_hint);
-            if bound > node.commit_index {
-                node.advance_commit(bound, actions);
-            }
             self.last_acked = self.last_acked.max(match_hint);
         }
         let reply = AppendEntriesReply {
@@ -247,13 +247,8 @@ impl PullStrategy {
                 // flows to the leader through the deduplicated ack path,
                 // and the election timer is untouched (the advertisement
                 // already was the liveness evidence for this round).
-                let (success, match_hint) = node.apply_append_entries(&args);
+                let (success, _) = self.apply_leader_batch(node, &args, actions);
                 if success {
-                    self.anchor_at_commit = false;
-                    let bound = args.leader_commit.min(match_hint);
-                    if bound > node.commit_index {
-                        node.advance_commit(bound, actions);
-                    }
                     self.ack_progress(node, actions);
                 }
             }
@@ -490,7 +485,14 @@ impl ReplicationStrategy for PullStrategy {
             node.leader_hint = reply.leader_hint;
         }
         if !reply.matched {
-            if reply.diverged {
+            // Honor a divergence report only when our own tail could
+            // actually be the stale side. A tail pinned to the current term
+            // matches the leader's log (only the current leader mints
+            // current-term entries), so a diverged report against it just
+            // means the *responder* is a laggard holding an old-term entry
+            // at our anchor — re-anchoring at the commit index would demote
+            // a healthy anchor and re-fetch a tail we already hold.
+            if reply.diverged && node.log.last_term() != node.current_term {
                 self.anchor_at_commit = true;
             }
             return;
@@ -505,13 +507,23 @@ impl ReplicationStrategy for PullStrategy {
             return;
         }
         let before = node.log.last_index();
-        let covered = node.log.reconcile(reply.prev_log_index, &reply.entries);
-        node.counters.entries_appended += reply.entries.len() as u64;
-        if node.log.last_index() <= before && covered <= before {
-            // Overlapping duplicate: nothing new (idempotent reconcile).
+        // Never truncate from a pull reply: a matched anchor does not prove
+        // the served *suffix* is fresh (the responder may be a stale laggard
+        // whose old-term tail starts at our anchor — e.g. after we
+        // re-anchored at the commit index, or after leader traffic extended
+        // our log while this pull was in flight). Our tail may already be
+        // acked into the leader's monotone match accounting, so rolling it
+        // back here could commit an index a counted majority member no
+        // longer holds; `extend_matching` stops at the first term conflict
+        // and leaves truncation to the leader's AppendEntries repair.
+        let (covered, conflicted) = node.log.extend_matching(reply.prev_log_index, &reply.entries);
+        node.counters.entries_appended += node.log.last_index() - before;
+        if conflicted || node.log.last_index() == before {
+            // Nothing new: an overlapping duplicate, or a stale suffix.
             node.counters.pull_stale += 1;
+        } else {
+            self.anchor_at_commit = false;
         }
-        self.anchor_at_commit = false;
         // Adopt the responder's commit index, but only over the prefix this
         // reply verified as shared.
         let bound = reply.commit_index.min(covered);

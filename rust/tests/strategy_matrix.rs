@@ -435,6 +435,170 @@ fn pull_reply_duplicates_and_stale_terms_are_inert() {
 }
 
 #[test]
+fn pull_reply_from_stale_laggard_never_truncates_newer_tail() {
+    // A laggard whose log matches the requester's *anchor* but whose tail
+    // is from an older term must not roll back newer entries: they may
+    // already be acked into the leader's monotone match_index, so a
+    // truncation here could let the leader commit an index a counted
+    // majority member no longer holds. Truncation is exclusively the
+    // leader's AppendEntries repair path.
+    use epiraft::raft::{AppendEntriesArgs, LogEntry, PullReplyArgs};
+    use std::sync::Arc;
+    let e = |term: u64, index: u64| LogEntry {
+        term,
+        index,
+        cmd: Command::Put { key: index, value: index },
+    };
+    let cfg = ProtocolConfig::for_variant(3, Variant::Pull);
+    let mut f2 = Node::new(2, cfg, 3);
+    f2.bootstrap_follower(0, 0);
+    // Term-1 prefix from the old leader, then a term-2 leader overwrites
+    // nothing but extends the log with current-term entries.
+    f2.on_message(
+        1,
+        Message::AppendEntries(AppendEntriesArgs {
+            term: 1,
+            leader: 0,
+            prev_log_index: 0,
+            prev_log_term: 0,
+            entries: Arc::new(vec![e(1, 1), e(1, 2)]),
+            leader_commit: 1,
+            gossip: None,
+            seq: 1,
+        }),
+    );
+    f2.on_message(
+        2,
+        Message::AppendEntries(AppendEntriesArgs {
+            term: 2,
+            leader: 1,
+            prev_log_index: 2,
+            prev_log_term: 1,
+            entries: Arc::new(vec![e(2, 3), e(2, 4)]),
+            leader_commit: 1,
+            gossip: None,
+            seq: 1,
+        }),
+    );
+    assert_eq!(f2.term(), 2);
+    assert_eq!(f2.last_index(), 4);
+    assert_eq!(f2.commit_index(), 1);
+
+    // A laggard at the same term number (it voted, but never saw the
+    // term-2 entries) serves a "matched" continuation of the (2, term 1)
+    // anchor — its own stale term-1 tail.
+    f2.on_message(
+        3,
+        Message::PullReply(PullReplyArgs {
+            term: 2,
+            from: 0,
+            prev_log_index: 2,
+            prev_log_term: 1,
+            matched: true,
+            diverged: false,
+            entries: Arc::new(vec![e(1, 3), e(1, 4), e(1, 5)]),
+            commit_index: 2,
+            leader_hint: Some(1),
+            known_round: 0,
+        }),
+    );
+    // The newer tail survives untouched and the reply is counted stale...
+    assert_eq!(f2.last_index(), 4);
+    assert_eq!(f2.log().get(3).unwrap().term, 2);
+    assert_eq!(f2.log().get(4).unwrap().term, 2);
+    assert!(f2.counters.pull_stale >= 1, "conflicting suffix counted stale");
+    // ...while the responder's commit index is still adopted over the
+    // anchor-verified shared prefix.
+    assert_eq!(f2.commit_index(), 2);
+}
+
+#[test]
+fn diverged_report_from_laggard_cannot_demote_current_term_anchor() {
+    // Responders report `diverged` whenever they hold a different term at
+    // the anchor — including when *they* are the stale party. A requester
+    // whose tail is pinned to the current term knows its whole log matches
+    // the leader's, so it must keep pulling from its tail; only a
+    // non-current-term tail may be re-anchored at the commit index.
+    use epiraft::raft::{AppendEntriesArgs, LogEntry, PullReplyArgs, PullRequestArgs};
+    use std::sync::Arc;
+    let e = |term: u64, index: u64| LogEntry {
+        term,
+        index,
+        cmd: Command::Put { key: index, value: index },
+    };
+    let cfg = ProtocolConfig::for_variant(3, Variant::Pull);
+    let mut f2 = Node::new(2, cfg, 3);
+    f2.bootstrap_follower(0, 0);
+    f2.on_message(
+        1,
+        Message::AppendEntries(AppendEntriesArgs {
+            term: 1,
+            leader: 0,
+            prev_log_index: 0,
+            prev_log_term: 0,
+            entries: Arc::new(vec![e(1, 1), e(1, 2)]),
+            leader_commit: 1,
+            gossip: None,
+            seq: 1,
+        }),
+    );
+    assert_eq!((f2.last_index(), f2.commit_index()), (2, 1));
+    let diverged_reply = |term: u64| {
+        Message::PullReply(PullReplyArgs {
+            term,
+            from: 1,
+            prev_log_index: 2,
+            prev_log_term: 1,
+            matched: false,
+            diverged: true,
+            entries: Arc::new(Vec::new()),
+            commit_index: 0,
+            leader_hint: Some(0),
+            known_round: 0,
+        })
+    };
+    let pull_anchors = |node: &mut Node, t: u64| -> Vec<(u64, u64)> {
+        let dl = node.next_deadline().max(t);
+        sends_of(&node.tick(dl))
+            .into_iter()
+            .filter_map(|(_, m)| match m {
+                Message::PullRequest(PullRequestArgs { from_index, from_term, .. }) => {
+                    Some((from_index, from_term))
+                }
+                _ => None,
+            })
+            .collect()
+    };
+
+    // Tail pinned to the current term (1): the report is ignored, the next
+    // pull still anchors at the tail.
+    f2.on_message(3, diverged_reply(1));
+    let anchors = pull_anchors(&mut f2, 4);
+    assert!(!anchors.is_empty(), "follower keeps pulling");
+    assert!(anchors.iter().all(|&a| a == (2, 1)), "healthy tail anchor kept: {anchors:?}");
+
+    // Step the term up (vote request from a fresher candidate): the tail
+    // is no longer current-term, so the same report is now honored and the
+    // next pull re-anchors at the commit index.
+    f2.on_message(
+        5,
+        Message::RequestVote(epiraft::raft::RequestVoteArgs {
+            term: 2,
+            candidate: 1,
+            last_log_index: 99,
+            last_log_term: 9,
+            gossip: false,
+            hops: 0,
+        }),
+    );
+    assert_eq!(f2.term(), 2);
+    f2.on_message(6, diverged_reply(2));
+    let anchors = pull_anchors(&mut f2, 7);
+    assert!(!anchors.is_empty(), "follower keeps pulling");
+    assert!(anchors.iter().all(|&a| a == (1, 1)), "re-anchored at commit: {anchors:?}");
+}
+
+#[test]
 fn stale_term_pull_request_teaches_the_requester_the_term() {
     let cfg = ProtocolConfig::for_variant(3, Variant::Pull);
     let mut responder = Node::new(1, cfg.clone(), 2);
