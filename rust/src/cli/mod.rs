@@ -7,6 +7,7 @@
 //! epiraft headline   [--quick]
 //! epiraft ablate     <fanout|round|responses|coalesce|votes> [--quick]
 //! epiraft bench-pr2  [--quick] [--n N] [--rate R] [--seed S] [--out FILE]
+//! epiraft bench-pr3  [--quick] [--n N] [--rate R] [--seed S] [--out FILE]
 //! epiraft live       [--variant v] [--n N] [--clients C] [--secs S]
 //! epiraft artifacts-check [--dir artifacts]
 //! epiraft config-dump
@@ -140,6 +141,12 @@ USAGE:
       Leader-egress comparison across all registered variants (default
       n=51); writes BENCH_PR2.json and fails unless the pull variant's
       leader egress is strictly below classic Raft's.
+
+  epiraft bench-pr3 [--quick] [--n N] [--rate R] [--seed S] [--out FILE]
+      Fixed vs adaptive fanout ({pull, v1} x {clean, burst-loss}, default
+      n=101); writes BENCH_PR3.json and fails unless the adaptive pull
+      run's leader egress is strictly below its fixed baseline with p99
+      commit latency within 1.5x.
 
   epiraft live [--variant v] [--n N] [--clients C] [--secs S]
       Run the live thread-per-replica cluster (real time, real channels).

@@ -50,6 +50,55 @@ pub struct ProtocolConfig {
     pub pull_fanout: usize,
     /// Pull: cap on entries served per `PullReply`.
     pub pull_reply_budget: usize,
+    /// Closed-loop fanout adaptation (`[protocol.adaptive]`) — see
+    /// `raft::strategy::disseminate`.
+    pub adaptive: AdaptiveConfig,
+}
+
+/// `[protocol.adaptive]` — the AIMD fanout controller (Fast Raft-style,
+/// arXiv:2506.17793): when enabled, every gossip-capable strategy adapts
+/// its dissemination fanout per round from observed feedback (acks,
+/// log-mismatch NACKs, RoundLC duplicates, empty pulls) instead of using
+/// the static `protocol.fanout`, and the pull variant additionally backs
+/// off `pull_interval_us` while its pulls come back empty.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Master switch; off reproduces the fixed-fanout behaviour exactly.
+    pub enabled: bool,
+    /// Lower clamp for the adapted fanout (gossip relays additionally
+    /// enforce a liveness floor of 2 — see `disseminate::GOSSIP_FLOOR`).
+    pub fanout_min: usize,
+    /// Upper clamp for the adapted fanout.
+    pub fanout_max: usize,
+    /// Additive increase applied when a round saw behind-evidence (NACKs).
+    pub gain: f64,
+    /// Multiplicative decay in (0,1) applied when a round completed with
+    /// only converged-evidence (acks / duplicates / empty pulls).
+    pub backoff: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        Self { enabled: false, fanout_min: 1, fanout_max: 8, gain: 1.0, backoff: 0.8 }
+    }
+}
+
+impl AdaptiveConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.fanout_min == 0 {
+            return Err("protocol.adaptive.fanout_min must be >= 1".into());
+        }
+        if self.fanout_min > self.fanout_max {
+            return Err("protocol.adaptive.fanout_min must be <= fanout_max".into());
+        }
+        if !(self.gain > 0.0 && self.gain.is_finite()) {
+            return Err("protocol.adaptive.gain must be finite and > 0".into());
+        }
+        if !(self.backoff > 0.0 && self.backoff < 1.0) {
+            return Err("protocol.adaptive.backoff must be in (0,1)".into());
+        }
+        Ok(())
+    }
 }
 
 impl Default for ProtocolConfig {
@@ -72,6 +121,7 @@ impl Default for ProtocolConfig {
             pull_interval_us: 5_000,
             pull_fanout: 2,
             pull_reply_budget: 512,
+            adaptive: AdaptiveConfig::default(),
         }
     }
 }
@@ -109,6 +159,20 @@ impl ProtocolConfig {
         if self.variant == Variant::Pull && self.election_timeout_min_us <= self.pull_interval_us
         {
             return Err("election timeout must exceed the pull interval".into());
+        }
+        self.adaptive.validate()?;
+        if self.adaptive.enabled
+            && self.variant.is_gossip()
+            && self.adaptive.fanout_max < crate::raft::strategy::disseminate::GOSSIP_FLOOR
+        {
+            // The gossip variants clamp their relay fanout up to the
+            // liveness floor; rather than silently exceeding the configured
+            // ceiling, reject the contradiction outright.
+            return Err(format!(
+                "protocol.adaptive.fanout_max must be >= {} for gossip variants \
+                 (relay liveness floor)",
+                crate::raft::strategy::disseminate::GOSSIP_FLOOR
+            ));
         }
         Ok(())
     }
@@ -322,6 +386,15 @@ impl Config {
             "protocol.pull_reply_budget" => {
                 self.protocol.pull_reply_budget = parse_u64(v)? as usize
             }
+            "protocol.adaptive.enabled" => self.protocol.adaptive.enabled = parse_bool(v)?,
+            "protocol.adaptive.fanout_min" => {
+                self.protocol.adaptive.fanout_min = parse_u64(v)? as usize
+            }
+            "protocol.adaptive.fanout_max" => {
+                self.protocol.adaptive.fanout_max = parse_u64(v)? as usize
+            }
+            "protocol.adaptive.gain" => self.protocol.adaptive.gain = parse_f64(v)?,
+            "protocol.adaptive.backoff" => self.protocol.adaptive.backoff = parse_f64(v)?,
             "network.latency_mean_us" => self.network.latency_mean_us = parse_f64(v)?,
             "network.latency_stddev_us" => self.network.latency_stddev_us = parse_f64(v)?,
             "network.latency_min_us" => self.network.latency_min_us = parse_u64(v)?,
@@ -461,6 +534,11 @@ pub fn dump(cfg: &Config) -> BTreeMap<String, String> {
     m.insert("protocol.pull_interval_us".into(), p.pull_interval_us.to_string());
     m.insert("protocol.pull_fanout".into(), p.pull_fanout.to_string());
     m.insert("protocol.pull_reply_budget".into(), p.pull_reply_budget.to_string());
+    m.insert("protocol.adaptive.enabled".into(), p.adaptive.enabled.to_string());
+    m.insert("protocol.adaptive.fanout_min".into(), p.adaptive.fanout_min.to_string());
+    m.insert("protocol.adaptive.fanout_max".into(), p.adaptive.fanout_max.to_string());
+    m.insert("protocol.adaptive.gain".into(), p.adaptive.gain.to_string());
+    m.insert("protocol.adaptive.backoff".into(), p.adaptive.backoff.to_string());
     m.insert("network.latency_mean_us".into(), cfg.network.latency_mean_us.to_string());
     m.insert("network.latency_stddev_us".into(), cfg.network.latency_stddev_us.to_string());
     m.insert("network.latency_min_us".into(), cfg.network.latency_min_us.to_string());
@@ -574,6 +652,74 @@ rate = 2500.5
         let mut cfg = Config::default();
         cfg.set("protocol.pull_fanout", "0").unwrap();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn adaptive_keys_parse_and_validate() {
+        let mut cfg = Config::default();
+        cfg.set("protocol.adaptive.enabled", "true").unwrap();
+        cfg.set("protocol.adaptive.fanout_min", "2").unwrap();
+        cfg.set("protocol.adaptive.fanout_max", "10").unwrap();
+        cfg.set("protocol.adaptive.gain", "1.5").unwrap();
+        cfg.set("protocol.adaptive.backoff", "0.7").unwrap();
+        cfg.validate().unwrap();
+        assert!(cfg.protocol.adaptive.enabled);
+        assert_eq!(cfg.protocol.adaptive.fanout_min, 2);
+        assert_eq!(cfg.protocol.adaptive.fanout_max, 10);
+        assert_eq!(cfg.protocol.adaptive.gain, 1.5);
+        assert_eq!(cfg.protocol.adaptive.backoff, 0.7);
+        // Inverted clamp window rejected.
+        cfg.set("protocol.adaptive.fanout_min", "11").unwrap();
+        assert!(cfg.validate().is_err(), "fanout_min > fanout_max must be rejected");
+        // Zero gain rejected (the controller could never increase).
+        let mut cfg = Config::default();
+        cfg.set("protocol.adaptive.gain", "0").unwrap();
+        assert!(cfg.validate().is_err(), "zero gain must be rejected");
+        // Non-finite gains rejected too: f64::from_str accepts "NaN"/"inf",
+        // and `fanout + NaN` would slam the AIMD increase to fanout_max.
+        let mut cfg = Config::default();
+        cfg.set("protocol.adaptive.gain", "NaN").unwrap();
+        assert!(cfg.validate().is_err(), "NaN gain must be rejected");
+        let mut cfg = Config::default();
+        cfg.set("protocol.adaptive.gain", "inf").unwrap();
+        assert!(cfg.validate().is_err(), "infinite gain must be rejected");
+        // Degenerate backoff rejected (1.0 would never decay, 0 would zero out).
+        let mut cfg = Config::default();
+        cfg.set("protocol.adaptive.backoff", "1.0").unwrap();
+        assert!(cfg.validate().is_err());
+        let mut cfg = Config::default();
+        cfg.set("protocol.adaptive.fanout_min", "0").unwrap();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn adaptive_ceiling_below_gossip_floor_rejected_for_gossip_variants() {
+        // v1/v2 clamp relay fanout up to the liveness floor of 2; a
+        // configured ceiling below that would be silently exceeded, so
+        // validation rejects the contradiction. Pull seeds have floor 1
+        // and accept the same window.
+        let mut cfg = Config::default();
+        cfg.set("protocol.variant", "v1").unwrap();
+        cfg.set("protocol.adaptive.enabled", "true").unwrap();
+        cfg.set("protocol.adaptive.fanout_min", "1").unwrap();
+        cfg.set("protocol.adaptive.fanout_max", "1").unwrap();
+        assert!(cfg.validate().is_err(), "gossip ceiling below the relay floor must fail");
+        cfg.set("protocol.variant", "pull").unwrap();
+        cfg.validate().unwrap();
+        // Disabled, the window is inert and accepted for gossip too.
+        cfg.set("protocol.variant", "v1").unwrap();
+        cfg.set("protocol.adaptive.enabled", "false").unwrap();
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn adaptive_section_parses_from_toml() {
+        let cfg = Config::from_toml(
+            "[protocol.adaptive]\nenabled = true\nfanout_min = 1\nfanout_max = 6\n",
+        )
+        .unwrap();
+        assert!(cfg.protocol.adaptive.enabled);
+        assert_eq!(cfg.protocol.adaptive.fanout_max, 6);
     }
 
     #[test]

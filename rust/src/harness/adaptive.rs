@@ -1,0 +1,336 @@
+//! PR 3 measurement plumbing: fixed vs adaptive fanout at n=101, under a
+//! clean network and under Gilbert–Elliott burst loss.
+//!
+//! This is the scenario behind `epiraft bench-pr3`, the committed
+//! `BENCH_PR3.json`, and CI's `bench-smoke` gate for the adaptive
+//! controller (`raft::strategy::disseminate`): with `[protocol.adaptive]`
+//! enabled, the pull variant's steady-state leader egress must come in
+//! *strictly below* its own fixed-fanout baseline while follower commit
+//! latency (p99 of the leader-append→follower-commit interval) stays
+//! within 1.5x — i.e. the controller buys egress without giving the
+//! latency back. The v1 gossip variant rides along for the report (its
+//! relay floor keeps it live; see `disseminate::GOSSIP_FLOOR`) but is not
+//! latency-gated: trading relay amplification for egress is dissemination
+//! -shape-dependent, and the claim under test is the pull one.
+
+use super::figures::Scale;
+use crate::config::Config;
+use crate::raft::Variant;
+use crate::sim::{run_experiment, SimReport};
+use crate::util::json::Json;
+
+/// Network conditions a comparison cell runs under.
+const CLEAN: &str = "clean";
+const BURST: &str = "burst";
+
+/// One (variant, mode, network) cell of the comparison grid.
+#[derive(Clone, Debug)]
+pub struct AdaptivePoint {
+    pub variant: &'static str,
+    /// `"fixed"` (static `protocol.fanout`) or `"adaptive"`.
+    pub mode: &'static str,
+    /// `"clean"` or `"burst"` (Gilbert–Elliott).
+    pub network: &'static str,
+    pub leader_egress_bytes: u64,
+    pub peer_egress_bytes_total: u64,
+    /// Leader bytes per committed entry (normalized form of the claim).
+    pub leader_bytes_per_commit: f64,
+    pub throughput: f64,
+    pub completed: u64,
+    pub max_commit: u64,
+    /// Leader-append→follower-commit interval (µs).
+    pub p50_commit_us: u64,
+    pub p99_commit_us: u64,
+    /// Controller trajectory (from `Counters` via `SimReport`).
+    pub fanout_current: u64,
+    pub fanout_adaptations: u64,
+    pub fanout_min_seen: u64,
+    pub fanout_max_seen: u64,
+    pub elections: u64,
+    pub safety_ok: bool,
+}
+
+impl AdaptivePoint {
+    fn from_report(mode: &'static str, network: &'static str, r: &SimReport) -> AdaptivePoint {
+        AdaptivePoint {
+            variant: r.variant,
+            mode,
+            network,
+            leader_egress_bytes: r.leader_egress_bytes,
+            peer_egress_bytes_total: r.peer_egress_bytes_total,
+            leader_bytes_per_commit: r.leader_egress_bytes as f64 / r.max_commit.max(1) as f64,
+            throughput: r.throughput,
+            completed: r.completed,
+            max_commit: r.max_commit,
+            p50_commit_us: r.commit_interval.p50(),
+            p99_commit_us: r.commit_interval.p99(),
+            fanout_current: r.fanout_current,
+            fanout_adaptations: r.fanout_adaptations,
+            fanout_min_seen: r.fanout_min_seen,
+            fanout_max_seen: r.fanout_max_seen,
+            elections: r.elections,
+            safety_ok: r.safety_ok,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(self.variant)),
+            ("mode", Json::str(self.mode)),
+            ("network", Json::str(self.network)),
+            ("leader_egress_bytes", Json::num(self.leader_egress_bytes as f64)),
+            (
+                "peer_egress_bytes_total",
+                Json::num(self.peer_egress_bytes_total as f64),
+            ),
+            ("leader_bytes_per_commit", Json::num(self.leader_bytes_per_commit)),
+            ("throughput", Json::num(self.throughput)),
+            ("completed", Json::num(self.completed as f64)),
+            ("max_commit", Json::num(self.max_commit as f64)),
+            ("p50_commit_us", Json::num(self.p50_commit_us as f64)),
+            ("p99_commit_us", Json::num(self.p99_commit_us as f64)),
+            ("fanout_current", Json::num(self.fanout_current as f64)),
+            ("fanout_adaptations", Json::num(self.fanout_adaptations as f64)),
+            ("fanout_min_seen", Json::num(self.fanout_min_seen as f64)),
+            ("fanout_max_seen", Json::num(self.fanout_max_seen as f64)),
+            ("elections", Json::num(self.elections as f64)),
+            ("safety_ok", Json::Bool(self.safety_ok)),
+        ])
+    }
+}
+
+/// Variants in the grid: the gated pull pair plus v1 for the report.
+fn grid_variants() -> [Variant; 2] {
+    [Variant::Pull, Variant::V1]
+}
+
+/// Run the full comparison grid: {pull, v1} x {fixed, adaptive} x
+/// {clean, burst} under one rate-throttled workload (same n, same seed —
+/// cells differ only in the adaptive switch and the network impairment).
+pub fn adaptive_comparison(scale: Scale, rate: f64, seed: u64) -> Vec<AdaptivePoint> {
+    let mut out = Vec::new();
+    for variant in grid_variants() {
+        for network in [CLEAN, BURST] {
+            for mode in ["fixed", "adaptive"] {
+                let mut cfg = Config {
+                    protocol: crate::config::ProtocolConfig::for_variant(scale.n, variant),
+                    ..Config::default()
+                };
+                cfg.protocol.adaptive.enabled = mode == "adaptive";
+                cfg.workload.clients = 10;
+                cfg.workload.rate = rate;
+                cfg.workload.duration_us = scale.duration_us;
+                cfg.workload.warmup_us = scale.warmup_us;
+                cfg.seed = seed;
+                if network == BURST {
+                    // ~20-packet bursts dropping 80%, entered by ~1% of
+                    // packets per link (the PR 1 Gilbert–Elliott knobs).
+                    cfg.network.ge_good_to_bad = 0.01;
+                    cfg.network.ge_bad_to_good = 0.05;
+                    cfg.network.ge_loss_good = 0.0;
+                    cfg.network.ge_loss_bad = 0.8;
+                }
+                out.push(AdaptivePoint::from_report(mode, network, &run_experiment(&cfg)));
+            }
+        }
+    }
+    out
+}
+
+fn find<'a>(
+    points: &'a [AdaptivePoint],
+    variant: &str,
+    mode: &str,
+    network: &str,
+) -> Result<&'a AdaptivePoint, String> {
+    points
+        .iter()
+        .find(|p| p.variant == variant && p.mode == mode && p.network == network)
+        .ok_or_else(|| format!("gate: cell {variant}/{mode}/{network} missing from results"))
+}
+
+/// The CI gate (`epiraft bench-pr3` exit status):
+///
+/// * every measured cell is safe and committed something;
+/// * clean cells kept the bootstrap leader (egress attribution — same
+///   argument as the PR 2 gate);
+/// * pull/adaptive/clean: leader egress strictly below pull/fixed/clean
+///   (raw and per committed entry), p99 commit interval within 1.5x, and
+///   the controller demonstrably adapted (trajectory moved, settled below
+///   the static fanout).
+pub fn adaptive_gate(points: &[AdaptivePoint]) -> Result<(), String> {
+    if let Some(bad) = points.iter().find(|p| !p.safety_ok) {
+        return Err(format!(
+            "gate: safety violated in the {}/{}/{} run",
+            bad.variant, bad.mode, bad.network
+        ));
+    }
+    if let Some(bad) = points.iter().find(|p| p.max_commit == 0) {
+        return Err(format!(
+            "gate: nothing committed in the {}/{}/{} run",
+            bad.variant, bad.mode, bad.network
+        ));
+    }
+    if let Some(bad) = points.iter().find(|p| p.network == CLEAN && p.elections > 0) {
+        return Err(format!(
+            "gate: leader deposed ({} election(s)) in the clean {}/{} run",
+            bad.elections, bad.variant, bad.mode
+        ));
+    }
+    let pull = Variant::Pull.name();
+    let fixed = find(points, pull, "fixed", CLEAN)?;
+    let adaptive = find(points, pull, "adaptive", CLEAN)?;
+    if adaptive.completed == 0 {
+        return Err("gate: adaptive pull served no requests".into());
+    }
+    if adaptive.leader_egress_bytes >= fixed.leader_egress_bytes {
+        return Err(format!(
+            "gate: adaptive leader egress {} is not strictly below fixed's {}",
+            adaptive.leader_egress_bytes, fixed.leader_egress_bytes
+        ));
+    }
+    if adaptive.leader_bytes_per_commit >= fixed.leader_bytes_per_commit {
+        return Err(format!(
+            "gate: adaptive leader bytes/commit {:.1} not below fixed's {:.1}",
+            adaptive.leader_bytes_per_commit, fixed.leader_bytes_per_commit
+        ));
+    }
+    if fixed.p99_commit_us == 0 {
+        return Err("gate: fixed baseline recorded no commit intervals".into());
+    }
+    if adaptive.p99_commit_us as f64 > fixed.p99_commit_us as f64 * 1.5 {
+        return Err(format!(
+            "gate: adaptive p99 commit {}us exceeds 1.5x fixed's {}us",
+            adaptive.p99_commit_us, fixed.p99_commit_us
+        ));
+    }
+    if adaptive.fanout_adaptations == 0 {
+        return Err("gate: adaptive run never adapted (controller inert?)".into());
+    }
+    if adaptive.fanout_current >= fixed.fanout_current {
+        return Err(format!(
+            "gate: adaptive steady-state fanout {} did not settle below the static {}",
+            adaptive.fanout_current, fixed.fanout_current
+        ));
+    }
+    Ok(())
+}
+
+/// Render the whole scenario (config + grid + gate verdict) as the
+/// `BENCH_PR3.json` document.
+pub fn bench_pr3_json(scale: Scale, rate: f64, seed: u64, points: &[AdaptivePoint]) -> Json {
+    let gate = adaptive_gate(points);
+    Json::obj(vec![
+        ("bench", Json::str("adaptive-vs-fixed-fanout")),
+        ("n", Json::num(scale.n as f64)),
+        ("rate", Json::num(rate)),
+        ("duration_us", Json::num(scale.duration_us as f64)),
+        ("warmup_us", Json::num(scale.warmup_us as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("points", Json::arr(points.iter().map(|p| p.to_json()))),
+        ("gate_adaptive_below_fixed", Json::Bool(gate.is_ok())),
+        (
+            "gate_detail",
+            match gate {
+                Ok(()) => Json::str(
+                    "adaptive pull leader egress strictly below fixed, p99 commit within 1.5x",
+                ),
+                Err(e) => Json::str(&e),
+            },
+        ),
+    ])
+}
+
+/// Print the comparison table.
+pub fn print_adaptive(points: &[AdaptivePoint]) {
+    println!("\n== fixed vs adaptive fanout (leader egress / commit interval) ==");
+    println!(
+        "{:<6} {:<9} {:<6} {:>14} {:>14} {:>12} {:>8} {:>7} {:>8}",
+        "var",
+        "mode",
+        "net",
+        "leader_bytes",
+        "p99_commit_us",
+        "tput(req/s)",
+        "fanout",
+        "adapts",
+        "safety"
+    );
+    for p in points {
+        println!(
+            "{:<6} {:<9} {:<6} {:>14} {:>14} {:>12.1} {:>8} {:>7} {:>8}",
+            p.variant,
+            p.mode,
+            p.network,
+            p.leader_egress_bytes,
+            p.p99_commit_us,
+            p.throughput,
+            p.fanout_current,
+            p.fanout_adaptations,
+            if p.safety_ok { "OK" } else { "VIOLATED" }
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scale {
+        Scale { reps: 1, duration_us: 1_500_000, warmup_us: 300_000, n: 7 }
+    }
+
+    #[test]
+    fn comparison_covers_the_full_grid() {
+        let pts = adaptive_comparison(tiny(), 300.0, 11);
+        assert_eq!(pts.len(), 8, "2 variants x 2 modes x 2 networks");
+        for p in &pts {
+            assert!(p.safety_ok, "{}/{}/{}", p.variant, p.mode, p.network);
+            assert!(p.max_commit > 0, "{}/{}/{}", p.variant, p.mode, p.network);
+        }
+        // Fixed cells never adapt; adaptive clean cells do.
+        for p in &pts {
+            if p.mode == "fixed" {
+                assert_eq!(p.fanout_adaptations, 0, "{}/{}", p.variant, p.network);
+            }
+        }
+    }
+
+    #[test]
+    fn gate_passes_at_moderate_scale_and_rejects_tampering() {
+        // n=15 rather than the tiny n=7: like the PR 2 egress gate, the
+        // seed-fanout gap needs a few peers to show through the pull-reply
+        // share of leader egress. CI runs the claim at n=101.
+        let scale = Scale { reps: 1, duration_us: 1_500_000, warmup_us: 300_000, n: 15 };
+        let pts = adaptive_comparison(scale, 400.0, 11);
+        adaptive_gate(&pts).expect("adaptive pull must beat its fixed baseline");
+        let mut bad = pts.clone();
+        for p in bad.iter_mut() {
+            if p.variant == "pull" && p.mode == "adaptive" && p.network == "clean" {
+                p.leader_egress_bytes = u64::MAX;
+                p.leader_bytes_per_commit = f64::MAX;
+            }
+        }
+        assert!(adaptive_gate(&bad).is_err(), "inflated egress must fail the gate");
+        let mut bad = pts.clone();
+        for p in bad.iter_mut() {
+            if p.variant == "pull" && p.mode == "adaptive" && p.network == "clean" {
+                p.p99_commit_us = u64::MAX;
+            }
+        }
+        assert!(adaptive_gate(&bad).is_err(), "blown latency must fail the gate");
+    }
+
+    #[test]
+    fn bench_json_round_trips_with_gate_fields() {
+        let pts = adaptive_comparison(tiny(), 300.0, 11);
+        let j = bench_pr3_json(tiny(), 300.0, 11, &pts);
+        assert_eq!(j.get("points").and_then(|v| v.as_arr()).unwrap().len(), 8);
+        assert!(j.get("gate_adaptive_below_fixed").and_then(|g| g.as_bool()).is_some());
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.get("bench").and_then(|b| b.as_str()),
+            Some("adaptive-vs-fixed-fanout")
+        );
+    }
+}

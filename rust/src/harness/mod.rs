@@ -3,10 +3,14 @@
 //! criterion-lite bench-stats used by `cargo bench`.
 
 pub mod ablation;
+pub mod adaptive;
 pub mod bench_stats;
 pub mod egress;
 pub mod figures;
 
+pub use adaptive::{
+    adaptive_comparison, adaptive_gate, bench_pr3_json, print_adaptive, AdaptivePoint,
+};
 pub use bench_stats::{bench, black_box, BenchResult};
 pub use egress::{
     bench_pr2_json, egress_gate, leader_egress_comparison, print_egress, EgressPoint,

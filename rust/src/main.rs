@@ -30,6 +30,7 @@ fn run(args: Vec<String>) -> Result<(), String> {
         "headline" => cmd_headline(&cli),
         "ablate" => cmd_ablate(&cli),
         "bench-pr2" => cmd_bench_pr2(&cli),
+        "bench-pr3" => cmd_bench_pr3(&cli),
         "live" => cmd_live(&cli),
         "fleet" => cmd_fleet(&cli),
         "artifacts-check" => cmd_artifacts_check(&cli),
@@ -262,6 +263,37 @@ fn cmd_bench_pr2(cli: &Cli) -> Result<(), String> {
     println!("\nwrote {out}");
     harness::egress_gate(&points)?;
     println!("gate OK: pull leader egress strictly below classic");
+    Ok(())
+}
+
+/// PR 3 bench: fixed vs adaptive fanout ({pull, v1} x {clean, burst}) at
+/// n=101. Writes `BENCH_PR3.json` (CI uploads it as an artifact) and exits
+/// non-zero unless the adaptive pull run's leader egress is strictly below
+/// its fixed baseline with p99 commit latency within 1.5x — the adaptive
+/// `bench-smoke` gate.
+fn cmd_bench_pr3(cli: &Cli) -> Result<(), String> {
+    let mut s = scale(cli);
+    s.n = 101;
+    if let Some(n) = cli.get_u64("n")? {
+        s.n = n as usize;
+    }
+    let rate = cli.get_f64("rate")?.unwrap_or(300.0);
+    let seed = cli.get_u64("seed")?.unwrap_or(20230713);
+    let out = cli.get("out").unwrap_or("BENCH_PR3.json");
+    println!(
+        "== bench-pr3: fixed vs adaptive fanout (n={}, rate={}, seed={}, {}s sim) ==",
+        s.n,
+        rate,
+        seed,
+        s.duration_us as f64 / 1e6
+    );
+    let points = harness::adaptive_comparison(s, rate, seed);
+    harness::print_adaptive(&points);
+    let doc = harness::bench_pr3_json(s, rate, seed, &points);
+    std::fs::write(out, doc.to_string_pretty()).map_err(|e| format!("write {out}: {e}"))?;
+    println!("\nwrote {out}");
+    harness::adaptive_gate(&points)?;
+    println!("gate OK: adaptive leader egress strictly below fixed, p99 commit within 1.5x");
     Ok(())
 }
 

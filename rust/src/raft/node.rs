@@ -75,6 +75,17 @@ pub struct Counters {
     pub pull_replies_sent: u64,
     /// Pull replies that carried nothing new (duplicate/stale deliveries).
     pub pull_stale: u64,
+    /// Pull cycles that ended with nothing pulled (converged evidence; the
+    /// adaptive interval-backoff trigger).
+    pub pull_empty: u64,
+    /// Adaptive-fanout trajectory (`strategy::disseminate`): the planner's
+    /// current effective fanout (gauge, 0 until the node first plans a
+    /// round), how often the effective value changed, and the min/max
+    /// effective values observed (watermarks; min is 0 until first round).
+    pub fanout_current: u64,
+    pub fanout_adaptations: u64,
+    pub fanout_min_seen: u64,
+    pub fanout_max_seen: u64,
 }
 
 /// The protocol state machine for one replica.

@@ -1,0 +1,426 @@
+//! Shared dissemination planning: per-round target choice and *effective
+//! fanout* for every gossip-capable replication variant.
+//!
+//! Before this module, `gossip.rs` and `pull.rs` each sliced the peer
+//! permutation themselves with the static `protocol.fanout` /
+//! `protocol.pull_fanout`. The [`DisseminationPlanner`] now owns that
+//! decision, and — when `[protocol.adaptive]` is enabled — closes the loop:
+//! strategies report per-round [`RoundFeedback`] (acks received,
+//! log-mismatch NACKs, RoundLC duplicates and `pull_stale` hits, empty pull
+//! replies) and an AIMD [`FanoutController`] turns it into the next round's
+//! fanout, à la Fast Raft (arXiv:2506.17793) — high fanout while replicas
+//! are behind, minimal once converged.
+//!
+//! The loop, per node:
+//!
+//! ```text
+//!           ┌──────────────── plan_round ────────────────┐
+//!           │                                            v
+//!   FanoutController ── effective F ──> Permutation slice ──> sends
+//!           ^                                            │
+//!           │  end_round (AIMD fold)                     │ receipts/replies
+//!           └── RoundFeedback <── note_ack/nack/dup/empty┘
+//! ```
+//!
+//! AIMD rule: NACKs in a round are behind-evidence — additive increase by
+//! `gain` (clamped to `fanout_max`). A round with only converged-evidence
+//! (acks, duplicates, empty pulls) decays multiplicatively by `backoff`
+//! (clamped to `fanout_min`). No evidence holds the estimate.
+//!
+//! Gossip variants (V1/V2) enforce [`GOSSIP_FLOOR`] on top of
+//! `fanout_min`: their round coverage *and* leader-liveness heartbeat rely
+//! on relay amplification, and a 1-out relay graph degenerates into a chain
+//! that can leave peers unheartbeated past the election timeout. A 2-out
+//! graph re-covers misses within a couple of rounds. The pull variant's
+//! liveness rides on pull advertisements instead, so its seed rounds may
+//! decay all the way to `fanout_min`.
+
+use super::super::message::{AppendEntriesArgs, GossipMeta, Message};
+use super::super::node::{Action, Counters, Node};
+use super::super::types::{LogIndex, NodeId, Role, Time};
+use crate::config::ProtocolConfig;
+use crate::epidemic::{EpidemicState, Permutation, RoundClock};
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Liveness floor for gossip-relay fanout (see module docs).
+pub const GOSSIP_FLOOR: usize = 2;
+
+/// Feedback observed by a strategy since its previous round boundary.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RoundFeedback {
+    /// Positive receipts: successful append replies / deduplicated
+    /// durable-progress acks — evidence the targets are keeping up.
+    pub acks: u64,
+    /// Log-mismatch NACKs (local apply failures at a relay, failed replies
+    /// at the leader) — evidence somebody is behind.
+    pub nacks: u64,
+    /// Redundant deliveries: RoundLC duplicates, `pull_stale` folds, the
+    /// leader's own round relayed back — evidence of over-dissemination.
+    pub duplicates: u64,
+    /// Empty cycles: pull batches that returned nothing new (follower
+    /// side, also the pull-interval backoff trigger) and idle seed rounds
+    /// — everything appended already committed (leader side). Both are
+    /// converged evidence; the leader one matters because deduplicated
+    /// progress acks stop flowing once there is no new progress, and
+    /// without it a fanout widened during a loss burst would hold its
+    /// elevated value across an idle period instead of decaying.
+    pub empty: u64,
+}
+
+impl RoundFeedback {
+    fn is_empty(&self) -> bool {
+        *self == RoundFeedback::default()
+    }
+}
+
+/// AIMD fanout estimator. Disabled (`[protocol.adaptive] enabled = false`,
+/// the default) it pins the configured base fanout exactly, reproducing the
+/// fixed-fanout behaviour bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct FanoutController {
+    enabled: bool,
+    min: f64,
+    max: f64,
+    gain: f64,
+    backoff: f64,
+    /// Current continuous estimate; `effective()` rounds it.
+    fanout: f64,
+}
+
+impl FanoutController {
+    /// `base` is the static fanout this controller replaces; `floor` is the
+    /// variant's liveness floor (see [`GOSSIP_FLOOR`]), folded into the
+    /// clamp window when adaptation is enabled.
+    pub fn new(cfg: &ProtocolConfig, base: usize, floor: usize) -> Self {
+        let a = &cfg.adaptive;
+        let min = a.fanout_min.max(floor) as f64;
+        let max = (a.fanout_max as f64).max(min);
+        let fanout = if a.enabled { (base as f64).clamp(min, max) } else { base as f64 };
+        Self { enabled: a.enabled, min, max, gain: a.gain, backoff: a.backoff, fanout }
+    }
+
+    /// A controller that never moves (fixed target routing).
+    pub fn fixed(base: usize) -> Self {
+        Self {
+            enabled: false,
+            min: base as f64,
+            max: base as f64,
+            gain: 0.0,
+            backoff: 0.0,
+            fanout: base as f64,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The integer fanout the next round will use.
+    pub fn effective(&self) -> usize {
+        (self.fanout.round() as usize).max(1)
+    }
+
+    /// Fold one round's feedback into the estimate (AIMD).
+    fn observe(&mut self, fb: &RoundFeedback) {
+        if !self.enabled {
+            return;
+        }
+        if fb.nacks > 0 {
+            self.fanout = (self.fanout + self.gain).min(self.max);
+        } else if fb.duplicates > 0 || fb.empty > 0 || fb.acks > 0 {
+            self.fanout = (self.fanout * self.backoff).max(self.min);
+        }
+    }
+}
+
+/// Owns target choice and effective fanout for one dissemination context
+/// (a gossip variant's rounds+relays, or the pull variant's seed rounds /
+/// pull batches). Strategies feed it observations and call [`end_round`]
+/// at their round boundaries; [`plan_round`] slices the permutation with
+/// the controller's current effective fanout.
+///
+/// [`end_round`]: DisseminationPlanner::end_round
+/// [`plan_round`]: DisseminationPlanner::plan_round
+#[derive(Clone, Debug)]
+pub struct DisseminationPlanner {
+    controller: FanoutController,
+    feedback: RoundFeedback,
+}
+
+impl DisseminationPlanner {
+    pub fn new(cfg: &ProtocolConfig, base: usize, floor: usize) -> Self {
+        Self {
+            controller: FanoutController::new(cfg, base, floor),
+            feedback: RoundFeedback::default(),
+        }
+    }
+
+    /// Target routing without adaptation (the pull variant's pull batches:
+    /// `pull_fanout` stays config-fixed; only the interval backs off).
+    pub fn fixed(base: usize) -> Self {
+        Self { controller: FanoutController::fixed(base), feedback: RoundFeedback::default() }
+    }
+
+    pub fn effective_fanout(&self) -> usize {
+        self.controller.effective()
+    }
+
+    pub fn adaptive(&self) -> bool {
+        self.controller.enabled()
+    }
+
+    /// Feedback currently pending (diagnostics/tests).
+    pub fn pending_feedback(&self) -> &RoundFeedback {
+        &self.feedback
+    }
+
+    pub fn note_ack(&mut self) {
+        self.feedback.acks += 1;
+    }
+
+    pub fn note_nack(&mut self) {
+        self.feedback.nacks += 1;
+    }
+
+    pub fn note_duplicate(&mut self) {
+        self.feedback.duplicates += 1;
+    }
+
+    /// An empty cycle: a pull batch that returned nothing new, or an idle
+    /// seed round (see [`RoundFeedback::empty`]).
+    pub fn note_empty(&mut self) {
+        self.feedback.empty += 1;
+    }
+
+    /// Round boundary: fold the accumulated feedback into the controller
+    /// and publish the trajectory through the node's counters
+    /// (`fanout_current` gauge, `fanout_adaptations`, min/max watermarks).
+    pub fn end_round(&mut self, counters: &mut Counters) {
+        let before = self.controller.effective();
+        if !self.feedback.is_empty() {
+            self.controller.observe(&self.feedback);
+            self.feedback = RoundFeedback::default();
+        }
+        let after = self.controller.effective();
+        counters.fanout_current = after as u64;
+        counters.fanout_max_seen = counters.fanout_max_seen.max(after as u64);
+        if counters.fanout_min_seen == 0 || (after as u64) < counters.fanout_min_seen {
+            counters.fanout_min_seen = after as u64;
+        }
+        if after != before {
+            counters.fanout_adaptations += 1;
+        }
+    }
+
+    /// The next round's targets: the controller's effective fanout worth of
+    /// the peer permutation (the Algorithm 1 circular walk).
+    pub fn plan_round(&mut self, perm: &mut Permutation) -> Vec<NodeId> {
+        perm.next_round(self.controller.effective())
+    }
+}
+
+/// Start one leader-stamped dissemination round — shared by the gossip
+/// variants (§3.1 rounds, Algorithm 1) and the pull variant's seed rounds,
+/// which are deliberately wire-identical (a follower that missed a round
+/// NACKs into the same classic-RPC repair path for every round-based
+/// variant; `tests/strategy_matrix.rs` relies on this).
+///
+/// Folds the planner's accumulated feedback first (`end_round`), then
+/// stamps `RoundLC`, batches from the *lagged* commit base, sends to the
+/// planner's next targets with `epidemic` piggybacked (V2's §3.2
+/// structures; `None` elsewhere), and returns when the next round is due —
+/// fast cadence while entries are uncommitted, heartbeat cadence when idle
+/// (§3.1: "um intervalo de tempo maior").
+///
+/// Batch base: the commit index as of ~3 rounds ago. Using the *current*
+/// commit index would make any follower that missed a single round
+/// log-mismatch the next one (commit races past its log end under load)
+/// and fall into per-follower RPC repair — a repair storm that collapses
+/// throughput. The margin re-sends a few already-committed entries per
+/// round instead (idempotent reconcile); EXPERIMENTS.md §Perf quantifies
+/// the trade.
+pub(crate) fn start_seed_round(
+    planner: &mut DisseminationPlanner,
+    round_clock: &mut RoundClock,
+    commit_history: &mut VecDeque<LogIndex>,
+    node: &mut Node,
+    now: Time,
+    epidemic: Option<EpidemicState>,
+    actions: &mut Vec<Action>,
+) -> Time {
+    debug_assert_eq!(node.role, Role::Leader);
+    // An idle round — everything appended is already committed — is
+    // converged evidence in itself: deduplicated progress acks stop once
+    // there is no new progress, so without this a fanout widened during a
+    // loss burst would hold its elevated value across an idle period.
+    if node.log.last_index() == node.commit_index {
+        planner.note_empty();
+    }
+    planner.end_round(&mut node.counters);
+    let round = round_clock.start_round(node.current_term);
+    node.counters.rounds_started += 1;
+    let base = commit_history.front().copied().unwrap_or(0).min(node.commit_index);
+    commit_history.push_back(node.commit_index);
+    if commit_history.len() > 3 {
+        commit_history.pop_front();
+    }
+    let last = node.log.last_index();
+    let hi = last.min(base + node.cfg.max_entries_per_rpc as LogIndex);
+    let entries = node.log.slice(base, hi);
+    let prev_term = node.log.term_at(base).expect("commit index within log");
+    for to in planner.plan_round(&mut node.perm) {
+        let args = AppendEntriesArgs {
+            term: node.current_term,
+            leader: node.id,
+            prev_log_index: base,
+            prev_log_term: prev_term,
+            entries: Arc::clone(&entries),
+            leader_commit: node.commit_index,
+            gossip: Some(GossipMeta { round, hops: 0, epidemic: epidemic.clone() }),
+            seq: 0,
+        };
+        node.counters.gossip_sent += 1;
+        node.send(to, Message::AppendEntries(args), actions);
+    }
+    if node.log.last_index() > node.commit_index {
+        now + node.cfg.round_interval_us
+    } else {
+        now + node.cfg.idle_round_interval_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn adaptive_cfg(min: usize, max: usize) -> ProtocolConfig {
+        let mut cfg = ProtocolConfig::default();
+        cfg.adaptive.enabled = true;
+        cfg.adaptive.fanout_min = min;
+        cfg.adaptive.fanout_max = max;
+        cfg
+    }
+
+    #[test]
+    fn disabled_controller_is_inert_and_unclamped() {
+        let cfg = ProtocolConfig::default(); // adaptive off
+        let mut c = FanoutController::new(&cfg, 12, 1); // base above fanout_max
+        assert!(!c.enabled());
+        assert_eq!(c.effective(), 12, "disabled controller pins the base fanout");
+        c.observe(&RoundFeedback { nacks: 5, ..Default::default() });
+        c.observe(&RoundFeedback { duplicates: 5, ..Default::default() });
+        assert_eq!(c.effective(), 12);
+    }
+
+    #[test]
+    fn nacks_increase_and_clean_rounds_decay() {
+        let cfg = adaptive_cfg(1, 8);
+        let mut c = FanoutController::new(&cfg, 3, 1);
+        c.observe(&RoundFeedback { nacks: 1, ..Default::default() });
+        assert_eq!(c.effective(), 4, "additive increase by gain=1");
+        for _ in 0..32 {
+            c.observe(&RoundFeedback { acks: 2, ..Default::default() });
+        }
+        assert_eq!(c.effective(), 1, "clean feedback decays to fanout_min");
+        // NACKs dominate mixed feedback.
+        c.observe(&RoundFeedback { acks: 9, nacks: 1, ..Default::default() });
+        assert_eq!(c.effective(), 2);
+    }
+
+    #[test]
+    fn no_feedback_holds_the_estimate() {
+        let cfg = adaptive_cfg(1, 8);
+        let mut planner = DisseminationPlanner::new(&cfg, 3, 1);
+        let mut counters = Counters::default();
+        planner.end_round(&mut counters);
+        assert_eq!(counters.fanout_current, 3, "empty feedback must not decay");
+        assert_eq!(counters.fanout_adaptations, 0);
+    }
+
+    #[test]
+    fn controller_stays_within_bounds_under_random_feedback() {
+        let mut rng = Xoshiro256::seed_from_u64(0xFA0);
+        for case in 0..200u64 {
+            let min = 1 + (rng.next_below(3) as usize);
+            let max = min + rng.next_below(8) as usize;
+            let mut cfg = adaptive_cfg(min, max);
+            cfg.adaptive.gain = 0.5 + (rng.next_below(5) as f64) / 2.0;
+            cfg.adaptive.backoff = 0.5 + (rng.next_below(4) as f64) / 10.0;
+            let base = 1 + rng.next_below(10) as usize;
+            let mut c = FanoutController::new(&cfg, base, 1);
+            for _ in 0..100 {
+                let fb = RoundFeedback {
+                    acks: rng.next_below(3),
+                    nacks: rng.next_below(2),
+                    duplicates: rng.next_below(3),
+                    empty: rng.next_below(2),
+                };
+                c.observe(&fb);
+                assert!(
+                    (min..=max).contains(&c.effective()),
+                    "case {case}: fanout {} escaped [{min},{max}]",
+                    c.effective()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_floor_overrides_a_lower_min() {
+        let cfg = adaptive_cfg(1, 8);
+        let mut c = FanoutController::new(&cfg, 3, GOSSIP_FLOOR);
+        for _ in 0..32 {
+            c.observe(&RoundFeedback { duplicates: 1, ..Default::default() });
+        }
+        assert_eq!(c.effective(), GOSSIP_FLOOR, "liveness floor holds for gossip relays");
+    }
+
+    #[test]
+    fn planner_publishes_trajectory_through_counters() {
+        let cfg = adaptive_cfg(1, 8);
+        let mut planner = DisseminationPlanner::new(&cfg, 3, 1);
+        let mut counters = Counters::default();
+        planner.end_round(&mut counters);
+        assert_eq!(counters.fanout_current, 3);
+        planner.note_nack();
+        planner.end_round(&mut counters);
+        assert_eq!(counters.fanout_current, 4);
+        assert_eq!(counters.fanout_adaptations, 1);
+        for _ in 0..32 {
+            planner.note_ack();
+            planner.end_round(&mut counters);
+        }
+        assert_eq!(counters.fanout_current, 1);
+        assert_eq!(counters.fanout_min_seen, 1);
+        assert_eq!(counters.fanout_max_seen, 4);
+    }
+
+    #[test]
+    fn plan_round_slices_the_permutation_with_the_effective_fanout() {
+        let cfg = adaptive_cfg(1, 8);
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let mut perm = Permutation::new(11, 0, &mut rng);
+        let mut planner = DisseminationPlanner::new(&cfg, 3, 1);
+        assert_eq!(planner.plan_round(&mut perm).len(), 3);
+        let mut counters = Counters::default();
+        for _ in 0..32 {
+            planner.note_ack();
+            planner.end_round(&mut counters);
+        }
+        assert_eq!(planner.plan_round(&mut perm).len(), 1, "decayed fanout shrinks the slice");
+    }
+
+    #[test]
+    fn fixed_planner_never_moves() {
+        let mut planner = DisseminationPlanner::fixed(2);
+        assert!(!planner.adaptive());
+        planner.note_empty();
+        planner.note_nack();
+        let mut counters = Counters::default();
+        planner.end_round(&mut counters);
+        assert_eq!(planner.effective_fanout(), 2);
+        assert_eq!(counters.fanout_adaptations, 0);
+    }
+}

@@ -15,7 +15,9 @@
 use super::super::message::{AppendEntriesArgs, AppendEntriesReply, GossipMeta, Message};
 use super::super::node::{Action, Counters, Node};
 use super::super::types::{LogIndex, Role, Time};
+use super::disseminate::{DisseminationPlanner, GOSSIP_FLOOR};
 use super::ReplicationStrategy;
+use crate::config::ProtocolConfig;
 use crate::epidemic::{EpidemicState, RoundClass, RoundClock};
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -34,23 +36,29 @@ pub struct GossipStrategy {
     /// follower that misses a round or two still log-matches the next one
     /// instead of falling into RPC repair (see `start_round`).
     commit_history: VecDeque<LogIndex>,
+    /// Target choice + effective fanout for rounds and relays — the shared
+    /// dissemination layer. Feedback: leader-side acks/NACK replies,
+    /// relay-side RoundLC duplicates and apply failures, and (V2) the
+    /// leader's own rounds relayed back.
+    planner: DisseminationPlanner,
 }
 
 impl GossipStrategy {
     /// V1 — epidemic AppendEntries, leader-driven commit (§3.1).
-    pub fn v1() -> Self {
+    pub fn v1(cfg: &ProtocolConfig) -> Self {
         Self {
             name: "v1",
             epi: None,
             round_clock: RoundClock::new(),
             next_round_at: Time::MAX,
             commit_history: VecDeque::with_capacity(4),
+            planner: DisseminationPlanner::new(cfg, cfg.fanout, GOSSIP_FLOOR),
         }
     }
 
-    /// V2 — V1 plus decentralised commit over `n` processes (§3.2).
-    pub fn v2(n: usize) -> Self {
-        Self { epi: Some(EpidemicState::new(n)), name: "v2", ..Self::v1() }
+    /// V2 — V1 plus decentralised commit over `cfg.n` processes (§3.2).
+    pub fn v2(cfg: &ProtocolConfig) -> Self {
+        Self { epi: Some(EpidemicState::new(cfg.n)), name: "v2", ..Self::v1(cfg) }
     }
 
     /// §3.2 `Update` + follower commit rule, after any structure change.
@@ -108,6 +116,7 @@ impl GossipStrategy {
     /// machinery: [`super::start_seed_round`]).
     fn start_round(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
         self.next_round_at = super::start_seed_round(
+            &mut self.planner,
             &mut self.round_clock,
             &mut self.commit_history,
             node,
@@ -169,7 +178,10 @@ impl GossipStrategy {
         match self.round_clock.observe(node.current_term, meta.round) {
             RoundClass::Duplicate => {
                 node.counters.gossip_recv_dup += 1;
-                // Already processed this round: drop (no response, no relay).
+                // Already processed this round: drop (no response, no
+                // relay) — but a duplicate is over-dissemination evidence
+                // for the adaptive relay fanout.
+                self.planner.note_duplicate();
             }
             RoundClass::Fresh => {
                 node.counters.gossip_recv_fresh += 1;
@@ -183,6 +195,10 @@ impl GossipStrategy {
                     if bound > node.commit_index {
                         node.advance_commit(bound, actions);
                     }
+                } else {
+                    // We fell behind the batch base: behind-evidence for
+                    // the adaptive fanout.
+                    self.planner.note_nack();
                 }
 
                 // First-receipt response policy (DESIGN.md §4.3): V1 always;
@@ -204,11 +220,14 @@ impl GossipStrategy {
                     node.send(args.leader, Message::AppendEntriesReply(reply), actions);
                 }
 
-                // Epidemic relay (Algorithm 1): forward the same round to F
-                // targets of *our* permutation, with our (merged) structures.
+                // Epidemic relay (Algorithm 1): forward the same round to
+                // the planner's next targets of *our* permutation, with our
+                // (merged) structures. The fresh receipt is this node's
+                // round boundary: fold the feedback gathered since the
+                // previous one before choosing the relay fanout.
+                self.planner.end_round(&mut node.counters);
                 let epidemic = self.epi.clone();
-                let fanout = node.cfg.fanout;
-                let targets = node.perm.next_round(fanout);
+                let targets = self.planner.plan_round(&mut node.perm);
                 for to in targets {
                     if to == args.leader && meta.hops > 0 && self.epi.is_none() {
                         // The message originated there; relaying it back is
@@ -307,7 +326,11 @@ impl ReplicationStrategy for GossipStrategy {
         if node.role == Role::Leader {
             // Only possible for our own relayed round coming back (we are
             // the leader of this term). Merge the piggybacked structures —
-            // this is exactly how the leader learns remote votes in V2.
+            // this is exactly how the leader learns remote votes in V2 —
+            // and count the echo as over-dissemination evidence (the V2
+            // leader's decay signal; V1 leaders rely on acks instead, as
+            // V1 relays skip the round's origin).
+            self.planner.note_duplicate();
             if let Some(g) = &args.gossip {
                 if let Some(epi_msg) = &g.epidemic {
                     self.merge_and_update(node, epi_msg, actions);
@@ -333,6 +356,13 @@ impl ReplicationStrategy for GossipStrategy {
             return; // stale
         }
         debug_assert_eq!(reply.term, node.current_term);
+        // Adaptive-fanout feedback: successes say the followers keep up,
+        // failures say somebody fell behind the batch base.
+        if reply.success {
+            self.planner.note_ack();
+        } else {
+            self.planner.note_nack();
+        }
         // V2: responder's structures ride back on every reply.
         if let Some(epi_msg) = &reply.epidemic {
             self.merge_and_update(node, epi_msg, actions);
@@ -362,6 +392,10 @@ impl ReplicationStrategy for GossipStrategy {
         ];
         if self.epi.is_some() {
             out.push(("merges", c.merges));
+        }
+        if self.planner.adaptive() {
+            out.push(("fanout_current", c.fanout_current));
+            out.push(("fanout_adaptations", c.fanout_adaptations));
         }
         out
     }

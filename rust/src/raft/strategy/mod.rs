@@ -17,22 +17,22 @@
 //! adding one strategy module and one registry row.
 
 pub mod classic;
+pub mod disseminate;
 pub mod gossip;
 pub mod pull;
 
 pub use classic::ClassicStrategy;
+pub use disseminate::{DisseminationPlanner, FanoutController, RoundFeedback};
 pub use gossip::GossipStrategy;
 pub use pull::PullStrategy;
 
-use super::message::{
-    AppendEntriesArgs, AppendEntriesReply, GossipMeta, Message, PullReplyArgs, PullRequestArgs,
-};
+pub(crate) use disseminate::start_seed_round;
+
+use super::message::{AppendEntriesArgs, AppendEntriesReply, PullReplyArgs, PullRequestArgs};
 use super::node::{Action, Counters, Node};
-use super::types::{LogIndex, Role, Time, Variant};
+use super::types::{Time, Variant};
 use crate::config::ProtocolConfig;
-use crate::epidemic::{EpidemicState, RoundClock};
-use std::collections::VecDeque;
-use std::sync::Arc;
+use crate::epidemic::EpidemicState;
 
 /// Hooks a replication variant implements. All `&mut Node` methods are
 /// invoked with the strategy temporarily detached from the node (the node
@@ -148,67 +148,6 @@ pub trait ReplicationStrategy: Send {
     }
 }
 
-/// Start one leader-stamped dissemination round — shared by the gossip
-/// variants (§3.1 rounds, Algorithm 1) and the pull variant's seed rounds,
-/// which are deliberately wire-identical (a follower that missed a round
-/// NACKs into the same classic-RPC repair path for every round-based
-/// variant; `tests/strategy_matrix.rs` relies on this).
-///
-/// Stamps `RoundLC`, batches from the *lagged* commit base, sends to the
-/// next `fanout` targets of the leader's permutation with `epidemic`
-/// piggybacked (V2's §3.2 structures; `None` elsewhere), and returns when
-/// the next round is due — fast cadence while entries are uncommitted,
-/// heartbeat cadence when idle (§3.1: "um intervalo de tempo maior").
-///
-/// Batch base: the commit index as of ~3 rounds ago. Using the *current*
-/// commit index would make any follower that missed a single round
-/// log-mismatch the next one (commit races past its log end under load)
-/// and fall into per-follower RPC repair — a repair storm that collapses
-/// throughput. The margin re-sends a few already-committed entries per
-/// round instead (idempotent reconcile); EXPERIMENTS.md §Perf quantifies
-/// the trade.
-pub(crate) fn start_seed_round(
-    round_clock: &mut RoundClock,
-    commit_history: &mut VecDeque<LogIndex>,
-    node: &mut Node,
-    now: Time,
-    epidemic: Option<EpidemicState>,
-    actions: &mut Vec<Action>,
-) -> Time {
-    debug_assert_eq!(node.role, Role::Leader);
-    let round = round_clock.start_round(node.current_term);
-    node.counters.rounds_started += 1;
-    let base = commit_history.front().copied().unwrap_or(0).min(node.commit_index);
-    commit_history.push_back(node.commit_index);
-    if commit_history.len() > 3 {
-        commit_history.pop_front();
-    }
-    let last = node.log.last_index();
-    let hi = last.min(base + node.cfg.max_entries_per_rpc as LogIndex);
-    let entries = node.log.slice(base, hi);
-    let prev_term = node.log.term_at(base).expect("commit index within log");
-    let fanout = node.cfg.fanout;
-    for to in node.perm.next_round(fanout) {
-        let args = AppendEntriesArgs {
-            term: node.current_term,
-            leader: node.id,
-            prev_log_index: base,
-            prev_log_term: prev_term,
-            entries: Arc::clone(&entries),
-            leader_commit: node.commit_index,
-            gossip: Some(GossipMeta { round, hops: 0, epidemic: epidemic.clone() }),
-            seq: 0,
-        };
-        node.counters.gossip_sent += 1;
-        node.send(to, Message::AppendEntries(args), actions);
-    }
-    if node.log.last_index() > node.commit_index {
-        now + node.cfg.round_interval_us
-    } else {
-        now + node.cfg.idle_round_interval_us
-    }
-}
-
 /// One registry row: how to build a strategy for a config.
 pub struct StrategyInfo {
     pub variant: Variant,
@@ -220,16 +159,16 @@ fn build_classic(_cfg: &ProtocolConfig) -> Box<dyn ReplicationStrategy> {
     Box::new(ClassicStrategy::new())
 }
 
-fn build_v1(_cfg: &ProtocolConfig) -> Box<dyn ReplicationStrategy> {
-    Box::new(GossipStrategy::v1())
+fn build_v1(cfg: &ProtocolConfig) -> Box<dyn ReplicationStrategy> {
+    Box::new(GossipStrategy::v1(cfg))
 }
 
 fn build_v2(cfg: &ProtocolConfig) -> Box<dyn ReplicationStrategy> {
-    Box::new(GossipStrategy::v2(cfg.n))
+    Box::new(GossipStrategy::v2(cfg))
 }
 
-fn build_pull(_cfg: &ProtocolConfig) -> Box<dyn ReplicationStrategy> {
-    Box::new(PullStrategy::new())
+fn build_pull(cfg: &ProtocolConfig) -> Box<dyn ReplicationStrategy> {
+    Box::new(PullStrategy::new(cfg))
 }
 
 /// The strategy registry: every protocol variant maps to a constructor.

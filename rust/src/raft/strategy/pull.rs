@@ -54,7 +54,9 @@ use super::super::message::{
 };
 use super::super::node::{Action, Counters, Node};
 use super::super::types::{LogIndex, Role, Time};
+use super::disseminate::DisseminationPlanner;
 use super::ReplicationStrategy;
+use crate::config::ProtocolConfig;
 use crate::epidemic::{RoundClass, RoundClock};
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -82,10 +84,30 @@ pub struct PullStrategy {
     /// current-term tail matches the leader's log, so a diverged report
     /// against it just identifies the responder as the stale party.
     anchor_at_commit: bool,
+    /// Seed-round target choice + effective fanout. Feedback: deduplicated
+    /// durable-progress acks (converged) vs log-mismatch NACKs (behind) —
+    /// no liveness floor above `fanout_min`, because pull liveness rides on
+    /// the round advertisements, not on seed coverage (`configs/pull.toml`
+    /// ships seed fanout 1).
+    seed_planner: DisseminationPlanner,
+    /// Pull-batch target choice. `pull_fanout` stays config-fixed (pulls
+    /// *are* the dissemination; shrinking them starves it) — adaptation
+    /// acts on the interval below instead.
+    pull_planner: DisseminationPlanner,
+    /// `[protocol.adaptive]` interval backoff: while consecutive pull
+    /// cycles come back empty, stretch the next interval (bounded — see
+    /// `send_pulls`); any productive pull resets to `pull_interval_us`.
+    adaptive: bool,
+    empty_streak: u32,
+    /// A pull reply extended our log since the last `send_pulls`.
+    productive_since_pull: bool,
+    /// At least one pull cycle has been sent (the first cycle has no
+    /// previous window to classify).
+    pulled_once: bool,
 }
 
 impl PullStrategy {
-    pub fn new() -> Self {
+    pub fn new(cfg: &ProtocolConfig) -> Self {
         Self {
             round_clock: RoundClock::new(),
             next_round_at: Time::MAX,
@@ -93,6 +115,12 @@ impl PullStrategy {
             next_pull_at: 0,
             last_acked: 0,
             anchor_at_commit: false,
+            seed_planner: DisseminationPlanner::new(cfg, cfg.fanout, 1),
+            pull_planner: DisseminationPlanner::fixed(cfg.pull_fanout),
+            adaptive: cfg.adaptive.enabled,
+            empty_streak: 0,
+            productive_since_pull: false,
+            pulled_once: false,
         }
     }
 
@@ -122,6 +150,7 @@ impl PullStrategy {
     /// difference is entirely at the receivers, which never relay.
     fn start_round(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
         self.next_round_at = super::start_seed_round(
+            &mut self.seed_planner,
             &mut self.round_clock,
             &mut self.commit_history,
             node,
@@ -263,6 +292,23 @@ impl PullStrategy {
 
     /// Send one batch of pull requests over the permutation.
     fn send_pulls(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        // Classify the window since the previous cycle: a run of empty
+        // windows is converged-evidence and (when adaptive) stretches the
+        // next interval.
+        if self.pulled_once {
+            if self.productive_since_pull {
+                self.empty_streak = 0;
+            } else {
+                self.empty_streak = self.empty_streak.saturating_add(1);
+                node.counters.pull_empty += 1;
+                // Converged evidence for the seed controller too: should
+                // this node (be)come leader, pending empty-cycle feedback
+                // folds into its first seed rounds.
+                self.seed_planner.note_empty();
+            }
+        }
+        self.productive_since_pull = false;
+        self.pulled_once = true;
         let (from_index, from_term) = if self.anchor_at_commit {
             let ci = node.commit_index;
             (ci, node.log.term_at(ci).unwrap_or(0))
@@ -276,22 +322,26 @@ impl PullStrategy {
             from_term,
             known_round: self.round_clock.current(node.current_term),
         };
-        let fanout = node.cfg.pull_fanout;
-        for to in node.perm.next_round(fanout) {
+        for to in self.pull_planner.plan_round(&mut node.perm) {
             node.counters.pull_reqs_sent += 1;
             node.send(to, Message::PullRequest(req), actions);
         }
+        // Adaptive interval backoff: each consecutive empty cycle doubles
+        // the interval, up to 4x — and never past election_timeout_min/8,
+        // so the push-pull round-advertisement spread (the leader-liveness
+        // signal, ~log2(n) pull intervals) stays far inside the election
+        // timeout even at the cap.
+        let base = node.cfg.pull_interval_us;
+        let interval = if self.adaptive && self.empty_streak > 0 {
+            let backed = base << self.empty_streak.min(2);
+            backed.min((node.cfg.election_timeout_min_us / 8).max(base))
+        } else {
+            base
+        };
         // Jitter the next pull so a cohort bootstrapped together
         // desynchronises (deterministic per node seed).
-        let interval = node.cfg.pull_interval_us;
         let jitter = node.rng.next_below((interval / 4).max(1));
         self.next_pull_at = now + interval + jitter;
-    }
-}
-
-impl Default for PullStrategy {
-    fn default() -> Self {
-        Self::new()
     }
 }
 
@@ -379,6 +429,14 @@ impl ReplicationStrategy for PullStrategy {
             return; // stale
         }
         debug_assert_eq!(reply.term, node.current_term);
+        // Adaptive seed-fanout feedback: deduplicated progress acks mean
+        // the pull mesh is keeping followers current (seeds can shrink);
+        // NACKs mean a follower fell behind the batch base (seed wider).
+        if reply.success {
+            self.seed_planner.note_ack();
+        } else {
+            self.seed_planner.note_nack();
+        }
         node.update_follower_on_reply(now, &reply, actions);
         if reply.success {
             self.advance(node, actions);
@@ -501,6 +559,7 @@ impl ReplicationStrategy for PullStrategy {
         // first, or repair truncated our tail) — re-verify before use.
         if !node.log.matches(reply.prev_log_index, reply.prev_log_term) {
             node.counters.pull_stale += 1;
+            self.seed_planner.note_duplicate();
             return;
         }
         if reply.entries.is_empty() {
@@ -519,10 +578,15 @@ impl ReplicationStrategy for PullStrategy {
         let (covered, conflicted) = node.log.extend_matching(reply.prev_log_index, &reply.entries);
         node.counters.entries_appended += node.log.last_index() - before;
         if conflicted || node.log.last_index() == before {
-            // Nothing new: an overlapping duplicate, or a stale suffix.
+            // Nothing new: an overlapping duplicate, or a stale suffix —
+            // redundancy evidence for the seed controller (folds into this
+            // node's seed rounds if it is or becomes the leader).
             node.counters.pull_stale += 1;
+            self.seed_planner.note_duplicate();
         } else {
             self.anchor_at_commit = false;
+            // A pull that extended the log resets the interval backoff.
+            self.productive_since_pull = true;
         }
         // Adopt the responder's commit index, but only over the prefix this
         // reply verified as shared.
@@ -543,13 +607,19 @@ impl ReplicationStrategy for PullStrategy {
     }
 
     fn counters(&self, c: &Counters) -> Vec<(&'static str, u64)> {
-        vec![
+        let mut out = vec![
             ("rounds_started", c.rounds_started),
             ("seed_sent", c.gossip_sent),
             ("pull_reqs_sent", c.pull_reqs_sent),
             ("pull_replies_sent", c.pull_replies_sent),
             ("pull_stale", c.pull_stale),
+            ("pull_empty", c.pull_empty),
             ("repair_rpcs", c.repair_rpcs),
-        ]
+        ];
+        if self.seed_planner.adaptive() {
+            out.push(("fanout_current", c.fanout_current));
+            out.push(("fanout_adaptations", c.fanout_adaptations));
+        }
+        out
     }
 }

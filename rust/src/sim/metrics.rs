@@ -39,6 +39,15 @@ pub struct SimReport {
     pub leader_egress_bytes: u64,
     pub peer_egress_bytes_total: u64,
     pub peer_egress_bytes_max: u64,
+    /// Adaptive-fanout trajectory (PR 3, `raft::strategy::disseminate`):
+    /// the leader's effective fanout at end of run (0 for variants that
+    /// never plan rounds, e.g. classic Raft), total adaptation events
+    /// across all replicas, and the cluster-wide min/max effective fanout
+    /// observed (min ignores replicas that never planned a round).
+    pub fanout_current: u64,
+    pub fanout_adaptations: u64,
+    pub fanout_min_seen: u64,
+    pub fanout_max_seen: u64,
     /// Cross-replica committed-prefix agreement held at end of run.
     pub safety_ok: bool,
     /// Highest commit index across replicas at end of run.
@@ -80,6 +89,10 @@ impl SimReport {
                 Json::num(self.peer_egress_bytes_total as f64),
             ),
             ("peer_egress_bytes_max", Json::num(self.peer_egress_bytes_max as f64)),
+            ("fanout_current", Json::num(self.fanout_current as f64)),
+            ("fanout_adaptations", Json::num(self.fanout_adaptations as f64)),
+            ("fanout_min_seen", Json::num(self.fanout_min_seen as f64)),
+            ("fanout_max_seen", Json::num(self.fanout_max_seen as f64)),
             ("safety_ok", Json::Bool(self.safety_ok)),
             ("max_commit", Json::num(self.max_commit as f64)),
             ("events_processed", Json::num(self.events_processed as f64)),

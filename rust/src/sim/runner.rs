@@ -515,6 +515,23 @@ impl Simulation {
             followers.iter().sum::<f64>() / followers.len() as f64
         };
         let follower_cpu_max = followers.iter().cloned().fold(0.0, f64::max);
+        // Adaptive-fanout trajectory: leader gauge + cluster-wide rollups.
+        let fanout_current = self.replicas[leader].node.counters.fanout_current;
+        let fanout_adaptations =
+            self.replicas.iter().map(|r| r.node.counters.fanout_adaptations).sum();
+        let fanout_max_seen = self
+            .replicas
+            .iter()
+            .map(|r| r.node.counters.fanout_max_seen)
+            .max()
+            .unwrap_or(0);
+        let fanout_min_seen = self
+            .replicas
+            .iter()
+            .map(|r| r.node.counters.fanout_min_seen)
+            .filter(|&m| m > 0)
+            .min()
+            .unwrap_or(0);
         let leader_egress_bytes = self.collector.egress_bytes[leader];
         let peer_egress_bytes_total = (0..n)
             .filter(|&i| i != leader)
@@ -546,6 +563,10 @@ impl Simulation {
             leader_egress_bytes,
             peer_egress_bytes_total,
             peer_egress_bytes_max,
+            fanout_current,
+            fanout_adaptations,
+            fanout_min_seen,
+            fanout_max_seen,
             safety_ok,
             max_commit: ref_node.commit_index(),
             events_processed: self.events,
@@ -727,6 +748,74 @@ mod tests {
         assert!(report.safety_ok);
         assert!(report.completed > 50, "only {} completed", report.completed);
         assert_eq!(report.elections, 0, "pull liveness must hold the leader stable");
+    }
+
+    #[test]
+    fn adaptive_pull_converges_to_fanout_min_when_loss_free() {
+        // The adaptive controller's steady-state claim: with no loss the
+        // pull mesh keeps followers current, every seed round ends with
+        // clean ack feedback, and the leader's seed fanout decays to
+        // fanout_min — strictly below the static baseline.
+        let mut cfg = quick_cfg(15, Variant::Pull);
+        cfg.workload.rate = 300.0;
+        cfg.protocol.adaptive.enabled = true;
+        let fixed = run_experiment(&quick_cfg_rate(15, Variant::Pull, 300.0));
+        let adaptive = run_experiment(&cfg);
+        assert!(adaptive.safety_ok && adaptive.completed > 0);
+        assert_eq!(adaptive.elections, 0, "adaptive fanout must not destabilise the leader");
+        assert_eq!(
+            adaptive.fanout_current, cfg.protocol.adaptive.fanout_min as u64,
+            "loss-free steady state must converge to fanout_min"
+        );
+        assert!(adaptive.fanout_adaptations > 0, "the controller must actually have moved");
+        assert!(
+            adaptive.leader_egress_bytes < fixed.leader_egress_bytes,
+            "adaptive seeds ({}) must undercut fixed-fanout seeds ({})",
+            adaptive.leader_egress_bytes,
+            fixed.leader_egress_bytes
+        );
+    }
+
+    fn quick_cfg_rate(n: usize, variant: Variant, rate: f64) -> Config {
+        let mut cfg = quick_cfg(n, variant);
+        cfg.workload.rate = rate;
+        cfg
+    }
+
+    #[test]
+    fn adaptive_gossip_variants_stay_safe_and_live() {
+        for variant in [Variant::V1, Variant::V2] {
+            let mut cfg = quick_cfg(9, variant);
+            cfg.protocol.adaptive.enabled = true;
+            let report = run_experiment(&cfg);
+            assert!(report.safety_ok, "{variant:?} adaptive safety");
+            assert!(report.completed > 100, "{variant:?} adaptive progress");
+            assert_eq!(report.elections, 0, "{variant:?} adaptive leader stability");
+            // The gossip liveness floor holds even with fanout_min = 1.
+            assert!(
+                report.fanout_min_seen >= crate::raft::strategy::disseminate::GOSSIP_FLOOR as u64,
+                "{variant:?}: relay fanout {} fell through the liveness floor",
+                report.fanout_min_seen
+            );
+            assert!(
+                report.fanout_max_seen <= cfg.protocol.adaptive.fanout_max as u64,
+                "{variant:?}: fanout exceeded the configured ceiling"
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_disabled_matches_fixed_behaviour() {
+        // `enabled = false` must reproduce the fixed-fanout runs exactly —
+        // the controller may not even perturb RNG draws or message counts.
+        let fixed = run_experiment(&quick_cfg(7, Variant::V1));
+        let mut cfg = quick_cfg(7, Variant::V1);
+        cfg.protocol.adaptive.fanout_min = 2; // knobs without the switch
+        cfg.protocol.adaptive.fanout_max = 4;
+        let off = run_experiment(&cfg);
+        assert_eq!(fixed.messages, off.messages);
+        assert_eq!(fixed.completed, off.completed);
+        assert_eq!(fixed.mean_latency_us, off.mean_latency_us);
     }
 
     #[test]

@@ -11,9 +11,61 @@ fn load(name: &str) -> Config {
 
 #[test]
 fn all_shipped_configs_parse_and_validate() {
-    for name in ["paper51", "lan", "wan", "lossy", "pull"] {
+    for name in ["paper51", "lan", "wan", "lossy", "pull", "adaptive", "lossy-burst"] {
         let cfg = load(name);
         cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+#[test]
+fn adaptive_config_enables_the_controller_and_runs() {
+    let mut cfg = load("adaptive");
+    assert_eq!(cfg.protocol.variant, epiraft::raft::Variant::Pull);
+    assert!(cfg.protocol.adaptive.enabled, "the preset's point is the controller");
+    assert_eq!(cfg.protocol.adaptive.fanout_min, 1);
+    assert_eq!(cfg.protocol.adaptive.fanout_max, 8);
+    assert_eq!(cfg.protocol.adaptive.gain, 1.0);
+    assert_eq!(cfg.protocol.adaptive.backoff, 0.8);
+    // Shrink for test time.
+    cfg.protocol.n = 9;
+    cfg.workload.clients = 5;
+    cfg.workload.duration_us = 2_000_000;
+    cfg.workload.warmup_us = 400_000;
+    let report = run_experiment(&cfg);
+    assert!(report.safety_ok);
+    assert!(report.completed > 0, "adaptive preset must serve requests");
+    assert!(report.fanout_current >= 1, "leader must have planned adaptive rounds");
+}
+
+#[test]
+fn adaptive_validation_rejects_bad_windows_and_gains() {
+    // The committed preset must sit inside the validated space; the same
+    // keys with an inverted window or zero gain must be rejected.
+    let mut cfg = load("adaptive");
+    cfg.set("protocol.adaptive.fanout_min", "9").unwrap();
+    assert!(cfg.validate().is_err(), "fanout_min > fanout_max must fail validation");
+    let mut cfg = load("adaptive");
+    cfg.set("protocol.adaptive.gain", "0").unwrap();
+    assert!(cfg.validate().is_err(), "zero gain must fail validation");
+    let mut cfg = load("adaptive");
+    cfg.set("protocol.adaptive.backoff", "0").unwrap();
+    assert!(cfg.validate().is_err(), "zero backoff must fail validation");
+}
+
+#[test]
+fn lossy_burst_config_runs_and_stays_safe_fixed_and_adaptive() {
+    for adaptive in [false, true] {
+        let mut cfg = load("lossy-burst");
+        assert!(cfg.network.ge_good_to_bad > 0.0, "burst chain must be on");
+        assert!(cfg.network.duplicate > 0.0, "duplication knob must be on");
+        cfg.protocol.adaptive.enabled = adaptive;
+        // Shrink for test time.
+        cfg.protocol.n = 9;
+        cfg.workload.duration_us = 2_500_000;
+        cfg.workload.warmup_us = 400_000;
+        let report = run_experiment(&cfg);
+        assert!(report.safety_ok, "adaptive={adaptive}: burst loss broke safety");
+        assert!(report.completed > 0, "adaptive={adaptive}: no progress under bursts");
     }
 }
 

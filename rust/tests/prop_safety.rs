@@ -66,6 +66,53 @@ fn safety_under_random_faults(variant: Variant) {
 }
 
 #[test]
+fn adaptive_fanout_safe_and_bounded_under_random_faults() {
+    // PR 3: with the AIMD controller enabled and a randomized clamp
+    // window, random fault schedules must neither break safety nor drive
+    // any replica's effective fanout outside [fanout_min, fanout_max]
+    // (the gossip variants may clamp *up* to their liveness floor of 2,
+    // which stays inside the window by construction here).
+    forall("safety-adaptive", 12, |g| {
+        let variant = *g.choice(&[Variant::V1, Variant::V2, Variant::Pull]);
+        let mut cfg = random_cfg(g, variant);
+        cfg.protocol.adaptive.enabled = true;
+        cfg.protocol.adaptive.fanout_min = g.usize_in(1, 3);
+        cfg.protocol.adaptive.fanout_max = g.usize_in(4, 9);
+        cfg.protocol.adaptive.gain = 0.5 + g.f64_unit() * 2.0;
+        cfg.protocol.adaptive.backoff = 0.5 + g.f64_unit() * 0.4;
+        let mut rng = Xoshiro256::seed_from_u64(cfg.seed ^ 0xADA7);
+        let faults = FaultSchedule::random(
+            &mut rng,
+            cfg.protocol.n,
+            cfg.workload.duration_us,
+            5,
+        );
+        let report = run_with_faults(&cfg, faults);
+        assert!(
+            report.safety_ok,
+            "adaptive {variant:?} violated committed-prefix agreement (n={}, seed={})",
+            cfg.protocol.n, cfg.seed
+        );
+        let hi = cfg.protocol.adaptive.fanout_max as u64;
+        assert!(
+            report.fanout_max_seen <= hi,
+            "adaptive {variant:?}: fanout {} exceeded fanout_max {} (seed={})",
+            report.fanout_max_seen,
+            hi,
+            cfg.seed
+        );
+        assert!(
+            report.fanout_min_seen == 0
+                || report.fanout_min_seen >= cfg.protocol.adaptive.fanout_min as u64,
+            "adaptive {variant:?}: fanout {} fell below fanout_min {} (seed={})",
+            report.fanout_min_seen,
+            cfg.protocol.adaptive.fanout_min,
+            cfg.seed
+        );
+    });
+}
+
+#[test]
 fn liveness_without_faults_all_variants() {
     forall("liveness-no-faults", 9, |g| {
         for variant in Variant::ALL {

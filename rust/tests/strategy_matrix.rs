@@ -24,22 +24,37 @@ use std::collections::VecDeque;
 // Simulator matrix: one scenario, every variant, same invariants.
 // ---------------------------------------------------------------------------
 
-#[test]
-fn every_variant_passes_the_same_sim_scenario() {
+fn sim_scenario(adaptive: bool) {
     for variant in Variant::ALL {
         let mut cfg = Config::default();
         cfg.protocol.n = 7;
         cfg.protocol.variant = variant;
+        cfg.protocol.adaptive.enabled = adaptive;
         cfg.workload.clients = 10;
         cfg.workload.duration_us = 2_500_000;
         cfg.workload.warmup_us = 300_000;
         cfg.seed = 0xA11CE;
         let report = run_experiment(&cfg);
-        assert!(report.safety_ok, "{variant:?}: committed prefixes diverged");
-        assert!(report.completed > 50, "{variant:?}: only {} completed", report.completed);
-        assert_eq!(report.elections, 0, "{variant:?}: stable leader deposed");
-        assert!(report.max_commit > 0, "{variant:?}: nothing committed");
+        let tag = if adaptive { "adaptive" } else { "fixed" };
+        assert!(report.safety_ok, "{variant:?}/{tag}: committed prefixes diverged");
+        assert!(
+            report.completed > 50,
+            "{variant:?}/{tag}: only {} completed",
+            report.completed
+        );
+        assert_eq!(report.elections, 0, "{variant:?}/{tag}: stable leader deposed");
+        assert!(report.max_commit > 0, "{variant:?}/{tag}: nothing committed");
     }
+}
+
+#[test]
+fn every_variant_passes_the_same_sim_scenario() {
+    sim_scenario(false);
+}
+
+#[test]
+fn every_variant_passes_the_same_sim_scenario_with_adaptive_fanout() {
+    sim_scenario(true);
 }
 
 // ---------------------------------------------------------------------------
@@ -70,11 +85,11 @@ impl ActionSink for WireSink<'_> {
     }
 }
 
-#[test]
-fn commit_monotonicity_and_prefix_agreement_for_every_variant() {
+fn commit_monotonicity_and_prefix_agreement(adaptive: bool) {
     for variant in Variant::ALL {
         let n = 5;
-        let cfg = ProtocolConfig::for_variant(n, variant);
+        let mut cfg = ProtocolConfig::for_variant(n, variant);
+        cfg.adaptive.enabled = adaptive;
         let mut nodes: Vec<Node> =
             (0..n).map(|i| Node::new(i, cfg.clone(), 0xBEEF + i as u64)).collect();
         let mut inboxes: Vec<VecDeque<Message>> = vec![VecDeque::new(); n];
@@ -176,6 +191,16 @@ fn commit_monotonicity_and_prefix_agreement_for_every_variant() {
     }
 }
 
+#[test]
+fn commit_monotonicity_and_prefix_agreement_for_every_variant() {
+    commit_monotonicity_and_prefix_agreement(false);
+}
+
+#[test]
+fn commit_monotonicity_and_prefix_agreement_with_adaptive_fanout() {
+    commit_monotonicity_and_prefix_agreement(true);
+}
+
 // ---------------------------------------------------------------------------
 // Repair path: a follower that misses gossip rounds recovers via classic
 // RPC catch-up.
@@ -195,10 +220,21 @@ fn sends_of(actions: &[epiraft::raft::Action]) -> Vec<(usize, Message)> {
 fn follower_missing_rounds_recovers_via_classic_rpc_catch_up() {
     // Pull rides along: its leader *seed* rounds are stamped and batched
     // exactly like V1 rounds, so a follower that missed them NACKs into
-    // the same classic-RPC repair path.
-    for variant in [Variant::V1, Variant::V2, Variant::Pull] {
+    // the same classic-RPC repair path. Each variant runs twice: fixed
+    // fanout and with the adaptive controller enabled (clamp window pinned
+    // at 2 — the scenario depends on every round targeting both
+    // followers).
+    let cases = [Variant::V1, Variant::V2, Variant::Pull]
+        .into_iter()
+        .flat_map(|v| [(v, false), (v, true)]);
+    for (variant, adaptive) in cases {
         let mut cfg = ProtocolConfig::for_variant(3, variant);
         cfg.fanout = 2; // every round targets both followers
+        if adaptive {
+            cfg.adaptive.enabled = true;
+            cfg.adaptive.fanout_min = 2;
+            cfg.adaptive.fanout_max = 2;
+        }
         let mut leader = Node::new(0, cfg.clone(), 1);
         let mut f1 = Node::new(1, cfg.clone(), 2);
         let mut f2 = Node::new(2, cfg.clone(), 3);
@@ -633,6 +669,56 @@ fn stale_term_pull_request_teaches_the_requester_the_term() {
         }
         other => panic!("unexpected {other:?}"),
     }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive fanout (PR 3): the AIMD controller's visible trajectory at the
+// leader — NACKs widen the seed fanout, clean acks decay it to fanout_min.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn adaptive_seed_fanout_widens_on_nacks_and_decays_on_acks() {
+    use epiraft::raft::AppendEntriesReply;
+    let mut cfg = ProtocolConfig::for_variant(9, Variant::Pull);
+    cfg.fanout = 3;
+    cfg.adaptive.enabled = true; // defaults: min 1, max 8, gain 1, backoff 0.8
+    let mut leader = Node::new(0, cfg, 1);
+    leader.bootstrap_leader(0);
+    assert_eq!(
+        leader.counters.fanout_current, 3,
+        "first round plans at the static base fanout"
+    );
+    let reply = |from: usize, success: bool, match_hint: u64| {
+        Message::AppendEntriesReply(AppendEntriesReply {
+            term: 1,
+            from,
+            success,
+            match_hint,
+            round: Some(1),
+            epidemic: None,
+            seq: 0,
+        })
+    };
+    // A follower NACKs (behind the batch base): the next round widens.
+    let mut t = 1;
+    leader.on_message(t, reply(1, false, 0));
+    t = leader.next_deadline().max(t + 1);
+    leader.tick(t);
+    assert_eq!(leader.counters.fanout_current, 4, "additive increase after a NACK round");
+    assert!(leader.counters.fanout_adaptations >= 1);
+    // Rounds of clean acks decay the fanout back down to fanout_min.
+    for round in 0..12u64 {
+        let from = 1 + (round as usize % 4);
+        let hint = leader.last_index();
+        leader.on_message(t + 1, reply(from, true, hint));
+        t = leader.next_deadline().max(t + 2);
+        leader.tick(t);
+    }
+    assert_eq!(
+        leader.counters.fanout_current, 1,
+        "clean steady state must settle at fanout_min"
+    );
+    assert!(leader.counters.fanout_max_seen <= 8 && leader.counters.fanout_min_seen >= 1);
 }
 
 #[test]
