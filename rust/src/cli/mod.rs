@@ -8,6 +8,7 @@
 //! epiraft ablate     <fanout|round|responses|coalesce|votes> [--quick]
 //! epiraft bench-pr2  [--quick] [--n N] [--rate R] [--seed S] [--out FILE]
 //! epiraft bench-pr3  [--quick] [--n N] [--rate R] [--seed S] [--out FILE]
+//! epiraft bench-pr4  [--quick] [--n N] [--k K] [--rate R] [--seed S] [--out FILE]
 //! epiraft live       [--variant v] [--n N] [--clients C] [--secs S]
 //! epiraft artifacts-check [--dir artifacts]
 //! epiraft config-dump
@@ -147,6 +148,13 @@ USAGE:
       n=101); writes BENCH_PR3.json and fails unless the adaptive pull
       run's leader egress is strictly below its fixed baseline with p99
       commit latency within 1.5x.
+
+  epiraft bench-pr4 [--quick] [--n N] [--k K] [--rate R] [--seed S] [--out FILE]
+      Unreliable-node mode ({raft, pull} x {healthy, K-flaky slow replicas},
+      default n=101, K=5); writes BENCH_PR4.json and fails unless the flaky
+      pull run demotes its slow replicas and commits with p99 within 2x its
+      healthy baseline while classic stalls or pays strictly more leader
+      egress.
 
   epiraft live [--variant v] [--n N] [--clients C] [--secs S]
       Run the live thread-per-replica cluster (real time, real channels).

@@ -53,6 +53,71 @@ pub struct ProtocolConfig {
     /// Closed-loop fanout adaptation (`[protocol.adaptive]`) — see
     /// `raft::strategy::disseminate`.
     pub adaptive: AdaptiveConfig,
+    /// Unreliable-node mode (`[protocol.unreliable]`) — see `raft::view`.
+    pub unreliable: UnreliableConfig,
+}
+
+/// `[protocol.unreliable]` — unreliable-node mode (BlackWater Raft,
+/// arXiv:2203.07920), a `ClusterView` policy: a peer whose health score
+/// stays below `threshold` for `demote_after` consecutive evaluation
+/// rounds is demoted to non-voter (out of the commit quorum, the repair
+/// machinery and the regular dissemination targets) while the leader keeps
+/// reaching it best-effort under `best_effort_bytes` per round; after
+/// `probation` consecutive healthy rounds and once caught up it is
+/// re-promoted. See `raft::view` for the safety guards.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UnreliableConfig {
+    /// Master switch; off reproduces the flat-membership behaviour exactly.
+    pub enabled: bool,
+    /// Health EWMA below this marks a round unhealthy (in (0,1)).
+    pub threshold: f64,
+    /// EWMA smoothing weight of each new observation (in (0,1]).
+    pub ewma: f64,
+    /// Consecutive unhealthy rounds before demotion.
+    pub demote_after: u32,
+    /// Consecutive healthy rounds (plus catch-up) before re-promotion.
+    pub probation: u32,
+    /// Minimum voter count demotion may leave; 0 = auto (`majority(n)`).
+    /// The view additionally enforces the quorum-intersection floor
+    /// regardless of this setting.
+    pub quorum_floor: usize,
+    /// Best-effort byte budget toward demoted peers, per evaluation round.
+    pub best_effort_bytes: u64,
+}
+
+impl Default for UnreliableConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            threshold: 0.5,
+            ewma: 0.3,
+            demote_after: 3,
+            probation: 10,
+            quorum_floor: 0,
+            best_effort_bytes: 4096,
+        }
+    }
+}
+
+impl UnreliableConfig {
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        if !(self.threshold > 0.0 && self.threshold < 1.0) {
+            return Err("protocol.unreliable.threshold must be in (0,1)".into());
+        }
+        if !(self.ewma > 0.0 && self.ewma <= 1.0) {
+            return Err("protocol.unreliable.ewma must be in (0,1]".into());
+        }
+        if self.demote_after == 0 || self.probation == 0 {
+            return Err("protocol.unreliable.demote_after/probation must be >= 1".into());
+        }
+        if self.quorum_floor > n {
+            return Err(format!(
+                "protocol.unreliable.quorum_floor {} exceeds protocol.n {n}",
+                self.quorum_floor
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// `[protocol.adaptive]` — the AIMD fanout controller (Fast Raft-style,
@@ -122,6 +187,7 @@ impl Default for ProtocolConfig {
             pull_fanout: 2,
             pull_reply_budget: 512,
             adaptive: AdaptiveConfig::default(),
+            unreliable: UnreliableConfig::default(),
         }
     }
 }
@@ -161,6 +227,7 @@ impl ProtocolConfig {
             return Err("election timeout must exceed the pull interval".into());
         }
         self.adaptive.validate()?;
+        self.unreliable.validate(self.n)?;
         if self.adaptive.enabled
             && self.variant.is_gossip()
             && self.adaptive.fanout_max < crate::raft::strategy::disseminate::GOSSIP_FLOOR
@@ -204,6 +271,41 @@ pub struct NetworkConfig {
     pub ge_bad_to_good: f64,
     pub ge_loss_good: f64,
     pub ge_loss_bad: f64,
+    /// Asymmetric per-link extra latency (`[sim.links]`, default empty):
+    /// each entry adds a fixed one-way delay (µs) on top of the sampled
+    /// latency. Selector syntax: `"<from>-<to>"` for one directed replica
+    /// link, or `"<id>"` for both directions of every link touching `id`
+    /// (a slow node). Entries compose additively. Replica links only —
+    /// client traffic keeps the base model.
+    pub links: Vec<LinkSpec>,
+}
+
+/// One `[sim.links]` entry: `selector = extra_us` (see
+/// [`NetworkConfig::links`]). Kept as written so `config-dump` round-trips.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkSpec {
+    pub selector: String,
+    pub extra_us: u64,
+}
+
+impl LinkSpec {
+    /// Parse the selector into `(from, to)` — `None` means "any".
+    /// `"3-7"` → `(Some(3), Some(7))`; `"3"` → both directions of node 3,
+    /// returned as `(Some(3), None)` plus the caller mirroring it.
+    pub fn endpoints(&self, n: usize) -> Result<(Option<usize>, Option<usize>), String> {
+        let bad = |s: &str| format!("sim.links: bad selector '{s}' (want '<from>-<to>' or '<id>')");
+        let parse_id = |s: &str| -> Result<usize, String> {
+            let id = s.trim().parse::<usize>().map_err(|_| bad(&self.selector))?;
+            if id >= n {
+                return Err(format!("sim.links: node {id} out of range for n={n}"));
+            }
+            Ok(id)
+        };
+        match self.selector.split_once('-') {
+            Some((f, t)) => Ok((Some(parse_id(f)?), Some(parse_id(t)?))),
+            None => Ok((Some(parse_id(&self.selector)?), None)),
+        }
+    }
 }
 
 impl Default for NetworkConfig {
@@ -218,6 +320,7 @@ impl Default for NetworkConfig {
             ge_bad_to_good: 0.1,
             ge_loss_good: 0.0,
             ge_loss_bad: 1.0,
+            links: Vec::new(),
         }
     }
 }
@@ -321,6 +424,9 @@ impl Config {
                 return Err(format!("{name} must be in [0,1]"));
             }
         }
+        for spec in &self.network.links {
+            spec.endpoints(self.protocol.n)?;
+        }
         if !(0.0..=1.0).contains(&self.workload.write_fraction) {
             return Err("workload.write_fraction must be in [0,1]".into());
         }
@@ -345,6 +451,18 @@ impl Config {
             "false" | "0" | "no" => Ok(false),
             _ => Err(format!("bad bool for {key}: {v}")),
         };
+        // `[sim.links]` is a map, not a fixed key set: any selector is a
+        // key. Same selector twice = overwrite (so dump/set round-trips).
+        if let Some(selector) = key.strip_prefix("sim.links.") {
+            let extra = parse_u64(v)?;
+            let selector = selector.trim().to_string();
+            if let Some(e) = self.network.links.iter_mut().find(|e| e.selector == selector) {
+                e.extra_us = extra;
+            } else {
+                self.network.links.push(LinkSpec { selector, extra_us: extra });
+            }
+            return Ok(());
+        }
         match key {
             "seed" => self.seed = parse_u64(v)?,
             "protocol.n" => self.protocol.n = parse_u64(v)? as usize,
@@ -395,6 +513,21 @@ impl Config {
             }
             "protocol.adaptive.gain" => self.protocol.adaptive.gain = parse_f64(v)?,
             "protocol.adaptive.backoff" => self.protocol.adaptive.backoff = parse_f64(v)?,
+            "protocol.unreliable.enabled" => self.protocol.unreliable.enabled = parse_bool(v)?,
+            "protocol.unreliable.threshold" => self.protocol.unreliable.threshold = parse_f64(v)?,
+            "protocol.unreliable.ewma" => self.protocol.unreliable.ewma = parse_f64(v)?,
+            "protocol.unreliable.demote_after" => {
+                self.protocol.unreliable.demote_after = parse_u64(v)? as u32
+            }
+            "protocol.unreliable.probation" => {
+                self.protocol.unreliable.probation = parse_u64(v)? as u32
+            }
+            "protocol.unreliable.quorum_floor" => {
+                self.protocol.unreliable.quorum_floor = parse_u64(v)? as usize
+            }
+            "protocol.unreliable.best_effort_bytes" => {
+                self.protocol.unreliable.best_effort_bytes = parse_u64(v)?
+            }
             "network.latency_mean_us" => self.network.latency_mean_us = parse_f64(v)?,
             "network.latency_stddev_us" => self.network.latency_stddev_us = parse_f64(v)?,
             "network.latency_min_us" => self.network.latency_min_us = parse_u64(v)?,
@@ -539,6 +672,19 @@ pub fn dump(cfg: &Config) -> BTreeMap<String, String> {
     m.insert("protocol.adaptive.fanout_max".into(), p.adaptive.fanout_max.to_string());
     m.insert("protocol.adaptive.gain".into(), p.adaptive.gain.to_string());
     m.insert("protocol.adaptive.backoff".into(), p.adaptive.backoff.to_string());
+    m.insert("protocol.unreliable.enabled".into(), p.unreliable.enabled.to_string());
+    m.insert("protocol.unreliable.threshold".into(), p.unreliable.threshold.to_string());
+    m.insert("protocol.unreliable.ewma".into(), p.unreliable.ewma.to_string());
+    m.insert("protocol.unreliable.demote_after".into(), p.unreliable.demote_after.to_string());
+    m.insert("protocol.unreliable.probation".into(), p.unreliable.probation.to_string());
+    m.insert("protocol.unreliable.quorum_floor".into(), p.unreliable.quorum_floor.to_string());
+    m.insert(
+        "protocol.unreliable.best_effort_bytes".into(),
+        p.unreliable.best_effort_bytes.to_string(),
+    );
+    for spec in &cfg.network.links {
+        m.insert(format!("sim.links.{}", spec.selector), spec.extra_us.to_string());
+    }
     m.insert("network.latency_mean_us".into(), cfg.network.latency_mean_us.to_string());
     m.insert("network.latency_stddev_us".into(), cfg.network.latency_stddev_us.to_string());
     m.insert("network.latency_min_us".into(), cfg.network.latency_min_us.to_string());
@@ -744,6 +890,81 @@ rate = 2500.5
             rebuilt.set(k, v).unwrap();
         }
         assert_eq!(rebuilt, cfg);
+    }
+
+    #[test]
+    fn unreliable_keys_parse_and_validate() {
+        let mut cfg = Config::default();
+        cfg.set("protocol.unreliable.enabled", "true").unwrap();
+        cfg.set("protocol.unreliable.threshold", "0.4").unwrap();
+        cfg.set("protocol.unreliable.ewma", "0.25").unwrap();
+        cfg.set("protocol.unreliable.demote_after", "4").unwrap();
+        cfg.set("protocol.unreliable.probation", "8").unwrap();
+        cfg.set("protocol.unreliable.quorum_floor", "3").unwrap();
+        cfg.set("protocol.unreliable.best_effort_bytes", "8192").unwrap();
+        cfg.validate().unwrap();
+        assert!(cfg.protocol.unreliable.enabled);
+        assert_eq!(cfg.protocol.unreliable.demote_after, 4);
+        assert_eq!(cfg.protocol.unreliable.probation, 8);
+        assert_eq!(cfg.protocol.unreliable.quorum_floor, 3);
+        assert_eq!(cfg.protocol.unreliable.best_effort_bytes, 8192);
+        // Degenerate thresholds/streaks are rejected.
+        let mut cfg = Config::default();
+        cfg.set("protocol.unreliable.threshold", "1.0").unwrap();
+        assert!(cfg.validate().is_err(), "threshold 1.0 would demote everyone");
+        let mut cfg = Config::default();
+        cfg.set("protocol.unreliable.ewma", "0").unwrap();
+        assert!(cfg.validate().is_err(), "zero ewma never learns");
+        let mut cfg = Config::default();
+        cfg.set("protocol.unreliable.demote_after", "0").unwrap();
+        assert!(cfg.validate().is_err());
+        // A quorum floor above the cluster size is a contradiction.
+        let mut cfg = Config::default();
+        cfg.set("protocol.unreliable.quorum_floor", "99").unwrap();
+        assert!(cfg.validate().is_err(), "floor above n must be rejected");
+    }
+
+    #[test]
+    fn unreliable_section_parses_from_toml() {
+        let cfg = Config::from_toml(
+            "[protocol.unreliable]\nenabled = true\ndemote_after = 5\nbest_effort_bytes = 1024\n",
+        )
+        .unwrap();
+        assert!(cfg.protocol.unreliable.enabled);
+        assert_eq!(cfg.protocol.unreliable.demote_after, 5);
+        assert_eq!(cfg.protocol.unreliable.best_effort_bytes, 1024);
+    }
+
+    #[test]
+    fn sim_links_parse_validate_and_roundtrip() {
+        let cfg = Config::from_toml("[sim.links]\n2-0 = 150000\n3 = 80000\n").unwrap();
+        assert_eq!(cfg.network.links.len(), 2);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.network.links[0].endpoints(5).unwrap(), (Some(2), Some(0)));
+        assert_eq!(cfg.network.links[1].endpoints(5).unwrap(), (Some(3), None));
+        // Re-setting the same selector overwrites instead of duplicating.
+        let mut cfg = cfg;
+        cfg.set("sim.links.3", "90000").unwrap();
+        assert_eq!(cfg.network.links.len(), 2);
+        assert_eq!(cfg.network.links[1].extra_us, 90_000);
+        // Dump/set round-trips the map.
+        let dumped = dump(&cfg);
+        assert_eq!(dumped.get("sim.links.2-0").map(String::as_str), Some("150000"));
+        let mut rebuilt = Config::default();
+        for (k, v) in &dumped {
+            rebuilt.set(k, v).unwrap();
+        }
+        assert_eq!(rebuilt.network.links.len(), 2);
+        // Out-of-range and malformed selectors fail validation.
+        let mut cfg = Config::default();
+        cfg.set("sim.links.9", "1000").unwrap(); // n = 5 by default
+        assert!(cfg.validate().is_err(), "node id beyond n must be rejected");
+        let mut cfg = Config::default();
+        cfg.set("sim.links.a-b", "1000").unwrap();
+        assert!(cfg.validate().is_err(), "non-numeric selector must be rejected");
+        // Values must still be integers.
+        let mut cfg = Config::default();
+        assert!(cfg.set("sim.links.1", "fast").is_err());
     }
 
     #[test]

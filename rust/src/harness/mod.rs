@@ -7,6 +7,7 @@ pub mod adaptive;
 pub mod bench_stats;
 pub mod egress;
 pub mod figures;
+pub mod unreliable;
 
 pub use adaptive::{
     adaptive_comparison, adaptive_gate, bench_pr3_json, print_adaptive, AdaptivePoint,
@@ -18,4 +19,7 @@ pub use egress::{
 pub use figures::{
     fig4, fig4_default_rates, fig5, fig5_default_rates, fig6, fig6_default_ns, fig7, headline,
     print_points, run_point, write_cdfs_json, write_points_json, Headline, Point, Scale,
+};
+pub use unreliable::{
+    bench_pr4_json, print_unreliable, unreliable_comparison, unreliable_gate, UnreliablePoint,
 };

@@ -1,0 +1,383 @@
+//! PR 4 measurement plumbing: unreliable-node mode (`raft::view`,
+//! `[protocol.unreliable]`) under k permanently-slow replicas at n=101.
+//!
+//! This is the scenario behind `epiraft bench-pr4`, the committed
+//! `BENCH_PR4.json`, and CI's `bench-smoke` gate for the `ClusterView`
+//! demotion policy: {classic, pull} × {healthy, k-flaky}, all four cells
+//! with the mode enabled. Flaky replicas get a large asymmetric extra
+//! link delay (`[sim.links]`) in both directions — the BlackWater-Raft
+//! "permanently slow" shape: reachable, in-order, hundreds of ms late —
+//! which makes them NACK every seed batch and sink their health score.
+//!
+//! The gate encodes the mode's claim: under k flaky replicas the pull
+//! variant demotes them (so their repair storms leave the leader's
+//! critical path and the pull mesh feeds them off-path) and still commits
+//! the client load with p99 within 2x its healthy baseline, while classic
+//! Raft — which must keep broadcasting full batches to every peer — pays
+//! strictly more leader egress (or stalls outright). Healthy cells must
+//! demote nobody and keep the bootstrap leader; safety holds everywhere.
+
+use super::figures::Scale;
+use crate::config::{Config, LinkSpec};
+use crate::raft::Variant;
+use crate::sim::{run_experiment, SimReport};
+use crate::util::json::Json;
+
+const HEALTHY: &str = "healthy";
+const FLAKY: &str = "flaky";
+
+/// Extra one-way delay on every link touching a flaky replica (µs). Large
+/// enough that a flaky follower trails the commit frontier by far more
+/// than the seed rounds' lagged batch base (so it NACKs into repair and
+/// its health sinks), small enough that its delayed-but-regular heartbeat
+/// stream still feeds its election timer.
+pub const FLAKY_EXTRA_US: u64 = 250_000;
+
+/// One (variant, scenario) cell of the comparison grid.
+#[derive(Clone, Debug)]
+pub struct UnreliablePoint {
+    pub variant: &'static str,
+    /// `"healthy"` or `"flaky"` (k slow replicas via `[sim.links]`).
+    pub scenario: &'static str,
+    pub k_flaky: usize,
+    pub throughput: f64,
+    pub completed: u64,
+    pub max_commit: u64,
+    /// Client-observed latency (µs) — the gate's p99 is this one.
+    pub mean_latency_us: f64,
+    pub p99_latency_us: u64,
+    pub leader_egress_bytes: u64,
+    pub peer_egress_bytes_total: u64,
+    /// `ClusterView` churn + budgeted best-effort spend (from `Counters`
+    /// via `SimReport`).
+    pub demotions: u64,
+    pub promotions: u64,
+    pub demoted_current: u64,
+    pub best_effort_bytes: u64,
+    pub elections: u64,
+    pub safety_ok: bool,
+}
+
+impl UnreliablePoint {
+    fn from_report(scenario: &'static str, k: usize, r: &SimReport) -> UnreliablePoint {
+        UnreliablePoint {
+            variant: r.variant,
+            scenario,
+            k_flaky: k,
+            throughput: r.throughput,
+            completed: r.completed,
+            max_commit: r.max_commit,
+            mean_latency_us: r.mean_latency_us,
+            p99_latency_us: r.p99_latency_us,
+            leader_egress_bytes: r.leader_egress_bytes,
+            peer_egress_bytes_total: r.peer_egress_bytes_total,
+            demotions: r.demotions,
+            promotions: r.promotions,
+            demoted_current: r.demoted_current,
+            best_effort_bytes: r.best_effort_bytes,
+            elections: r.elections,
+            safety_ok: r.safety_ok,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(self.variant)),
+            ("scenario", Json::str(self.scenario)),
+            ("k_flaky", Json::num(self.k_flaky as f64)),
+            ("throughput", Json::num(self.throughput)),
+            ("completed", Json::num(self.completed as f64)),
+            ("max_commit", Json::num(self.max_commit as f64)),
+            ("mean_latency_us", Json::num(self.mean_latency_us)),
+            ("p99_latency_us", Json::num(self.p99_latency_us as f64)),
+            ("leader_egress_bytes", Json::num(self.leader_egress_bytes as f64)),
+            (
+                "peer_egress_bytes_total",
+                Json::num(self.peer_egress_bytes_total as f64),
+            ),
+            ("demotions", Json::num(self.demotions as f64)),
+            ("promotions", Json::num(self.promotions as f64)),
+            ("demoted_current", Json::num(self.demoted_current as f64)),
+            ("best_effort_bytes", Json::num(self.best_effort_bytes as f64)),
+            ("elections", Json::num(self.elections as f64)),
+            ("safety_ok", Json::Bool(self.safety_ok)),
+        ])
+    }
+}
+
+/// Warmup every cell actually runs with: the flaky replicas only establish
+/// contact after a full slow round trip, so detection+demotion completes
+/// within ~4x `FLAKY_EXTRA_US` of bootstrap — that transient (pre-demotion
+/// repair storms included) stays out of the measured window.
+pub fn effective_warmup_us(scale: Scale) -> u64 {
+    scale.warmup_us.max(4 * FLAKY_EXTRA_US)
+}
+
+/// Build one cell's config: unreliable-node mode on everywhere, the flaky
+/// scenario slowing the k highest replica ids (never the bootstrap leader,
+/// replica 0) in both directions.
+fn cell_cfg(scale: Scale, variant: Variant, flaky: bool, k: usize, rate: f64, seed: u64) -> Config {
+    let mut cfg = Config {
+        protocol: crate::config::ProtocolConfig::for_variant(scale.n, variant),
+        ..Config::default()
+    };
+    cfg.protocol.unreliable.enabled = true;
+    // Same election timeouts in every cell, sized so a flaky replica's
+    // delayed-but-regular heartbeat stream (offset by up to 2x
+    // FLAKY_EXTRA_US) still feeds its timer: a slow replica must read as
+    // slow, not dead — if it times out before its first delivery it turns
+    // into a disruptive candidate and the measurement becomes a failover
+    // benchmark instead.
+    cfg.protocol.election_timeout_min_us = 1_000_000;
+    cfg.protocol.election_timeout_max_us = 2_000_000;
+    cfg.workload.clients = 10;
+    cfg.workload.rate = rate;
+    cfg.workload.duration_us = scale.duration_us;
+    cfg.workload.warmup_us = effective_warmup_us(scale);
+    cfg.seed = seed;
+    if flaky {
+        for id in (scale.n - k)..scale.n {
+            cfg.network.links.push(LinkSpec {
+                selector: id.to_string(),
+                extra_us: FLAKY_EXTRA_US,
+            });
+        }
+    }
+    cfg
+}
+
+/// Run the grid: {raft, pull} × {healthy, k-flaky}, same n/seed/rate —
+/// cells differ only in the per-link delays.
+pub fn unreliable_comparison(scale: Scale, rate: f64, seed: u64, k: usize) -> Vec<UnreliablePoint> {
+    assert!(k >= 1 && k < scale.n / 2, "k must leave a healthy majority");
+    let mut out = Vec::new();
+    for variant in [Variant::Raft, Variant::Pull] {
+        for scenario in [HEALTHY, FLAKY] {
+            let cfg = cell_cfg(scale, variant, scenario == FLAKY, k, rate, seed);
+            out.push(UnreliablePoint::from_report(scenario, k, &run_experiment(&cfg)));
+        }
+    }
+    out
+}
+
+fn find<'a>(
+    points: &'a [UnreliablePoint],
+    variant: &str,
+    scenario: &str,
+) -> Result<&'a UnreliablePoint, String> {
+    points
+        .iter()
+        .find(|p| p.variant == variant && p.scenario == scenario)
+        .ok_or_else(|| format!("gate: cell {variant}/{scenario} missing from results"))
+}
+
+/// The CI gate (`epiraft bench-pr4` exit status):
+///
+/// * every measured cell is safe and committed something;
+/// * healthy cells kept the bootstrap leader and demoted nobody (the
+///   policy must not misfire on a healthy cluster);
+/// * pull/flaky demonstrably engaged the mode (demotions > 0, best-effort
+///   bytes metered) and still served the client load with p99 latency
+///   within 2x its healthy baseline;
+/// * classic/flaky either stalled (completed under half its healthy cell)
+///   or paid strictly more leader egress than pull/flaky — the
+///   "deployable vs prototype" contrast of BlackWater Raft.
+pub fn unreliable_gate(points: &[UnreliablePoint]) -> Result<(), String> {
+    if let Some(bad) = points.iter().find(|p| !p.safety_ok) {
+        return Err(format!("gate: safety violated in the {}/{} run", bad.variant, bad.scenario));
+    }
+    if let Some(bad) = points.iter().find(|p| p.max_commit == 0) {
+        return Err(format!("gate: nothing committed in the {}/{} run", bad.variant, bad.scenario));
+    }
+    for p in points.iter().filter(|p| p.scenario == HEALTHY) {
+        if p.elections > 0 {
+            return Err(format!(
+                "gate: leader deposed ({} election(s)) in the healthy {} run",
+                p.elections, p.variant
+            ));
+        }
+        if p.demotions > 0 {
+            return Err(format!(
+                "gate: {} demotion(s) in the healthy {} run — the policy misfired",
+                p.demotions, p.variant
+            ));
+        }
+    }
+    let pull = Variant::Pull.name();
+    let raft = Variant::Raft.name();
+    let pull_healthy = find(points, pull, HEALTHY)?;
+    let pull_flaky = find(points, pull, FLAKY)?;
+    let raft_healthy = find(points, raft, HEALTHY)?;
+    let raft_flaky = find(points, raft, FLAKY)?;
+    if pull_flaky.completed == 0 {
+        return Err("gate: flaky pull served no requests".into());
+    }
+    if pull_flaky.demotions == 0 {
+        return Err("gate: flaky pull never demoted a flaky replica (mode inert?)".into());
+    }
+    if pull_flaky.demoted_current == 0 {
+        return Err("gate: flaky pull ended with no replica demoted".into());
+    }
+    if pull_flaky.best_effort_bytes == 0 {
+        return Err("gate: no best-effort traffic reached the demoted replicas".into());
+    }
+    if pull_healthy.p99_latency_us == 0 {
+        return Err("gate: healthy pull baseline recorded no latencies".into());
+    }
+    if pull_flaky.p99_latency_us as f64 > pull_healthy.p99_latency_us as f64 * 2.0 {
+        return Err(format!(
+            "gate: flaky pull p99 {}us exceeds 2x the healthy baseline's {}us",
+            pull_flaky.p99_latency_us, pull_healthy.p99_latency_us
+        ));
+    }
+    let classic_stalled = raft_flaky.completed * 2 < raft_healthy.completed;
+    let classic_pays_more = raft_flaky.leader_egress_bytes > pull_flaky.leader_egress_bytes;
+    if !classic_stalled && !classic_pays_more {
+        return Err(format!(
+            "gate: classic under flaky replicas neither stalled ({} vs {} healthy) nor paid \
+             more leader egress ({} vs pull's {})",
+            raft_flaky.completed,
+            raft_healthy.completed,
+            raft_flaky.leader_egress_bytes,
+            pull_flaky.leader_egress_bytes
+        ));
+    }
+    Ok(())
+}
+
+/// Render the whole scenario (config + grid + gate verdict) as the
+/// `BENCH_PR4.json` document.
+pub fn bench_pr4_json(
+    scale: Scale,
+    rate: f64,
+    seed: u64,
+    k: usize,
+    points: &[UnreliablePoint],
+) -> Json {
+    let gate = unreliable_gate(points);
+    Json::obj(vec![
+        ("bench", Json::str("unreliable-node-mode")),
+        ("n", Json::num(scale.n as f64)),
+        ("k_flaky", Json::num(k as f64)),
+        ("flaky_extra_us", Json::num(FLAKY_EXTRA_US as f64)),
+        ("rate", Json::num(rate)),
+        ("duration_us", Json::num(scale.duration_us as f64)),
+        // The warmup the cells actually measured with (cell_cfg widens the
+        // scale's warmup past the flaky-detection transient).
+        ("warmup_us", Json::num(effective_warmup_us(scale) as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("points", Json::arr(points.iter().map(|p| p.to_json()))),
+        ("gate_unreliable_mode", Json::Bool(gate.is_ok())),
+        (
+            "gate_detail",
+            match gate {
+                Ok(()) => Json::str(
+                    "flaky pull demotes and holds p99 within 2x healthy; classic pays more \
+                     leader egress or stalls; safety everywhere",
+                ),
+                Err(e) => Json::str(&e),
+            },
+        ),
+    ])
+}
+
+/// Print the comparison table.
+pub fn print_unreliable(points: &[UnreliablePoint]) {
+    println!("\n== unreliable-node mode ({{raft, pull}} x {{healthy, flaky}}) ==");
+    println!(
+        "{:<6} {:<8} {:>12} {:>12} {:>14} {:>8} {:>8} {:>14} {:>8}",
+        "var",
+        "net",
+        "p99_us",
+        "tput(req/s)",
+        "leader_bytes",
+        "demote",
+        "promote",
+        "best_effort_B",
+        "safety"
+    );
+    for p in points {
+        println!(
+            "{:<6} {:<8} {:>12} {:>12.1} {:>14} {:>8} {:>8} {:>14} {:>8}",
+            p.variant,
+            p.scenario,
+            p.p99_latency_us,
+            p.throughput,
+            p.leader_egress_bytes,
+            p.demotions,
+            p.promotions,
+            p.best_effort_bytes,
+            if p.safety_ok { "OK" } else { "VIOLATED" }
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scale {
+        Scale { reps: 1, duration_us: 1_500_000, warmup_us: 300_000, n: 9 }
+    }
+
+    #[test]
+    fn comparison_covers_the_grid_and_healthy_cells_never_demote() {
+        let pts = unreliable_comparison(tiny(), 300.0, 11, 2);
+        assert_eq!(pts.len(), 4, "2 variants x 2 scenarios");
+        for p in &pts {
+            assert!(p.safety_ok, "{}/{}", p.variant, p.scenario);
+            assert!(p.max_commit > 0, "{}/{}", p.variant, p.scenario);
+        }
+        for p in pts.iter().filter(|p| p.scenario == "healthy") {
+            assert_eq!(p.demotions, 0, "healthy {} must not demote", p.variant);
+            assert_eq!(p.elections, 0, "healthy {} must keep its leader", p.variant);
+        }
+    }
+
+    #[test]
+    fn gate_passes_at_moderate_scale_and_rejects_tampering() {
+        // n=21 rather than the tiny n=9: like the PR 2/PR 3 gates, the
+        // leader-egress contrast needs a few peers to show through. CI
+        // runs the claim at n=101.
+        let scale = Scale { reps: 1, duration_us: 2_000_000, warmup_us: 400_000, n: 21 };
+        let pts = unreliable_comparison(scale, 400.0, 11, 3);
+        unreliable_gate(&pts).expect("unreliable mode must pass its own gate");
+        // Tamper: blow the flaky pull p99 — the gate must fail loudly.
+        let mut bad = pts.clone();
+        for p in bad.iter_mut() {
+            if p.variant == "pull" && p.scenario == "flaky" {
+                p.p99_latency_us = u64::MAX;
+            }
+        }
+        assert!(unreliable_gate(&bad).is_err(), "blown p99 must fail the gate");
+        // Tamper: pretend the mode never engaged.
+        let mut bad = pts.clone();
+        for p in bad.iter_mut() {
+            if p.variant == "pull" && p.scenario == "flaky" {
+                p.demotions = 0;
+            }
+        }
+        assert!(unreliable_gate(&bad).is_err(), "inert mode must fail the gate");
+        // Tamper: a healthy-cell demotion is a policy misfire.
+        let mut bad = pts.clone();
+        for p in bad.iter_mut() {
+            if p.variant == "raft" && p.scenario == "healthy" {
+                p.demotions = 1;
+            }
+        }
+        assert!(unreliable_gate(&bad).is_err(), "healthy demotion must fail the gate");
+    }
+
+    #[test]
+    fn bench_json_round_trips_with_gate_fields() {
+        let pts = unreliable_comparison(tiny(), 300.0, 11, 2);
+        let j = bench_pr4_json(tiny(), 300.0, 11, 2, &pts);
+        assert_eq!(j.get("points").and_then(|v| v.as_arr()).unwrap().len(), 4);
+        assert!(j.get("gate_unreliable_mode").and_then(|g| g.as_bool()).is_some());
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.get("bench").and_then(|b| b.as_str()),
+            Some("unreliable-node-mode")
+        );
+    }
+}

@@ -31,6 +31,7 @@ fn run(args: Vec<String>) -> Result<(), String> {
         "ablate" => cmd_ablate(&cli),
         "bench-pr2" => cmd_bench_pr2(&cli),
         "bench-pr3" => cmd_bench_pr3(&cli),
+        "bench-pr4" => cmd_bench_pr4(&cli),
         "live" => cmd_live(&cli),
         "fleet" => cmd_fleet(&cli),
         "artifacts-check" => cmd_artifacts_check(&cli),
@@ -294,6 +295,46 @@ fn cmd_bench_pr3(cli: &Cli) -> Result<(), String> {
     println!("\nwrote {out}");
     harness::adaptive_gate(&points)?;
     println!("gate OK: adaptive leader egress strictly below fixed, p99 commit within 1.5x");
+    Ok(())
+}
+
+/// PR 4 bench: unreliable-node mode ({raft, pull} x {healthy, k-flaky})
+/// at n=101. Writes `BENCH_PR4.json` (CI uploads it as an artifact) and
+/// exits non-zero unless the flaky pull run demotes its slow replicas and
+/// commits with p99 within 2x its healthy baseline while classic Raft
+/// stalls or pays strictly more leader egress — the unreliable-mode
+/// `bench-smoke` gate.
+fn cmd_bench_pr4(cli: &Cli) -> Result<(), String> {
+    let mut s = scale(cli);
+    s.n = 101;
+    if let Some(n) = cli.get_u64("n")? {
+        s.n = n as usize;
+    }
+    let rate = cli.get_f64("rate")?.unwrap_or(300.0);
+    let seed = cli.get_u64("seed")?.unwrap_or(20230713);
+    let k = cli.get_u64("k")?.unwrap_or(5) as usize;
+    if k == 0 || k >= s.n / 2 {
+        return Err(format!("--k {k} must be >= 1 and < n/2 (n={})", s.n));
+    }
+    let out = cli.get("out").unwrap_or("BENCH_PR4.json");
+    println!(
+        "== bench-pr4: unreliable-node mode (n={}, k={}, rate={}, seed={}, {}s sim) ==",
+        s.n,
+        k,
+        rate,
+        seed,
+        s.duration_us as f64 / 1e6
+    );
+    let points = harness::unreliable_comparison(s, rate, seed, k);
+    harness::print_unreliable(&points);
+    let doc = harness::bench_pr4_json(s, rate, seed, k, &points);
+    std::fs::write(out, doc.to_string_pretty()).map_err(|e| format!("write {out}: {e}"))?;
+    println!("\nwrote {out}");
+    harness::unreliable_gate(&points)?;
+    println!(
+        "gate OK: flaky pull demotes and holds p99 within 2x healthy; classic pays more \
+         leader egress or stalls"
+    );
     Ok(())
 }
 

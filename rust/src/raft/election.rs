@@ -27,8 +27,8 @@ impl Node {
         // structures to reset when an election is initiated.
         self.strategy.as_mut().expect("strategy attached").on_term_change();
         actions.push(Action::RoleChanged { role: Role::Candidate, term: self.current_term });
-        if self.cfg.n == 1 {
-            // Trivial cluster: self-vote is a majority.
+        if self.votes.len() >= self.view.election_quorum() {
+            // Trivial cluster: the self-vote already is a full majority.
             self.become_leader(now, actions);
             return;
         }
@@ -50,10 +50,11 @@ impl Node {
                 self.send(peer, Message::RequestVote(args), actions);
             }
         } else {
-            for peer in 0..self.cfg.n {
-                if peer != self.id {
-                    self.send(peer, Message::RequestVote(args), actions);
-                }
+            // Vote solicitation goes to the *full* membership — demotion is
+            // a leader-local commit policy and must never shrink elections.
+            let peers: Vec<_> = self.view.peers().collect();
+            for peer in peers {
+                self.send(peer, Message::RequestVote(args), actions);
             }
         }
     }
@@ -113,7 +114,7 @@ impl Node {
             return;
         }
         self.votes.insert(reply.from);
-        if self.votes.len() >= self.majority() {
+        if self.votes.len() >= self.view.election_quorum() {
             self.become_leader(now, actions);
         }
     }
@@ -130,13 +131,17 @@ impl Node {
             f.match_index = if i == self.id { last } else { 0 };
             f.repairing = false;
             f.last_rpc_at = 0;
+            f.best_effort_through = 0;
         }
         self.pending.clear();
+        // Demotion evidence is leadership-scoped: a new leadership starts
+        // from a fully-voting view and re-detects unhealthy peers.
+        self.view.reset_for_leadership();
+        self.counters.demoted_current = 0;
         actions.push(Action::RoleChanged { role: Role::Leader, term: self.current_term });
         // Replication kick-off is strategy-specific: the no-op append feeds
         // the strategy's local vote state (V2), then the strategy resets its
-        // per-leadership state, handles the trivial n=1 commit, and fires
-        // the first broadcast / gossip round.
+        // per-leadership state and fires the first broadcast / gossip round.
         let mut strategy = self.strategy.take().expect("strategy attached");
         if self.cfg.leader_noop {
             self.log.append(self.current_term, crate::kvstore::Command::Noop);
@@ -144,6 +149,11 @@ impl Node {
             strategy.on_local_append(self, now, actions);
         }
         strategy.on_become_leader(self, now, actions);
+        if self.view.solo_quorum() {
+            // Trivial quorum (n = 1): the leader alone commits — no reply
+            // will ever arrive to trigger the commit rule.
+            strategy.advance_leader_commit(self, actions);
+        }
         self.strategy = Some(strategy);
     }
 }

@@ -179,6 +179,10 @@ impl Message {
         }
     }
 
+    /// Marginal wire cost of one log entry in the size model below (used
+    /// by the best-effort budget to price a batch without building it).
+    pub const WIRE_BYTES_PER_ENTRY: u64 = 24;
+
     /// Estimated serialized size in bytes — the egress-accounting model the
     /// simulator charges per send (`SimReport::leader_egress_bytes`). Not a
     /// real codec: fixed per-message headers plus linear terms for entry
@@ -186,7 +190,7 @@ impl Message {
     /// variants is meaningful and deterministic.
     pub fn wire_bytes(&self) -> u64 {
         const HEADER: u64 = 24; // kind tag + term + sender/addressing
-        const PER_ENTRY: u64 = 24; // term + index + command
+        const PER_ENTRY: u64 = Message::WIRE_BYTES_PER_ENTRY; // term + index + command
         let epidemic_bytes = |e: &Option<EpidemicState>| -> u64 {
             e.as_ref().map_or(0, |s| 20 + 4 * s.bitmap.words().len() as u64)
         };

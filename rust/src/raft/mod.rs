@@ -8,6 +8,7 @@ pub mod node;
 pub mod replication;
 pub mod strategy;
 pub mod types;
+pub mod view;
 
 pub use log::{LogEntry, LogStore};
 pub use message::{
@@ -17,3 +18,4 @@ pub use message::{
 pub use node::{Action, ClientResult, Counters, Node};
 pub use strategy::ReplicationStrategy;
 pub use types::{majority, LogIndex, NodeId, RequestId, Role, Term, Time, Variant};
+pub use view::{ClusterView, PeerHealth};

@@ -18,7 +18,8 @@
 use super::log::LogStore;
 use super::message::Message;
 use super::strategy::ReplicationStrategy;
-use super::types::{majority, LogIndex, NodeId, RequestId, Role, Term, Time};
+use super::types::{LogIndex, NodeId, RequestId, Role, Term, Time};
+use super::view::ClusterView;
 use crate::config::ProtocolConfig;
 use crate::epidemic::{EpidemicState, LogView, Permutation};
 use crate::kvstore::{Command, KvStore, Output};
@@ -52,6 +53,10 @@ pub(crate) struct FollowerSlot {
     /// heartbeat bookkeeping (original Raft).
     pub repairing: bool,
     pub last_rpc_at: Time,
+    /// Highest index already covered by a best-effort batch to this
+    /// (demoted) peer — dedup so the budget buys fresh entries, not
+    /// per-round resends of the same unacked prefix (`send_best_effort`).
+    pub best_effort_through: LogIndex,
 }
 
 /// Protocol event counters (diagnostics; the simulator's CPU accounting is
@@ -86,6 +91,13 @@ pub struct Counters {
     pub fanout_adaptations: u64,
     pub fanout_min_seen: u64,
     pub fanout_max_seen: u64,
+    /// Unreliable-node mode (`raft::view`): demotion/promotion events, the
+    /// number of currently demoted peers (gauge, leader-side), and bytes of
+    /// best-effort traffic sent to demoted peers under the budget.
+    pub demotions: u64,
+    pub promotions: u64,
+    pub demoted_current: u64,
+    pub best_effort_bytes: u64,
 }
 
 /// The protocol state machine for one replica.
@@ -124,6 +136,11 @@ pub struct Node {
     pub(crate) rng: Xoshiro256,
     pub(crate) perm: Permutation,
 
+    /// Membership, quorum and per-peer health — the single source of truth
+    /// every quorum computation and peer iteration routes through
+    /// (`raft::view`, DESIGN.md §3.3).
+    pub(crate) view: ClusterView,
+
     /// The replication variant. `Option` only so the node can detach it
     /// during dispatch (hooks receive `&mut Node`); it is always `Some`
     /// between entry points.
@@ -139,6 +156,7 @@ impl Node {
         let mut rng = Xoshiro256::seed_from_u64(seed ^ (id as u64).wrapping_mul(0xA24BAED4963EE407));
         let perm = Permutation::new(cfg.n, id, &mut rng);
         let strategy = super::strategy::build(&cfg);
+        let view = ClusterView::new(&cfg, id);
         let n = cfg.n;
         let mut node = Self {
             id,
@@ -158,6 +176,7 @@ impl Node {
             vote_gossip_term: 0,
             rng,
             perm,
+            view,
             strategy: Some(strategy),
             seq: 0,
             counters: Counters::default(),
@@ -234,12 +253,9 @@ impl Node {
         self.strategy.as_deref().expect("strategy attached")
     }
 
-    pub(crate) fn n(&self) -> usize {
-        self.cfg.n
-    }
-
-    pub(crate) fn majority(&self) -> usize {
-        majority(self.cfg.n)
+    /// The membership/quorum/health view (see [`ClusterView`]).
+    pub fn view(&self) -> &ClusterView {
+        &self.view
     }
 
     pub(crate) fn log_view(&self) -> LogView {
@@ -305,6 +321,11 @@ impl Node {
         self.counters.entries_appended += 1;
         self.pending.insert(index, req);
         self.with_strategy(|s, node| s.on_client_request(node, now, &mut actions));
+        if self.view.solo_quorum() {
+            // Trivial quorum (n = 1): no reply will ever arrive to trigger
+            // the commit rule, so run it at the append itself.
+            self.with_strategy(|s, node| s.advance_leader_commit(node, &mut actions));
+        }
         actions
     }
 
@@ -396,6 +417,11 @@ impl Node {
         let mut actions = Vec::new();
         match self.role {
             Role::Leader => {
+                // Unreliable-node mode: one health-evaluation round per
+                // round interval, piggybacked on the existing leader ticks
+                // (no extra timers; inert unless `[protocol.unreliable]`).
+                let commit = self.commit_index;
+                self.view.evaluate(now, commit, &mut self.followers, &mut self.counters);
                 self.with_strategy(|s, node| s.on_leader_tick(node, now, &mut actions));
             }
             Role::Follower | Role::Candidate => {

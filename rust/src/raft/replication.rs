@@ -40,17 +40,86 @@ impl Node {
     }
 
     /// Resend repair RPCs that timed out (strategies with out-of-band
-    /// repair call this from their leader tick).
+    /// repair call this from their leader tick). Only voters are repaired —
+    /// demoted peers are reached by the budgeted best-effort path instead —
+    /// and each timeout is negative health evidence for the view.
     pub(crate) fn retransmit_repairs(&mut self, now: Time, actions: &mut Vec<Action>) {
         let last = self.log.last_index();
-        for peer in 0..self.n() {
-            if peer == self.id || !self.followers[peer].repairing {
-                continue;
-            }
+        let repairing: Vec<NodeId> =
+            self.view.voters().filter(|&p| p != self.id && self.followers[p].repairing).collect();
+        for peer in repairing {
             if now.saturating_sub(self.followers[peer].last_rpc_at) >= self.cfg.rpc_timeout_us {
+                self.view.observe_failure(peer);
                 self.counters.repair_rpcs += 1;
                 self.send_entries_rpc(now, peer, last, actions);
             }
+        }
+    }
+
+    /// Best-effort traffic toward demoted peers (unreliable-node mode):
+    /// per call, walk the demoted peers in rotation and send each its
+    /// pending batch when the view's byte budget affords it; otherwise fall
+    /// back to an empty heartbeat at the heartbeat cadence, so a demoted
+    /// peer keeps hearing the leader (its election timer stays fed) without
+    /// the leader paying catch-up bytes for it. No-op while nothing is
+    /// demoted — and nothing is ever demoted with the mode disabled.
+    pub(crate) fn send_best_effort(&mut self, now: Time, actions: &mut Vec<Action>) {
+        if self.view.demoted_count() == 0 {
+            return;
+        }
+        let last = self.log.last_index();
+        for peer in self.view.demoted_rotation() {
+            let next = self.followers[peer].next_index.max(1);
+            let prev = next - 1;
+            let prev_term = self.log.term_at(prev).expect("prev within log");
+            let backlog = last.saturating_sub(prev);
+            let seq = self.next_seq();
+            let mut args = AppendEntriesArgs {
+                term: self.current_term,
+                leader: self.id,
+                prev_log_index: prev,
+                prev_log_term: prev_term,
+                entries: std::sync::Arc::new(Vec::new()),
+                leader_commit: self.commit_index,
+                gossip: None,
+                seq,
+            };
+            // Price through the wire model without building the batch, and
+            // clamp it to what the budget affords — a far-behind peer
+            // drains its backlog a budget's worth per round rather than
+            // starving behind an all-or-nothing check.
+            let hb_bytes = Message::AppendEntries(args.clone()).wire_bytes();
+            let affordable = self.view.best_effort_budget().saturating_sub(hb_bytes)
+                / Message::WIRE_BYTES_PER_ENTRY;
+            let count = backlog.min(self.cfg.max_entries_per_rpc as LogIndex).min(affordable);
+            // A batch goes out only when it covers new territory (an ack
+            // moved next_index, or fresh appends extend past what was
+            // already sent) or the last send timed out unacked — otherwise
+            // every round would re-spend the budget on the same prefix
+            // while its ack is still in flight on a slow link.
+            let fresh = prev + count > self.followers[peer].best_effort_through;
+            let resend_due = now.saturating_sub(self.followers[peer].last_rpc_at)
+                >= self.cfg.rpc_timeout_us;
+            let msg = if count > 0 && (fresh || resend_due) {
+                args.entries = self.log.slice(prev, prev + count);
+                let batch = Message::AppendEntries(args);
+                let spent = self.view.try_spend_best_effort(batch.wire_bytes(), &mut self.counters);
+                debug_assert!(spent, "clamped batch must fit the budget it was sized to");
+                self.followers[peer].best_effort_through = prev + count;
+                batch
+            } else if now.saturating_sub(self.followers[peer].last_rpc_at)
+                >= self.cfg.heartbeat_interval_us
+            {
+                // Nothing affordable (or nothing pending): liveness-only
+                // heartbeat at the heartbeat cadence (still metered).
+                self.view.meter_best_effort(hb_bytes, &mut self.counters);
+                Message::AppendEntries(args)
+            } else {
+                continue;
+            };
+            self.followers[peer].last_rpc_at = now;
+            self.counters.rpcs_sent += 1;
+            self.send(peer, msg, actions);
         }
     }
 
@@ -76,13 +145,27 @@ impl Node {
         reply: &AppendEntriesReply,
         actions: &mut Vec<Action>,
     ) {
+        // Per-peer health evidence for the view (inert unless
+        // `[protocol.unreliable]` is enabled).
+        if reply.success {
+            self.view.observe_success(reply.from);
+        } else {
+            self.view.observe_failure(reply.from);
+        }
         let last = self.log.last_index();
+        // Match bookkeeping stays monotone for every peer (a demoted
+        // peer's progress still matters for its re-promotion), but only
+        // voters enter the repair machinery — demoted peers are served by
+        // the budgeted best-effort path instead.
+        let voter = self.view.is_voter(reply.from);
         let slot = &mut self.followers[reply.from];
         if reply.success {
             slot.match_index = slot.match_index.max(reply.match_hint);
             slot.next_index = slot.next_index.max(reply.match_hint + 1);
             if slot.repairing {
-                if slot.match_index >= self.commit_index && slot.next_index > last {
+                if !voter {
+                    slot.repairing = false; // demoted mid-repair: forget it
+                } else if slot.match_index >= self.commit_index && slot.next_index > last {
                     slot.repairing = false;
                 } else {
                     // Keep feeding the catch-up pipeline.
@@ -92,22 +175,39 @@ impl Node {
             }
         } else {
             // Log mismatch at the follower: jump next_index back to its
-            // hint and repair via classic RPCs.
+            // hint and (voters only) repair via classic RPCs.
             let hint_next = reply.match_hint + 1;
             slot.next_index = slot.next_index.min(hint_next).max(1);
-            slot.repairing = true;
-            self.counters.repair_rpcs += 1;
-            self.send_entries_rpc(now, reply.from, last, actions);
+            if voter {
+                slot.repairing = true;
+                self.counters.repair_rpcs += 1;
+                self.send_entries_rpc(now, reply.from, last, actions);
+            } else {
+                slot.repairing = false;
+                // The peer's log diverges from what best-effort assumed
+                // (e.g. an in-flight batch was lost): forget the coverage
+                // watermark so the next best-effort batch counts as fresh.
+                slot.best_effort_through = 0;
+            }
         }
     }
 
-    /// Classic Raft commit rule (§5.4.2): the majority-replicated index,
-    /// committable only when its entry is from the current term. Returns
-    /// the new commit candidate, if any (does not commit — the strategy
-    /// decides what else the evidence feeds).
+    /// Classic Raft commit rule (§5.4.2): the quorum-replicated index,
+    /// committable only when its entry is from the current term. Counts
+    /// only the view's voters against [`ClusterView::quorum_size`] — with
+    /// unreliable-node mode off that is every replica against
+    /// `majority(n)`, bit-identical to flat Raft; with demotions the
+    /// denominator shrinks but never below the election-intersection floor
+    /// (`raft::view` module docs). Returns the new commit candidate, if
+    /// any (does not commit — the strategy decides what else the evidence
+    /// feeds).
+    ///
+    /// [`ClusterView::quorum_size`]: super::view::ClusterView::quorum_size
     pub(crate) fn classic_commit_candidate(&self) -> Option<LogIndex> {
         debug_assert_eq!(self.role, super::types::Role::Leader);
-        let mut matches: Vec<LogIndex> = (0..self.n())
+        let mut matches: Vec<LogIndex> = self
+            .view
+            .voters()
             .map(|i| {
                 if i == self.id {
                     self.log.last_index()
@@ -117,7 +217,7 @@ impl Node {
             })
             .collect();
         matches.sort_unstable_by(|a, b| b.cmp(a));
-        let candidate = matches[self.majority() - 1];
+        let candidate = matches[self.view.quorum_size() - 1];
         if candidate > self.commit_index && self.log.term_at(candidate) == Some(self.current_term)
         {
             Some(candidate)

@@ -21,28 +21,21 @@ impl ClassicStrategy {
         Self { coalesce_deadline: None, next_heartbeat_at: Time::MAX }
     }
 
-    /// Broadcast AppendEntries to every follower with the entries it still
-    /// misses (also the heartbeat/retransmit path).
+    /// Broadcast AppendEntries to every *voting* follower with the entries
+    /// it still misses (also the heartbeat/retransmit path). Demoted peers
+    /// are reached separately through the view's budgeted best-effort
+    /// path; with unreliable-node mode off, everyone is a voter and this
+    /// is the flat `0..n` broadcast.
     fn broadcast(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
         debug_assert_eq!(node.role, Role::Leader);
         let last = node.log.last_index();
-        let n = node.n();
-        for peer in 0..n {
-            if peer == node.id {
-                continue;
-            }
+        let targets: Vec<_> = node.view.voters().filter(|&p| p != node.id).collect();
+        for peer in targets {
             node.send_entries_rpc(now, peer, last, actions);
         }
+        node.send_best_effort(now, actions);
         // Broadcast doubles as heartbeat.
         self.next_heartbeat_at = now + node.cfg.heartbeat_interval_us;
-    }
-
-    /// Classic Raft commit rule (§5.4.2): commit the majority-replicated
-    /// index when its entry is from the current term.
-    fn advance(&mut self, node: &mut Node, actions: &mut Vec<Action>) {
-        if let Some(candidate) = node.classic_commit_candidate() {
-            node.advance_commit(candidate, actions);
-        }
     }
 }
 
@@ -59,17 +52,10 @@ impl ReplicationStrategy for ClassicStrategy {
 
     fn on_become_leader(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
         self.coalesce_deadline = None;
-        if node.n() == 1 {
-            // Trivial cluster: the leader alone is a majority.
-            self.advance(node, actions);
-        }
         self.broadcast(node, now, actions);
     }
 
     fn on_client_request(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
-        if node.n() == 1 {
-            self.advance(node, actions);
-        }
         if node.cfg.raft_coalesce_us == 0 {
             self.broadcast(node, now, actions);
         } else if self.coalesce_deadline.is_none() {
@@ -146,7 +132,7 @@ impl ReplicationStrategy for ClassicStrategy {
         debug_assert_eq!(reply.term, node.current_term);
         node.update_follower_on_reply(now, &reply, actions);
         if reply.success {
-            self.advance(node, actions);
+            self.advance_leader_commit(node, actions);
         }
     }
 

@@ -270,6 +270,12 @@ pub(crate) fn start_seed_round(
     let entries = node.log.slice(base, hi);
     let prev_term = node.log.term_at(base).expect("commit index within log");
     for to in planner.plan_round(&mut node.perm) {
+        if !node.view.is_voter(to) {
+            // Demoted peers leave the regular round targets — they are
+            // reached by the budgeted best-effort path below instead (with
+            // the mode off, everyone is a voter and nothing is skipped).
+            continue;
+        }
         let args = AppendEntriesArgs {
             term: node.current_term,
             leader: node.id,
@@ -283,6 +289,10 @@ pub(crate) fn start_seed_round(
         node.counters.gossip_sent += 1;
         node.send(to, Message::AppendEntries(args), actions);
     }
+    // Best-effort catch-up/heartbeat traffic toward demoted peers, capped
+    // by the view's byte budget (classic-RPC framed, so it anchors at each
+    // peer's own next_index instead of the round's batch base).
+    node.send_best_effort(now, actions);
     if node.log.last_index() > node.commit_index {
         now + node.cfg.round_interval_us
     } else {

@@ -62,8 +62,11 @@ impl GossipStrategy {
     }
 
     /// §3.2 `Update` + follower commit rule, after any structure change.
+    /// The bitmap quorum is the *full-membership* majority
+    /// (`ClusterView::epidemic_quorum`): every replica evaluates it, so a
+    /// leader-local voter set cannot soundly shrink it.
     fn run_update(epi: &mut EpidemicState, node: &mut Node, actions: &mut Vec<Action>) {
-        epi.update(node.id, node.majority(), node.log_view());
+        epi.update(node.id, node.view.epidemic_quorum(), node.log_view());
         let bound = epi.commit_bound(node.log_view());
         if bound > node.commit_index {
             node.advance_commit(bound, actions);
@@ -91,24 +94,6 @@ impl GossipStrategy {
             epi.maybe_set_own_bit(node.id, node.log_view());
             Self::run_update(epi, node, actions);
         }
-    }
-
-    /// Classic majority-match commit rule at the leader. For V2 the classic
-    /// evidence also feeds the epidemic state — `max_commit` is kept
-    /// consistent so gossip carries it outward.
-    fn classic_advance(&mut self, node: &mut Node, actions: &mut Vec<Action>) {
-        let Some(candidate) = node.classic_commit_candidate() else { return };
-        if let Some(epi) = self.epi.as_mut() {
-            if candidate > epi.max_commit {
-                if epi.next_commit <= candidate {
-                    epi.bitmap.clear();
-                    epi.next_commit = candidate + 1;
-                    epi.maybe_set_own_bit(node.id, node.log_view());
-                }
-                epi.max_commit = candidate;
-            }
-        }
-        node.advance_commit(candidate, actions);
     }
 
     /// §3.1 — start one epidemic round: stamp `RoundLC`, batch the entries
@@ -275,18 +260,11 @@ impl ReplicationStrategy for GossipStrategy {
 
     fn on_become_leader(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
         self.commit_history.clear();
-        if node.n() == 1 {
-            // Trivial cluster: the leader alone is a majority.
-            self.classic_advance(node, actions);
-        }
         self.start_round(node, now, actions);
     }
 
     fn on_client_request(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
         self.local_append_update(node, actions);
-        if node.n() == 1 {
-            self.classic_advance(node, actions);
-        }
         // Pull an idle-scheduled round in so fresh entries don't wait out
         // the long heartbeat interval.
         let active_at = now + node.cfg.round_interval_us;
@@ -357,11 +335,16 @@ impl ReplicationStrategy for GossipStrategy {
         }
         debug_assert_eq!(reply.term, node.current_term);
         // Adaptive-fanout feedback: successes say the followers keep up,
-        // failures say somebody fell behind the batch base.
-        if reply.success {
-            self.planner.note_ack();
-        } else {
-            self.planner.note_nack();
+        // failures say somebody fell behind the batch base. Demoted peers
+        // don't count — their permanent NACKs are exactly what the view
+        // already acted on, and widening the fanout for them would re-spend
+        // the bytes demotion saved.
+        if node.view.is_voter(reply.from) {
+            if reply.success {
+                self.planner.note_ack();
+            } else {
+                self.planner.note_nack();
+            }
         }
         // V2: responder's structures ride back on every reply.
         if let Some(epi_msg) = &reply.epidemic {
@@ -369,8 +352,26 @@ impl ReplicationStrategy for GossipStrategy {
         }
         node.update_follower_on_reply(now, &reply, actions);
         if reply.success {
-            self.classic_advance(node, actions);
+            self.advance_leader_commit(node, actions);
         }
+    }
+
+    /// Classic quorum-match commit rule at the leader. For V2 the classic
+    /// evidence also feeds the epidemic state — `max_commit` is kept
+    /// consistent so gossip carries it outward.
+    fn advance_leader_commit(&mut self, node: &mut Node, actions: &mut Vec<Action>) {
+        let Some(candidate) = node.classic_commit_candidate() else { return };
+        if let Some(epi) = self.epi.as_mut() {
+            if candidate > epi.max_commit {
+                if epi.next_commit <= candidate {
+                    epi.bitmap.clear();
+                    epi.next_commit = candidate + 1;
+                    epi.maybe_set_own_bit(node.id, node.log_view());
+                }
+                epi.max_commit = candidate;
+            }
+        }
+        node.advance_commit(candidate, actions);
     }
 
     fn on_term_change(&mut self) {

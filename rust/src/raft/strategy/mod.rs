@@ -137,6 +137,18 @@ pub trait ReplicationStrategy: Send {
     ) {
     }
 
+    /// Run the leader-side commit rule: advance on the quorum-replicated
+    /// index (`ClusterView::quorum_size` over the view's voters). The
+    /// default is the classic majority-match rule every variant shares;
+    /// V2 overrides it to also fold the evidence into its epidemic
+    /// structures. The node invokes this directly for trivial (solo)
+    /// quorums, where no reply will ever arrive to trigger it.
+    fn advance_leader_commit(&mut self, node: &mut Node, actions: &mut Vec<Action>) {
+        if let Some(candidate) = node.classic_commit_candidate() {
+            node.advance_commit(candidate, actions);
+        }
+    }
+
     /// The node's term changed (stepped down or started an election).
     /// Reset per-term strategy state.
     fn on_term_change(&mut self);

@@ -137,13 +137,6 @@ impl PullStrategy {
         }
     }
 
-    /// Classic majority-match commit at the leader.
-    fn advance(&mut self, node: &mut Node, actions: &mut Vec<Action>) {
-        if let Some(candidate) = node.classic_commit_candidate() {
-            node.advance_commit(candidate, actions);
-        }
-    }
-
     /// Leader seed round: stamp `RoundLC`, batch from the lagged commit
     /// base, push to the next `F` permutation targets. Wire-identical to a
     /// §3.1 round (shared machinery: [`super::start_seed_round`]) — the
@@ -353,17 +346,10 @@ impl ReplicationStrategy for PullStrategy {
     fn on_become_leader(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
         self.commit_history.clear();
         self.anchor_at_commit = false;
-        if node.n() == 1 {
-            // Trivial cluster: the leader alone is a majority.
-            self.advance(node, actions);
-        }
         self.start_round(node, now, actions);
     }
 
     fn on_client_request(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
-        if node.n() == 1 {
-            self.advance(node, actions);
-        }
         // Pull an idle-scheduled seed round in so fresh entries get a
         // source promptly.
         let active_at = now + node.cfg.round_interval_us;
@@ -432,14 +418,19 @@ impl ReplicationStrategy for PullStrategy {
         // Adaptive seed-fanout feedback: deduplicated progress acks mean
         // the pull mesh is keeping followers current (seeds can shrink);
         // NACKs mean a follower fell behind the batch base (seed wider).
-        if reply.success {
-            self.seed_planner.note_ack();
-        } else {
-            self.seed_planner.note_nack();
+        // Demoted peers don't count — widening the seeds for a peer the
+        // view already took off the critical path would re-spend the bytes
+        // demotion saved.
+        if node.view.is_voter(reply.from) {
+            if reply.success {
+                self.seed_planner.note_ack();
+            } else {
+                self.seed_planner.note_nack();
+            }
         }
         node.update_follower_on_reply(now, &reply, actions);
         if reply.success {
-            self.advance(node, actions);
+            self.advance_leader_commit(node, actions);
         }
     }
 
@@ -454,15 +445,17 @@ impl ReplicationStrategy for PullStrategy {
         // Liveness news flows requester -> responder too (push-pull).
         self.note_round(node, now, req.known_round);
         // The leader harvests free match evidence: a current-term anchor it
-        // also holds pins the requester's prefix to the leader's log.
+        // also holds pins the requester's prefix to the leader's log (and
+        // is positive health evidence — the peer is keeping up).
         if node.role == Role::Leader
             && req.from_term == node.current_term
             && node.log.matches(req.from_index, req.from_term)
         {
+            node.view.observe_success(req.from);
             let slot = &mut node.followers[req.from];
             slot.match_index = slot.match_index.max(req.from_index);
             slot.next_index = slot.next_index.max(req.from_index + 1);
-            self.advance(node, actions);
+            self.advance_leader_commit(node, actions);
         }
         let have = node.log.last_index();
         let our_round = self.round_clock.current(node.current_term);

@@ -1,0 +1,708 @@
+//! `ClusterView` — the single source of truth for membership, quorum and
+//! per-peer health (DESIGN.md §3.3).
+//!
+//! Before this module, quorum was `majority(cfg.n)` recomputed ad hoc in
+//! `node.rs`, `election.rs`, `replication.rs` and every strategy, and peer
+//! iteration was a raw `0..n` loop. The view centralises both:
+//!
+//! * **Membership** — [`peers`] (full membership, elections and vote
+//!   broadcasts) vs [`voters`] (the subset counted toward commit).
+//! * **Quorum** — [`quorum_size`] for the leader's commit rule,
+//!   [`election_quorum`] for vote counting, [`epidemic_quorum`] for the
+//!   §3.2 decentralised bitmap. The latter two are always full-membership
+//!   majorities (see the safety argument below); only the commit rule's
+//!   denominator shrinks with demotions.
+//! * **Health** — a [`PeerHealth`] scorer fed by the per-peer ack/NACK
+//!   stream the leader already observes (the same signal the PR 3
+//!   `DisseminationPlanner` folds in aggregate): successful replies and
+//!   current-term pull anchors are positive evidence, log-mismatch NACKs
+//!   and repair-RPC retransmit timeouts negative.
+//!
+//! **Unreliable-node mode** (`[protocol.unreliable]`, BlackWater Raft,
+//! arXiv:2203.07920) is a view *policy*: a peer whose health EWMA stays
+//! below `threshold` for `demote_after` consecutive evaluation rounds is
+//! demoted to non-voter — dropped from the commit denominator, the repair
+//! machinery and the regular dissemination targets — while the leader
+//! keeps reaching it best-effort under a capped byte budget. After
+//! `probation` consecutive healthy rounds *and* once it has caught back up
+//! to the committed prefix, it is re-promoted.
+//!
+//! ## Safety argument for shrinking the quorum denominator
+//!
+//! Demotion is a leader-local policy: other replicas (and future
+//! candidates) cannot know the voter set, so **elections keep counting
+//! votes against the full membership** (`election_quorum() = ⌈(n+1)/2⌉`).
+//! A commit is then only safe if every possible election majority
+//! intersects the set of replicas holding the committed entry: with a
+//! commit quorum of size `q`, that needs `q + majority(n) > n`, i.e.
+//! `q ≥ n + 1 − majority(n)`. [`quorum_size`] therefore never returns less
+//! than that intersection floor, however many voters are demoted — the
+//! denominator shrink changes *who* must ack (flaky replicas stop being
+//! counted or repaired), never the intersection guarantee. Two further
+//! guards bound demotion itself: the voter count never drops below
+//! `quorum_floor` (default `majority(n)`), and a peer is never demoted
+//! while it holds an ack in the uncommitted range (`match_index >
+//! commit_index`) — the current commit evidence may depend on it.
+//!
+//! The §3.2 decentralised commit (V2) keeps its full-membership majority:
+//! its bitmap quorum is evaluated by *every* replica, and a leader-local
+//! voter set cannot soundly shrink a quorum other replicas also count.
+//!
+//! With `enabled = false` (the default) the view is inert: all peers stay
+//! voters, every quorum equals `majority(n)`, no health state is updated,
+//! and no RNG is consumed — runs are bit-identical to pre-view behaviour.
+
+use super::node::{Counters, FollowerSlot};
+use super::types::{majority, LogIndex, NodeId, Time};
+use crate::config::{ProtocolConfig, UnreliableConfig};
+
+/// Health/vote state the view keeps per peer.
+#[derive(Clone, Debug)]
+pub struct PeerHealth {
+    /// EWMA of observed outcomes in [0,1] (1 = every observation positive).
+    pub score: f64,
+    /// Counted toward the commit quorum and served by the repair machinery.
+    pub voter: bool,
+    /// Consecutive evaluation rounds with `score < threshold`.
+    below_streak: u32,
+    /// Consecutive evaluation rounds with `score >= threshold`.
+    healthy_streak: u32,
+}
+
+impl PeerHealth {
+    fn fresh() -> Self {
+        Self { score: 1.0, voter: true, below_streak: 0, healthy_streak: 0 }
+    }
+}
+
+/// Membership + quorum + per-peer health for one replica (see module docs).
+#[derive(Clone, Debug)]
+pub struct ClusterView {
+    n: usize,
+    me: NodeId,
+    cfg: UnreliableConfig,
+    /// Evaluation cadence (the strategy round interval — demote_after and
+    /// probation count these).
+    eval_interval_us: Time,
+    peers: Vec<PeerHealth>,
+    voter_count: usize,
+    /// Minimum voter count demotion may leave (max of the configured
+    /// `quorum_floor` and the intersection floor — see module docs).
+    voter_floor: usize,
+    last_eval_at: Time,
+    /// Commit index as of the previous evaluation (re-promotion requires a
+    /// peer to have caught up at least this far).
+    last_eval_commit: LogIndex,
+    /// Commit-index snapshots of the last `demote_after + 3` evaluations.
+    /// A peer whose `match_index` trails the *oldest* snapshot is lagging
+    /// by a full window — the second unhealthy signal, catching
+    /// permanently-slow peers whose steady (late) acks would otherwise
+    /// swamp the NACK EWMA with positive evidence. Empty/partial until
+    /// the window fills, so
+    /// bootstrap never counts as lag; idle clusters (commit parked) never
+    /// flag anyone either, because every caught-up peer matches the parked
+    /// snapshot.
+    commit_snaps: std::collections::VecDeque<LogIndex>,
+    /// Best-effort byte budget (token bucket, refilled per evaluation).
+    budget_bytes: u64,
+    /// Rotation cursor so best-effort traffic cycles through demoted peers.
+    best_effort_cursor: usize,
+}
+
+impl ClusterView {
+    pub fn new(cfg: &ProtocolConfig, me: NodeId) -> Self {
+        let n = cfg.n;
+        let floor_q = Self::intersection_floor(n);
+        let configured = if cfg.unreliable.quorum_floor == 0 {
+            majority(n)
+        } else {
+            cfg.unreliable.quorum_floor
+        };
+        Self {
+            n,
+            me,
+            cfg: cfg.unreliable.clone(),
+            eval_interval_us: cfg.round_interval_us,
+            peers: vec![PeerHealth::fresh(); n],
+            voter_count: n,
+            voter_floor: configured.max(floor_q).min(n),
+            last_eval_at: 0,
+            last_eval_commit: 0,
+            commit_snaps: std::collections::VecDeque::with_capacity(8),
+            budget_bytes: cfg.unreliable.best_effort_bytes,
+            best_effort_cursor: 0,
+        }
+    }
+
+    /// A full-membership view with the policy disabled — for callers that
+    /// only need the quorum arithmetic (the fleet convergence study).
+    pub fn full(n: usize) -> Self {
+        let cfg = ProtocolConfig { n, ..ProtocolConfig::default() };
+        Self::new(&cfg, 0)
+    }
+
+    /// Smallest commit-quorum size whose holders intersect every
+    /// full-membership election majority: `q + majority(n) > n`.
+    fn intersection_floor(n: usize) -> usize {
+        n + 1 - majority(n)
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    // ---- membership -------------------------------------------------------
+
+    /// Every peer id (full membership, self excluded) in ascending order —
+    /// the replacement for raw `0..n` peer loops (vote broadcasts must
+    /// reach demoted peers too).
+    pub fn peers(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.n).filter(move |&i| i != self.me)
+    }
+
+    /// Replicas counted toward the commit quorum (self included), ascending.
+    pub fn voters(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.n).filter(move |&i| i == self.me || self.peers[i].voter)
+    }
+
+    pub fn is_voter(&self, id: NodeId) -> bool {
+        id == self.me || self.peers[id].voter
+    }
+
+    pub fn voter_count(&self) -> usize {
+        self.voter_count
+    }
+
+    pub fn demoted_count(&self) -> usize {
+        self.n - self.voter_count
+    }
+
+    /// Demoted peers in best-effort rotation order (the cursor advances by
+    /// one per call so budget-limited traffic cycles rather than starving
+    /// the higher ids).
+    pub fn demoted_rotation(&mut self) -> Vec<NodeId> {
+        let demoted: Vec<NodeId> =
+            (0..self.n).filter(|&i| i != self.me && !self.peers[i].voter).collect();
+        if demoted.is_empty() {
+            return demoted;
+        }
+        let start = self.best_effort_cursor % demoted.len();
+        self.best_effort_cursor = self.best_effort_cursor.wrapping_add(1);
+        let mut out = Vec::with_capacity(demoted.len());
+        out.extend_from_slice(&demoted[start..]);
+        out.extend_from_slice(&demoted[..start]);
+        out
+    }
+
+    // ---- quorums ----------------------------------------------------------
+
+    /// The leader's commit-rule quorum: a majority of the current voters,
+    /// clamped up to the intersection floor (module docs). Never exceeds
+    /// the voter count (demotion guards keep `voters >= voter_floor >=
+    /// intersection floor`).
+    pub fn quorum_size(&self) -> usize {
+        let q = majority(self.voter_count).max(Self::intersection_floor(self.n));
+        debug_assert!(q <= self.voter_count, "quorum {q} > voters {}", self.voter_count);
+        q.min(self.voter_count)
+    }
+
+    /// Vote-counting quorum: always the full-membership majority (a
+    /// candidate cannot know any leader's local voter set).
+    pub fn election_quorum(&self) -> usize {
+        majority(self.n)
+    }
+
+    /// §3.2 decentralised-commit quorum: full-membership majority (every
+    /// replica evaluates the bitmap, so a leader-local voter set cannot
+    /// soundly shrink it).
+    pub fn epidemic_quorum(&self) -> usize {
+        majority(self.n)
+    }
+
+    /// True when this node alone satisfies the commit quorum (n = 1, or a
+    /// cluster demoted down to a single voter at the floor).
+    pub fn solo_quorum(&self) -> bool {
+        self.quorum_size() == 1
+    }
+
+    // ---- health observations (leader side) --------------------------------
+
+    /// Positive evidence: a successful append/ack reply, or a current-term
+    /// pull anchor served to `peer`.
+    pub fn observe_success(&mut self, peer: NodeId) {
+        self.observe(peer, 1.0);
+    }
+
+    /// Negative evidence: a log-mismatch NACK from `peer`, or a repair RPC
+    /// to it timing out.
+    pub fn observe_failure(&mut self, peer: NodeId) {
+        self.observe(peer, 0.0);
+    }
+
+    fn observe(&mut self, peer: NodeId, outcome: f64) {
+        if !self.cfg.enabled || peer == self.me {
+            return;
+        }
+        let p = &mut self.peers[peer];
+        p.score += self.cfg.ewma * (outcome - p.score);
+    }
+
+    /// Current health score (diagnostics/tests).
+    pub fn health(&self, peer: NodeId) -> f64 {
+        self.peers[peer].score
+    }
+
+    // ---- the demotion state machine ---------------------------------------
+
+    /// One evaluation round (rate-limited to the strategy round interval;
+    /// the leader piggybacks this on its existing timer ticks). Updates the
+    /// hysteresis streaks from the health scores and applies the
+    /// demote/re-promote policy under the safety guards:
+    ///
+    /// * never drop the voter count below `voter_floor`;
+    /// * never demote a peer holding an uncommitted-range ack
+    ///   (`match_index > commit_index`) — the pending commit evidence may
+    ///   depend on it (its `repairing` flag is cleared on demotion so the
+    ///   repair machinery forgets it);
+    /// * re-promote only after `probation` consecutive healthy rounds *and*
+    ///   once the peer has caught up to the previous evaluation's commit
+    ///   index (promotion only ever grows the quorum, so it is always
+    ///   safe — the catch-up condition just stops a still-lagging peer from
+    ///   oscillating between the two states).
+    pub(crate) fn evaluate(
+        &mut self,
+        now: Time,
+        commit_index: LogIndex,
+        followers: &mut [FollowerSlot],
+        counters: &mut Counters,
+    ) {
+        if !self.cfg.enabled {
+            return;
+        }
+        if now < self.last_eval_at.saturating_add(self.eval_interval_us) {
+            return;
+        }
+        let prev_commit = self.last_eval_commit;
+        self.last_eval_at = now;
+        self.last_eval_commit = commit_index;
+        // The lag reference: where the commit index stood a full window of
+        // evaluations ago (`demote_after + 3` rounds — the slack keeps a
+        // healthy peer's ordinary ack staleness, a round or two, well
+        // clear of the signal). Only meaningful once the window has filled.
+        let lag_window = self.cfg.demote_after as usize + 3;
+        let lag_ref = if self.commit_snaps.len() >= lag_window {
+            self.commit_snaps.front().copied()
+        } else {
+            None
+        };
+        self.commit_snaps.push_back(commit_index);
+        while self.commit_snaps.len() > lag_window {
+            self.commit_snaps.pop_front();
+        }
+        // Refill the best-effort budget (bounded so idle periods cannot
+        // bank an unbounded burst).
+        self.budget_bytes = (self.budget_bytes + self.cfg.best_effort_bytes)
+            .min(self.cfg.best_effort_bytes.saturating_mul(4));
+        for i in 0..self.n {
+            if i == self.me {
+                continue;
+            }
+            // A round is unhealthy on either signal: the ack/NACK EWMA
+            // below threshold (loss/mismatch storms), or the peer's match
+            // index trailing the lagged commit snapshot (permanently slow
+            // but still acking — the BlackWater shape). Lag only counts
+            // once the peer has acked at least once (`match_index > 0`):
+            // during bootstrap the mesh needs a few cycles to reach every
+            // replica, and a straggler that simply has not reported yet
+            // must not read as permanently slow.
+            let lagging = followers[i].match_index > 0
+                && lag_ref.is_some_and(|l| followers[i].match_index < l);
+            let healthy = self.peers[i].score >= self.cfg.threshold && !lagging;
+            {
+                let p = &mut self.peers[i];
+                if healthy {
+                    p.below_streak = 0;
+                    p.healthy_streak = p.healthy_streak.saturating_add(1);
+                } else {
+                    p.healthy_streak = 0;
+                    p.below_streak = p.below_streak.saturating_add(1);
+                }
+            }
+            if self.peers[i].voter {
+                if self.peers[i].below_streak >= self.cfg.demote_after
+                    && self.voter_count > self.voter_floor
+                    && followers[i].match_index <= commit_index
+                {
+                    self.peers[i].voter = false;
+                    self.voter_count -= 1;
+                    followers[i].repairing = false;
+                    followers[i].best_effort_through = 0;
+                    counters.demotions += 1;
+                }
+            } else if self.peers[i].healthy_streak >= self.cfg.probation
+                && followers[i].match_index >= prev_commit
+            {
+                self.peers[i].voter = true;
+                self.voter_count += 1;
+                counters.promotions += 1;
+            }
+        }
+        counters.demoted_current = self.demoted_count() as u64;
+    }
+
+    /// Best-effort budget currently available (callers size their batches
+    /// to this so a far-behind peer drains its backlog a budget's worth
+    /// per round instead of starving behind an all-or-nothing check).
+    pub fn best_effort_budget(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Spend `bytes` of the best-effort budget; false = over budget (the
+    /// caller skips the send or falls back to a heartbeat-sized message).
+    pub fn try_spend_best_effort(&mut self, bytes: u64, counters: &mut Counters) -> bool {
+        if self.budget_bytes < bytes {
+            return false;
+        }
+        self.budget_bytes -= bytes;
+        counters.best_effort_bytes += bytes;
+        true
+    }
+
+    /// Meter best-effort bytes that bypass the budget check (the
+    /// heartbeat-sized liveness floor is rate-limited by the heartbeat
+    /// interval, not the byte bucket): drains whatever budget remains and
+    /// always counts toward `best_effort_bytes`.
+    pub fn meter_best_effort(&mut self, bytes: u64, counters: &mut Counters) {
+        self.budget_bytes = self.budget_bytes.saturating_sub(bytes);
+        counters.best_effort_bytes += bytes;
+    }
+
+    /// Reset all health/demotion state (a new leadership starts from a
+    /// fully-voting view — demotion evidence is leadership-scoped).
+    pub fn reset_for_leadership(&mut self) {
+        for p in self.peers.iter_mut() {
+            *p = PeerHealth::fresh();
+        }
+        self.voter_count = self.n;
+        self.last_eval_at = 0;
+        self.last_eval_commit = 0;
+        self.commit_snaps.clear();
+        self.budget_bytes = self.cfg.best_effort_bytes;
+        self.best_effort_cursor = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_on(n: usize) -> ProtocolConfig {
+        let mut cfg = ProtocolConfig { n, ..ProtocolConfig::default() };
+        cfg.unreliable.enabled = true;
+        cfg
+    }
+
+    fn slots(n: usize) -> Vec<FollowerSlot> {
+        vec![FollowerSlot::default(); n]
+    }
+
+    /// Drive `rounds` evaluations spaced a full interval apart.
+    fn run_evals(
+        view: &mut ClusterView,
+        rounds: u32,
+        commit: LogIndex,
+        followers: &mut [FollowerSlot],
+        counters: &mut Counters,
+    ) {
+        for r in 0..rounds {
+            let at = view.eval_interval_us * (r as u64 + 1) + view.last_eval_at;
+            view.evaluate(at, commit, followers, counters);
+        }
+    }
+
+    #[test]
+    fn disabled_view_is_full_membership_majority() {
+        for n in [1usize, 2, 3, 5, 50, 51, 101] {
+            let cfg = ProtocolConfig { n, ..ProtocolConfig::default() };
+            let view = ClusterView::new(&cfg, 0);
+            assert!(!view.enabled());
+            assert_eq!(view.voter_count(), n);
+            assert_eq!(view.quorum_size(), majority(n), "n={n}");
+            assert_eq!(view.election_quorum(), majority(n));
+            assert_eq!(view.epidemic_quorum(), majority(n));
+            assert_eq!(view.voters().count(), n);
+            assert_eq!(view.peers().count(), n - 1);
+            assert!(view.is_voter(0));
+        }
+    }
+
+    #[test]
+    fn disabled_view_ignores_observations_and_evaluations() {
+        let cfg = ProtocolConfig { n: 5, ..ProtocolConfig::default() };
+        let mut view = ClusterView::new(&cfg, 0);
+        let mut f = slots(5);
+        let mut c = Counters::default();
+        for _ in 0..100 {
+            view.observe_failure(3);
+        }
+        run_evals(&mut view, 10, 0, &mut f, &mut c);
+        assert_eq!(view.health(3), 1.0, "disabled view must not track health");
+        assert_eq!(view.voter_count(), 5);
+        assert_eq!(c.demotions, 0);
+    }
+
+    #[test]
+    fn demotion_hysteresis_requires_consecutive_unhealthy_rounds() {
+        let mut view = ClusterView::new(&cfg_on(7), 0);
+        let mut f = slots(7);
+        let mut c = Counters::default();
+        for _ in 0..20 {
+            view.observe_failure(3);
+        }
+        assert!(view.health(3) < 0.5);
+        // demote_after = 3 (default): two unhealthy rounds are not enough.
+        run_evals(&mut view, 2, 0, &mut f, &mut c);
+        assert!(view.is_voter(3), "two rounds below threshold must not demote");
+        // A healthy interlude resets the streak.
+        for _ in 0..30 {
+            view.observe_success(3);
+        }
+        run_evals(&mut view, 1, 0, &mut f, &mut c);
+        for _ in 0..20 {
+            view.observe_failure(3);
+        }
+        run_evals(&mut view, 2, 0, &mut f, &mut c);
+        assert!(view.is_voter(3), "streak must restart after a healthy round");
+        // The third consecutive unhealthy round demotes.
+        run_evals(&mut view, 1, 0, &mut f, &mut c);
+        assert!(!view.is_voter(3));
+        assert_eq!(c.demotions, 1);
+        assert_eq!(view.voter_count(), 6);
+        assert_eq!(c.demoted_current, 1);
+        assert_eq!(view.voters().count(), 6);
+        assert!(view.voters().all(|v| v != 3));
+        // Full membership still includes the demoted peer.
+        assert!(view.peers().any(|p| p == 3));
+    }
+
+    #[test]
+    fn quorum_floor_clamps_demotion() {
+        // n = 5, default floor = majority(5) = 3 voters: at most 2 demotions.
+        let mut view = ClusterView::new(&cfg_on(5), 0);
+        let mut f = slots(5);
+        let mut c = Counters::default();
+        for peer in 1..5 {
+            for _ in 0..20 {
+                view.observe_failure(peer);
+            }
+        }
+        run_evals(&mut view, 10, 0, &mut f, &mut c);
+        assert_eq!(view.voter_count(), 3, "floor must stop the third demotion");
+        assert_eq!(c.demotions, 2);
+        // Quorum never shrinks below the intersection floor.
+        assert_eq!(view.quorum_size(), 3);
+        assert!(view.quorum_size() + view.election_quorum() > 5);
+    }
+
+    #[test]
+    fn quorum_intersection_floor_holds_for_all_demotion_levels() {
+        // Property: for any n and any demotion level the floor permits,
+        // commit-quorum holders intersect every full-membership election
+        // majority (quorum_size + election_quorum > n).
+        for n in [2usize, 3, 5, 8, 21, 50, 51, 100, 101] {
+            let mut cfg = cfg_on(n);
+            cfg.unreliable.quorum_floor = 1; // push the config floor below the hard floor
+            let mut view = ClusterView::new(&cfg, 0);
+            let mut f = slots(n);
+            let mut c = Counters::default();
+            for peer in 1..n {
+                for _ in 0..20 {
+                    view.observe_failure(peer);
+                }
+            }
+            run_evals(&mut view, 40, 0, &mut f, &mut c);
+            assert!(
+                view.quorum_size() + view.election_quorum() > n,
+                "n={n}: quorum {} + election {} must exceed n",
+                view.quorum_size(),
+                view.election_quorum()
+            );
+            assert!(view.voter_count() >= ClusterView::intersection_floor(n));
+            assert!(view.quorum_size() <= view.voter_count());
+        }
+    }
+
+    #[test]
+    fn persistent_lag_demotes_even_with_clean_acks() {
+        // A permanently-slow peer keeps acking (score stays high) but its
+        // match index trails the commit frontier by more than the snapshot
+        // window: the lag signal demotes it anyway.
+        let mut view = ClusterView::new(&cfg_on(7), 0);
+        let mut f = slots(7);
+        let mut c = Counters::default();
+        for peer in 1..7 {
+            for _ in 0..10 {
+                view.observe_success(peer);
+            }
+        }
+        // Healthy peers track the frontier; peer 5 is stuck far behind.
+        let mut commit = 0u64;
+        for _ in 0..12 {
+            commit += 100;
+            for peer in 1..7 {
+                f[peer].match_index = if peer == 5 { 10 } else { commit };
+            }
+            run_evals(&mut view, 1, commit, &mut f, &mut c);
+        }
+        assert!(!view.is_voter(5), "a persistently lagging peer must be demoted");
+        assert!(view.health(5) > 0.5, "...even while its ack score stays healthy");
+        for peer in [1usize, 2, 3, 4, 6] {
+            assert!(view.is_voter(peer), "peer {peer} tracks the frontier and stays a voter");
+        }
+        // An idle cluster (commit parked) never flags caught-up peers.
+        let mut view = ClusterView::new(&cfg_on(7), 0);
+        for peer in 1..7 {
+            f[peer].match_index = 500;
+        }
+        run_evals(&mut view, 20, 500, &mut f, &mut c);
+        assert_eq!(view.voter_count(), 7, "parked commit must not read as lag");
+    }
+
+    #[test]
+    fn never_demotes_a_needed_acker() {
+        let mut view = ClusterView::new(&cfg_on(7), 0);
+        let mut f = slots(7);
+        let mut c = Counters::default();
+        for _ in 0..20 {
+            view.observe_failure(2);
+        }
+        // The other peers track the frontier; peer 2 holds an ack past the
+        // commit index — its evidence may be what the pending commit counts.
+        for peer in 1..7 {
+            f[peer].match_index = 10;
+        }
+        f[2].repairing = true;
+        run_evals(&mut view, 10, 8, &mut f, &mut c);
+        assert!(view.is_voter(2), "uncommitted-range acker must stay a voter");
+        assert!(f[2].repairing, "repair state untouched while it stays a voter");
+        // Once the commit catches up past its ack, demotion proceeds (and
+        // forgets the repair state).
+        run_evals(&mut view, 3, 10, &mut f, &mut c);
+        assert!(!view.is_voter(2));
+        assert!(!f[2].repairing, "demotion must clear the repair flag");
+    }
+
+    #[test]
+    fn repromotion_needs_probation_and_catch_up() {
+        let mut view = ClusterView::new(&cfg_on(7), 0);
+        let mut f = slots(7);
+        let mut c = Counters::default();
+        for _ in 0..20 {
+            view.observe_failure(4);
+        }
+        run_evals(&mut view, 3, 0, &mut f, &mut c);
+        assert!(!view.is_voter(4));
+        // Health recovers, but the peer lags the committed prefix: stays out.
+        for _ in 0..50 {
+            view.observe_success(4);
+        }
+        f[4].match_index = 5;
+        run_evals(&mut view, 30, 100, &mut f, &mut c);
+        assert!(!view.is_voter(4), "a lagging peer must not be re-promoted");
+        // Caught up: re-promoted after the probation streak.
+        f[4].match_index = 100;
+        let probation = view.cfg.probation;
+        run_evals(&mut view, probation, 100, &mut f, &mut c);
+        assert!(view.is_voter(4));
+        assert_eq!(c.promotions, 1);
+        assert_eq!(view.voter_count(), 7);
+        assert_eq!(c.demoted_current, 0);
+    }
+
+    #[test]
+    fn evaluation_is_rate_limited_to_the_round_interval() {
+        let mut view = ClusterView::new(&cfg_on(5), 0);
+        let mut f = slots(5);
+        let mut c = Counters::default();
+        for _ in 0..20 {
+            view.observe_failure(1);
+        }
+        // Many calls within one interval count as a single round.
+        let dt = view.eval_interval_us;
+        view.evaluate(dt, 0, &mut f, &mut c);
+        for t in 0..10 {
+            view.evaluate(dt + t, 0, &mut f, &mut c);
+        }
+        assert!(view.is_voter(1), "sub-interval calls must not advance the streak");
+    }
+
+    #[test]
+    fn best_effort_budget_caps_and_refills() {
+        let mut cfg = cfg_on(5);
+        cfg.unreliable.best_effort_bytes = 100;
+        let mut view = ClusterView::new(&cfg, 0);
+        let mut f = slots(5);
+        let mut c = Counters::default();
+        assert!(view.try_spend_best_effort(60, &mut c));
+        assert!(!view.try_spend_best_effort(60, &mut c), "40 left cannot cover 60");
+        assert_eq!(c.best_effort_bytes, 60);
+        // An evaluation refills (bounded at 4x the per-round allowance).
+        run_evals(&mut view, 1, 0, &mut f, &mut c);
+        assert!(view.try_spend_best_effort(120, &mut c));
+        run_evals(&mut view, 100, 0, &mut f, &mut c);
+        assert!(view.try_spend_best_effort(400, &mut c));
+        assert!(!view.try_spend_best_effort(100, &mut c), "bucket is capped at 4x");
+    }
+
+    #[test]
+    fn demoted_rotation_cycles_fairly() {
+        let mut view = ClusterView::new(&cfg_on(6), 0);
+        let mut f = slots(6);
+        let mut c = Counters::default();
+        for peer in [2usize, 4] {
+            for _ in 0..20 {
+                view.observe_failure(peer);
+            }
+        }
+        run_evals(&mut view, 3, 0, &mut f, &mut c);
+        assert_eq!(view.demoted_count(), 2);
+        let a = view.demoted_rotation();
+        let b = view.demoted_rotation();
+        assert_eq!(a.len(), 2);
+        assert_ne!(a[0], b[0], "the rotation must advance between calls");
+        let mut all = a.clone();
+        all.sort_unstable();
+        assert_eq!(all, vec![2, 4]);
+    }
+
+    #[test]
+    fn leadership_reset_restores_full_membership() {
+        let mut view = ClusterView::new(&cfg_on(5), 0);
+        let mut f = slots(5);
+        let mut c = Counters::default();
+        for _ in 0..20 {
+            view.observe_failure(1);
+        }
+        run_evals(&mut view, 3, 0, &mut f, &mut c);
+        assert!(!view.is_voter(1));
+        view.reset_for_leadership();
+        assert!(view.is_voter(1));
+        assert_eq!(view.voter_count(), 5);
+        assert_eq!(view.health(1), 1.0);
+    }
+
+    #[test]
+    fn full_view_matches_majority_arithmetic() {
+        for n in [1usize, 3, 51] {
+            let v = ClusterView::full(n);
+            assert_eq!(v.epidemic_quorum(), majority(n));
+            assert_eq!(v.quorum_size(), majority(n));
+        }
+        assert!(ClusterView::full(1).solo_quorum());
+        assert!(!ClusterView::full(3).solo_quorum());
+    }
+}

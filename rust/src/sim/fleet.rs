@@ -14,7 +14,7 @@
 //! results (asserted in tests).
 
 use crate::epidemic::{EpidemicState, Permutation};
-use crate::raft::types::majority;
+use crate::raft::view::ClusterView;
 use crate::runtime::{Geometry, MergeExecutor};
 use crate::util::rng::Xoshiro256;
 
@@ -54,6 +54,9 @@ pub struct FleetSim {
     states: Vec<EpidemicState>,
     perms: Vec<Permutation>,
     geometry: Geometry,
+    /// The §3.2 bitmap quorum — constant for the fleet's lifetime, taken
+    /// from the view's quorum arithmetic once at construction.
+    quorum: u32,
 }
 
 impl FleetSim {
@@ -79,6 +82,7 @@ impl FleetSim {
             fanout,
             states,
             perms,
+            quorum: ClusterView::full(n).epidemic_quorum() as u32,
             // Geometry for batched native folding (HLO overrides with the
             // artifact's geometry).
             geometry: Geometry { b: n, m: 16, w: 2 },
@@ -93,7 +97,7 @@ impl FleetSim {
     /// number of messages sent. `last_index` is every replica's log end.
     pub fn round(&mut self, backend: &Backend, last_index: u32) -> u64 {
         let n = self.n;
-        let maj = majority(n) as u32;
+        let maj = self.quorum;
         // Deliver: per-target message lists (snapshot of sender states).
         let mut inbox: Vec<Vec<usize>> = vec![Vec::new(); n];
         let mut messages = 0u64;

@@ -48,6 +48,15 @@ pub struct SimReport {
     pub fanout_adaptations: u64,
     pub fanout_min_seen: u64,
     pub fanout_max_seen: u64,
+    /// Unreliable-node mode (PR 4, `raft::view`): demotion/promotion
+    /// events summed across replicas, the end-of-run leader's
+    /// currently-demoted gauge, and its best-effort bytes toward demoted
+    /// peers (a subset of `leader_egress_bytes`, metered by the
+    /// `[protocol.unreliable]` budget).
+    pub demotions: u64,
+    pub promotions: u64,
+    pub demoted_current: u64,
+    pub best_effort_bytes: u64,
     /// Cross-replica committed-prefix agreement held at end of run.
     pub safety_ok: bool,
     /// Highest commit index across replicas at end of run.
@@ -93,6 +102,10 @@ impl SimReport {
             ("fanout_adaptations", Json::num(self.fanout_adaptations as f64)),
             ("fanout_min_seen", Json::num(self.fanout_min_seen as f64)),
             ("fanout_max_seen", Json::num(self.fanout_max_seen as f64)),
+            ("demotions", Json::num(self.demotions as f64)),
+            ("promotions", Json::num(self.promotions as f64)),
+            ("demoted_current", Json::num(self.demoted_current as f64)),
+            ("best_effort_bytes", Json::num(self.best_effort_bytes as f64)),
             ("safety_ok", Json::Bool(self.safety_ok)),
             ("max_commit", Json::num(self.max_commit as f64)),
             ("events_processed", Json::num(self.events_processed as f64)),

@@ -1,10 +1,12 @@
 //! Simulated network: latency distribution, independent loss, partitions,
-//! and two config-gated impairments (both default-off) following the usual
-//! network-simulator idiom: per-packet duplication and a Gilbert–Elliott
-//! burst-loss chain. Replica-to-replica and client-to-replica messages
-//! share the latency model; partitions, duplication and burst loss apply
-//! to replica links only (clients run on separate cores/hosts in the
-//! paper's setup).
+//! and three config-gated impairments (all default-off) following the
+//! usual network-simulator idiom: per-packet duplication, a
+//! Gilbert–Elliott burst-loss chain, and asymmetric per-link extra latency
+//! (`[sim.links]` — a directed `from-to` delay or a slow node, the
+//! scenario `bench-pr4`'s flaky replicas use). Replica-to-replica and
+//! client-to-replica messages share the latency model; partitions,
+//! duplication, burst loss and link delays apply to replica links only
+//! (clients run on separate cores/hosts in the paper's setup).
 //!
 //! Determinism note: every impairment draws from the RNG only while its
 //! gate is open (probability > 0 / chain enabled), so runs with the
@@ -28,12 +30,37 @@ pub struct SimNet {
     /// per-link means each link sees the configured burst lengths
     /// regardless of aggregate cluster traffic.
     ge_bad: Vec<bool>,
+    /// `[sim.links]`: fixed extra one-way delay (µs) per directed link
+    /// (`from * n + to`); empty = no per-link asymmetry, zero lookups.
+    link_extra_us: Vec<Time>,
     rng: Xoshiro256,
 }
 
 impl SimNet {
     pub fn new(cfg: NetworkConfig, n: usize, rng: Xoshiro256) -> Self {
-        Self { cfg, n, groups: None, ge_bad: vec![false; n * n], rng }
+        let mut link_extra_us = Vec::new();
+        if !cfg.links.is_empty() {
+            link_extra_us = vec![0; n * n];
+            for spec in &cfg.links {
+                // Config validation already rejected malformed selectors.
+                let (from, to) = spec.endpoints(n).unwrap_or_else(|e| panic!("{e}"));
+                match (from, to) {
+                    (Some(f), Some(t)) => link_extra_us[f * n + t] += spec.extra_us,
+                    (Some(id), None) => {
+                        // Slow node: both directions of every link touching
+                        // it (self-links stay zero; nodes never self-send).
+                        for j in 0..n {
+                            if j != id {
+                                link_extra_us[id * n + j] += spec.extra_us;
+                                link_extra_us[j * n + id] += spec.extra_us;
+                            }
+                        }
+                    }
+                    _ => unreachable!("endpoints always yields a from id"),
+                }
+            }
+        }
+        Self { cfg, n, groups: None, ge_bad: vec![false; n * n], link_extra_us, rng }
     }
 
     /// Sample a one-way latency.
@@ -42,6 +69,19 @@ impl SimNet {
             .rng
             .next_normal(self.cfg.latency_mean_us, self.cfg.latency_stddev_us);
         (l.max(self.cfg.latency_min_us as f64)) as Time
+    }
+
+    /// Sample a one-way latency for the directed replica link `from → to`
+    /// (the base distribution plus any `[sim.links]` extra delay). The RNG
+    /// draw is identical to [`latency`](Self::latency), so runs without
+    /// link overrides consume the exact same random sequence.
+    pub fn latency_between(&mut self, from: NodeId, to: NodeId) -> Time {
+        let base = self.latency();
+        if self.link_extra_us.is_empty() {
+            base
+        } else {
+            base + self.link_extra_us[from * self.n + to]
+        }
     }
 
     fn ge_enabled(&self) -> bool {
@@ -186,6 +226,49 @@ mod tests {
         let dup = (0..20000).filter(|_| n.duplicates()).count();
         let rate = dup as f64 / 20000.0;
         assert!((rate - 0.5).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn link_extra_latency_is_directional_and_additive() {
+        use crate::config::LinkSpec;
+        let cfg = NetworkConfig {
+            latency_stddev_us: 0.0,
+            links: vec![
+                LinkSpec { selector: "2-0".into(), extra_us: 50_000 },
+                LinkSpec { selector: "2-0".into(), extra_us: 10_000 }, // composes
+            ],
+            ..Default::default()
+        };
+        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(9));
+        let slow = n.latency_between(2, 0);
+        let fast = n.latency_between(0, 2);
+        assert!(slow >= 60_000 + 20, "directed extra must apply: {slow}");
+        assert!(fast < 1_000, "reverse direction keeps the base model: {fast}");
+    }
+
+    #[test]
+    fn slow_node_selector_applies_both_directions() {
+        use crate::config::LinkSpec;
+        let cfg = NetworkConfig {
+            latency_stddev_us: 0.0,
+            links: vec![LinkSpec { selector: "3".into(), extra_us: 80_000 }],
+            ..Default::default()
+        };
+        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(10));
+        assert!(n.latency_between(3, 1) >= 80_000);
+        assert!(n.latency_between(1, 3) >= 80_000);
+        assert!(n.latency_between(0, 1) < 1_000, "untouched links keep the base model");
+    }
+
+    #[test]
+    fn no_links_config_keeps_latency_between_identical_to_latency() {
+        // Same seed, same draw sequence: latency_between must not perturb
+        // runs that never configure `[sim.links]`.
+        let mut a = net(0.0);
+        let mut b = net(0.0);
+        for _ in 0..100 {
+            assert_eq!(a.latency_between(0, 4), b.latency());
+        }
     }
 
     #[test]

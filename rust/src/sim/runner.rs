@@ -114,7 +114,7 @@ impl ActionSink for SimSink<'_> {
         }
         if self.net.duplicates() {
             // Second copy with its own latency draw (arbitrary reordering).
-            let lat = self.net.latency();
+            let lat = self.net.latency_between(from, to);
             push_ev(
                 self.queue,
                 self.seq,
@@ -122,7 +122,7 @@ impl ActionSink for SimSink<'_> {
                 Ev::Deliver { to, msg: Box::new(msg.clone()) },
             );
         }
-        let lat = self.net.latency();
+        let lat = self.net.latency_between(from, to);
         push_ev(
             self.queue,
             self.seq,
@@ -532,6 +532,12 @@ impl Simulation {
             .filter(|&m| m > 0)
             .min()
             .unwrap_or(0);
+        // Unreliable-node mode: demotion/promotion churn (cluster-wide) and
+        // the leader's best-effort spend + currently-demoted gauge.
+        let demotions = self.replicas.iter().map(|r| r.node.counters.demotions).sum();
+        let promotions = self.replicas.iter().map(|r| r.node.counters.promotions).sum();
+        let demoted_current = self.replicas[leader].node.counters.demoted_current;
+        let best_effort_bytes = self.replicas[leader].node.counters.best_effort_bytes;
         let leader_egress_bytes = self.collector.egress_bytes[leader];
         let peer_egress_bytes_total = (0..n)
             .filter(|&i| i != leader)
@@ -567,6 +573,10 @@ impl Simulation {
             fanout_adaptations,
             fanout_min_seen,
             fanout_max_seen,
+            demotions,
+            promotions,
+            demoted_current,
+            best_effort_bytes,
             safety_ok,
             max_commit: ref_node.commit_index(),
             events_processed: self.events,
@@ -816,6 +826,63 @@ mod tests {
         assert_eq!(fixed.messages, off.messages);
         assert_eq!(fixed.completed, off.completed);
         assert_eq!(fixed.mean_latency_us, off.mean_latency_us);
+    }
+
+    #[test]
+    fn unreliable_disabled_is_bit_identical() {
+        // `[protocol.unreliable] enabled = false` must reproduce the flat
+        // membership runs exactly — the view may not perturb RNG draws,
+        // message counts or timing, whatever the other knobs say.
+        for variant in [Variant::Raft, Variant::Pull, Variant::V1] {
+            let base = run_experiment(&quick_cfg(7, variant));
+            let mut cfg = quick_cfg(7, variant);
+            cfg.protocol.unreliable.threshold = 0.9; // knobs without the switch
+            cfg.protocol.unreliable.demote_after = 1;
+            cfg.protocol.unreliable.best_effort_bytes = 1;
+            let off = run_experiment(&cfg);
+            assert_eq!(base.messages, off.messages, "{variant:?}");
+            assert_eq!(base.completed, off.completed, "{variant:?}");
+            assert_eq!(base.mean_latency_us, off.mean_latency_us, "{variant:?}");
+            assert_eq!(off.demotions, 0);
+            assert_eq!(off.best_effort_bytes, 0);
+        }
+    }
+
+    #[test]
+    fn unreliable_mode_demotes_a_slow_peer_and_stays_healthy() {
+        // One permanently-slow replica (asymmetric [sim.links] delay, both
+        // directions): unreliable-node mode must take it out of the quorum
+        // (demotions > 0), keep gossiping to it best-effort (metered
+        // bytes), and the cluster must keep serving with a stable leader.
+        use crate::config::LinkSpec;
+        let mut cfg = quick_cfg(9, Variant::Pull);
+        cfg.workload.rate = 400.0;
+        cfg.workload.duration_us = 3_000_000;
+        cfg.protocol.unreliable.enabled = true;
+        // Timeout above the slow peer's round-trip delay: slow, not dead.
+        cfg.protocol.election_timeout_min_us = 1_000_000;
+        cfg.protocol.election_timeout_max_us = 2_000_000;
+        cfg.network.links.push(LinkSpec { selector: "8".into(), extra_us: 250_000 });
+        let report = run_experiment(&cfg);
+        assert!(report.safety_ok, "demotion must not break safety");
+        assert!(report.completed > 100, "cluster must keep serving");
+        assert_eq!(report.elections, 0, "the slow peer must not depose the leader");
+        assert!(report.demotions >= 1, "the slow peer must be demoted");
+        assert_eq!(report.demoted_current, 1, "it must still be demoted at end of run");
+        assert!(report.best_effort_bytes > 0, "best-effort traffic must be metered");
+    }
+
+    #[test]
+    fn unreliable_mode_never_demotes_healthy_peers() {
+        for variant in [Variant::Raft, Variant::Pull] {
+            let mut cfg = quick_cfg(9, variant);
+            cfg.workload.rate = 400.0;
+            cfg.protocol.unreliable.enabled = true;
+            let report = run_experiment(&cfg);
+            assert!(report.safety_ok);
+            assert_eq!(report.demotions, 0, "{variant:?}: healthy peers were demoted");
+            assert_eq!(report.elections, 0);
+        }
     }
 
     #[test]

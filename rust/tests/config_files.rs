@@ -11,7 +11,9 @@ fn load(name: &str) -> Config {
 
 #[test]
 fn all_shipped_configs_parse_and_validate() {
-    for name in ["paper51", "lan", "wan", "lossy", "pull", "adaptive", "lossy-burst"] {
+    let names =
+        ["paper51", "lan", "wan", "lossy", "pull", "adaptive", "lossy-burst", "unreliable"];
+    for name in names {
         let cfg = load(name);
         cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
     }
@@ -35,6 +37,30 @@ fn adaptive_config_enables_the_controller_and_runs() {
     assert!(report.safety_ok);
     assert!(report.completed > 0, "adaptive preset must serve requests");
     assert!(report.fanout_current >= 1, "leader must have planned adaptive rounds");
+}
+
+#[test]
+fn unreliable_config_demotes_its_slow_replicas_and_runs() {
+    let mut cfg = load("unreliable");
+    assert_eq!(cfg.protocol.variant, epiraft::raft::Variant::Pull);
+    assert!(cfg.protocol.unreliable.enabled, "the preset's point is the demotion policy");
+    assert_eq!(cfg.network.links.len(), 2, "two permanently-slow replicas");
+    // Shrink for test time (keep the slow ids inside the cluster).
+    cfg.protocol.n = 9;
+    cfg.network.links.clear();
+    cfg.set("sim.links.8", "200000").unwrap();
+    cfg.workload.clients = 5;
+    cfg.workload.duration_us = 3_000_000;
+    cfg.workload.warmup_us = 400_000;
+    cfg.validate().unwrap();
+    let report = run_experiment(&cfg);
+    assert!(report.safety_ok);
+    assert!(report.completed > 0, "unreliable preset must serve requests");
+    assert!(report.demotions >= 1, "the slow replica must be demoted");
+    // The same file with the switch off must validate too (inert knobs).
+    let mut cfg = load("unreliable");
+    cfg.set("protocol.unreliable.enabled", "false").unwrap();
+    cfg.validate().unwrap();
 }
 
 #[test]

@@ -113,6 +113,47 @@ fn adaptive_fanout_safe_and_bounded_under_random_faults() {
 }
 
 #[test]
+fn unreliable_mode_safe_under_random_faults_and_flaky_links() {
+    // PR 4: with unreliable-node mode enabled, random fault schedules plus
+    // randomly-slowed replicas (asymmetric [sim.links] delays) must never
+    // lose a committed entry across demote/re-promote churn — the
+    // committed-prefix agreement holds at end of run for every variant,
+    // whatever the demotion counters say.
+    use epiraft::config::LinkSpec;
+    forall("safety-unreliable", 12, |g| {
+        let variant = *g.choice(&[Variant::Raft, Variant::Pull, Variant::V1]);
+        let mut cfg = random_cfg(g, variant);
+        cfg.protocol.unreliable.enabled = true;
+        cfg.protocol.unreliable.demote_after = g.u64_in(1, 5) as u32;
+        cfg.protocol.unreliable.probation = g.u64_in(1, 13) as u32;
+        // A couple of randomly-chosen slow replicas (possibly the
+        // bootstrap leader itself — demotion must survive leader churn).
+        let slow = g.usize_in(0, 3);
+        for _ in 0..slow {
+            let id = g.usize_in(0, cfg.protocol.n);
+            cfg.network.links.push(LinkSpec {
+                selector: id.to_string(),
+                extra_us: g.u64_in(50_000, 250_000),
+            });
+        }
+        let mut rng = Xoshiro256::seed_from_u64(cfg.seed ^ 0xF1A2);
+        let faults = FaultSchedule::random(
+            &mut rng,
+            cfg.protocol.n,
+            cfg.workload.duration_us,
+            5,
+        );
+        let report = run_with_faults(&cfg, faults);
+        assert!(
+            report.safety_ok,
+            "unreliable {variant:?} lost a committed entry (n={}, seed={}, demotions={}, \
+             promotions={})",
+            cfg.protocol.n, cfg.seed, report.demotions, report.promotions
+        );
+    });
+}
+
+#[test]
 fn liveness_without_faults_all_variants() {
     forall("liveness-no-faults", 9, |g| {
         for variant in Variant::ALL {

@@ -744,3 +744,51 @@ fn pull_progress_and_safety_under_burst_loss() {
     assert!(report.completed > 0, "no requests served under burst loss");
     assert!(report.max_commit > 0, "nothing committed under burst loss");
 }
+
+// ---------------------------------------------------------------------------
+// Unreliable-node mode (PR 4, `raft::view`): k flaky replicas are demoted
+// out of the quorum and the cluster still commits the client load.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn flaky_replicas_are_demoted_and_the_cluster_still_commits() {
+    use epiraft::config::LinkSpec;
+    for variant in [Variant::Raft, Variant::Pull] {
+        let mut cfg = Config::default();
+        cfg.protocol.n = 9;
+        cfg.protocol.variant = variant;
+        cfg.protocol.unreliable.enabled = true;
+        // Election timeouts above the slow replicas' round-trip delay:
+        // their heartbeat stream arrives late but regularly, so they must
+        // read as slow, not dead (see harness::unreliable).
+        cfg.protocol.election_timeout_min_us = 1_000_000;
+        cfg.protocol.election_timeout_max_us = 2_000_000;
+        cfg.workload.clients = 8;
+        cfg.workload.rate = 400.0;
+        cfg.workload.duration_us = 3_000_000;
+        cfg.workload.warmup_us = 400_000;
+        cfg.seed = 0x0DD_BA11;
+        // k = 2 permanently-slow replicas (asymmetric per-link delay in
+        // both directions — reachable, in-order, far too late).
+        for id in [7usize, 8] {
+            cfg.network.links.push(LinkSpec { selector: id.to_string(), extra_us: 250_000 });
+        }
+        let report = run_experiment(&cfg);
+        assert!(report.safety_ok, "{variant:?}: demotion churn broke safety");
+        assert!(report.completed > 100, "{variant:?}: flaky peers stalled the cluster");
+        assert_eq!(report.elections, 0, "{variant:?}: flaky peers deposed the leader");
+        assert!(
+            report.demotions >= 2,
+            "{variant:?}: both flaky replicas must be demoted (saw {})",
+            report.demotions
+        );
+        assert_eq!(
+            report.demoted_current, 2,
+            "{variant:?}: still-slow replicas must stay demoted at end of run"
+        );
+        assert!(
+            report.best_effort_bytes > 0,
+            "{variant:?}: demoted replicas must still be reached best-effort"
+        );
+    }
+}
