@@ -1,9 +1,10 @@
-//! Live cluster demo: the same protocol core under real OS threads, mpsc
-//! channels and the real clock — one thread per replica with per-thread
-//! CPU accounting, Paxi-style closed-loop client threads.
+//! Live cluster demo: the same protocol core under real OS threads and
+//! the real clock — one thread per replica with per-thread CPU
+//! accounting, Paxi-style closed-loop client threads, and the transport
+//! of your choice (in-process channels or real loopback TCP sockets).
 //!
-//! Run: `cargo run --release --example live_cluster [variant] [n] [secs]`
-//! e.g. `cargo run --release --example live_cluster v2 7 5`
+//! Run: `cargo run --release --example live_cluster [variant] [n] [secs] [mpsc|tcp]`
+//! e.g. `cargo run --release --example live_cluster v2 7 5 tcp`
 
 use epiraft::cluster::run_live;
 use epiraft::config::Config;
@@ -17,6 +18,7 @@ fn main() {
         .unwrap_or(Variant::V2);
     let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(5);
     let secs: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(3.0);
+    let transport = args.get(3).map(String::as_str).unwrap_or("mpsc");
 
     let mut cfg = Config::default();
     cfg.protocol.n = n;
@@ -26,9 +28,13 @@ fn main() {
     cfg.workload.duration_us = (secs * 1e6) as u64;
     cfg.workload.warmup_us = cfg.workload.duration_us / 5;
     cfg.seed = 42;
+    if let Err(e) = cfg.set("cluster.transport", transport) {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
 
     println!(
-        "starting live cluster: variant={} n={n} clients={} for {secs}s",
+        "starting live cluster: variant={} n={n} clients={} for {secs}s over {transport}",
         variant.name(),
         cfg.workload.clients
     );

@@ -10,6 +10,7 @@
 //! epiraft bench-pr3  [--quick] [--n N] [--rate R] [--seed S] [--out FILE]
 //! epiraft bench-pr4  [--quick] [--n N] [--k K] [--rate R] [--seed S] [--out FILE]
 //! epiraft live       [--variant v] [--n N] [--clients C] [--secs S]
+//!                    [--transport {mpsc|tcp}] [--node-id I]
 //! epiraft artifacts-check [--dir artifacts]
 //! epiraft config-dump
 //! ```
@@ -108,6 +109,12 @@ impl Cli {
         if let Some(s) = self.get("seed") {
             cfg.set("seed", s)?;
         }
+        if let Some(t) = self.get("transport") {
+            cfg.set("cluster.transport", t)?;
+        }
+        if let Some(id) = self.get("node-id") {
+            cfg.set("cluster.node_id", id)?;
+        }
         for (k, v) in &self.options {
             if k == "set" {
                 let v = v.as_deref().ok_or("--set expects key=value")?;
@@ -157,7 +164,14 @@ USAGE:
       egress.
 
   epiraft live [--variant v] [--n N] [--clients C] [--secs S]
-      Run the live thread-per-replica cluster (real time, real channels).
+               [--transport mpsc|tcp] [--node-id I]
+      Run the live thread-per-replica cluster (real time). The default
+      mpsc transport moves messages over in-process channels; --transport
+      tcp puts every replica-to-replica message through the binary codec
+      and real sockets (loopback by default; [cluster.peers] in a config
+      file for multi-host addresses). --node-id I runs only replica I in
+      this process (multi-process mode; requires tcp + a full peer table;
+      clients are driven from replica 0's process).
 
   epiraft fleet [--n N] [--backend native|hlo] [--seed S]
       Convergence study of the V2 commit structures (rounds vs fanout),
@@ -223,6 +237,17 @@ mod tests {
         assert!(parse("run --variant paxos").build_config().is_err());
         assert!(parse("run --set nope=1").build_config().is_err());
         assert!(parse("run --set protocol.fanout").build_config().is_err());
+    }
+
+    #[test]
+    fn transport_flags_flow_into_cluster_config() {
+        use crate::config::TransportKind;
+        let cfg = parse("live --transport tcp --n 3").build_config().unwrap();
+        assert_eq!(cfg.cluster.transport, TransportKind::Tcp);
+        assert_eq!(cfg.cluster.node_id, None);
+        assert!(parse("live --transport carrier-pigeon").build_config().is_err());
+        // --node-id without tcp/peers fails validation, not parsing.
+        assert!(parse("live --node-id 0").build_config().is_err());
     }
 
     #[test]

@@ -222,6 +222,24 @@ impl ProtocolConfig {
         if self.pull_interval_us == 0 || self.pull_fanout == 0 || self.pull_reply_budget == 0 {
             return Err("protocol.pull_* parameters must be >= 1".into());
         }
+        // The TCP transport rejects frames above `transport::codec::
+        // MAX_FRAME_LEN` (16 MiB); a batch knob that could encode past it
+        // would make every receiver drop the leader's repair batch and the
+        // leader resend it forever. 400k entries × 33 wire bytes ≈ 13 MiB
+        // leaves headroom for headers and the V2 epidemic payload.
+        const MAX_BATCH_ENTRIES: usize = 400_000;
+        if self.max_entries_per_rpc > MAX_BATCH_ENTRIES {
+            return Err(format!(
+                "protocol.max_entries_per_rpc must be <= {MAX_BATCH_ENTRIES} \
+                 (transport frame cap)"
+            ));
+        }
+        if self.pull_reply_budget > MAX_BATCH_ENTRIES {
+            return Err(format!(
+                "protocol.pull_reply_budget must be <= {MAX_BATCH_ENTRIES} \
+                 (transport frame cap)"
+            ));
+        }
         if self.variant == Variant::Pull && self.election_timeout_min_us <= self.pull_interval_us
         {
             return Err("election timeout must exceed the pull interval".into());
@@ -242,6 +260,129 @@ impl ProtocolConfig {
             ));
         }
         Ok(())
+    }
+}
+
+/// Which wire the live cluster's replica-to-replica traffic rides.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process `std::sync::mpsc` channels (the default; bit-identical
+    /// to the pre-transport runtime).
+    Mpsc,
+    /// Real TCP sockets through `transport::tcp` (loopback or multi-host).
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Mpsc => "mpsc",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "mpsc" | "channel" => Some(TransportKind::Mpsc),
+            "tcp" | "socket" => Some(TransportKind::Tcp),
+            _ => None,
+        }
+    }
+}
+
+/// One `[cluster.peers]` entry: `<node id> = "host:port"`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PeerSpec {
+    pub node: usize,
+    pub addr: String,
+}
+
+/// `[cluster]` — live-cluster host options (`epiraft live`): transport
+/// selection, the peer address table for multi-process/multi-host runs,
+/// and the transport fault-injection knobs. The simulator ignores this
+/// section entirely.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Replica-to-replica transport.
+    pub transport: TransportKind,
+    /// `[cluster.peers]`: one `id = "host:port"` entry per replica. Empty
+    /// (default) = single-process run with auto-assigned loopback ports
+    /// under tcp; required (covering every id) for `node_id` runs.
+    pub peers: Vec<PeerSpec>,
+    /// Run only this replica in this process (multi-process mode; needs
+    /// `transport = "tcp"` and a full `[cluster.peers]` table). Clients
+    /// are driven from the process hosting replica 0.
+    pub node_id: Option<usize>,
+    /// Bounded per-peer outbox depth (messages) for the TCP transport; a
+    /// full outbox drops (Raft repair recovers), never blocks the replica.
+    pub outbox: usize,
+    /// Fault injection: `kill_link_at_us > 0` hard-closes every TCP
+    /// connection of replica `kill_link_node` once, that long after
+    /// start — the transport fault tests drive the reconnect path with
+    /// this. Default off.
+    pub kill_link_at_us: u64,
+    pub kill_link_node: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            transport: TransportKind::Mpsc,
+            peers: Vec::new(),
+            node_id: None,
+            outbox: 1024,
+            kill_link_at_us: 0,
+            kill_link_node: 0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        if self.outbox == 0 {
+            return Err("cluster.outbox must be >= 1".into());
+        }
+        for p in &self.peers {
+            if p.node >= n {
+                return Err(format!("cluster.peers: node {} out of range for n={n}", p.node));
+            }
+            if !p.addr.contains(':') {
+                return Err(format!(
+                    "cluster.peers.{}: address '{}' must be host:port",
+                    p.node, p.addr
+                ));
+            }
+        }
+        if !self.peers.is_empty() {
+            for id in 0..n {
+                if !self.peers.iter().any(|p| p.node == id) {
+                    return Err(format!("cluster.peers must cover every replica (missing {id})"));
+                }
+            }
+        }
+        if let Some(id) = self.node_id {
+            if id >= n {
+                return Err(format!("cluster.node_id {id} out of range for n={n}"));
+            }
+            if self.transport != TransportKind::Tcp {
+                return Err("cluster.node_id requires cluster.transport = \"tcp\"".into());
+            }
+            if self.peers.is_empty() {
+                return Err("cluster.node_id requires a full [cluster.peers] table".into());
+            }
+        }
+        if self.kill_link_at_us > 0 && self.kill_link_node >= n {
+            return Err(format!(
+                "cluster.kill_link_node {} out of range for n={n}",
+                self.kill_link_node
+            ));
+        }
+        Ok(())
+    }
+
+    /// Address for `id` from the `[cluster.peers]` table.
+    pub fn peer_addr(&self, id: usize) -> Option<&str> {
+        self.peers.iter().find(|p| p.node == id).map(|p| p.addr.as_str())
     }
 }
 
@@ -406,12 +547,14 @@ pub struct Config {
     pub network: NetworkConfig,
     pub cost: CostConfig,
     pub workload: WorkloadConfig,
+    pub cluster: ClusterConfig,
     pub seed: u64,
 }
 
 impl Config {
     pub fn validate(&self) -> Result<(), String> {
         self.protocol.validate()?;
+        self.cluster.validate(self.protocol.n)?;
         for (name, p) in [
             ("network.loss", self.network.loss),
             ("network.duplicate", self.network.duplicate),
@@ -451,6 +594,21 @@ impl Config {
             "false" | "0" | "no" => Ok(false),
             _ => Err(format!("bad bool for {key}: {v}")),
         };
+        // `[cluster.peers]` is a map, not a fixed key set: any node id is
+        // a key. Same id twice = overwrite (so dump/set round-trips).
+        if let Some(id) = key.strip_prefix("cluster.peers.") {
+            let node = id
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| format!("cluster.peers: bad node id '{id}'"))?;
+            let addr = v.to_string();
+            if let Some(p) = self.cluster.peers.iter_mut().find(|p| p.node == node) {
+                p.addr = addr;
+            } else {
+                self.cluster.peers.push(PeerSpec { node, addr });
+            }
+            return Ok(());
+        }
         // `[sim.links]` is a map, not a fixed key set: any selector is a
         // key. Same selector twice = overwrite (so dump/set round-trips).
         if let Some(selector) = key.strip_prefix("sim.links.") {
@@ -528,6 +686,14 @@ impl Config {
             "protocol.unreliable.best_effort_bytes" => {
                 self.protocol.unreliable.best_effort_bytes = parse_u64(v)?
             }
+            "cluster.transport" => {
+                self.cluster.transport = TransportKind::parse(v)
+                    .ok_or_else(|| format!("unknown transport {v} (want mpsc or tcp)"))?
+            }
+            "cluster.node_id" => self.cluster.node_id = Some(parse_u64(v)? as usize),
+            "cluster.outbox" => self.cluster.outbox = parse_u64(v)? as usize,
+            "cluster.kill_link_at_us" => self.cluster.kill_link_at_us = parse_u64(v)?,
+            "cluster.kill_link_node" => self.cluster.kill_link_node = parse_u64(v)? as usize,
             "network.latency_mean_us" => self.network.latency_mean_us = parse_f64(v)?,
             "network.latency_stddev_us" => self.network.latency_stddev_us = parse_f64(v)?,
             "network.latency_min_us" => self.network.latency_min_us = parse_u64(v)?,
@@ -682,6 +848,16 @@ pub fn dump(cfg: &Config) -> BTreeMap<String, String> {
         "protocol.unreliable.best_effort_bytes".into(),
         p.unreliable.best_effort_bytes.to_string(),
     );
+    m.insert("cluster.transport".into(), cfg.cluster.transport.name().into());
+    m.insert("cluster.outbox".into(), cfg.cluster.outbox.to_string());
+    m.insert("cluster.kill_link_at_us".into(), cfg.cluster.kill_link_at_us.to_string());
+    m.insert("cluster.kill_link_node".into(), cfg.cluster.kill_link_node.to_string());
+    if let Some(id) = cfg.cluster.node_id {
+        m.insert("cluster.node_id".into(), id.to_string());
+    }
+    for p in &cfg.cluster.peers {
+        m.insert(format!("cluster.peers.{}", p.node), format!("\"{}\"", p.addr));
+    }
     for spec in &cfg.network.links {
         m.insert(format!("sim.links.{}", spec.selector), spec.extra_us.to_string());
     }
@@ -965,6 +1141,85 @@ rate = 2500.5
         // Values must still be integers.
         let mut cfg = Config::default();
         assert!(cfg.set("sim.links.1", "fast").is_err());
+    }
+
+    #[test]
+    fn cluster_keys_parse_validate_and_roundtrip() {
+        let cfg = Config::from_toml(
+            "[cluster]\ntransport = \"tcp\"\noutbox = 64\n\n[cluster.peers]\n0 = \"127.0.0.1:7001\"\n1 = \"127.0.0.1:7002\"\n2 = \"127.0.0.1:7003\"\n3 = \"127.0.0.1:7004\"\n4 = \"127.0.0.1:7005\"\n",
+        )
+        .unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.cluster.transport, TransportKind::Tcp);
+        assert_eq!(cfg.cluster.outbox, 64);
+        assert_eq!(cfg.cluster.peers.len(), 5);
+        assert_eq!(cfg.cluster.peer_addr(1), Some("127.0.0.1:7002"));
+        // Re-setting an id overwrites instead of duplicating.
+        let mut cfg = cfg;
+        cfg.set("cluster.peers.1", "\"127.0.0.1:9999\"").unwrap();
+        assert_eq!(cfg.cluster.peers.len(), 5);
+        assert_eq!(cfg.cluster.peer_addr(1), Some("127.0.0.1:9999"));
+        // Dump/set round-trips transport + peers.
+        let dumped = dump(&cfg);
+        assert_eq!(dumped.get("cluster.transport").map(String::as_str), Some("tcp"));
+        let mut rebuilt = Config::default();
+        for (k, v) in &dumped {
+            rebuilt.set(k, v).unwrap();
+        }
+        assert_eq!(rebuilt.cluster, cfg.cluster);
+        // node_id round-trips once set.
+        cfg.set("cluster.node_id", "2").unwrap();
+        cfg.validate().unwrap();
+        let dumped = dump(&cfg);
+        assert_eq!(dumped.get("cluster.node_id").map(String::as_str), Some("2"));
+    }
+
+    #[test]
+    fn cluster_validation_catches_contradictions() {
+        // Unknown transport name.
+        let mut cfg = Config::default();
+        assert!(cfg.set("cluster.transport", "udp").is_err());
+        // Peer id beyond n (default n = 5).
+        let mut cfg = Config::default();
+        cfg.set("cluster.peers.9", "\"127.0.0.1:7001\"").unwrap();
+        assert!(cfg.validate().is_err(), "peer id beyond n must be rejected");
+        // A non-empty table must cover every replica.
+        let mut cfg = Config::default();
+        cfg.set("cluster.peers.0", "\"127.0.0.1:7001\"").unwrap();
+        assert!(cfg.validate().is_err(), "partial peer table must be rejected");
+        // Addresses must look like host:port.
+        let mut cfg = Config::default();
+        for id in 0..5 {
+            cfg.set(&format!("cluster.peers.{id}"), "\"localhost\"").unwrap();
+        }
+        assert!(cfg.validate().is_err(), "port-less address must be rejected");
+        // node_id needs tcp + a full peer table.
+        let mut cfg = Config::default();
+        cfg.set("cluster.node_id", "0").unwrap();
+        assert!(cfg.validate().is_err(), "node_id without tcp must be rejected");
+        cfg.set("cluster.transport", "tcp").unwrap();
+        assert!(cfg.validate().is_err(), "node_id without peers must be rejected");
+        for id in 0..5 {
+            cfg.set(&format!("cluster.peers.{id}"), &format!("\"127.0.0.1:700{id}\"")).unwrap();
+        }
+        cfg.validate().unwrap();
+        // Degenerate outbox and out-of-range kill target.
+        let mut cfg = Config::default();
+        cfg.set("cluster.outbox", "0").unwrap();
+        assert!(cfg.validate().is_err());
+        // Batch knobs that could encode past the transport frame cap are
+        // rejected (an oversized repair frame would be dropped by every
+        // receiver and resent forever).
+        let mut cfg = Config::default();
+        cfg.set("protocol.max_entries_per_rpc", "500000").unwrap();
+        assert!(cfg.validate().is_err(), "frame-cap-busting rpc batch must be rejected");
+        let mut cfg = Config::default();
+        cfg.set("protocol.pull_reply_budget", "500000").unwrap();
+        assert!(cfg.validate().is_err(), "frame-cap-busting pull budget must be rejected");
+        let mut cfg = Config::default();
+        cfg.set("cluster.kill_link_at_us", "1000").unwrap();
+        cfg.set("cluster.kill_link_node", "7").unwrap();
+        assert!(cfg.validate().is_err(), "kill target beyond n must be rejected");
     }
 
     #[test]

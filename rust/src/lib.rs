@@ -25,6 +25,7 @@ pub mod cli;
 pub mod cluster;
 pub mod driver;
 pub mod sim;
+pub mod transport;
 pub mod epidemic;
 pub mod kvstore;
 pub mod prop;

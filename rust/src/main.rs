@@ -346,6 +346,9 @@ fn cmd_live(cli: &Cli) -> Result<(), String> {
     }
     let report = epiraft::cluster::run_live(&cfg).map_err(|e| e.to_string())?;
     println!("{}", report.render());
+    if !report.logs_consistent {
+        return Err("live cluster committed prefixes diverged".into());
+    }
     Ok(())
 }
 

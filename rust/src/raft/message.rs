@@ -179,31 +179,94 @@ impl Message {
         }
     }
 
-    /// Marginal wire cost of one log entry in the size model below (used
-    /// by the best-effort budget to price a batch without building it).
-    pub const WIRE_BYTES_PER_ENTRY: u64 = 24;
+    /// True when every replica id this message carries addresses a valid
+    /// member of an `n`-process cluster. The TCP transport drops inbound
+    /// frames that fail this check: wire-supplied ids reach
+    /// `followers[from]`-style indexing and the vote set, so an
+    /// out-of-range id from a mismatched or hostile peer must never enter
+    /// the protocol core (in-process hosts construct ids from `0..n` by
+    /// definition and skip the check).
+    pub fn node_ids_in_range(&self, n: usize) -> bool {
+        match self {
+            Message::AppendEntries(a) => a.leader < n,
+            Message::AppendEntriesReply(r) => r.from < n,
+            Message::RequestVote(v) => v.candidate < n,
+            Message::RequestVoteReply(r) => r.from < n,
+            Message::PullRequest(p) => p.from < n,
+            Message::PullReply(r) => r.from < n && r.leader_hint.is_none_or(|h| h < n),
+        }
+    }
 
-    /// Estimated serialized size in bytes — the egress-accounting model the
-    /// simulator charges per send (`SimReport::leader_egress_bytes`). Not a
-    /// real codec: fixed per-message headers plus linear terms for entry
-    /// batches and the V2 structure triple, so *relative* egress between
-    /// variants is meaningful and deterministic.
+    /// Full boundary validation for wire-delivered messages: replica ids
+    /// in range **and** any V2 epidemic payload sized for this cluster —
+    /// the §3.2 merge algebra asserts bitmap sizes match, so a triple
+    /// built for a different `n` (misconfigured or hostile peer) must be
+    /// dropped at the transport, never merged.
+    pub fn wire_valid_for(&self, n: usize) -> bool {
+        if !self.node_ids_in_range(n) {
+            return false;
+        }
+        let epi_ok = |e: &Option<EpidemicState>| e.as_ref().is_none_or(|s| s.n() == n);
+        match self {
+            Message::AppendEntries(a) => a.gossip.as_ref().is_none_or(|g| epi_ok(&g.epidemic)),
+            Message::AppendEntriesReply(r) => epi_ok(&r.epidemic),
+            _ => true,
+        }
+    }
+
+    /// Frame envelope bytes: `u32` length prefix + version byte + kind
+    /// byte (`transport::codec`).
+    pub const WIRE_FRAME_OVERHEAD: u64 = 6;
+
+    /// Exact wire cost of one log entry — term + index + the fixed-width
+    /// tagged command (used by the best-effort budget to price a batch
+    /// without building it).
+    pub const WIRE_BYTES_PER_ENTRY: u64 = 33;
+
+    /// Serialized frame size in bytes — the egress-accounting model the
+    /// simulator charges per send (`SimReport::leader_egress_bytes`).
+    /// Since PR 5 this is no longer an estimate: it equals the framed
+    /// `transport::codec` encoding of this message **exactly**, byte for
+    /// byte (the field arithmetic below mirrors the codec layout, and
+    /// `rust/tests/transport_codec.rs` pins the equality for randomized
+    /// instances of every variant), so sim egress numbers are the numbers
+    /// a real deployment would put on the wire.
     pub fn wire_bytes(&self) -> u64 {
-        const HEADER: u64 = 24; // kind tag + term + sender/addressing
-        const PER_ENTRY: u64 = Message::WIRE_BYTES_PER_ENTRY; // term + index + command
+        const FRAME: u64 = Message::WIRE_FRAME_OVERHEAD;
+        const PER_ENTRY: u64 = Message::WIRE_BYTES_PER_ENTRY;
+        // Presence byte + (n, max_commit, next_commit, word count, words).
         let epidemic_bytes = |e: &Option<EpidemicState>| -> u64 {
-            e.as_ref().map_or(0, |s| 20 + 4 * s.bitmap.words().len() as u64)
+            1 + e.as_ref().map_or(0, |s| 24 + 4 * s.bitmap.words().len() as u64)
         };
         match self {
             Message::AppendEntries(a) => {
-                let gossip = a.gossip.as_ref().map_or(0, |g| 16 + epidemic_bytes(&g.epidemic));
-                HEADER + 32 + PER_ENTRY * a.entries.len() as u64 + gossip
+                // term(8) leader(4) prev_index(8) prev_term(8) commit(8)
+                // seq(8) + gossip presence(1) [round(8) hops(4) epidemic]
+                // + entry count(4).
+                let gossip =
+                    1 + a.gossip.as_ref().map_or(0, |g| 12 + epidemic_bytes(&g.epidemic));
+                FRAME + 48 + gossip + PER_ENTRY * a.entries.len() as u64
             }
-            Message::AppendEntriesReply(r) => HEADER + 24 + epidemic_bytes(&r.epidemic),
-            Message::RequestVote(_) => HEADER + 24,
-            Message::RequestVoteReply(_) => HEADER + 8,
-            Message::PullRequest(_) => HEADER + 32,
-            Message::PullReply(r) => HEADER + 40 + PER_ENTRY * r.entries.len() as u64,
+            Message::AppendEntriesReply(r) => {
+                // term(8) from(4) success(1) match_hint(8) + round
+                // presence(1)[+8] + seq(8) + epidemic.
+                let round = 1 + if r.round.is_some() { 8 } else { 0 };
+                FRAME + 29 + round + epidemic_bytes(&r.epidemic)
+            }
+            // term(8) candidate(4) last_index(8) last_term(8) gossip(1)
+            // hops(4).
+            Message::RequestVote(_) => FRAME + 33,
+            // term(8) from(4) granted(1).
+            Message::RequestVoteReply(_) => FRAME + 13,
+            // term(8) from(4) from_index(8) from_term(8) known_round(8).
+            Message::PullRequest(_) => FRAME + 36,
+            Message::PullReply(r) => {
+                // term(8) from(4) prev_index(8) prev_term(8) matched(1)
+                // diverged(1) commit(8) + hint presence(1)[+4] +
+                // known_round(8) + entry count(4).
+                let hint = 1 + if r.leader_hint.is_some() { 4 } else { 0 };
+                FRAME + 50 + hint + PER_ENTRY * r.entries.len() as u64
+            }
         }
     }
 }
@@ -301,8 +364,11 @@ mod tests {
                 seq: 0,
             })
         };
-        // Linear in entry count.
-        assert_eq!(ae(10, false).wire_bytes() - ae(0, false).wire_bytes(), 10 * 24);
+        // Linear in entry count, at exactly the per-entry wire cost.
+        assert_eq!(
+            ae(10, false).wire_bytes() - ae(0, false).wire_bytes(),
+            10 * Message::WIRE_BYTES_PER_ENTRY
+        );
         // The V2 triple costs extra bytes.
         assert!(ae(0, true).wire_bytes() > ae(0, false).wire_bytes());
         // A pull reply with the same batch is no heavier than a gossiped
@@ -330,6 +396,78 @@ mod tests {
             known_round: 0,
         });
         assert!(req.wire_bytes() < pr.wire_bytes());
+    }
+
+    #[test]
+    fn node_ids_in_range_rejects_foreign_ids() {
+        let reply = |from| {
+            Message::AppendEntriesReply(AppendEntriesReply {
+                term: 1,
+                from,
+                success: true,
+                match_hint: 0,
+                round: None,
+                epidemic: None,
+                seq: 0,
+            })
+        };
+        assert!(reply(4).node_ids_in_range(5));
+        assert!(!reply(5).node_ids_in_range(5), "from == n must be rejected");
+        let vote = Message::RequestVoteReply(RequestVoteReply { term: 1, from: 9, granted: true });
+        assert!(!vote.node_ids_in_range(5), "fabricated voters must not reach the vote set");
+        let hint = |leader_hint| {
+            Message::PullReply(PullReplyArgs {
+                term: 1,
+                from: 1,
+                prev_log_index: 0,
+                prev_log_term: 0,
+                matched: false,
+                diverged: false,
+                entries: entries(0),
+                commit_index: 0,
+                leader_hint,
+                known_round: 0,
+            })
+        };
+        assert!(hint(Some(4)).node_ids_in_range(5));
+        assert!(hint(None).node_ids_in_range(5));
+        assert!(!hint(Some(7)).node_ids_in_range(5), "redirect hints are wire-controlled too");
+    }
+
+    #[test]
+    fn wire_valid_for_rejects_mismatched_epidemic_sizes() {
+        use crate::epidemic::EpidemicState;
+        let gossip_ae = |epi: Option<EpidemicState>| {
+            Message::AppendEntries(AppendEntriesArgs {
+                term: 1,
+                leader: 0,
+                prev_log_index: 0,
+                prev_log_term: 0,
+                entries: entries(0),
+                leader_commit: 0,
+                gossip: Some(GossipMeta { round: 1, hops: 0, epidemic: epi }),
+                seq: 0,
+            })
+        };
+        assert!(gossip_ae(None).wire_valid_for(5));
+        assert!(gossip_ae(Some(EpidemicState::new(5))).wire_valid_for(5));
+        // A triple sized for a different cluster would hit the merge
+        // algebra's bitmap-size assertion — the boundary must drop it.
+        assert!(!gossip_ae(Some(EpidemicState::new(7))).wire_valid_for(5));
+        let reply = Message::AppendEntriesReply(AppendEntriesReply {
+            term: 1,
+            from: 1,
+            success: true,
+            match_hint: 0,
+            round: None,
+            epidemic: Some(EpidemicState::new(9)),
+            seq: 0,
+        });
+        assert!(!reply.wire_valid_for(5));
+        // Id violations still dominate.
+        let foreign =
+            Message::RequestVoteReply(RequestVoteReply { term: 1, from: 9, granted: true });
+        assert!(!foreign.wire_valid_for(5));
     }
 
     #[test]

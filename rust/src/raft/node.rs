@@ -258,6 +258,18 @@ impl Node {
         &self.view
     }
 
+    /// Transport-level disconnect evidence: the live cluster's TCP writer
+    /// lost (or could not establish) its connection toward `peer`. Feeds
+    /// the same [`ClusterView`] health scoring the ack/NACK stream feeds —
+    /// a no-op while unreliable-node mode is disabled, and ignored for
+    /// out-of-range ids (a hostile/stale transport callback must not
+    /// panic the replica).
+    pub fn observe_transport_failure(&mut self, peer: NodeId) {
+        if peer < self.cfg.n && peer != self.id {
+            self.view.observe_failure(peer);
+        }
+    }
+
     pub(crate) fn log_view(&self) -> LogView {
         LogView {
             last_index: self.log.last_index(),

@@ -1,0 +1,697 @@
+//! Zero-dependency binary codec for [`Message`] — the live cluster's wire
+//! format (DESIGN.md §5.1).
+//!
+//! Every field is encoded explicitly in little-endian order inside a
+//! length-prefixed frame:
+//!
+//! ```text
+//! offset 0  len     u32  — bytes that follow the length field
+//! offset 4  version u8   — VERSION (1)
+//! offset 5  kind    u8   — message variant tag
+//! offset 6  body         — variant fields, fixed layout per kind
+//! ```
+//!
+//! Scalars: `u64`/`u32`/`u8` little-endian; `NodeId` as `u32` (dense
+//! `0..n` ids — encoding asserts they fit); `bool` as `0`/`1` (decode
+//! rejects other values); `Option<T>` as a presence byte followed by the
+//! payload only when present. Log entries are fixed-width (33 bytes:
+//! term, index, then a 17-byte tag + two-operand command) so batch sizes
+//! are exactly linear in entry count — the property the egress size model
+//! [`Message::wire_bytes`] mirrors and `rust/tests/transport_codec.rs`
+//! pins (`wire_bytes()` equals the encoded frame length, always).
+//!
+//! Decoding is strict: unknown versions/kinds, out-of-range length
+//! prefixes, truncated bodies, trailing bytes, malformed booleans and
+//! bitmap shape mismatches are all hard errors — a desynchronized stream
+//! must fail loudly, not deliver garbage into the protocol core.
+
+use crate::epidemic::EpidemicState;
+use crate::kvstore::Command;
+use crate::raft::log::LogEntry;
+use crate::raft::message::{
+    AppendEntriesArgs, AppendEntriesReply, GossipMeta, Message, PullReplyArgs, PullRequestArgs,
+    RequestVoteArgs, RequestVoteReply,
+};
+use crate::raft::types::NodeId;
+use crate::util::bitset::Bitmap;
+use std::io::Read;
+use std::sync::Arc;
+
+/// Wire-format version carried in every frame.
+pub const VERSION: u8 = 1;
+
+/// Upper bound on the length prefix (16 MiB): far above any legal batch
+/// (`max_entries_per_rpc` defaults to 1024 entries ≈ 34 KiB) and small
+/// enough that a corrupt prefix cannot drive a huge allocation.
+pub const MAX_FRAME_LEN: u32 = 1 << 24;
+
+/// Smallest legal length prefix: version byte + kind byte.
+pub const MIN_FRAME_LEN: u32 = 2;
+
+const KIND_APPEND: u8 = 1;
+const KIND_APPEND_REPLY: u8 = 2;
+const KIND_VOTE: u8 = 3;
+const KIND_VOTE_REPLY: u8 = 4;
+const KIND_PULL_REQ: u8 = 5;
+const KIND_PULL_REPLY: u8 = 6;
+
+/// Fixed encoded size of one log entry (term + index + tagged command).
+pub const ENTRY_WIRE_BYTES: usize = 33;
+
+/// Why a frame failed to decode.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Body ended before a field was complete.
+    Truncated,
+    /// Version byte is not [`VERSION`].
+    BadVersion(u8),
+    /// Unknown message kind tag.
+    BadKind(u8),
+    /// Length prefix below [`MIN_FRAME_LEN`] or above [`MAX_FRAME_LEN`].
+    BadLength(u32),
+    /// Body longer than the message it encodes (count = leftover bytes).
+    TrailingBytes(usize),
+    /// A field held an impossible value (bad boolean, bitmap shape, ...).
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated => write!(f, "frame truncated"),
+            DecodeError::BadVersion(v) => write!(f, "bad wire version {v} (want {VERSION})"),
+            DecodeError::BadKind(k) => write!(f, "unknown message kind {k}"),
+            DecodeError::BadLength(l) => write!(
+                f,
+                "bad frame length {l} (legal range {MIN_FRAME_LEN}..={MAX_FRAME_LEN})"
+            ),
+            DecodeError::TrailingBytes(n) => write!(f, "{n} trailing bytes after message"),
+            DecodeError::Malformed(what) => write!(f, "malformed field: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Frame-stream errors: transport I/O or codec rejection.
+#[derive(Debug)]
+pub enum FrameError {
+    Io(std::io::Error),
+    Decode(DecodeError),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame io: {e}"),
+            FrameError::Decode(e) => write!(f, "frame decode: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+impl From<DecodeError> for FrameError {
+    fn from(e: DecodeError) -> Self {
+        FrameError::Decode(e)
+    }
+}
+
+// ---- encoding ----------------------------------------------------------
+
+#[inline]
+fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+#[inline]
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+fn put_bool(buf: &mut Vec<u8>, v: bool) {
+    buf.push(v as u8);
+}
+
+#[inline]
+fn put_node(buf: &mut Vec<u8>, id: NodeId) {
+    let id = u32::try_from(id).expect("NodeId fits in u32 on the wire");
+    put_u32(buf, id);
+}
+
+fn put_command(buf: &mut Vec<u8>, cmd: &Command) {
+    // Fixed 17-byte layout (tag + two u64 operands, zero when unused) so
+    // entries stay fixed-width — see the module docs.
+    let (tag, a, b) = match *cmd {
+        Command::Noop => (0u8, 0u64, 0u64),
+        Command::Put { key, value } => (1, key, value),
+        Command::Get { key } => (2, key, 0),
+        Command::Delete { key } => (3, key, 0),
+    };
+    put_u8(buf, tag);
+    put_u64(buf, a);
+    put_u64(buf, b);
+}
+
+fn put_entries(buf: &mut Vec<u8>, entries: &[LogEntry]) {
+    let count = u32::try_from(entries.len()).expect("entry batch fits in u32");
+    put_u32(buf, count);
+    for e in entries {
+        put_u64(buf, e.term);
+        put_u64(buf, e.index);
+        put_command(buf, &e.cmd);
+    }
+}
+
+fn put_epidemic(buf: &mut Vec<u8>, e: &Option<EpidemicState>) {
+    match e {
+        None => put_u8(buf, 0),
+        Some(s) => {
+            put_u8(buf, 1);
+            let n = u32::try_from(s.n()).expect("cluster size fits in u32");
+            put_u32(buf, n);
+            put_u64(buf, s.max_commit);
+            put_u64(buf, s.next_commit);
+            let words = s.bitmap.words();
+            put_u32(buf, words.len() as u32);
+            for w in words {
+                put_u32(buf, *w);
+            }
+        }
+    }
+}
+
+/// Append the framed encoding of `msg` to `buf`; returns the frame length
+/// (bytes appended). The frame length always equals
+/// [`Message::wire_bytes`] — pinned by `rust/tests/transport_codec.rs`.
+pub fn encode(msg: &Message, buf: &mut Vec<u8>) -> usize {
+    let start = buf.len();
+    put_u32(buf, 0); // length prefix, back-patched below
+    put_u8(buf, VERSION);
+    match msg {
+        Message::AppendEntries(a) => {
+            put_u8(buf, KIND_APPEND);
+            put_u64(buf, a.term);
+            put_node(buf, a.leader);
+            put_u64(buf, a.prev_log_index);
+            put_u64(buf, a.prev_log_term);
+            put_u64(buf, a.leader_commit);
+            put_u64(buf, a.seq);
+            match &a.gossip {
+                None => put_u8(buf, 0),
+                Some(g) => {
+                    put_u8(buf, 1);
+                    put_u64(buf, g.round);
+                    put_u32(buf, g.hops);
+                    put_epidemic(buf, &g.epidemic);
+                }
+            }
+            put_entries(buf, &a.entries);
+        }
+        Message::AppendEntriesReply(r) => {
+            put_u8(buf, KIND_APPEND_REPLY);
+            put_u64(buf, r.term);
+            put_node(buf, r.from);
+            put_bool(buf, r.success);
+            put_u64(buf, r.match_hint);
+            match r.round {
+                None => put_u8(buf, 0),
+                Some(round) => {
+                    put_u8(buf, 1);
+                    put_u64(buf, round);
+                }
+            }
+            put_u64(buf, r.seq);
+            put_epidemic(buf, &r.epidemic);
+        }
+        Message::RequestVote(v) => {
+            put_u8(buf, KIND_VOTE);
+            put_u64(buf, v.term);
+            put_node(buf, v.candidate);
+            put_u64(buf, v.last_log_index);
+            put_u64(buf, v.last_log_term);
+            put_bool(buf, v.gossip);
+            put_u32(buf, v.hops);
+        }
+        Message::RequestVoteReply(r) => {
+            put_u8(buf, KIND_VOTE_REPLY);
+            put_u64(buf, r.term);
+            put_node(buf, r.from);
+            put_bool(buf, r.granted);
+        }
+        Message::PullRequest(p) => {
+            put_u8(buf, KIND_PULL_REQ);
+            put_u64(buf, p.term);
+            put_node(buf, p.from);
+            put_u64(buf, p.from_index);
+            put_u64(buf, p.from_term);
+            put_u64(buf, p.known_round);
+        }
+        Message::PullReply(r) => {
+            put_u8(buf, KIND_PULL_REPLY);
+            put_u64(buf, r.term);
+            put_node(buf, r.from);
+            put_u64(buf, r.prev_log_index);
+            put_u64(buf, r.prev_log_term);
+            put_bool(buf, r.matched);
+            put_bool(buf, r.diverged);
+            put_u64(buf, r.commit_index);
+            match r.leader_hint {
+                None => put_u8(buf, 0),
+                Some(hint) => {
+                    put_u8(buf, 1);
+                    put_node(buf, hint);
+                }
+            }
+            put_u64(buf, r.known_round);
+            put_entries(buf, &r.entries);
+        }
+    }
+    let len = buf.len() - start - 4;
+    let len = u32::try_from(len).expect("frame fits in u32");
+    debug_assert!(len <= MAX_FRAME_LEN, "encoded frame exceeds MAX_FRAME_LEN");
+    buf[start..start + 4].copy_from_slice(&len.to_le_bytes());
+    buf.len() - start
+}
+
+/// Convenience: encode into a fresh buffer.
+pub fn encode_to_vec(msg: &Message) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64);
+    encode(msg, &mut buf);
+    buf
+}
+
+// ---- decoding ----------------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.remaining() < n {
+            return Err(DecodeError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, DecodeError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes(b.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, DecodeError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    fn boolean(&mut self) -> Result<bool, DecodeError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(DecodeError::Malformed("boolean must be 0 or 1")),
+        }
+    }
+
+    fn node(&mut self) -> Result<NodeId, DecodeError> {
+        Ok(self.u32()? as NodeId)
+    }
+}
+
+fn get_command(c: &mut Cursor<'_>) -> Result<Command, DecodeError> {
+    let tag = c.u8()?;
+    let a = c.u64()?;
+    let b = c.u64()?;
+    match tag {
+        0 => Ok(Command::Noop),
+        1 => Ok(Command::Put { key: a, value: b }),
+        2 => Ok(Command::Get { key: a }),
+        3 => Ok(Command::Delete { key: a }),
+        _ => Err(DecodeError::Malformed("unknown command tag")),
+    }
+}
+
+fn get_entries(c: &mut Cursor<'_>) -> Result<Arc<Vec<LogEntry>>, DecodeError> {
+    let count = c.u32()? as usize;
+    // Bound the allocation by the bytes actually present: a corrupt count
+    // must fail as Truncated before any large Vec is reserved.
+    if count.checked_mul(ENTRY_WIRE_BYTES).is_none_or(|need| need > c.remaining()) {
+        return Err(DecodeError::Truncated);
+    }
+    let mut entries = Vec::with_capacity(count);
+    for _ in 0..count {
+        let term = c.u64()?;
+        let index = c.u64()?;
+        let cmd = get_command(c)?;
+        entries.push(LogEntry { term, index, cmd });
+    }
+    Ok(Arc::new(entries))
+}
+
+fn get_epidemic(c: &mut Cursor<'_>) -> Result<Option<EpidemicState>, DecodeError> {
+    if !c.boolean()? {
+        return Ok(None);
+    }
+    let n = c.u32()? as usize;
+    let max_commit = c.u64()?;
+    let next_commit = c.u64()?;
+    let words_len = c.u32()? as usize;
+    if words_len != n.div_ceil(crate::util::bitset::WORD_BITS) {
+        return Err(DecodeError::Malformed("bitmap word count does not match n"));
+    }
+    if words_len.checked_mul(4).is_none_or(|need| need > c.remaining()) {
+        return Err(DecodeError::Truncated);
+    }
+    let mut words = Vec::with_capacity(words_len);
+    for _ in 0..words_len {
+        words.push(c.u32()?);
+    }
+    let bitmap = Bitmap::from_words(n, words);
+    Ok(Some(EpidemicState { bitmap, max_commit, next_commit }))
+}
+
+/// Decode one frame *payload* — the bytes after the `u32` length prefix.
+pub fn decode_payload(payload: &[u8]) -> Result<Message, DecodeError> {
+    let mut c = Cursor::new(payload);
+    let version = c.u8()?;
+    if version != VERSION {
+        return Err(DecodeError::BadVersion(version));
+    }
+    let kind = c.u8()?;
+    let msg = match kind {
+        KIND_APPEND => {
+            let term = c.u64()?;
+            let leader = c.node()?;
+            let prev_log_index = c.u64()?;
+            let prev_log_term = c.u64()?;
+            let leader_commit = c.u64()?;
+            let seq = c.u64()?;
+            let gossip = if c.boolean()? {
+                let round = c.u64()?;
+                let hops = c.u32()?;
+                let epidemic = get_epidemic(&mut c)?;
+                Some(GossipMeta { round, hops, epidemic })
+            } else {
+                None
+            };
+            let entries = get_entries(&mut c)?;
+            Message::AppendEntries(AppendEntriesArgs {
+                term,
+                leader,
+                prev_log_index,
+                prev_log_term,
+                entries,
+                leader_commit,
+                gossip,
+                seq,
+            })
+        }
+        KIND_APPEND_REPLY => {
+            let term = c.u64()?;
+            let from = c.node()?;
+            let success = c.boolean()?;
+            let match_hint = c.u64()?;
+            let round = if c.boolean()? { Some(c.u64()?) } else { None };
+            let seq = c.u64()?;
+            let epidemic = get_epidemic(&mut c)?;
+            Message::AppendEntriesReply(AppendEntriesReply {
+                term,
+                from,
+                success,
+                match_hint,
+                round,
+                epidemic,
+                seq,
+            })
+        }
+        KIND_VOTE => {
+            let term = c.u64()?;
+            let candidate = c.node()?;
+            let last_log_index = c.u64()?;
+            let last_log_term = c.u64()?;
+            let gossip = c.boolean()?;
+            let hops = c.u32()?;
+            Message::RequestVote(RequestVoteArgs {
+                term,
+                candidate,
+                last_log_index,
+                last_log_term,
+                gossip,
+                hops,
+            })
+        }
+        KIND_VOTE_REPLY => {
+            let term = c.u64()?;
+            let from = c.node()?;
+            let granted = c.boolean()?;
+            Message::RequestVoteReply(RequestVoteReply { term, from, granted })
+        }
+        KIND_PULL_REQ => {
+            let term = c.u64()?;
+            let from = c.node()?;
+            let from_index = c.u64()?;
+            let from_term = c.u64()?;
+            let known_round = c.u64()?;
+            Message::PullRequest(PullRequestArgs { term, from, from_index, from_term, known_round })
+        }
+        KIND_PULL_REPLY => {
+            let term = c.u64()?;
+            let from = c.node()?;
+            let prev_log_index = c.u64()?;
+            let prev_log_term = c.u64()?;
+            let matched = c.boolean()?;
+            let diverged = c.boolean()?;
+            let commit_index = c.u64()?;
+            let leader_hint = if c.boolean()? { Some(c.node()?) } else { None };
+            let known_round = c.u64()?;
+            let entries = get_entries(&mut c)?;
+            Message::PullReply(PullReplyArgs {
+                term,
+                from,
+                prev_log_index,
+                prev_log_term,
+                matched,
+                diverged,
+                entries,
+                commit_index,
+                leader_hint,
+                known_round,
+            })
+        }
+        other => return Err(DecodeError::BadKind(other)),
+    };
+    if c.remaining() != 0 {
+        return Err(DecodeError::TrailingBytes(c.remaining()));
+    }
+    Ok(msg)
+}
+
+/// Decode one full frame (length prefix included) from the front of
+/// `buf`. `Ok(None)` means more bytes are needed; on success returns the
+/// message and the total bytes consumed.
+pub fn decode(buf: &[u8]) -> Result<Option<(Message, usize)>, DecodeError> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().expect("4 bytes"));
+    if !(MIN_FRAME_LEN..=MAX_FRAME_LEN).contains(&len) {
+        return Err(DecodeError::BadLength(len));
+    }
+    let total = 4 + len as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let msg = decode_payload(&buf[4..total])?;
+    Ok(Some((msg, total)))
+}
+
+/// Fill `buf` from `r`, retrying on interrupts. `Ok(false)` = clean EOF
+/// before the first byte; EOF mid-buffer is an `UnexpectedEof` error.
+fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> std::io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-frame",
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Read exactly one frame from a blocking reader. `Ok(None)` on a clean
+/// EOF at a frame boundary (orderly peer shutdown); EOF inside a frame,
+/// transport errors and codec rejections are all [`FrameError`]s.
+///
+/// The payload buffer grows with the bytes actually received (in chunks,
+/// capped initial reservation) rather than trusting the length prefix up
+/// front — an unauthenticated peer that claims a 16 MiB frame and then
+/// stalls must not pin 16 MiB per idle connection.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Message>, FrameError> {
+    let mut len_bytes = [0u8; 4];
+    if !read_exact_or_eof(r, &mut len_bytes)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len_bytes);
+    if !(MIN_FRAME_LEN..=MAX_FRAME_LEN).contains(&len) {
+        return Err(DecodeError::BadLength(len).into());
+    }
+    let len = len as usize;
+    let mut payload = Vec::with_capacity(len.min(64 * 1024));
+    let mut chunk = [0u8; 8 * 1024];
+    while payload.len() < len {
+        let want = (len - payload.len()).min(chunk.len());
+        if !read_exact_or_eof(r, &mut chunk[..want])? {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed before frame payload",
+            )
+            .into());
+        }
+        payload.extend_from_slice(&chunk[..want]);
+    }
+    Ok(Some(decode_payload(&payload)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn heartbeat() -> Message {
+        Message::AppendEntries(AppendEntriesArgs {
+            term: 3,
+            leader: 0,
+            prev_log_index: 7,
+            prev_log_term: 3,
+            entries: Arc::new(Vec::new()),
+            leader_commit: 7,
+            gossip: None,
+            seq: 42,
+        })
+    }
+
+    #[test]
+    fn roundtrip_heartbeat_and_frame_len() {
+        let msg = heartbeat();
+        let buf = encode_to_vec(&msg);
+        assert_eq!(buf.len() as u64, msg.wire_bytes(), "frame length matches the size model");
+        let (decoded, consumed) = decode(&buf).unwrap().expect("complete frame");
+        assert_eq!(consumed, buf.len());
+        assert_eq!(decoded, msg);
+    }
+
+    #[test]
+    fn partial_frames_ask_for_more_bytes() {
+        let buf = encode_to_vec(&heartbeat());
+        for cut in 0..buf.len() {
+            assert_eq!(decode(&buf[..cut]).unwrap(), None, "cut at {cut} must not decode");
+        }
+    }
+
+    #[test]
+    fn bad_version_kind_and_length_rejected() {
+        let mut buf = encode_to_vec(&heartbeat());
+        buf[4] = 9; // version byte
+        assert_eq!(decode(&buf).unwrap_err(), DecodeError::BadVersion(9));
+
+        let mut buf = encode_to_vec(&heartbeat());
+        buf[5] = 200; // kind byte
+        assert_eq!(decode(&buf).unwrap_err(), DecodeError::BadKind(200));
+
+        let mut buf = encode_to_vec(&heartbeat());
+        buf[..4].copy_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        assert_eq!(decode(&buf).unwrap_err(), DecodeError::BadLength(MAX_FRAME_LEN + 1));
+
+        let mut buf = encode_to_vec(&heartbeat());
+        buf[..4].copy_from_slice(&1u32.to_le_bytes());
+        assert_eq!(decode(&buf).unwrap_err(), DecodeError::BadLength(1));
+    }
+
+    #[test]
+    fn truncated_payload_and_trailing_bytes_rejected() {
+        let buf = encode_to_vec(&heartbeat());
+        let payload = &buf[4..];
+        for cut in 2..payload.len() {
+            assert_eq!(
+                decode_payload(&payload[..cut]).unwrap_err(),
+                DecodeError::Truncated,
+                "payload cut at {cut}"
+            );
+        }
+        let mut long = payload.to_vec();
+        long.push(0);
+        assert_eq!(decode_payload(&long).unwrap_err(), DecodeError::TrailingBytes(1));
+    }
+
+    #[test]
+    fn corrupt_entry_count_fails_before_allocating() {
+        let msg = Message::PullReply(PullReplyArgs {
+            term: 1,
+            from: 2,
+            prev_log_index: 0,
+            prev_log_term: 0,
+            matched: true,
+            diverged: false,
+            entries: Arc::new(Vec::new()),
+            commit_index: 0,
+            leader_hint: None,
+            known_round: 0,
+        });
+        let mut buf = encode_to_vec(&msg);
+        // The entry count is the final u32 of the pull-reply body.
+        let at = buf.len() - 4;
+        buf[at..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(decode(&buf).unwrap_err(), DecodeError::Truncated);
+    }
+
+    #[test]
+    fn read_frame_handles_eof_boundaries() {
+        let mut stream = Vec::new();
+        encode(&heartbeat(), &mut stream);
+        encode(&heartbeat(), &mut stream);
+        let mut r = std::io::Cursor::new(stream.clone());
+        assert_eq!(read_frame(&mut r).unwrap(), Some(heartbeat()));
+        assert_eq!(read_frame(&mut r).unwrap(), Some(heartbeat()));
+        assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF at a frame boundary");
+        // EOF mid-frame is an error, not a silent None.
+        let mut r = std::io::Cursor::new(stream[..stream.len() - 3].to_vec());
+        assert_eq!(read_frame(&mut r).unwrap(), Some(heartbeat()));
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Io(_))));
+    }
+}

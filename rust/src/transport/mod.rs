@@ -1,0 +1,27 @@
+//! Real-wire transport for the live cluster (DESIGN.md §5.1–5.2).
+//!
+//! Two layers, both zero-dependency:
+//!
+//! * [`codec`] — an explicit little-endian binary codec for [`Message`]
+//!   with version-byte + length-prefix framing. The frame length of every
+//!   message equals [`Message::wire_bytes`] exactly, which is what keeps
+//!   the simulator's egress accounting honest (`rust/tests/
+//!   transport_codec.rs` pins the equality for every variant).
+//! * [`tcp`] — a `std::net` TCP endpoint implementing the cluster side:
+//!   a `NodeId → SocketAddr` [`tcp::PeerTable`], per-peer writer threads
+//!   with bounded outboxes, and reconnect-with-backoff whose disconnect
+//!   events feed the existing `PeerHealth` scoring.
+//!
+//! The live cluster (`crate::cluster`) selects the transport per
+//! `[cluster] transport = "mpsc" | "tcp"` (CLI `--transport`); the
+//! default mpsc path never touches this module, so its behaviour stays
+//! bit-identical to the channel-only runtime.
+//!
+//! [`Message`]: crate::raft::Message
+//! [`Message::wire_bytes`]: crate::raft::Message::wire_bytes
+
+pub mod codec;
+pub mod tcp;
+
+pub use codec::{decode, encode, encode_to_vec, read_frame, DecodeError, FrameError};
+pub use tcp::{LinkKiller, PeerSender, PeerTable, TcpEndpoint, TransportStats};

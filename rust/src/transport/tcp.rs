@@ -1,0 +1,482 @@
+//! TCP transport for the live cluster (DESIGN.md §5.2).
+//!
+//! One [`TcpEndpoint`] per replica process: a listener thread accepting
+//! inbound peer connections (each served by a reader thread that decodes
+//! [`codec`] frames and hands every message to the endpoint's `deliver`
+//! callback), plus one writer thread per peer draining a **bounded
+//! outbox** — a full outbox drops the message rather than blocking the
+//! replica, exactly the loss semantics Raft's retransmission and repair
+//! machinery already tolerates (and the simulator models with
+//! `network.loss`).
+//!
+//! Writers own the reconnect state machine: `connect → drain → (write
+//! error) → backoff → connect`, with exponential backoff between attempts
+//! ([`RECONNECT_MIN`]..[`RECONNECT_MAX`]). Every failed connect attempt
+//! and every dropped established connection is reported through the
+//! endpoint's `on_peer_down` callback — the live cluster routes those
+//! into [`crate::raft::Node::observe_transport_failure`], so transport
+//! disconnects feed the same [`crate::raft::PeerHealth`] scoring the
+//! ack/NACK stream feeds (ISSUE: reconnects are health evidence, not
+//! just a transport detail).
+//!
+//! The endpoint keeps a registry of its live sockets so faults can be
+//! injected from outside: [`LinkKiller::kill`] hard-closes every socket
+//! at once (both inbound and outbound), which the transport fault tests
+//! and the `cluster.kill_link_*` config knobs use to prove the reconnect
+//! path end-to-end.
+
+use super::codec::{self, FrameError};
+use crate::raft::{Message, NodeId};
+use std::io::{BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// First reconnect delay after a failed connect or a dropped connection.
+pub const RECONNECT_MIN: Duration = Duration::from_millis(10);
+
+/// Backoff ceiling between reconnect attempts.
+pub const RECONNECT_MAX: Duration = Duration::from_millis(1_000);
+
+/// Per-attempt connect timeout: an unreachable host that silently drops
+/// SYNs must not pin a writer (and thus endpoint shutdown) for the
+/// kernel's multi-minute retry window.
+pub const CONNECT_TIMEOUT: Duration = Duration::from_millis(1_000);
+
+/// Reader threads, registered by the accept loop and joined on shutdown
+/// (finished handles are pruned as new connections arrive).
+type ReaderRegistry = Arc<Mutex<Vec<thread::JoinHandle<()>>>>;
+
+/// Live-socket registry: writers and the accept loop register dup'd
+/// handles of their streams so shutdown and fault injection can close
+/// them from outside; owners unregister when their connection dies, so
+/// the registry only ever holds live sockets — a flapping link must not
+/// leak one file descriptor per reconnect cycle.
+#[derive(Debug, Default)]
+struct ConnRegistry {
+    conns: Mutex<Vec<(u64, TcpStream)>>,
+    next_token: AtomicU64,
+}
+
+impl ConnRegistry {
+    fn register(&self, stream: &TcpStream) -> Option<u64> {
+        let clone = stream.try_clone().ok()?;
+        let token = self.next_token.fetch_add(1, Ordering::Relaxed);
+        self.conns.lock().expect("conn registry poisoned").push((token, clone));
+        Some(token)
+    }
+
+    fn unregister(&self, token: Option<u64>) {
+        if let Some(t) = token {
+            self.conns.lock().expect("conn registry poisoned").retain(|(id, _)| *id != t);
+        }
+    }
+
+    fn kill_all(&self) -> usize {
+        let mut conns = self.conns.lock().expect("conn registry poisoned");
+        let killed = conns.len();
+        for (_, s) in conns.drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        killed
+    }
+}
+
+/// `NodeId → SocketAddr` table — the transport-side face of the
+/// `ClusterView` membership: the view owns *who* the peers are, this
+/// table owns *where* they are.
+#[derive(Clone, Debug)]
+pub struct PeerTable {
+    addrs: Vec<SocketAddr>,
+}
+
+impl PeerTable {
+    pub fn new(addrs: Vec<SocketAddr>) -> Self {
+        Self { addrs }
+    }
+
+    pub fn addr(&self, id: NodeId) -> SocketAddr {
+        self.addrs[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.addrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.addrs.is_empty()
+    }
+}
+
+/// Shared transport counters (all relaxed: diagnostics, not ordering).
+#[derive(Debug, Default)]
+pub struct TransportStats {
+    /// Connections re-established after an established one dropped.
+    pub reconnects: AtomicU64,
+    /// Messages dropped at a full (or torn-down) outbox.
+    pub outbox_drops: AtomicU64,
+    /// Inbound connections dropped on a codec rejection.
+    pub decode_errors: AtomicU64,
+    /// Well-formed inbound frames rejected by the message boundary check
+    /// (`Message::wire_valid_for`): out-of-range replica ids or epidemic
+    /// payloads sized for a different cluster — the signature of a peer
+    /// running a mismatched config (or a hostile one).
+    pub boundary_drops: AtomicU64,
+    pub frames_in: AtomicU64,
+    pub frames_out: AtomicU64,
+}
+
+impl TransportStats {
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
+    pub fn outbox_drops(&self) -> u64 {
+        self.outbox_drops.load(Ordering::Relaxed)
+    }
+
+    pub fn frames_in(&self) -> u64 {
+        self.frames_in.load(Ordering::Relaxed)
+    }
+
+    pub fn frames_out(&self) -> u64 {
+        self.frames_out.load(Ordering::Relaxed)
+    }
+
+    pub fn decode_errors(&self) -> u64 {
+        self.decode_errors.load(Ordering::Relaxed)
+    }
+
+    pub fn boundary_drops(&self) -> u64 {
+        self.boundary_drops.load(Ordering::Relaxed)
+    }
+}
+
+/// Sending half of one peer link (cheap to clone). Enqueueing never
+/// blocks: a full outbox or a torn-down link drops the message and
+/// counts it — the replica thread must never stall on a slow peer.
+#[derive(Clone)]
+pub struct PeerSender {
+    tx: SyncSender<Message>,
+    stats: Arc<TransportStats>,
+}
+
+impl PeerSender {
+    pub fn send(&self, msg: Message) {
+        match self.tx.try_send(msg) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.stats.outbox_drops.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Hard-closes every registered socket of one endpoint (fault injection).
+#[derive(Clone)]
+pub struct LinkKiller {
+    conns: Arc<ConnRegistry>,
+}
+
+impl LinkKiller {
+    /// Shut down every currently-live socket; readers and writers see an
+    /// error on their next operation and the writers reconnect.
+    pub fn kill(&self) -> usize {
+        self.conns.kill_all()
+    }
+}
+
+/// One replica's TCP endpoint (see module docs).
+pub struct TcpEndpoint {
+    local_addr: SocketAddr,
+    stats: Arc<TransportStats>,
+    shutdown: Arc<AtomicBool>,
+    conns: Arc<ConnRegistry>,
+    /// Per-peer outboxes (`None` at our own slot). Dropped on shutdown so
+    /// writer threads observe the disconnect and exit.
+    outboxes: Vec<Option<PeerSender>>,
+    accept_join: Option<thread::JoinHandle<()>>,
+    writer_joins: Vec<thread::JoinHandle<()>>,
+    reader_joins: ReaderRegistry,
+}
+
+impl TcpEndpoint {
+    /// Start the endpoint for replica `me` on a pre-bound `listener`.
+    /// `deliver` receives every decoded inbound message (called from
+    /// reader threads); `on_peer_down` is invoked with the peer id on
+    /// every failed connect attempt and dropped connection.
+    pub fn start(
+        me: NodeId,
+        listener: TcpListener,
+        table: &PeerTable,
+        outbox_depth: usize,
+        deliver: Arc<dyn Fn(Message) + Send + Sync>,
+        on_peer_down: Arc<dyn Fn(NodeId) + Send + Sync>,
+    ) -> std::io::Result<TcpEndpoint> {
+        let local_addr = listener.local_addr()?;
+        let stats = Arc::new(TransportStats::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Arc<ConnRegistry> = Arc::new(ConnRegistry::default());
+        let reader_joins: ReaderRegistry = Arc::new(Mutex::new(Vec::new()));
+
+        // Accept loop: one reader thread per inbound connection.
+        let accept_join = {
+            let n = table.len();
+            let stats = Arc::clone(&stats);
+            let shutdown = Arc::clone(&shutdown);
+            let conns = Arc::clone(&conns);
+            let reader_joins = Arc::clone(&reader_joins);
+            let deliver = Arc::clone(&deliver);
+            thread::spawn(move || loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if shutdown.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        let _ = stream.set_nodelay(true);
+                        let token = conns.register(&stream);
+                        let stats = Arc::clone(&stats);
+                        let deliver = Arc::clone(&deliver);
+                        let conns_for_reader = Arc::clone(&conns);
+                        let join = thread::spawn(move || {
+                            reader_loop(stream, n, stats, deliver);
+                            conns_for_reader.unregister(token);
+                        });
+                        let mut joins = reader_joins.lock().expect("reader registry poisoned");
+                        // Finished readers' handles are dead weight on a
+                        // flapping link; drop them before adding the new one.
+                        joins.retain(|j| !j.is_finished());
+                        joins.push(join);
+                    }
+                    Err(_) => {
+                        if shutdown.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        // Transient accept failure (EMFILE, aborted
+                        // handshake): brief pause, keep serving.
+                        thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            })
+        };
+
+        // One writer per peer, each with a bounded outbox.
+        let mut outboxes = Vec::with_capacity(table.len());
+        let mut writer_joins = Vec::with_capacity(table.len());
+        for peer in 0..table.len() {
+            if peer == me {
+                outboxes.push(None);
+                continue;
+            }
+            let (tx, rx) = sync_channel::<Message>(outbox_depth.max(1));
+            outboxes.push(Some(PeerSender { tx, stats: Arc::clone(&stats) }));
+            let addr = table.addr(peer);
+            let stats = Arc::clone(&stats);
+            let shutdown = Arc::clone(&shutdown);
+            let conns = Arc::clone(&conns);
+            let on_peer_down = Arc::clone(&on_peer_down);
+            writer_joins.push(thread::spawn(move || {
+                writer_loop(peer, addr, rx, stats, shutdown, conns, on_peer_down)
+            }));
+        }
+
+        Ok(TcpEndpoint {
+            local_addr,
+            stats,
+            shutdown,
+            conns,
+            outboxes,
+            accept_join: Some(accept_join),
+            writer_joins,
+            reader_joins,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn stats(&self) -> Arc<TransportStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// The sending half toward `to` (panics for our own slot).
+    pub fn sender(&self, to: NodeId) -> PeerSender {
+        self.outboxes[to].clone().expect("no outbox toward self")
+    }
+
+    /// A handle that can hard-close this endpoint's live sockets from
+    /// another thread (fault injection; see [`LinkKiller`]).
+    pub fn link_killer(&self) -> LinkKiller {
+        LinkKiller { conns: Arc::clone(&self.conns) }
+    }
+
+    /// Tear the endpoint down: stop writers (outboxes dropped), close
+    /// every socket, unblock the accept loop, and join all threads.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // Dropping the senders disconnects each writer's outbox.
+        self.outboxes.clear();
+        // Close live sockets so blocked reads/writes fail over.
+        self.link_killer().kill();
+        // Wake the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.local_addr);
+        for j in self.writer_joins.drain(..) {
+            let _ = j.join();
+        }
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+        // Readers exit once their sockets are closed (killed above, plus
+        // any socket accepted by the wake-up connect, which we just drop).
+        self.link_killer().kill();
+        let readers: Vec<_> =
+            std::mem::take(&mut *self.reader_joins.lock().expect("reader registry poisoned"));
+        for j in readers {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Inbound side: decode frames off one accepted connection until it
+/// closes or desynchronizes. Decoded messages are boundary-validated for
+/// an `n`-process cluster before delivery — wire input must never index
+/// follower arrays, pollute the vote set, or reach the §3.2 merge
+/// algebra's bitmap-size assertions (rejections are counted, so a
+/// mismatched peer config is diagnosable from the stats).
+fn reader_loop(
+    stream: TcpStream,
+    n: usize,
+    stats: Arc<TransportStats>,
+    deliver: Arc<dyn Fn(Message) + Send + Sync>,
+) {
+    let mut r = BufReader::new(stream);
+    loop {
+        match codec::read_frame(&mut r) {
+            Ok(Some(msg)) => {
+                stats.frames_in.fetch_add(1, Ordering::Relaxed);
+                if msg.wire_valid_for(n) {
+                    deliver(msg);
+                } else {
+                    stats.boundary_drops.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Ok(None) => return, // orderly close at a frame boundary
+            Err(FrameError::Io(_)) => return, // reset / killed link
+            Err(FrameError::Decode(_)) => {
+                // A desynchronized or hostile stream: drop the whole
+                // connection (resynchronizing inside a byte stream is
+                // guesswork); the peer's writer will reconnect.
+                stats.decode_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+}
+
+/// Outbound side: the connect → drain → backoff reconnect state machine.
+fn writer_loop(
+    peer: NodeId,
+    addr: SocketAddr,
+    rx: Receiver<Message>,
+    stats: Arc<TransportStats>,
+    shutdown: Arc<AtomicBool>,
+    conns: Arc<ConnRegistry>,
+    on_peer_down: Arc<dyn Fn(NodeId) + Send + Sync>,
+) {
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    let mut had_connection = false;
+    loop {
+        // Connect with exponential backoff; every failed attempt is
+        // negative health evidence toward `peer`.
+        let mut backoff = RECONNECT_MIN;
+        let mut stream = loop {
+            if shutdown.load(Ordering::Relaxed) {
+                return;
+            }
+            match TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT) {
+                Ok(s) => {
+                    let _ = s.set_nodelay(true);
+                    break s;
+                }
+                Err(_) => {
+                    on_peer_down(peer);
+                    thread::sleep(backoff);
+                    backoff = (backoff * 2).min(RECONNECT_MAX);
+                }
+            }
+        };
+        if had_connection {
+            stats.reconnects.fetch_add(1, Ordering::Relaxed);
+        }
+        had_connection = true;
+        let token = conns.register(&stream);
+        // Drain the outbox until the link or the outbox dies. The recv
+        // timeout only exists to observe the shutdown flag even if some
+        // `PeerSender` clone outlives the endpoint.
+        loop {
+            let msg = match rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(m) => m,
+                Err(RecvTimeoutError::Timeout) => {
+                    if shutdown.load(Ordering::Relaxed) {
+                        conns.unregister(token);
+                        return;
+                    }
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // Endpoint shut down.
+                    conns.unregister(token);
+                    return;
+                }
+            };
+            buf.clear();
+            codec::encode(&msg, &mut buf);
+            if stream.write_all(&buf).is_err() {
+                // The message is lost with the connection — the protocol's
+                // retransmission/repair path recovers, same as sim loss.
+                on_peer_down(peer);
+                conns.unregister(token);
+                break;
+            }
+            stats.frames_out.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peer_table_maps_ids() {
+        let a: SocketAddr = "127.0.0.1:7001".parse().unwrap();
+        let b: SocketAddr = "127.0.0.1:7002".parse().unwrap();
+        let t = PeerTable::new(vec![a, b]);
+        assert_eq!(t.len(), 2);
+        assert!(!t.is_empty());
+        assert_eq!(t.addr(0), a);
+        assert_eq!(t.addr(1), b);
+    }
+
+    #[test]
+    fn full_outbox_drops_instead_of_blocking() {
+        let stats = Arc::new(TransportStats::default());
+        let (tx, _rx) = sync_channel::<Message>(1);
+        let sender = PeerSender { tx, stats: Arc::clone(&stats) };
+        let hb = || {
+            Message::RequestVoteReply(crate::raft::RequestVoteReply {
+                term: 1,
+                from: 0,
+                granted: true,
+            })
+        };
+        sender.send(hb()); // fills the single slot
+        sender.send(hb()); // must drop, not block
+        sender.send(hb());
+        assert_eq!(stats.outbox_drops(), 2);
+    }
+}

@@ -11,11 +11,38 @@ fn load(name: &str) -> Config {
 
 #[test]
 fn all_shipped_configs_parse_and_validate() {
-    let names =
-        ["paper51", "lan", "wan", "lossy", "pull", "adaptive", "lossy-burst", "unreliable"];
+    let names = [
+        "paper51",
+        "lan",
+        "wan",
+        "lossy",
+        "pull",
+        "adaptive",
+        "lossy-burst",
+        "unreliable",
+        "live-tcp",
+    ];
     for name in names {
         let cfg = load(name);
         cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+#[test]
+fn live_tcp_config_pins_the_socket_transport_and_peer_table() {
+    use epiraft::config::TransportKind;
+    let cfg = load("live-tcp");
+    assert_eq!(cfg.cluster.transport, TransportKind::Tcp, "the preset's point is TCP");
+    assert_eq!(cfg.protocol.n, 5);
+    for id in 0..5 {
+        let addr = cfg.cluster.peer_addr(id).unwrap_or_else(|| panic!("peer {id} missing"));
+        assert!(addr.starts_with("127.0.0.1:"), "loopback preset, got {addr}");
+    }
+    // Each `--node-id` invocation of the recipe must validate too.
+    for id in 0..5 {
+        let mut cfg = load("live-tcp");
+        cfg.set("cluster.node_id", &id.to_string()).unwrap();
+        cfg.validate().unwrap_or_else(|e| panic!("node {id}: {e}"));
     }
 }
 

@@ -1,6 +1,8 @@
 //! Live-cluster integration: the same Node core under real threads, real
-//! channels and the real clock. Kept small — wall-clock tests on a
-//! single-core CI box; the simulator carries the heavy scenarios.
+//! channels and the real clock. The non-ignored tests are sub-second
+//! (tier-1 runs on a single-core CI box); the wall-clock soaks are
+//! `#[ignore]`d and run in the dedicated CI `live-smoke` job alongside
+//! the TCP-transport soaks (`rust/tests/transport_tcp.rs`).
 
 use epiraft::cluster::run_live;
 use epiraft::config::Config;
@@ -19,6 +21,7 @@ fn cfg(variant: Variant, n: usize) -> Config {
 }
 
 #[test]
+#[ignore = "wall-clock soak (~1.5s): runs in the CI live-smoke job"]
 fn live_v2_end_to_end() {
     let report = run_live(&cfg(Variant::V2, 5)).expect("live run");
     assert!(report.completed > 20, "completed {}", report.completed);
@@ -29,6 +32,7 @@ fn live_v2_end_to_end() {
 }
 
 #[test]
+#[ignore = "wall-clock soak (~3s): runs in the CI live-smoke job"]
 fn live_raft_vs_v1_both_serve() {
     let raft = run_live(&cfg(Variant::Raft, 3)).expect("raft");
     let v1 = run_live(&cfg(Variant::V1, 3)).expect("v1");
@@ -40,8 +44,14 @@ fn live_raft_vs_v1_both_serve() {
 
 #[test]
 fn live_report_renders() {
-    let report = run_live(&cfg(Variant::V1, 3)).expect("run");
+    let mut cfg = cfg(Variant::V1, 3);
+    cfg.workload.duration_us = 600_000;
+    cfg.workload.warmup_us = 100_000;
+    let report = run_live(&cfg).expect("run");
     let text = report.render();
     assert!(text.contains("live cluster"));
     assert!(text.contains("replica 0"));
+    // The default mpsc transport renders exactly as before the transport
+    // layer existed: no transport line, no timeout line when zero.
+    assert!(!text.contains("transport:"));
 }

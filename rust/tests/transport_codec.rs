@@ -1,0 +1,249 @@
+//! Codec round-trip property tests + the size-model honesty test.
+//!
+//! Seeded `Xoshiro256` generators (no proptest dependency, same as
+//! `prop_safety.rs`) build randomized instances of every [`Message`]
+//! variant; each must (a) survive encode→decode bit-exactly and (b)
+//! occupy exactly `Message::wire_bytes()` bytes on the wire — the
+//! equality that keeps the simulator's egress numbers meaningful
+//! (BENCH_PR2–PR4 all gate on them).
+
+use epiraft::epidemic::EpidemicState;
+use epiraft::kvstore::Command;
+use epiraft::raft::{
+    AppendEntriesArgs, AppendEntriesReply, GossipMeta, LogEntry, Message, PullReplyArgs,
+    PullRequestArgs, RequestVoteArgs, RequestVoteReply,
+};
+use epiraft::transport::codec::{self, DecodeError};
+use epiraft::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+fn arb_command(rng: &mut Xoshiro256) -> Command {
+    match rng.next_below(4) {
+        0 => Command::Noop,
+        1 => Command::Put { key: rng.next_u64(), value: rng.next_u64() },
+        2 => Command::Get { key: rng.next_u64() },
+        _ => Command::Delete { key: rng.next_u64() },
+    }
+}
+
+fn arb_entries(rng: &mut Xoshiro256, max: u64) -> Arc<Vec<LogEntry>> {
+    let count = rng.next_below(max + 1);
+    Arc::new(
+        (0..count)
+            .map(|i| LogEntry {
+                term: rng.next_below(1 << 40),
+                index: rng.next_below(1 << 40) + i,
+                cmd: arb_command(rng),
+            })
+            .collect(),
+    )
+}
+
+fn arb_epidemic(rng: &mut Xoshiro256) -> Option<EpidemicState> {
+    if rng.next_below(2) == 0 {
+        return None;
+    }
+    // Up to several bitmap words, so multi-word layouts are exercised.
+    let n = 1 + rng.next_below(130) as usize;
+    let mut s = EpidemicState::new(n);
+    for i in 0..n {
+        if rng.next_below(3) == 0 {
+            s.bitmap.set(i);
+        }
+    }
+    s.max_commit = rng.next_below(1 << 30);
+    s.next_commit = s.max_commit + 1 + rng.next_below(64);
+    Some(s)
+}
+
+fn arb_gossip(rng: &mut Xoshiro256) -> Option<GossipMeta> {
+    if rng.next_below(2) == 0 {
+        return None;
+    }
+    Some(GossipMeta {
+        round: rng.next_u64(),
+        hops: rng.next_below(1 << 16) as u32,
+        epidemic: arb_epidemic(rng),
+    })
+}
+
+/// One randomized message; `shape % 6` picks the variant so a sweep over
+/// consecutive shapes covers all six.
+fn arb_message(rng: &mut Xoshiro256, shape: u64) -> Message {
+    let node = |rng: &mut Xoshiro256| rng.next_below(1 << 20) as usize;
+    match shape % 6 {
+        0 => Message::AppendEntries(AppendEntriesArgs {
+            term: rng.next_below(1 << 40),
+            leader: node(rng),
+            prev_log_index: rng.next_below(1 << 40),
+            prev_log_term: rng.next_below(1 << 40),
+            entries: arb_entries(rng, 40),
+            leader_commit: rng.next_below(1 << 40),
+            gossip: arb_gossip(rng),
+            seq: rng.next_u64(),
+        }),
+        1 => Message::AppendEntriesReply(AppendEntriesReply {
+            term: rng.next_below(1 << 40),
+            from: node(rng),
+            success: rng.next_below(2) == 0,
+            match_hint: rng.next_below(1 << 40),
+            round: (rng.next_below(2) == 0).then(|| rng.next_u64()),
+            epidemic: arb_epidemic(rng),
+            seq: rng.next_u64(),
+        }),
+        2 => Message::RequestVote(RequestVoteArgs {
+            term: rng.next_below(1 << 40),
+            candidate: node(rng),
+            last_log_index: rng.next_below(1 << 40),
+            last_log_term: rng.next_below(1 << 40),
+            gossip: rng.next_below(2) == 0,
+            hops: rng.next_below(1 << 16) as u32,
+        }),
+        3 => Message::RequestVoteReply(RequestVoteReply {
+            term: rng.next_below(1 << 40),
+            from: node(rng),
+            granted: rng.next_below(2) == 0,
+        }),
+        4 => Message::PullRequest(PullRequestArgs {
+            term: rng.next_below(1 << 40),
+            from: node(rng),
+            from_index: rng.next_below(1 << 40),
+            from_term: rng.next_below(1 << 40),
+            known_round: rng.next_u64(),
+        }),
+        _ => Message::PullReply(PullReplyArgs {
+            term: rng.next_below(1 << 40),
+            from: node(rng),
+            prev_log_index: rng.next_below(1 << 40),
+            prev_log_term: rng.next_below(1 << 40),
+            matched: rng.next_below(2) == 0,
+            diverged: rng.next_below(2) == 0,
+            entries: arb_entries(rng, 40),
+            commit_index: rng.next_below(1 << 40),
+            leader_hint: (rng.next_below(2) == 0).then(|| node(rng)),
+            known_round: rng.next_u64(),
+        }),
+    }
+}
+
+#[test]
+fn roundtrip_every_variant_randomized() {
+    let mut rng = Xoshiro256::seed_from_u64(0xC0DEC);
+    for shape in 0..600 {
+        let msg = arb_message(&mut rng, shape);
+        let buf = codec::encode_to_vec(&msg);
+        let (decoded, consumed) =
+            codec::decode(&buf).expect("decode").unwrap_or_else(|| panic!("incomplete {shape}"));
+        assert_eq!(consumed, buf.len(), "whole frame consumed (shape {shape})");
+        assert_eq!(decoded, msg, "encode/decode must round-trip (shape {shape})");
+    }
+}
+
+#[test]
+fn wire_bytes_equals_encoded_frame_length() {
+    // The honesty test: the egress size model IS the frame length — no
+    // slack constant, for every variant and payload shape. If a codec or
+    // model change breaks this, fix whichever side diverged; do not widen
+    // the assertion.
+    let mut rng = Xoshiro256::seed_from_u64(0x512E_4D0D);
+    for shape in 0..600 {
+        let msg = arb_message(&mut rng, shape);
+        let buf = codec::encode_to_vec(&msg);
+        assert_eq!(
+            buf.len() as u64,
+            msg.wire_bytes(),
+            "wire_bytes must equal the encoded frame length ({}, shape {shape})",
+            msg.kind()
+        );
+    }
+}
+
+#[test]
+fn frame_streams_decode_message_by_message() {
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let msgs: Vec<Message> = (0..24).map(|s| arb_message(&mut rng, s)).collect();
+    let mut stream = Vec::new();
+    for m in &msgs {
+        codec::encode(m, &mut stream);
+    }
+    let mut at = 0;
+    let mut decoded = Vec::new();
+    while at < stream.len() {
+        let (m, used) = codec::decode(&stream[at..]).expect("decode").expect("complete");
+        decoded.push(m);
+        at += used;
+    }
+    assert_eq!(decoded, msgs);
+    // The same stream through the incremental reader API.
+    let mut r = std::io::Cursor::new(stream);
+    for m in &msgs {
+        assert_eq!(codec::read_frame(&mut r).expect("read").as_ref(), Some(m));
+    }
+    assert_eq!(codec::read_frame(&mut r).expect("read"), None, "clean EOF");
+}
+
+#[test]
+fn truncated_frames_are_rejected_not_misread() {
+    let mut rng = Xoshiro256::seed_from_u64(99);
+    for shape in 0..12 {
+        let msg = arb_message(&mut rng, shape);
+        let buf = codec::encode_to_vec(&msg);
+        // Frame-level: any prefix is "need more bytes", never a message.
+        for cut in 0..buf.len() {
+            assert_eq!(
+                codec::decode(&buf[..cut]).expect("prefix must not error"),
+                None,
+                "prefix of length {cut} must not decode (shape {shape})"
+            );
+        }
+        // Payload-level: a frame whose body was cut short is Truncated.
+        let payload = &buf[4..];
+        for cut in 2..payload.len() {
+            assert_eq!(
+                codec::decode_payload(&payload[..cut]).unwrap_err(),
+                DecodeError::Truncated,
+                "payload cut at {cut} (shape {shape})"
+            );
+        }
+    }
+}
+
+#[test]
+fn bad_version_bytes_are_rejected() {
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let buf = codec::encode_to_vec(&arb_message(&mut rng, 0));
+    for v in [0u8, 2, 7, 255] {
+        let mut bad = buf.clone();
+        bad[4] = v;
+        assert_eq!(codec::decode(&bad).unwrap_err(), DecodeError::BadVersion(v));
+    }
+}
+
+#[test]
+fn oversized_and_undersized_length_prefixes_are_rejected() {
+    let mut rng = Xoshiro256::seed_from_u64(4);
+    let buf = codec::encode_to_vec(&arb_message(&mut rng, 1));
+    for len in [0u32, 1, codec::MAX_FRAME_LEN + 1, u32::MAX] {
+        let mut bad = buf.clone();
+        bad[..4].copy_from_slice(&len.to_le_bytes());
+        assert_eq!(
+            codec::decode(&bad).unwrap_err(),
+            DecodeError::BadLength(len),
+            "length prefix {len}"
+        );
+    }
+}
+
+#[test]
+fn unknown_kinds_and_booleans_are_rejected() {
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let buf = codec::encode_to_vec(&arb_message(&mut rng, 3)); // vote reply
+    let mut bad = buf.clone();
+    bad[5] = 42; // kind byte
+    assert_eq!(codec::decode(&bad).unwrap_err(), DecodeError::BadKind(42));
+    // The final body byte of a vote reply is its `granted` boolean.
+    let mut bad = buf;
+    let at = bad.len() - 1;
+    bad[at] = 7;
+    assert!(matches!(codec::decode(&bad).unwrap_err(), DecodeError::Malformed(_)));
+}
