@@ -9,6 +9,7 @@
 //! epiraft bench-pr2  [--quick] [--n N] [--rate R] [--seed S] [--out FILE]
 //! epiraft bench-pr3  [--quick] [--n N] [--rate R] [--seed S] [--out FILE]
 //! epiraft bench-pr4  [--quick] [--n N] [--k K] [--rate R] [--seed S] [--out FILE]
+//! epiraft bench-pr6  [--quick] [--n N] [--tcp-n N] [--seed S] [--out FILE]
 //! epiraft live       [--variant v] [--n N] [--clients C] [--secs S]
 //!                    [--transport {mpsc|tcp}] [--node-id I]
 //! epiraft artifacts-check [--dir artifacts]
@@ -162,6 +163,13 @@ USAGE:
       pull run demotes its slow replicas and commits with p99 within 2x its
       healthy baseline while classic stalls or pays strictly more leader
       egress.
+
+  epiraft bench-pr6 [--quick] [--n N] [--tcp-n N] [--seed S] [--out FILE]
+      Open-loop throughput with vs without leader group commit
+      ({raft, pull} x {unbatched, batched}, sim at n=51 plus a loopback-TCP
+      live cluster of --tcp-n replicas); writes BENCH_PR6.json and fails
+      unless every batched cell completes strictly more requests than its
+      unbatched twin at a client p99 within 1.5x.
 
   epiraft live [--variant v] [--n N] [--clients C] [--secs S]
                [--transport mpsc|tcp] [--node-id I]

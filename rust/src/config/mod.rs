@@ -55,6 +55,73 @@ pub struct ProtocolConfig {
     pub adaptive: AdaptiveConfig,
     /// Unreliable-node mode (`[protocol.unreliable]`) — see `raft::view`.
     pub unreliable: UnreliableConfig,
+    /// Leader group commit (`[protocol.batch]`) — see DESIGN.md §3.4.
+    pub batch: BatchConfig,
+}
+
+/// Ceiling on entries any single wire batch may carry: the TCP transport
+/// rejects frames above `transport::codec::MAX_FRAME_LEN` (16 MiB), and
+/// 400k entries × 33 wire bytes ≈ 13 MiB leaves headroom for headers and
+/// the V2 epidemic payload. Every batch-size knob validates against it.
+pub const MAX_BATCH_ENTRIES: usize = 400_000;
+
+/// Conservative wire size of one log entry for batch-byte accounting
+/// (mirrors `raft::message::WIRE_BYTES_PER_ENTRY`; duplicated here so the
+/// config layer stays dependency-free of the wire module).
+pub const BATCH_ENTRY_WIRE_BYTES: u64 = 33;
+
+/// `[protocol.batch]` — leader-side group commit (DESIGN.md §3.4): client
+/// commands queue at the leader and are appended + disseminated as one
+/// batch, flushed when `max_entries`/`max_bytes` fills or `flush_us`
+/// elapses, whichever comes first. One `RequestId` per command is kept for
+/// reply fan-out; round-based strategies seed a round at the flush itself
+/// (the batch *is* the round). Off by default — disabled is bit-identical
+/// to the per-command path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchConfig {
+    /// Master switch; off reproduces the per-command append path exactly.
+    pub enabled: bool,
+    /// Flush when this many commands are queued.
+    pub max_entries: usize,
+    /// Flush when the queued commands' wire size reaches this many bytes.
+    pub max_bytes: u64,
+    /// Flush this long after the oldest queued command arrived (µs).
+    pub flush_us: u64,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        Self { enabled: false, max_entries: 64, max_bytes: 1 << 20, flush_us: 200 }
+    }
+}
+
+impl BatchConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_entries == 0 {
+            return Err("protocol.batch.max_entries must be >= 1".into());
+        }
+        if self.max_entries > MAX_BATCH_ENTRIES {
+            return Err(format!(
+                "protocol.batch.max_entries must be <= {MAX_BATCH_ENTRIES} \
+                 (transport frame cap)"
+            ));
+        }
+        if self.max_bytes < BATCH_ENTRY_WIRE_BYTES {
+            return Err(format!(
+                "protocol.batch.max_bytes must be >= {BATCH_ENTRY_WIRE_BYTES} (one entry)"
+            ));
+        }
+        if self.max_bytes > MAX_BATCH_ENTRIES as u64 * BATCH_ENTRY_WIRE_BYTES {
+            return Err(format!(
+                "protocol.batch.max_bytes must be <= {} (transport frame cap)",
+                MAX_BATCH_ENTRIES as u64 * BATCH_ENTRY_WIRE_BYTES
+            ));
+        }
+        if self.flush_us == 0 {
+            return Err("protocol.batch.flush_us must be >= 1".into());
+        }
+        Ok(())
+    }
 }
 
 /// `[protocol.unreliable]` — unreliable-node mode (BlackWater Raft,
@@ -188,6 +255,7 @@ impl Default for ProtocolConfig {
             pull_reply_budget: 512,
             adaptive: AdaptiveConfig::default(),
             unreliable: UnreliableConfig::default(),
+            batch: BatchConfig::default(),
         }
     }
 }
@@ -222,12 +290,9 @@ impl ProtocolConfig {
         if self.pull_interval_us == 0 || self.pull_fanout == 0 || self.pull_reply_budget == 0 {
             return Err("protocol.pull_* parameters must be >= 1".into());
         }
-        // The TCP transport rejects frames above `transport::codec::
-        // MAX_FRAME_LEN` (16 MiB); a batch knob that could encode past it
+        // A batch knob that could encode past the transport frame cap
         // would make every receiver drop the leader's repair batch and the
-        // leader resend it forever. 400k entries × 33 wire bytes ≈ 13 MiB
-        // leaves headroom for headers and the V2 epidemic payload.
-        const MAX_BATCH_ENTRIES: usize = 400_000;
+        // leader resend it forever.
         if self.max_entries_per_rpc > MAX_BATCH_ENTRIES {
             return Err(format!(
                 "protocol.max_entries_per_rpc must be <= {MAX_BATCH_ENTRIES} \
@@ -246,6 +311,7 @@ impl ProtocolConfig {
         }
         self.adaptive.validate()?;
         self.unreliable.validate(self.n)?;
+        self.batch.validate()?;
         if self.adaptive.enabled
             && self.variant.is_gossip()
             && self.adaptive.fanout_max < crate::raft::strategy::disseminate::GOSSIP_FLOOR
@@ -509,18 +575,86 @@ impl Default for CostConfig {
     }
 }
 
+/// How the workload offers load (EXPERIMENTS.md §Throughput).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalModel {
+    /// Paxi-style closed loop: each client waits for its reply before
+    /// firing the next request (optionally throttled to `rate`).
+    Closed,
+    /// Open loop: Poisson arrivals at the aggregate `rate` req/s, admitted
+    /// into at most `max_inflight` concurrent request slots. An arrival
+    /// that finds every slot busy is shed (counted, never queued), so an
+    /// overloaded run degrades instead of allocating without bound.
+    Open,
+}
+
+impl ArrivalModel {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalModel::Closed => "closed",
+            ArrivalModel::Open => "open",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ArrivalModel> {
+        match s.to_ascii_lowercase().as_str() {
+            "closed" => Some(ArrivalModel::Closed),
+            "open" | "poisson" => Some(ArrivalModel::Open),
+            _ => None,
+        }
+    }
+}
+
+/// Key-popularity distribution for generated commands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KeyDist {
+    /// Every key equally likely.
+    Uniform,
+    /// YCSB-style zipfian skew with parameter `zipf_theta` (hot keys).
+    Zipfian,
+}
+
+impl KeyDist {
+    pub fn name(self) -> &'static str {
+        match self {
+            KeyDist::Uniform => "uniform",
+            KeyDist::Zipfian => "zipfian",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KeyDist> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" => Some(KeyDist::Uniform),
+            "zipfian" | "zipf" => Some(KeyDist::Zipfian),
+            _ => None,
+        }
+    }
+}
+
 /// Workload shape (the Paxi benchmark client).
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkloadConfig {
-    /// Number of concurrent closed-loop clients.
+    /// Number of concurrent closed-loop clients (ignored by the `open`
+    /// arrival model, which sizes itself by `max_inflight` slots).
     pub clients: usize,
-    /// Target aggregate request rate (req/s); 0 = unbounded closed loop
-    /// (each client fires as soon as the previous reply lands).
+    /// Target aggregate request rate (req/s). Closed loop: 0 = unbounded
+    /// (each client fires as soon as the previous reply lands). Open loop:
+    /// the Poisson arrival rate (must be > 0).
     pub rate: f64,
+    /// Arrival model: `closed` (Paxi) or `open` (Poisson + shedding).
+    pub arrival: ArrivalModel,
+    /// Admission cap for the open-loop model: at most this many requests
+    /// in flight at once; excess arrivals are shed.
+    pub max_inflight: usize,
     /// Fraction of writes (rest are reads; all go through the log).
     pub write_fraction: f64,
     /// Number of distinct keys.
     pub keys: u64,
+    /// Key-popularity distribution.
+    pub key_dist: KeyDist,
+    /// Zipfian skew parameter, in (0,1) (YCSB default 0.99); only read
+    /// when `key_dist = "zipfian"`.
+    pub zipf_theta: f64,
     /// Experiment duration (simulated µs).
     pub duration_us: u64,
     /// Warmup to discard (simulated µs).
@@ -532,8 +666,12 @@ impl Default for WorkloadConfig {
         Self {
             clients: 10,
             rate: 0.0,
+            arrival: ArrivalModel::Closed,
+            max_inflight: 1024,
             write_fraction: 0.5,
             keys: 1000,
+            key_dist: KeyDist::Uniform,
+            zipf_theta: 0.99,
             duration_us: 10_000_000,
             warmup_us: 1_000_000,
         }
@@ -575,6 +713,27 @@ impl Config {
         }
         if self.workload.clients == 0 {
             return Err("workload.clients must be >= 1".into());
+        }
+        // RequestIds pack the client/slot index into their low 32 bits
+        // (`sim::workload`): a wider pool would silently alias reply
+        // routing, so reject it here with a clear error.
+        if self.workload.clients > u32::MAX as usize {
+            return Err("workload.clients must fit in 32 bits (request-id packing)".into());
+        }
+        if self.workload.max_inflight == 0 {
+            return Err("workload.max_inflight must be >= 1".into());
+        }
+        if self.workload.max_inflight > u32::MAX as usize {
+            return Err("workload.max_inflight must fit in 32 bits (request-id packing)".into());
+        }
+        if self.workload.arrival == ArrivalModel::Open && !(self.workload.rate > 0.0) {
+            return Err("workload.arrival = \"open\" requires workload.rate > 0".into());
+        }
+        if !self.workload.rate.is_finite() || self.workload.rate < 0.0 {
+            return Err("workload.rate must be finite and >= 0".into());
+        }
+        if !(self.workload.zipf_theta > 0.0 && self.workload.zipf_theta < 1.0) {
+            return Err("workload.zipf_theta must be in (0,1)".into());
         }
         if self.workload.warmup_us >= self.workload.duration_us {
             return Err("workload.warmup_us must be < duration_us".into());
@@ -686,6 +845,12 @@ impl Config {
             "protocol.unreliable.best_effort_bytes" => {
                 self.protocol.unreliable.best_effort_bytes = parse_u64(v)?
             }
+            "protocol.batch.enabled" => self.protocol.batch.enabled = parse_bool(v)?,
+            "protocol.batch.max_entries" => {
+                self.protocol.batch.max_entries = parse_u64(v)? as usize
+            }
+            "protocol.batch.max_bytes" => self.protocol.batch.max_bytes = parse_u64(v)?,
+            "protocol.batch.flush_us" => self.protocol.batch.flush_us = parse_u64(v)?,
             "cluster.transport" => {
                 self.cluster.transport = TransportKind::parse(v)
                     .ok_or_else(|| format!("unknown transport {v} (want mpsc or tcp)"))?
@@ -714,8 +879,19 @@ impl Config {
             "cost.tick_us" => self.cost.tick_us = parse_f64(v)?,
             "workload.clients" => self.workload.clients = parse_u64(v)? as usize,
             "workload.rate" => self.workload.rate = parse_f64(v)?,
+            "workload.arrival" => {
+                self.workload.arrival = ArrivalModel::parse(v)
+                    .ok_or_else(|| format!("unknown arrival model {v} (want closed or open)"))?
+            }
+            "workload.max_inflight" => self.workload.max_inflight = parse_u64(v)? as usize,
             "workload.write_fraction" => self.workload.write_fraction = parse_f64(v)?,
             "workload.keys" => self.workload.keys = parse_u64(v)?,
+            "workload.key_dist" => {
+                self.workload.key_dist = KeyDist::parse(v).ok_or_else(|| {
+                    format!("unknown key distribution {v} (want uniform or zipfian)")
+                })?
+            }
+            "workload.zipf_theta" => self.workload.zipf_theta = parse_f64(v)?,
             "workload.duration_us" => self.workload.duration_us = parse_u64(v)?,
             "workload.warmup_us" => self.workload.warmup_us = parse_u64(v)?,
             _ => return Err(format!("unknown config key: {key}")),
@@ -848,6 +1024,10 @@ pub fn dump(cfg: &Config) -> BTreeMap<String, String> {
         "protocol.unreliable.best_effort_bytes".into(),
         p.unreliable.best_effort_bytes.to_string(),
     );
+    m.insert("protocol.batch.enabled".into(), p.batch.enabled.to_string());
+    m.insert("protocol.batch.max_entries".into(), p.batch.max_entries.to_string());
+    m.insert("protocol.batch.max_bytes".into(), p.batch.max_bytes.to_string());
+    m.insert("protocol.batch.flush_us".into(), p.batch.flush_us.to_string());
     m.insert("cluster.transport".into(), cfg.cluster.transport.name().into());
     m.insert("cluster.outbox".into(), cfg.cluster.outbox.to_string());
     m.insert("cluster.kill_link_at_us".into(), cfg.cluster.kill_link_at_us.to_string());
@@ -881,8 +1061,12 @@ pub fn dump(cfg: &Config) -> BTreeMap<String, String> {
     m.insert("cost.tick_us".into(), cfg.cost.tick_us.to_string());
     m.insert("workload.clients".into(), cfg.workload.clients.to_string());
     m.insert("workload.rate".into(), cfg.workload.rate.to_string());
+    m.insert("workload.arrival".into(), cfg.workload.arrival.name().into());
+    m.insert("workload.max_inflight".into(), cfg.workload.max_inflight.to_string());
     m.insert("workload.write_fraction".into(), cfg.workload.write_fraction.to_string());
     m.insert("workload.keys".into(), cfg.workload.keys.to_string());
+    m.insert("workload.key_dist".into(), cfg.workload.key_dist.name().into());
+    m.insert("workload.zipf_theta".into(), cfg.workload.zipf_theta.to_string());
     m.insert("workload.duration_us".into(), cfg.workload.duration_us.to_string());
     m.insert("workload.warmup_us".into(), cfg.workload.warmup_us.to_string());
     m
@@ -1066,6 +1250,94 @@ rate = 2500.5
             rebuilt.set(k, v).unwrap();
         }
         assert_eq!(rebuilt, cfg);
+    }
+
+    #[test]
+    fn batch_keys_parse_and_validate() {
+        let mut cfg = Config::default();
+        cfg.set("protocol.batch.enabled", "true").unwrap();
+        cfg.set("protocol.batch.max_entries", "256").unwrap();
+        cfg.set("protocol.batch.max_bytes", "65536").unwrap();
+        cfg.set("protocol.batch.flush_us", "500").unwrap();
+        cfg.validate().unwrap();
+        assert!(cfg.protocol.batch.enabled);
+        assert_eq!(cfg.protocol.batch.max_entries, 256);
+        assert_eq!(cfg.protocol.batch.max_bytes, 65_536);
+        assert_eq!(cfg.protocol.batch.flush_us, 500);
+        // Degenerate knobs are rejected.
+        let mut cfg = Config::default();
+        cfg.set("protocol.batch.max_entries", "0").unwrap();
+        assert!(cfg.validate().is_err(), "zero max_entries never flushes by size");
+        let mut cfg = Config::default();
+        cfg.set("protocol.batch.flush_us", "0").unwrap();
+        assert!(cfg.validate().is_err(), "zero flush_us must be rejected");
+        let mut cfg = Config::default();
+        cfg.set("protocol.batch.max_bytes", "1").unwrap();
+        assert!(cfg.validate().is_err(), "max_bytes below one entry must be rejected");
+    }
+
+    #[test]
+    fn batch_size_knobs_stay_under_the_frame_cap() {
+        // `batch_max_bytes`/`batch_max_entries` must never admit a batch
+        // the 16 MiB codec frame cap would reject: both are clamped to the
+        // same MAX_BATCH_ENTRIES ceiling the RPC slicing knobs use.
+        let mut cfg = Config::default();
+        cfg.set("protocol.batch.max_entries", &(MAX_BATCH_ENTRIES + 1).to_string()).unwrap();
+        assert!(cfg.validate().is_err(), "frame-cap-busting batch entries must be rejected");
+        let cap = MAX_BATCH_ENTRIES as u64 * BATCH_ENTRY_WIRE_BYTES;
+        assert!(cap < 16 * 1024 * 1024, "entry ceiling must sit under the 16 MiB frame cap");
+        let mut cfg = Config::default();
+        cfg.set("protocol.batch.max_bytes", &(cap + 1).to_string()).unwrap();
+        assert!(cfg.validate().is_err(), "frame-cap-busting batch bytes must be rejected");
+        let mut cfg = Config::default();
+        cfg.set("protocol.batch.max_bytes", &cap.to_string()).unwrap();
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn workload_arrival_keys_parse_and_validate() {
+        let mut cfg = Config::default();
+        cfg.set("workload.arrival", "open").unwrap();
+        cfg.set("workload.rate", "5000").unwrap();
+        cfg.set("workload.max_inflight", "64").unwrap();
+        cfg.set("workload.key_dist", "zipfian").unwrap();
+        cfg.set("workload.zipf_theta", "0.9").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.workload.arrival, ArrivalModel::Open);
+        assert_eq!(cfg.workload.max_inflight, 64);
+        assert_eq!(cfg.workload.key_dist, KeyDist::Zipfian);
+        assert_eq!(cfg.workload.zipf_theta, 0.9);
+        // Open loop without a rate is a contradiction (no arrival process).
+        cfg.set("workload.rate", "0").unwrap();
+        assert!(cfg.validate().is_err(), "open arrivals need a positive rate");
+        // Unknown names are rejected at set time.
+        let mut cfg = Config::default();
+        assert!(cfg.set("workload.arrival", "bursty").is_err());
+        assert!(cfg.set("workload.key_dist", "pareto").is_err());
+        // Degenerate zipf skew and admission caps are rejected.
+        let mut cfg = Config::default();
+        cfg.set("workload.zipf_theta", "1.0").unwrap();
+        assert!(cfg.validate().is_err(), "theta must stay inside (0,1)");
+        let mut cfg = Config::default();
+        cfg.set("workload.max_inflight", "0").unwrap();
+        assert!(cfg.validate().is_err(), "zero admission cap admits nothing");
+    }
+
+    #[test]
+    fn oversized_client_pools_are_rejected_not_aliased() {
+        // Request ids carry the client index in their low 32 bits; a pool
+        // wider than that would alias reply routing, so config load fails.
+        let mut cfg = Config::default();
+        cfg.set("workload.clients", &(u32::MAX as u64 + 1).to_string()).unwrap();
+        assert!(cfg.validate().is_err(), "client pool beyond 32 bits must be rejected");
+        let mut cfg = Config::default();
+        cfg.set("workload.max_inflight", &(u32::MAX as u64 + 1).to_string()).unwrap();
+        assert!(cfg.validate().is_err(), "inflight cap beyond 32 bits must be rejected");
+        // 65536 clients — the old 16-bit packing's first aliasing width —
+        // is now a perfectly valid pool.
+        let mut cfg = Config::default();
+        cfg.set("workload.clients", "65536").unwrap();
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -7,6 +7,7 @@ pub mod adaptive;
 pub mod bench_stats;
 pub mod egress;
 pub mod figures;
+pub mod throughput;
 pub mod unreliable;
 
 pub use adaptive::{
@@ -19,6 +20,10 @@ pub use egress::{
 pub use figures::{
     fig4, fig4_default_rates, fig5, fig5_default_rates, fig6, fig6_default_ns, fig7, headline,
     print_points, run_point, write_cdfs_json, write_points_json, Headline, Point, Scale,
+};
+pub use throughput::{
+    bench_pr6_json, print_throughput, sim_throughput_comparison, throughput_comparison,
+    throughput_gate, ThroughputPoint,
 };
 pub use unreliable::{
     bench_pr4_json, print_unreliable, unreliable_comparison, unreliable_gate, UnreliablePoint,

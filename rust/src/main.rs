@@ -32,6 +32,7 @@ fn run(args: Vec<String>) -> Result<(), String> {
         "bench-pr2" => cmd_bench_pr2(&cli),
         "bench-pr3" => cmd_bench_pr3(&cli),
         "bench-pr4" => cmd_bench_pr4(&cli),
+        "bench-pr6" => cmd_bench_pr6(&cli),
         "live" => cmd_live(&cli),
         "fleet" => cmd_fleet(&cli),
         "artifacts-check" => cmd_artifacts_check(&cli),
@@ -335,6 +336,38 @@ fn cmd_bench_pr4(cli: &Cli) -> Result<(), String> {
         "gate OK: flaky pull demotes and holds p99 within 2x healthy; classic pays more \
          leader egress or stalls"
     );
+    Ok(())
+}
+
+/// PR 6 bench: open-loop throughput with vs without leader group commit
+/// ({raft, pull} x {unbatched, batched}), in the simulator at n=51 and on
+/// a loopback-TCP live cluster. Writes `BENCH_PR6.json` (CI uploads it as
+/// an artifact) and exits non-zero unless every batched cell completes
+/// strictly more requests than its unbatched twin at a client p99 within
+/// 1.5x — the group-commit `bench-smoke` gate.
+fn cmd_bench_pr6(cli: &Cli) -> Result<(), String> {
+    let mut s = scale(cli);
+    s.n = 51;
+    if let Some(n) = cli.get_u64("n")? {
+        s.n = n as usize;
+    }
+    let tcp_n = cli.get_u64("tcp-n")?.unwrap_or(5) as usize;
+    let seed = cli.get_u64("seed")?.unwrap_or(20230713);
+    let out = cli.get("out").unwrap_or("BENCH_PR6.json");
+    println!(
+        "== bench-pr6: open-loop group commit (n={}, tcp_n={}, seed={}, {}s sim) ==",
+        s.n,
+        tcp_n,
+        seed,
+        s.duration_us as f64 / 1e6
+    );
+    let points = harness::throughput_comparison(s, tcp_n, seed)?;
+    harness::print_throughput(&points);
+    let doc = harness::bench_pr6_json(s, tcp_n, seed, &points);
+    std::fs::write(out, doc.to_string_pretty()).map_err(|e| format!("write {out}: {e}"))?;
+    println!("\nwrote {out}");
+    harness::throughput_gate(&points)?;
+    println!("gate OK: batched cells complete strictly more at p99 within 1.5x, per pair");
     Ok(())
 }
 

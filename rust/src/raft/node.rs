@@ -122,6 +122,15 @@ pub struct Node {
     pub(crate) followers: Vec<FollowerSlot>,
     pub(crate) pending: BTreeMap<LogIndex, RequestId>,
 
+    // Group-commit queue (`[protocol.batch]`, DESIGN.md §3.4): client
+    // commands waiting for a flush, with their reply routing. Commands
+    // here are NOT yet in the log — flushing appends them all in one go
+    // so the next round/broadcast carries the whole batch.
+    pub(crate) batch: Vec<(RequestId, Command)>,
+    pub(crate) batch_bytes: u64,
+    /// When the oldest queued command must flush (`Time::MAX` = empty).
+    pub(crate) batch_deadline: Time,
+
     // Election state.
     pub(crate) votes: HashSet<NodeId>,
     pub(crate) election_deadline: Time,
@@ -170,6 +179,9 @@ impl Node {
             leader_hint: None,
             followers: vec![FollowerSlot::default(); n],
             pending: BTreeMap::new(),
+            batch: Vec::new(),
+            batch_bytes: 0,
+            batch_deadline: Time::MAX,
             votes: HashSet::new(),
             election_deadline: 0,
             vote_gossip_seen: HashSet::new(),
@@ -329,16 +341,55 @@ impl Node {
             });
             return actions;
         }
-        let index = self.log.append(self.current_term, cmd);
-        self.counters.entries_appended += 1;
-        self.pending.insert(index, req);
-        self.with_strategy(|s, node| s.on_client_request(node, now, &mut actions));
-        if self.view.solo_quorum() {
-            // Trivial quorum (n = 1): no reply will ever arrive to trigger
-            // the commit rule, so run it at the append itself.
-            self.with_strategy(|s, node| s.advance_leader_commit(node, &mut actions));
+        if !self.cfg.batch.enabled {
+            // Per-command path (the paper's behaviour): append and
+            // disseminate each command individually.
+            let index = self.log.append(self.current_term, cmd);
+            self.counters.entries_appended += 1;
+            self.pending.insert(index, req);
+            self.with_strategy(|s, node| s.on_client_request(node, now, &mut actions));
+            if self.view.solo_quorum() {
+                // Trivial quorum (n = 1): no reply will ever arrive to
+                // trigger the commit rule, so run it at the append itself.
+                self.with_strategy(|s, node| s.advance_leader_commit(node, &mut actions));
+            }
+            return actions;
+        }
+        // Group commit (DESIGN.md §3.4): queue the command; flush when the
+        // batch fills by count or bytes, else let the flush timer fire.
+        if self.batch.is_empty() {
+            self.batch_deadline = now + self.cfg.batch.flush_us;
+        }
+        self.batch_bytes += crate::config::BATCH_ENTRY_WIRE_BYTES;
+        self.batch.push((req, cmd));
+        if self.batch.len() >= self.cfg.batch.max_entries
+            || self.batch_bytes >= self.cfg.batch.max_bytes
+        {
+            self.flush_batch(now, &mut actions);
         }
         actions
+    }
+
+    /// Append every queued command in one go and hand the batch to the
+    /// strategy as a single dissemination unit (reply routing stays one
+    /// `RequestId` per command via `pending`). Round strategies seed a
+    /// round at the flush itself; classic broadcasts once for the batch.
+    pub(crate) fn flush_batch(&mut self, now: Time, actions: &mut Vec<Action>) {
+        if self.batch.is_empty() {
+            return;
+        }
+        debug_assert_eq!(self.role, Role::Leader);
+        self.batch_deadline = Time::MAX;
+        self.batch_bytes = 0;
+        for (req, cmd) in std::mem::take(&mut self.batch) {
+            let index = self.log.append(self.current_term, cmd);
+            self.counters.entries_appended += 1;
+            self.pending.insert(index, req);
+        }
+        self.with_strategy(|s, node| s.on_batch_flush(node, now, actions));
+        if self.view.solo_quorum() {
+            self.with_strategy(|s, node| s.advance_leader_commit(node, actions));
+        }
     }
 
     /// A replica-to-replica message arrives.
@@ -429,6 +480,12 @@ impl Node {
         let mut actions = Vec::new();
         match self.role {
             Role::Leader => {
+                // A due group-commit batch flushes before the strategy
+                // tick, so the round/broadcast this tick starts already
+                // carries the flushed entries.
+                if now >= self.batch_deadline {
+                    self.flush_batch(now, &mut actions);
+                }
                 // Unreliable-node mode: one health-evaluation round per
                 // round interval, piggybacked on the existing leader ticks
                 // (no extra timers; inert unless `[protocol.unreliable]`).
@@ -451,7 +508,7 @@ impl Node {
     /// Earliest time at which `tick` has work to do.
     pub fn next_deadline(&self) -> Time {
         match self.role {
-            Role::Leader => self.strategy().leader_deadline(self),
+            Role::Leader => self.strategy().leader_deadline(self).min(self.batch_deadline),
             Role::Follower => {
                 self.election_deadline.min(self.strategy().follower_deadline(self))
             }
@@ -483,6 +540,14 @@ impl Node {
         let reqs: Vec<RequestId> = self.pending.values().copied().collect();
         self.pending.clear();
         for req in reqs {
+            actions.push(Action::ClientReply { req, result: ClientResult::Redirect(None) });
+        }
+        // Queued-but-unflushed batch commands were never appended, let
+        // alone acked — redirect them too so no client hangs on a batch
+        // the old leader never shipped.
+        self.batch_bytes = 0;
+        self.batch_deadline = Time::MAX;
+        for (req, _) in std::mem::take(&mut self.batch) {
             actions.push(Action::ClientReply { req, result: ClientResult::Redirect(None) });
         }
         actions.push(Action::RoleChanged { role: Role::Follower, term });
@@ -612,6 +677,106 @@ mod tests {
             a,
             Action::ClientReply { req: 7, result: ClientResult::Redirect(None) }
         )));
+    }
+
+    fn batched_cfg(n: usize, variant: Variant) -> ProtocolConfig {
+        let mut c = cfg(n, variant);
+        c.batch.enabled = true;
+        c.batch.max_entries = 64;
+        c.batch.flush_us = 200;
+        c
+    }
+
+    #[test]
+    fn batched_requests_queue_until_the_flush_timer() {
+        let mut node = Node::new(0, batched_cfg(3, Variant::Raft), 1);
+        node.bootstrap_leader(0);
+        let base = node.last_index(); // leader no-op
+        for (i, req) in [(1u64, 10u64), (2, 11), (3, 12)] {
+            let actions = node.client_request(i, req, Command::Noop);
+            assert!(actions.is_empty(), "queued command must produce no actions yet");
+        }
+        assert_eq!(node.last_index(), base, "nothing appended before the flush");
+        assert_eq!(node.next_deadline(), 1 + 200, "flush timer armed by the oldest command");
+        // The flush tick appends the whole batch and broadcasts it once.
+        let actions = node.tick(201);
+        assert_eq!(node.last_index(), base + 3);
+        let sends = actions.iter().filter(|a| matches!(a, Action::Send { .. })).count();
+        assert_eq!(sends, 2, "one broadcast for the whole batch, not one per command");
+        // Reply routing survives: one RequestId per command, in log order.
+        assert_eq!(node.pending.len(), 3);
+        assert_eq!(node.pending.get(&(base + 1)), Some(&10));
+        assert_eq!(node.pending.get(&(base + 3)), Some(&12));
+    }
+
+    #[test]
+    fn batch_flushes_inline_when_max_entries_fills() {
+        let mut c = batched_cfg(3, Variant::Raft);
+        c.batch.max_entries = 2;
+        let mut node = Node::new(0, c, 1);
+        node.bootstrap_leader(0);
+        let base = node.last_index();
+        assert!(node.client_request(1, 1, Command::Noop).is_empty());
+        let actions = node.client_request(2, 2, Command::Noop);
+        assert_eq!(node.last_index(), base + 2, "second command fills the batch");
+        assert!(actions.iter().any(|a| matches!(a, Action::Send { .. })));
+        assert_eq!(node.batch_deadline, Time::MAX, "flush disarms the timer");
+    }
+
+    #[test]
+    fn batch_flushes_inline_when_max_bytes_fills() {
+        let mut c = batched_cfg(3, Variant::Raft);
+        // Two entries' worth of bytes: the third command must flush.
+        c.batch.max_bytes = 3 * crate::config::BATCH_ENTRY_WIRE_BYTES - 1;
+        let mut node = Node::new(0, c, 1);
+        node.bootstrap_leader(0);
+        let base = node.last_index();
+        assert!(node.client_request(1, 1, Command::Noop).is_empty());
+        assert!(node.client_request(2, 2, Command::Noop).is_empty());
+        node.client_request(3, 3, Command::Noop);
+        assert_eq!(node.last_index(), base + 3, "byte cap must trigger the flush");
+        assert_eq!(node.batch_bytes, 0);
+    }
+
+    #[test]
+    fn step_down_with_a_queued_batch_redirects_every_command() {
+        // "A batch flushed at leader change loses no acked command":
+        // queued commands were never appended (or acked), so every one is
+        // redirected — none is silently dropped, none falsely acked.
+        let mut node = Node::new(0, batched_cfg(3, Variant::Raft), 1);
+        node.bootstrap_leader(0);
+        for req in [21u64, 22, 23] {
+            node.client_request(1, req, Command::Noop);
+        }
+        let mut actions = Vec::new();
+        node.step_down(2, 9, &mut actions);
+        for req in [21u64, 22, 23] {
+            assert!(
+                actions.iter().any(|a| matches!(
+                    a,
+                    Action::ClientReply { req: r, result: ClientResult::Redirect(None) } if *r == req
+                )),
+                "queued req {req} must be redirected at leader change"
+            );
+        }
+        assert!(node.batch.is_empty());
+        assert_eq!(node.batch_deadline, Time::MAX);
+        assert_eq!(node.last_index(), 1, "queued commands never reach the log");
+    }
+
+    #[test]
+    fn batched_single_node_cluster_commits_at_the_flush() {
+        for variant in Variant::ALL {
+            let mut node = Node::new(0, batched_cfg(1, variant), 1);
+            node.bootstrap_leader(0);
+            assert!(node.client_request(5, 1, Command::Put { key: 1, value: 2 }).is_empty());
+            let actions = node.tick(5 + 200);
+            let replied = actions.iter().any(|a| {
+                matches!(a, Action::ClientReply { req: 1, result: ClientResult::Ok(_) })
+            });
+            assert!(replied, "variant {variant:?} must self-commit the flushed batch");
+            assert_eq!(node.kv().get(1), Some(2));
+        }
     }
 
     #[test]

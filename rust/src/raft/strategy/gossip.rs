@@ -273,6 +273,16 @@ impl ReplicationStrategy for GossipStrategy {
         }
     }
 
+    fn on_batch_flush(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        self.local_append_update(node, actions);
+        // Group commit: the flushed batch seeds a round immediately (the
+        // leader tick that triggered the flush starts it) instead of
+        // waiting out the round interval — the batch *is* the round.
+        if self.next_round_at > now {
+            self.next_round_at = now;
+        }
+    }
+
     fn on_local_append(&mut self, node: &mut Node, _now: Time, actions: &mut Vec<Action>) {
         self.local_append_update(node, actions);
     }

@@ -68,6 +68,18 @@ pub trait ReplicationStrategy: Send {
     /// its dissemination.
     fn on_client_request(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>);
 
+    /// The leader flushed a group-commit batch into its log (one or more
+    /// commands appended at once; `[protocol.batch]`, DESIGN.md §3.4).
+    /// Called once per flush, not per command. Default: treat the batch
+    /// like a single client request (classic broadcasts it immediately).
+    /// Round-based strategies override to seed a round at the flush
+    /// itself — the batch *is* the round, so commit latency tracks the
+    /// flush cadence instead of the round interval. Dissemination still
+    /// rides the shared `start_seed_round`/broadcast machinery.
+    fn on_batch_flush(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        self.on_client_request(node, now, actions);
+    }
+
     /// The leader appended an entry locally (no-op or client command) —
     /// strategies with local vote state update it here.
     fn on_local_append(&mut self, _node: &mut Node, _now: Time, _actions: &mut Vec<Action>) {}

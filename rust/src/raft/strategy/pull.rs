@@ -358,6 +358,15 @@ impl ReplicationStrategy for PullStrategy {
         }
     }
 
+    fn on_batch_flush(&mut self, _node: &mut Node, now: Time, _actions: &mut Vec<Action>) {
+        // Group commit: seed the flushed batch immediately (the tick that
+        // flushed also starts the round) — commit latency then tracks the
+        // flush cadence, not the seed-round interval.
+        if self.next_round_at > now {
+            self.next_round_at = now;
+        }
+    }
+
     fn on_leader_tick(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
         if now >= self.next_round_at {
             self.start_round(node, now, actions);

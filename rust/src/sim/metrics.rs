@@ -57,6 +57,11 @@ pub struct SimReport {
     pub promotions: u64,
     pub demoted_current: u64,
     pub best_effort_bytes: u64,
+    /// Open-loop workload (PR 6, `[workload] arrival = "open"`): arrivals
+    /// shed at admission because every inflight slot was busy. Always 0
+    /// for closed-loop runs. Whole-run count, not warmup-clipped — it is a
+    /// capacity statement, like egress.
+    pub shed: u64,
     /// Cross-replica committed-prefix agreement held at end of run.
     pub safety_ok: bool,
     /// Highest commit index across replicas at end of run.
@@ -106,6 +111,7 @@ impl SimReport {
             ("promotions", Json::num(self.promotions as f64)),
             ("demoted_current", Json::num(self.demoted_current as f64)),
             ("best_effort_bytes", Json::num(self.best_effort_bytes as f64)),
+            ("shed", Json::num(self.shed as f64)),
             ("safety_ok", Json::Bool(self.safety_ok)),
             ("max_commit", Json::num(self.max_commit as f64)),
             ("events_processed", Json::num(self.events_processed as f64)),

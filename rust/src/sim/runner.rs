@@ -51,6 +51,9 @@ enum Ev {
     ReplyDeliver { client: usize, req: RequestId, result: ClientResult },
     /// Client may (try to) issue its next request.
     ClientFire { client: usize },
+    /// Open-loop workload: an external request arrives (Poisson process).
+    /// Admits into a free inflight slot or sheds (`workload.shed`).
+    Arrival,
     /// Client retry timeout.
     Retry { client: usize, req: RequestId },
     /// Replica finished its current work item.
@@ -242,9 +245,16 @@ impl Simulation {
         for i in 0..sim.replicas.len() {
             sim.schedule_timer(i);
         }
-        for c in 0..sim.workload.clients.len() {
-            let at = sim.workload.clients[c].next_allowed;
-            sim.push(at, Ev::ClientFire { client: c });
+        if sim.workload.is_open() {
+            // Open loop: one Poisson arrival process feeds the slot pool;
+            // slots fire on admission, not on their own clocks.
+            let at = sim.workload.next_interarrival_us();
+            sim.push(at, Ev::Arrival);
+        } else {
+            for c in 0..sim.workload.clients.len() {
+                let at = sim.workload.clients[c].next_allowed;
+                sim.push(at, Ev::ClientFire { client: c });
+            }
         }
         let fault_times: Vec<Time> = sim.faults.iter().map(|f| f.at()).collect();
         for (idx, at) in fault_times.into_iter().enumerate() {
@@ -411,9 +421,15 @@ impl Simulation {
                         ClientResult::Ok(_) => {
                             let sent = c.sent_at;
                             c.inflight = None;
-                            let next = c.next_allowed.max(at);
                             self.collector.record_request(sent, at);
-                            self.push(next, Ev::ClientFire { client });
+                            if self.workload.is_open() {
+                                // The slot frees for the next arrival; the
+                                // client does not self-clock.
+                                self.workload.release_slot(client);
+                            } else {
+                                let next = self.workload.clients[client].next_allowed.max(at);
+                                self.push(next, Ev::ClientFire { client });
+                            }
                         }
                         ClientResult::Redirect(hint) => {
                             c.inflight = None;
@@ -429,6 +445,16 @@ impl Simulation {
                     }
                 }
                 Ev::ClientFire { client } => self.client_fire(client),
+                Ev::Arrival => {
+                    let dt = self.workload.next_interarrival_us();
+                    self.push(at + dt, Ev::Arrival);
+                    match self.workload.take_slot() {
+                        Some(client) => self.client_fire(client),
+                        // Every slot busy: overload sheds at admission
+                        // instead of queueing unboundedly.
+                        None => self.workload.shed += 1,
+                    }
+                }
                 Ev::Retry { client, req } => {
                     let n = self.cfg.protocol.n;
                     let c = &mut self.workload.clients[client];
@@ -577,6 +603,7 @@ impl Simulation {
             promotions,
             demoted_current,
             best_effort_bytes,
+            shed: self.workload.shed,
             safety_ok,
             max_commit: ref_node.commit_index(),
             events_processed: self.events,
@@ -845,6 +872,77 @@ mod tests {
             assert_eq!(base.mean_latency_us, off.mean_latency_us, "{variant:?}");
             assert_eq!(off.demotions, 0);
             assert_eq!(off.best_effort_bytes, 0);
+        }
+    }
+
+    #[test]
+    fn batching_disabled_is_bit_identical() {
+        // `[protocol.batch] enabled = false` must reproduce the
+        // per-command path exactly — the size/flush knobs may not perturb
+        // RNG draws, message counts or timing while the switch is off.
+        for variant in [Variant::Raft, Variant::Pull, Variant::V1] {
+            let base = run_experiment(&quick_cfg(7, variant));
+            let mut cfg = quick_cfg(7, variant);
+            cfg.protocol.batch.max_entries = 8; // knobs without the switch
+            cfg.protocol.batch.max_bytes = 1 << 10;
+            cfg.protocol.batch.flush_us = 50;
+            let off = run_experiment(&cfg);
+            assert_eq!(base.messages, off.messages, "{variant:?}");
+            assert_eq!(base.completed, off.completed, "{variant:?}");
+            assert_eq!(base.mean_latency_us, off.mean_latency_us, "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn group_commit_stays_safe_and_live_on_every_variant() {
+        for variant in Variant::ALL {
+            let mut cfg = quick_cfg(5, variant);
+            cfg.protocol.batch.enabled = true;
+            cfg.protocol.batch.flush_us = 500;
+            let report = run_experiment(&cfg);
+            assert!(report.safety_ok, "{variant:?} batched safety");
+            assert!(report.completed > 100, "{variant:?} batched progress");
+            assert_eq!(report.elections, 0, "{variant:?} batched leader stability");
+        }
+    }
+
+    #[test]
+    fn open_loop_sheds_when_the_inflight_cap_binds() {
+        // Offered load far above what two inflight slots can carry: the
+        // surplus must shed at admission, not queue without bound — and
+        // what is admitted must still complete safely.
+        let mut cfg = quick_cfg(5, Variant::Raft);
+        cfg.workload.arrival = crate::config::ArrivalModel::Open;
+        cfg.workload.rate = 5_000.0;
+        cfg.workload.max_inflight = 2;
+        let report = run_experiment(&cfg);
+        assert!(report.safety_ok);
+        assert!(report.completed > 100, "only {} completed", report.completed);
+        assert!(report.shed > 0, "5k/s offered over 2 slots must shed");
+        // Closed-loop runs never shed: admission is client-clocked.
+        let closed = run_experiment(&quick_cfg(5, Variant::Raft));
+        assert_eq!(closed.shed, 0);
+    }
+
+    #[test]
+    fn open_loop_zipfian_batched_runs_are_deterministic() {
+        // The full PR 6 feature stack at once — Poisson arrivals, zipfian
+        // keys, group commit — must stay seed-reproducible and safe on
+        // every variant.
+        for variant in Variant::ALL {
+            let mut cfg = quick_cfg(5, variant);
+            cfg.workload.arrival = crate::config::ArrivalModel::Open;
+            cfg.workload.rate = 800.0;
+            cfg.workload.max_inflight = 16;
+            cfg.workload.key_dist = crate::config::KeyDist::Zipfian;
+            cfg.protocol.batch.enabled = true;
+            let a = run_experiment(&cfg);
+            let b = run_experiment(&cfg);
+            assert!(a.safety_ok, "{variant:?}");
+            assert!(a.completed > 100, "{variant:?}: only {} completed", a.completed);
+            assert_eq!(a.completed, b.completed, "{variant:?}");
+            assert_eq!(a.messages, b.messages, "{variant:?}");
+            assert_eq!(a.shed, b.shed, "{variant:?}");
         }
     }
 

@@ -1,15 +1,29 @@
-//! The Paxi-style benchmark client: `workload.clients` concurrent
-//! closed-loop clients, optionally throttled to an aggregate target rate
-//! ("com ou sem uma taxa de pedidos determinada", §4.1). Each client sends
-//! one request, waits for the reply, then sends the next — no sooner than
-//! its rate-derived period allows.
+//! The benchmark client pool, in two arrival models:
+//!
+//! * **Closed loop** (the paper's Paxi client, §4.1): `workload.clients`
+//!   concurrent clients, optionally throttled to an aggregate target rate
+//!   ("com ou sem uma taxa de pedidos determinada"). Each client sends one
+//!   request, waits for the reply, then sends the next — no sooner than
+//!   its rate-derived period allows. Throughput is gated by client
+//!   round-trips, so the protocol is never pushed past ~clients/latency.
+//! * **Open loop** (`workload.arrival = "open"`): requests arrive by a
+//!   Poisson process at the aggregate `workload.rate`, independent of
+//!   completions. Arrivals are admitted into at most
+//!   `workload.max_inflight` request slots; an arrival that finds every
+//!   slot busy is **shed** (counted in [`Workload::shed`], never queued),
+//!   so an overloaded run degrades gracefully instead of allocating
+//!   without bound. Offered load minus shed load is the served rate —
+//!   the quantity the batching experiments compare.
+//!
+//! Keys are drawn uniformly or with YCSB-style zipfian skew
+//! (`workload.key_dist`, `workload.zipf_theta`).
 
-use crate::config::WorkloadConfig;
+use crate::config::{ArrivalModel, KeyDist, WorkloadConfig};
 use crate::kvstore::Command;
 use crate::raft::{NodeId, RequestId, Time};
 use crate::util::rng::Xoshiro256;
 
-/// One simulated client.
+/// One simulated client (closed loop) or request slot (open loop).
 #[derive(Clone, Debug)]
 pub struct Client {
     pub id: usize,
@@ -25,23 +39,76 @@ pub struct Client {
     pub period_us: u64,
 }
 
-/// Generates commands and manages client pacing.
+/// YCSB-style bounded zipfian sampler (Gray et al., "Quickly Generating
+/// Billion-Record Synthetic Databases"): rank 1 is the hottest key,
+/// probability ∝ 1/rank^θ, θ ∈ (0,1). Constants are precomputed once per
+/// workload (O(keys) at construction, O(1) per sample, one uniform draw).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    zetan: f64,
+    alpha: f64,
+    eta: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, theta: f64) -> Self {
+        debug_assert!(n >= 1);
+        debug_assert!(theta > 0.0 && theta < 1.0);
+        let zeta = |m: u64| -> f64 { (1..=m).map(|i| 1.0 / (i as f64).powf(theta)).sum() };
+        let zetan = zeta(n);
+        let zeta2 = zeta(2.min(n));
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Self { n, theta, zetan, alpha, eta }
+    }
+
+    /// Draw a key in `[0, n)`; key 0 is the hottest.
+    pub fn sample(&self, rng: &mut Xoshiro256) -> u64 {
+        let u = rng.next_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1.min(self.n - 1);
+        }
+        let rank = (self.n as f64 * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64;
+        rank.min(self.n - 1)
+    }
+}
+
+/// Generates commands and manages client pacing/admission.
 #[derive(Debug)]
 pub struct Workload {
     cfg: WorkloadConfig,
     rng: Xoshiro256,
     next_req: RequestId,
     pub clients: Vec<Client>,
+    /// Zipfian sampler, constructed only when `key_dist = "zipfian"` (so
+    /// the uniform path's RNG stream is untouched).
+    zipf: Option<Zipf>,
+    /// Open loop: indices of clients with no request in flight.
+    free_slots: Vec<usize>,
+    /// Open loop: arrivals dropped because every slot was busy.
+    pub shed: u64,
 }
 
 impl Workload {
     pub fn new(cfg: WorkloadConfig, leader: NodeId, mut rng: Xoshiro256) -> Self {
-        let period_us = if cfg.rate > 0.0 {
+        // Open loop sizes the pool by the admission cap: one slot per
+        // admissible in-flight request, paced by arrivals, not replies.
+        let slots = match cfg.arrival {
+            ArrivalModel::Closed => cfg.clients,
+            ArrivalModel::Open => cfg.max_inflight,
+        };
+        let period_us = if cfg.arrival == ArrivalModel::Closed && cfg.rate > 0.0 {
             ((cfg.clients as f64 / cfg.rate) * 1e6).round() as u64
         } else {
             0
         };
-        let clients = (0..cfg.clients)
+        let clients = (0..slots)
             .map(|id| {
                 // Stagger first sends across one period to avoid lockstep.
                 let jitter = if period_us > 0 { rng.next_below(period_us.max(1)) } else { 0 };
@@ -55,24 +122,61 @@ impl Workload {
                 }
             })
             .collect();
-        Self { cfg, rng, next_req: 0, clients }
+        let zipf = match cfg.key_dist {
+            KeyDist::Uniform => None,
+            KeyDist::Zipfian => Some(Zipf::new(cfg.keys.max(1), cfg.zipf_theta)),
+        };
+        // Pop order ascending: slot 0 admits the first arrival.
+        let free_slots = match cfg.arrival {
+            ArrivalModel::Closed => Vec::new(),
+            ArrivalModel::Open => (0..slots).rev().collect(),
+        };
+        Self { cfg, rng, next_req: 0, clients, zipf, free_slots, shed: 0 }
     }
 
-    /// Fresh request id (request ids are globally unique; the low bits
-    /// carry the client id so replies route back).
+    /// True when arrivals are Poisson-paced rather than reply-paced.
+    pub fn is_open(&self) -> bool {
+        self.cfg.arrival == ArrivalModel::Open
+    }
+
+    /// Draw the next Poisson inter-arrival gap (µs, open loop).
+    pub fn next_interarrival_us(&mut self) -> Time {
+        debug_assert!(self.cfg.rate > 0.0, "open arrivals need a positive rate");
+        (self.rng.next_exp(1e6 / self.cfg.rate).round() as Time).max(1)
+    }
+
+    /// Admit one open-loop arrival: a free slot index, or `None` when the
+    /// admission cap is reached (the caller sheds the arrival).
+    pub fn take_slot(&mut self) -> Option<usize> {
+        self.free_slots.pop()
+    }
+
+    /// An open-loop request completed: its slot may admit a new arrival.
+    pub fn release_slot(&mut self, client: usize) {
+        debug_assert!(self.is_open());
+        self.free_slots.push(client);
+    }
+
+    /// Fresh request id (request ids are globally unique; the low 32 bits
+    /// carry the client id so replies route back — `workload.clients` and
+    /// `workload.max_inflight` are validated to fit at config load).
     pub fn fresh_request(&mut self, client: usize) -> RequestId {
+        debug_assert!(client <= u32::MAX as usize);
         self.next_req += 1;
-        (self.next_req << 16) | client as RequestId
+        (self.next_req << 32) | client as RequestId
     }
 
     /// Which client does a request id belong to?
     pub fn client_of(req: RequestId) -> usize {
-        (req & 0xFFFF) as usize
+        (req & 0xFFFF_FFFF) as usize
     }
 
-    /// Draw the next command per the configured read/write mix.
+    /// Draw the next command per the configured key/read-write mix.
     pub fn next_command(&mut self) -> Command {
-        let key = self.rng.next_below(self.cfg.keys.max(1));
+        let key = match &self.zipf {
+            Some(z) => z.sample(&mut self.rng),
+            None => self.rng.next_below(self.cfg.keys.max(1)),
+        };
         if self.rng.next_f64() < self.cfg.write_fraction {
             Command::Put { key, value: self.rng.next_u64() }
         } else {
@@ -94,6 +198,16 @@ mod tests {
         Workload::new(cfg, 0, Xoshiro256::seed_from_u64(9))
     }
 
+    fn open_wl(rate: f64, max_inflight: usize) -> Workload {
+        let cfg = WorkloadConfig {
+            arrival: ArrivalModel::Open,
+            rate,
+            max_inflight,
+            ..Default::default()
+        };
+        Workload::new(cfg, 0, Xoshiro256::seed_from_u64(9))
+    }
+
     #[test]
     fn request_ids_route_back_to_clients() {
         let mut w = wl(100, 0.0);
@@ -105,6 +219,18 @@ mod tests {
         let a = w.fresh_request(3);
         let b = w.fresh_request(3);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn request_ids_survive_client_pools_past_the_old_16_bit_split() {
+        // The original packing kept the client id in 16 bits, so client
+        // 65536 aliased client 0 and replies were misrouted. The split is
+        // 32 bits wide now.
+        let mut w = wl(10, 0.0);
+        for c in [65_535usize, 65_536, 70_000, u32::MAX as usize] {
+            let req = w.fresh_request(c);
+            assert_eq!(Workload::client_of(req), c, "client {c} must round-trip");
+        }
     }
 
     #[test]
@@ -122,6 +248,41 @@ mod tests {
     #[test]
     fn unthrottled_clients_start_immediately() {
         let w = wl(10, 0.0);
+        assert!(w.clients.iter().all(|c| c.period_us == 0 && c.next_allowed == 0));
+    }
+
+    #[test]
+    fn open_arrival_interarrivals_match_the_poisson_rate() {
+        // 10_000 req/s → 100 µs mean gap; the exponential sample mean must
+        // land close over many draws.
+        let mut w = open_wl(10_000.0, 64);
+        assert!(w.is_open());
+        let n = 20_000;
+        let mean =
+            (0..n).map(|_| w.next_interarrival_us()).sum::<u64>() as f64 / n as f64;
+        assert!((mean - 100.0).abs() < 3.0, "interarrival mean {mean} µs, want ~100");
+    }
+
+    #[test]
+    fn open_arrival_slots_admit_up_to_the_cap_then_shed() {
+        let mut w = open_wl(1000.0, 3);
+        assert_eq!(w.clients.len(), 3, "open pool is sized by max_inflight");
+        // Admissions hand out each slot once...
+        let taken: Vec<usize> = (0..3).map(|_| w.take_slot().unwrap()).collect();
+        assert_eq!(taken, vec![0, 1, 2]);
+        // ...then the cap binds (the runner counts the shed arrival).
+        assert!(w.take_slot().is_none(), "cap reached: arrival must shed");
+        // A completion re-opens exactly one slot.
+        w.release_slot(1);
+        assert_eq!(w.take_slot(), Some(1));
+        assert!(w.take_slot().is_none());
+    }
+
+    #[test]
+    fn open_clients_are_unthrottled_slots() {
+        // Open-loop pacing lives in the arrival process, not the per-slot
+        // period: slots must be ready to fire the moment they are taken.
+        let w = open_wl(5000.0, 8);
         assert!(w.clients.iter().all(|c| c.period_us == 0 && c.next_allowed == 0));
     }
 
@@ -146,5 +307,44 @@ mod tests {
                 _ => unreachable!(),
             }
         }
+    }
+
+    #[test]
+    fn zipfian_keys_stay_in_range_and_skew_hot() {
+        let cfg = WorkloadConfig {
+            keys: 100,
+            write_fraction: 1.0,
+            key_dist: KeyDist::Zipfian,
+            zipf_theta: 0.99,
+            ..Default::default()
+        };
+        let mut w = Workload::new(cfg, 0, Xoshiro256::seed_from_u64(7));
+        let mut counts = [0u32; 100];
+        for _ in 0..20_000 {
+            match w.next_command() {
+                Command::Put { key, .. } => {
+                    assert!(key < 100);
+                    counts[key as usize] += 1;
+                }
+                _ => unreachable!(),
+            }
+        }
+        // θ = 0.99 over 100 keys: the hottest key draws a bit under 1/5 of
+        // the mass; the uniform share would be 1%.
+        assert!(counts[0] > 2_000, "hot key share {} too uniform", counts[0]);
+        assert!(counts[0] > 10 * counts[50].max(1), "head must dominate the tail");
+        // And every key remains reachable in a long run.
+        let covered = counts.iter().filter(|&&c| c > 0).count();
+        assert!(covered > 80, "only {covered}/100 keys ever drawn");
+    }
+
+    #[test]
+    fn zipf_theta_controls_the_skew() {
+        let hot_share = |theta: f64| -> u32 {
+            let z = Zipf::new(1000, theta);
+            let mut rng = Xoshiro256::seed_from_u64(11);
+            (0..10_000).filter(|_| z.sample(&mut rng) == 0).count() as u32
+        };
+        assert!(hot_share(0.99) > hot_share(0.5) + 200, "higher θ must concentrate mass");
     }
 }

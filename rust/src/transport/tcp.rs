@@ -46,6 +46,11 @@ pub const RECONNECT_MAX: Duration = Duration::from_millis(1_000);
 /// kernel's multi-minute retry window.
 pub const CONNECT_TIMEOUT: Duration = Duration::from_millis(1_000);
 
+/// Most frames a writer coalesces into one `write_all`. Bounds the reused
+/// encode buffer on a deep outbox; at the default outbox depth the whole
+/// backlog fits in one wakeup.
+pub const MAX_COALESCED_FRAMES: u64 = 128;
+
 /// Reader threads, registered by the accept loop and joined on shutdown
 /// (finished handles are pruned as new connections arrive).
 type ReaderRegistry = Arc<Mutex<Vec<thread::JoinHandle<()>>>>;
@@ -127,9 +132,29 @@ pub struct TransportStats {
     pub boundary_drops: AtomicU64,
     pub frames_in: AtomicU64,
     pub frames_out: AtomicU64,
+    /// Bytes written per peer link (outbound, post-coalescing; indexed by
+    /// peer id, our own slot stays 0). Sized by [`TransportStats::for_peers`];
+    /// empty under `Default` (unit tests that never touch a socket).
+    pub egress_bytes: Vec<AtomicU64>,
 }
 
 impl TransportStats {
+    /// A stats block sized for an `n`-replica cluster, with one egress
+    /// counter per peer link.
+    pub fn for_peers(n: usize) -> Self {
+        Self { egress_bytes: (0..n).map(|_| AtomicU64::new(0)).collect(), ..Self::default() }
+    }
+
+    /// Bytes written toward `peer` (0 if unsized or never connected).
+    pub fn egress_bytes_to(&self, peer: NodeId) -> u64 {
+        self.egress_bytes.get(peer).map_or(0, |e| e.load(Ordering::Relaxed))
+    }
+
+    /// Total bytes written across all peer links.
+    pub fn egress_bytes_total(&self) -> u64 {
+        self.egress_bytes.iter().map(|e| e.load(Ordering::Relaxed)).sum()
+    }
+
     pub fn reconnects(&self) -> u64 {
         self.reconnects.load(Ordering::Relaxed)
     }
@@ -217,7 +242,7 @@ impl TcpEndpoint {
         on_peer_down: Arc<dyn Fn(NodeId) + Send + Sync>,
     ) -> std::io::Result<TcpEndpoint> {
         let local_addr = listener.local_addr()?;
-        let stats = Arc::new(TransportStats::default());
+        let stats = Arc::new(TransportStats::for_peers(table.len()));
         let shutdown = Arc::new(AtomicBool::new(false));
         let conns: Arc<ConnRegistry> = Arc::new(ConnRegistry::default());
         let reader_joins: ReaderRegistry = Arc::new(Mutex::new(Vec::new()));
@@ -435,14 +460,31 @@ fn writer_loop(
             };
             buf.clear();
             codec::encode(&msg, &mut buf);
+            let mut frames = 1u64;
+            // Coalesce: drain whatever else already sits in the outbox
+            // into the same buffer — one syscall per wakeup, not one per
+            // message. Under load the backlog rides a single segment
+            // train instead of per-frame small writes.
+            while frames < MAX_COALESCED_FRAMES {
+                match rx.try_recv() {
+                    Ok(m) => {
+                        codec::encode(&m, &mut buf);
+                        frames += 1;
+                    }
+                    Err(_) => break,
+                }
+            }
             if stream.write_all(&buf).is_err() {
-                // The message is lost with the connection — the protocol's
+                // The batch is lost with the connection — the protocol's
                 // retransmission/repair path recovers, same as sim loss.
                 on_peer_down(peer);
                 conns.unregister(token);
                 break;
             }
-            stats.frames_out.fetch_add(1, Ordering::Relaxed);
+            stats.frames_out.fetch_add(frames, Ordering::Relaxed);
+            if let Some(e) = stats.egress_bytes.get(peer) {
+                e.fetch_add(buf.len() as u64, Ordering::Relaxed);
+            }
         }
     }
 }
@@ -460,6 +502,19 @@ mod tests {
         assert!(!t.is_empty());
         assert_eq!(t.addr(0), a);
         assert_eq!(t.addr(1), b);
+    }
+
+    #[test]
+    fn stats_sized_for_peers_account_egress() {
+        let stats = TransportStats::for_peers(3);
+        assert_eq!(stats.egress_bytes.len(), 3);
+        stats.egress_bytes[1].fetch_add(10, Ordering::Relaxed);
+        stats.egress_bytes[2].fetch_add(5, Ordering::Relaxed);
+        assert_eq!(stats.egress_bytes_to(1), 10);
+        assert_eq!(stats.egress_bytes_to(9), 0); // out of range reads 0
+        assert_eq!(stats.egress_bytes_total(), 15);
+        // `Default` stays unsized for socket-free unit contexts.
+        assert_eq!(TransportStats::default().egress_bytes_total(), 0);
     }
 
     #[test]

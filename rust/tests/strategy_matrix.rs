@@ -24,18 +24,29 @@ use std::collections::VecDeque;
 // Simulator matrix: one scenario, every variant, same invariants.
 // ---------------------------------------------------------------------------
 
-fn sim_scenario(adaptive: bool) {
+fn sim_scenario(adaptive: bool, batched: bool) {
     for variant in Variant::ALL {
         let mut cfg = Config::default();
         cfg.protocol.n = 7;
         cfg.protocol.variant = variant;
         cfg.protocol.adaptive.enabled = adaptive;
+        if batched {
+            // PR 6 group commit: short flush so batches actually cycle at
+            // this scenario's rate, small cap so the size trigger fires too.
+            cfg.protocol.batch.enabled = true;
+            cfg.protocol.batch.flush_us = 500;
+            cfg.protocol.batch.max_entries = 16;
+        }
         cfg.workload.clients = 10;
         cfg.workload.duration_us = 2_500_000;
         cfg.workload.warmup_us = 300_000;
         cfg.seed = 0xA11CE;
         let report = run_experiment(&cfg);
-        let tag = if adaptive { "adaptive" } else { "fixed" };
+        let tag = match (adaptive, batched) {
+            (true, _) => "adaptive",
+            (_, true) => "batched",
+            _ => "fixed",
+        };
         assert!(report.safety_ok, "{variant:?}/{tag}: committed prefixes diverged");
         assert!(
             report.completed > 50,
@@ -49,12 +60,17 @@ fn sim_scenario(adaptive: bool) {
 
 #[test]
 fn every_variant_passes_the_same_sim_scenario() {
-    sim_scenario(false);
+    sim_scenario(false, false);
 }
 
 #[test]
 fn every_variant_passes_the_same_sim_scenario_with_adaptive_fanout() {
-    sim_scenario(true);
+    sim_scenario(true, false);
+}
+
+#[test]
+fn every_variant_passes_the_same_sim_scenario_with_group_commit() {
+    sim_scenario(false, true);
 }
 
 // ---------------------------------------------------------------------------

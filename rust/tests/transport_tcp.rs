@@ -83,6 +83,56 @@ fn writer_reconnects_after_connection_drop() {
     ep.shutdown();
 }
 
+/// A burst of frames through one writer: whatever coalescing the writer
+/// applies, the byte stream must decode back into exactly the frames
+/// sent, `frames_out` must count every frame (not every syscall), and the
+/// per-peer egress counter must equal the encoded bytes on the wire.
+#[test]
+fn coalesced_writer_preserves_frames_and_accounts_egress() {
+    let l0 = TcpListener::bind(("127.0.0.1", 0)).expect("bind endpoint listener");
+    let l1 = TcpListener::bind(("127.0.0.1", 0)).expect("bind remote listener");
+    let table =
+        PeerTable::new(vec![l0.local_addr().unwrap(), l1.local_addr().unwrap()]);
+    let ep = TcpEndpoint::start(
+        0,
+        l0,
+        &table,
+        256,
+        Arc::new(|_msg: Message| {}),
+        Arc::new(|_peer: usize| {}),
+    )
+    .expect("endpoint start");
+    let sender = ep.sender(1);
+    const K: u64 = 40;
+    for term in 1..=K {
+        sender.send(probe(term));
+    }
+    let (conn, _) = l1.accept().expect("connection");
+    let mut r = BufReader::new(conn);
+    let mut wire_bytes = 0u64;
+    for term in 1..=K {
+        let msg = codec::read_frame(&mut r).expect("frame").expect("stream open");
+        assert_eq!(msg, probe(term), "frame order/content must survive coalescing");
+        let mut buf = Vec::new();
+        codec::encode(&msg, &mut buf);
+        wire_bytes += buf.len() as u64;
+    }
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while ep.stats().frames_out() < K && Instant::now() < deadline {
+        thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(ep.stats().frames_out(), K, "every frame counted");
+    assert_eq!(
+        ep.stats().egress_bytes_to(1),
+        wire_bytes,
+        "per-peer egress must equal the encoded bytes"
+    );
+    assert_eq!(ep.stats().egress_bytes_total(), wire_bytes);
+    drop(sender);
+    drop(r);
+    ep.shutdown();
+}
+
 fn tcp_cfg(variant: Variant, n: usize, duration_us: u64) -> Config {
     let mut cfg = Config::default();
     cfg.protocol.n = n;
@@ -105,6 +155,11 @@ fn tcp_cluster_quick_smoke() {
     assert!(report.logs_consistent, "log divergence over TCP");
     assert_eq!(report.transport, "tcp");
     assert!(report.render().contains("transport: tcp"));
+    // The per-peer egress counters feed the leader-vs-peer split: the
+    // leader replicated entries, the followers at least acked.
+    assert!(report.leader_egress_bytes > 0, "leader endpoint wrote no bytes");
+    assert!(report.peer_egress_bytes_total > 0, "peer endpoints wrote no bytes");
+    assert!(report.render().contains("egress: leader="));
 }
 
 /// The ISSUE's fault scenario: kill one replica's connections mid-run;
