@@ -10,8 +10,10 @@
 //! epiraft bench-pr3  [--quick] [--n N] [--rate R] [--seed S] [--out FILE]
 //! epiraft bench-pr4  [--quick] [--n N] [--k K] [--rate R] [--seed S] [--out FILE]
 //! epiraft bench-pr6  [--quick] [--n N] [--tcp-n N] [--seed S] [--out FILE]
+//! epiraft bench-pr7  [--quick] [--n N] [--seed S] [--out FILE]
 //! epiraft live       [--variant v] [--n N] [--clients C] [--secs S]
 //!                    [--transport {mpsc|tcp}] [--node-id I]
+//!                    [--kill-at US] [--kill-node I] [--restart-after US]
 //! epiraft artifacts-check [--dir artifacts]
 //! epiraft config-dump
 //! ```
@@ -116,6 +118,15 @@ impl Cli {
         if let Some(id) = self.get("node-id") {
             cfg.set("cluster.node_id", id)?;
         }
+        if let Some(at) = self.get("kill-at") {
+            cfg.set("cluster.kill_at_us", at)?;
+        }
+        if let Some(victim) = self.get("kill-node") {
+            cfg.set("cluster.kill_node", victim)?;
+        }
+        if let Some(back) = self.get("restart-after") {
+            cfg.set("cluster.restart_after_us", back)?;
+        }
         for (k, v) in &self.options {
             if k == "set" {
                 let v = v.as_deref().ok_or("--set expects key=value")?;
@@ -171,15 +182,28 @@ USAGE:
       unless every batched cell completes strictly more requests than its
       unbatched twin at a client p99 within 1.5x.
 
+  epiraft bench-pr7 [--quick] [--n N] [--seed S] [--out FILE]
+      Durability suite ({raft, pull} x kill-and-restart, snapshot catch-up
+      vs tail replay, fsync=batch vs never; default n=51); writes
+      BENCH_PR7.json and fails unless every killed replica's committed
+      prefix survives recovery, snapshot catch-up moves strictly fewer
+      leader-egress bytes than tail replay, and fsync=batch completes
+      within 1.3x of fsync=never.
+
   epiraft live [--variant v] [--n N] [--clients C] [--secs S]
                [--transport mpsc|tcp] [--node-id I]
+               [--kill-at US] [--kill-node I] [--restart-after US]
       Run the live thread-per-replica cluster (real time). The default
       mpsc transport moves messages over in-process channels; --transport
       tcp puts every replica-to-replica message through the binary codec
       and real sockets (loopback by default; [cluster.peers] in a config
       file for multi-host addresses). --node-id I runs only replica I in
       this process (multi-process mode; requires tcp + a full peer table;
-      clients are driven from replica 0's process).
+      clients are driven from replica 0's process). --kill-at US kills
+      replica --kill-node (default 0) after US microseconds, losing all
+      its volatile state, and restarts it from its [storage] backend
+      --restart-after US later (default 500000) — e.g.
+      `epiraft live --config configs/durable.toml --transport tcp --kill-at 2000000`.
 
   epiraft fleet [--n N] [--backend native|hlo] [--seed S]
       Convergence study of the V2 commit structures (rounds vs fanout),
@@ -256,6 +280,18 @@ mod tests {
         assert!(parse("live --transport carrier-pigeon").build_config().is_err());
         // --node-id without tcp/peers fails validation, not parsing.
         assert!(parse("live --node-id 0").build_config().is_err());
+    }
+
+    #[test]
+    fn kill_flags_flow_into_cluster_config() {
+        let cfg = parse("live --n 5 --kill-at 2000000 --kill-node 2 --restart-after 750000")
+            .build_config()
+            .unwrap();
+        assert_eq!(cfg.cluster.kill_at_us, 2_000_000);
+        assert_eq!(cfg.cluster.kill_node, 2);
+        assert_eq!(cfg.cluster.restart_after_us, 750_000);
+        // kill_node must name a replica.
+        assert!(parse("live --n 5 --kill-at 1000 --kill-node 9").build_config().is_err());
     }
 
     #[test]

@@ -57,6 +57,8 @@ pub struct ProtocolConfig {
     pub unreliable: UnreliableConfig,
     /// Leader group commit (`[protocol.batch]`) — see DESIGN.md §3.4.
     pub batch: BatchConfig,
+    /// Durability subsystem (`[storage]`) — see DESIGN.md §6.
+    pub storage: StorageConfig,
 }
 
 /// Ceiling on entries any single wire batch may carry: the TCP transport
@@ -119,6 +121,89 @@ impl BatchConfig {
         }
         if self.flush_us == 0 {
             return Err("protocol.batch.flush_us must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// When a [`WalStorage`] issues its write barriers (`storage.fsync`).
+///
+/// [`WalStorage`]: crate::storage::WalStorage
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncMode {
+    /// Barrier after every mutation (safest, slowest).
+    Always,
+    /// Barrier once per group-commit flush boundary (`Storage::sync`) —
+    /// the durability/throughput trade DESIGN.md §6 argues for.
+    Batch,
+    /// Never barrier; the OS flushes when it pleases. Data survives a
+    /// process kill but not a host crash.
+    Never,
+}
+
+impl FsyncMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            FsyncMode::Always => "always",
+            FsyncMode::Batch => "batch",
+            FsyncMode::Never => "never",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FsyncMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "always" | "every" => Some(FsyncMode::Always),
+            "batch" | "group" => Some(FsyncMode::Batch),
+            "never" | "off" => Some(FsyncMode::Never),
+            _ => None,
+        }
+    }
+}
+
+/// `[storage]` — the durability subsystem (DESIGN.md §6): backend
+/// selection, fsync policy, and the snapshot/compaction schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StorageConfig {
+    /// WAL directory; each replica persists under `dir/node-<id>/`.
+    /// Empty (default) = in-memory storage (bit-identical to the
+    /// pre-subsystem behaviour; the simulator's default).
+    pub dir: String,
+    /// When write barriers are issued (in-memory storage counts them
+    /// virtually so the simulator can charge `cost.fsync_us`).
+    pub fsync: FsyncMode,
+    /// Take a state-machine snapshot every this many applied entries;
+    /// 0 (default) disables snapshots and compaction entirely.
+    pub snapshot_interval_entries: u64,
+    /// Entries to keep below the snapshot when compacting, so
+    /// slightly-behind peers are repaired by cheap tail replay instead of
+    /// a full snapshot transfer.
+    pub retain_entries: u64,
+}
+
+impl Default for StorageConfig {
+    fn default() -> Self {
+        Self {
+            dir: String::new(),
+            fsync: FsyncMode::Never,
+            snapshot_interval_entries: 0,
+            retain_entries: 1024,
+        }
+    }
+}
+
+impl StorageConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.snapshot_interval_entries > 0
+            && self.retain_entries < self.snapshot_interval_entries
+        {
+            // A retain margin narrower than the snapshot interval would
+            // compact entries that peers one round behind still need,
+            // forcing a snapshot transfer per interval — reject the
+            // contradiction instead of silently thrashing.
+            return Err(format!(
+                "storage.retain_entries ({}) must be >= storage.snapshot_interval_entries ({})",
+                self.retain_entries, self.snapshot_interval_entries
+            ));
         }
         Ok(())
     }
@@ -256,6 +341,7 @@ impl Default for ProtocolConfig {
             adaptive: AdaptiveConfig::default(),
             unreliable: UnreliableConfig::default(),
             batch: BatchConfig::default(),
+            storage: StorageConfig::default(),
         }
     }
 }
@@ -312,6 +398,7 @@ impl ProtocolConfig {
         self.adaptive.validate()?;
         self.unreliable.validate(self.n)?;
         self.batch.validate()?;
+        self.storage.validate()?;
         if self.adaptive.enabled
             && self.variant.is_gossip()
             && self.adaptive.fanout_max < crate::raft::strategy::disseminate::GOSSIP_FLOOR
@@ -388,6 +475,14 @@ pub struct ClusterConfig {
     /// this. Default off.
     pub kill_link_at_us: u64,
     pub kill_link_node: usize,
+    /// Fault injection: `kill_at_us > 0` kills replica `kill_node` once,
+    /// that long after start — its volatile state is dropped and it
+    /// recovers from its `[storage]` backend in place (the live half of
+    /// the kill-and-restart recipe; EXPERIMENTS.md §Recovery). The replica
+    /// restarts after `restart_after_us`. Default off.
+    pub kill_at_us: u64,
+    pub kill_node: usize,
+    pub restart_after_us: u64,
 }
 
 impl Default for ClusterConfig {
@@ -399,6 +494,9 @@ impl Default for ClusterConfig {
             outbox: 1024,
             kill_link_at_us: 0,
             kill_link_node: 0,
+            kill_at_us: 0,
+            kill_node: 0,
+            restart_after_us: 500_000,
         }
     }
 }
@@ -442,6 +540,17 @@ impl ClusterConfig {
                 "cluster.kill_link_node {} out of range for n={n}",
                 self.kill_link_node
             ));
+        }
+        if self.kill_at_us > 0 {
+            if self.kill_node >= n {
+                return Err(format!(
+                    "cluster.kill_node {} out of range for n={n}",
+                    self.kill_node
+                ));
+            }
+            if self.restart_after_us == 0 {
+                return Err("cluster.restart_after_us must be >= 1".into());
+            }
         }
         Ok(())
     }
@@ -557,6 +666,10 @@ pub struct CostConfig {
     pub merge_us: f64,
     /// Cost of a timer fire / internal tick.
     pub tick_us: f64,
+    /// Cost of one storage write barrier (virtual fsync). 0.0 (default)
+    /// keeps the simulator bit-identical to the pre-durability behaviour;
+    /// the recovery bench charges ~200 µs (a datacenter-SSD fsync).
+    pub fsync_us: f64,
 }
 
 impl Default for CostConfig {
@@ -571,6 +684,7 @@ impl Default for CostConfig {
             entry_apply_us: 0.8,
             merge_us: 2.5,
             tick_us: 1.0,
+            fsync_us: 0.0,
         }
     }
 }
@@ -851,6 +965,16 @@ impl Config {
             }
             "protocol.batch.max_bytes" => self.protocol.batch.max_bytes = parse_u64(v)?,
             "protocol.batch.flush_us" => self.protocol.batch.flush_us = parse_u64(v)?,
+            "storage.dir" => self.protocol.storage.dir = v.to_string(),
+            "storage.fsync" => {
+                self.protocol.storage.fsync = FsyncMode::parse(v).ok_or_else(|| {
+                    format!("unknown fsync mode {v} (want always, batch or never)")
+                })?
+            }
+            "storage.snapshot_interval_entries" => {
+                self.protocol.storage.snapshot_interval_entries = parse_u64(v)?
+            }
+            "storage.retain_entries" => self.protocol.storage.retain_entries = parse_u64(v)?,
             "cluster.transport" => {
                 self.cluster.transport = TransportKind::parse(v)
                     .ok_or_else(|| format!("unknown transport {v} (want mpsc or tcp)"))?
@@ -859,6 +983,9 @@ impl Config {
             "cluster.outbox" => self.cluster.outbox = parse_u64(v)? as usize,
             "cluster.kill_link_at_us" => self.cluster.kill_link_at_us = parse_u64(v)?,
             "cluster.kill_link_node" => self.cluster.kill_link_node = parse_u64(v)? as usize,
+            "cluster.kill_at_us" => self.cluster.kill_at_us = parse_u64(v)?,
+            "cluster.kill_node" => self.cluster.kill_node = parse_u64(v)? as usize,
+            "cluster.restart_after_us" => self.cluster.restart_after_us = parse_u64(v)?,
             "network.latency_mean_us" => self.network.latency_mean_us = parse_f64(v)?,
             "network.latency_stddev_us" => self.network.latency_stddev_us = parse_f64(v)?,
             "network.latency_min_us" => self.network.latency_min_us = parse_u64(v)?,
@@ -877,6 +1004,7 @@ impl Config {
             "cost.entry_apply_us" => self.cost.entry_apply_us = parse_f64(v)?,
             "cost.merge_us" => self.cost.merge_us = parse_f64(v)?,
             "cost.tick_us" => self.cost.tick_us = parse_f64(v)?,
+            "cost.fsync_us" => self.cost.fsync_us = parse_f64(v)?,
             "workload.clients" => self.workload.clients = parse_u64(v)? as usize,
             "workload.rate" => self.workload.rate = parse_f64(v)?,
             "workload.arrival" => {
@@ -1028,10 +1156,20 @@ pub fn dump(cfg: &Config) -> BTreeMap<String, String> {
     m.insert("protocol.batch.max_entries".into(), p.batch.max_entries.to_string());
     m.insert("protocol.batch.max_bytes".into(), p.batch.max_bytes.to_string());
     m.insert("protocol.batch.flush_us".into(), p.batch.flush_us.to_string());
+    m.insert("storage.dir".into(), format!("\"{}\"", p.storage.dir));
+    m.insert("storage.fsync".into(), p.storage.fsync.name().into());
+    m.insert(
+        "storage.snapshot_interval_entries".into(),
+        p.storage.snapshot_interval_entries.to_string(),
+    );
+    m.insert("storage.retain_entries".into(), p.storage.retain_entries.to_string());
     m.insert("cluster.transport".into(), cfg.cluster.transport.name().into());
     m.insert("cluster.outbox".into(), cfg.cluster.outbox.to_string());
     m.insert("cluster.kill_link_at_us".into(), cfg.cluster.kill_link_at_us.to_string());
     m.insert("cluster.kill_link_node".into(), cfg.cluster.kill_link_node.to_string());
+    m.insert("cluster.kill_at_us".into(), cfg.cluster.kill_at_us.to_string());
+    m.insert("cluster.kill_node".into(), cfg.cluster.kill_node.to_string());
+    m.insert("cluster.restart_after_us".into(), cfg.cluster.restart_after_us.to_string());
     if let Some(id) = cfg.cluster.node_id {
         m.insert("cluster.node_id".into(), id.to_string());
     }
@@ -1059,6 +1197,7 @@ pub fn dump(cfg: &Config) -> BTreeMap<String, String> {
     m.insert("cost.entry_apply_us".into(), cfg.cost.entry_apply_us.to_string());
     m.insert("cost.merge_us".into(), cfg.cost.merge_us.to_string());
     m.insert("cost.tick_us".into(), cfg.cost.tick_us.to_string());
+    m.insert("cost.fsync_us".into(), cfg.cost.fsync_us.to_string());
     m.insert("workload.clients".into(), cfg.workload.clients.to_string());
     m.insert("workload.rate".into(), cfg.workload.rate.to_string());
     m.insert("workload.arrival".into(), cfg.workload.arrival.name().into());
@@ -1492,6 +1631,65 @@ rate = 2500.5
         cfg.set("cluster.kill_link_at_us", "1000").unwrap();
         cfg.set("cluster.kill_link_node", "7").unwrap();
         assert!(cfg.validate().is_err(), "kill target beyond n must be rejected");
+    }
+
+    #[test]
+    fn storage_keys_parse_validate_and_roundtrip() {
+        let cfg = Config::from_toml(
+            "[storage]\ndir = \"data\"\nfsync = \"batch\"\nsnapshot_interval_entries = 1000\nretain_entries = 2048\n",
+        )
+        .unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.protocol.storage.dir, "data");
+        assert_eq!(cfg.protocol.storage.fsync, FsyncMode::Batch);
+        assert_eq!(cfg.protocol.storage.snapshot_interval_entries, 1000);
+        assert_eq!(cfg.protocol.storage.retain_entries, 2048);
+        // Dump/set round-trips the section (dir stays quoted in the dump).
+        let dumped = dump(&cfg);
+        assert_eq!(dumped.get("storage.dir").map(String::as_str), Some("\"data\""));
+        assert_eq!(dumped.get("storage.fsync").map(String::as_str), Some("batch"));
+        let mut rebuilt = Config::default();
+        for (k, v) in &dumped {
+            rebuilt.set(k, v).unwrap();
+        }
+        assert_eq!(rebuilt.protocol.storage, cfg.protocol.storage);
+        // Unknown fsync modes are rejected at set time.
+        let mut cfg = Config::default();
+        assert!(cfg.set("storage.fsync", "sometimes").is_err());
+        // A retain margin narrower than the snapshot interval thrashes
+        // snapshot transfers — rejected while snapshots are enabled,
+        // irrelevant while they are off.
+        let mut cfg = Config::default();
+        cfg.set("storage.snapshot_interval_entries", "1000").unwrap();
+        cfg.set("storage.retain_entries", "100").unwrap();
+        assert!(cfg.validate().is_err(), "retain < interval must be rejected");
+        cfg.set("storage.snapshot_interval_entries", "0").unwrap();
+        cfg.validate().unwrap();
+        cfg.set("storage.snapshot_interval_entries", "100").unwrap();
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn kill_restart_keys_parse_and_validate() {
+        let mut cfg = Config::default();
+        cfg.set("cluster.kill_at_us", "2000000").unwrap();
+        cfg.set("cluster.kill_node", "2").unwrap();
+        cfg.set("cluster.restart_after_us", "750000").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.cluster.kill_at_us, 2_000_000);
+        assert_eq!(cfg.cluster.kill_node, 2);
+        assert_eq!(cfg.cluster.restart_after_us, 750_000);
+        // Out-of-range kill target and zero restart delay are rejected.
+        cfg.set("cluster.kill_node", "9").unwrap();
+        assert!(cfg.validate().is_err(), "kill_node beyond n must be rejected");
+        let mut cfg = Config::default();
+        cfg.set("cluster.kill_at_us", "1000").unwrap();
+        cfg.set("cluster.restart_after_us", "0").unwrap();
+        assert!(cfg.validate().is_err(), "zero restart delay must be rejected");
+        // cost.fsync_us parses as a float.
+        let mut cfg = Config::default();
+        cfg.set("cost.fsync_us", "200.0").unwrap();
+        assert_eq!(cfg.cost.fsync_us, 200.0);
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! PR 7 measurement plumbing: the durability subsystem's three claims,
+//! measured deterministically in the simulator.
+//!
+//! This is the scenario behind `epiraft bench-pr7`, the committed
+//! `BENCH_PR7.json`, and CI's `bench-smoke` gate:
+//!
+//! 1. **Kill-and-restart safety** — `{raft, pull}` at the paper's n=51:
+//!    a follower is killed mid-run (volatile state dropped), restarts
+//!    from its `Storage`, and nothing committed before the kill may be
+//!    lost (`SimReport::recovery_ok`).
+//! 2. **Snapshot catch-up** — a follower paused long enough to fall past
+//!    the leader's compaction horizon is caught up via `InstallSnapshot`;
+//!    the leader's egress must come in *strictly below* the same scenario
+//!    replayed entry-by-entry with snapshots disabled.
+//! 3. **Fsync batching** — with a realistic barrier price
+//!    (`cost.fsync_us`), `fsync = batch` under group commit must complete
+//!    within 1.3x of `fsync = never` on an open-loop workload.
+
+use super::figures::Scale;
+use crate::config::{ArrivalModel, Config, FsyncMode};
+use crate::raft::Variant;
+use crate::sim::{run_with_faults, FaultSchedule, SimReport};
+use crate::util::json::Json;
+
+/// Closed-loop rate for the kill/restart cells.
+const KILL_RATE: f64 = 300.0;
+/// Closed-loop rate for the catch-up cells — high enough that the paused
+/// follower misses more entries than the retain margin keeps.
+const CATCHUP_RATE: f64 = 800.0;
+/// Snapshot cadence and retain margin for the catch-up cells.
+const CATCHUP_INTERVAL: u64 = 500;
+/// Open-loop offered rate for the fsync cells.
+const FSYNC_RATE: f64 = 2_000.0;
+/// Simulated barrier price for the fsync cells (µs, commodity SSD).
+const FSYNC_US: f64 = 200.0;
+
+/// One durability cell's measurements.
+#[derive(Clone, Debug)]
+pub struct RecoveryPoint {
+    /// Cell label: `kill/<variant>`, `catchup/{snapshot,replay}`,
+    /// `fsync/{batch,never}`.
+    pub cell: String,
+    pub variant: &'static str,
+    pub completed: u64,
+    pub throughput: f64,
+    pub max_commit: u64,
+    pub min_commit: u64,
+    pub leader_egress_bytes: u64,
+    pub fsyncs: u64,
+    pub snapshots_taken: u64,
+    pub snapshots_installed: u64,
+    pub safety_ok: bool,
+    pub recovery_ok: bool,
+    pub elections: u64,
+}
+
+impl RecoveryPoint {
+    fn from_report(cell: String, r: &SimReport) -> RecoveryPoint {
+        RecoveryPoint {
+            cell,
+            variant: r.variant,
+            completed: r.completed,
+            throughput: r.throughput,
+            max_commit: r.max_commit,
+            min_commit: r.min_commit,
+            leader_egress_bytes: r.leader_egress_bytes,
+            fsyncs: r.fsyncs,
+            snapshots_taken: r.snapshots_taken,
+            snapshots_installed: r.snapshots_installed,
+            safety_ok: r.safety_ok,
+            recovery_ok: r.recovery_ok,
+            elections: r.elections,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cell", Json::str(&self.cell)),
+            ("variant", Json::str(self.variant)),
+            ("completed", Json::num(self.completed as f64)),
+            ("throughput", Json::num(self.throughput)),
+            ("max_commit", Json::num(self.max_commit as f64)),
+            ("min_commit", Json::num(self.min_commit as f64)),
+            ("leader_egress_bytes", Json::num(self.leader_egress_bytes as f64)),
+            ("fsyncs", Json::num(self.fsyncs as f64)),
+            ("snapshots_taken", Json::num(self.snapshots_taken as f64)),
+            ("snapshots_installed", Json::num(self.snapshots_installed as f64)),
+            ("safety_ok", Json::Bool(self.safety_ok)),
+            ("recovery_ok", Json::Bool(self.recovery_ok)),
+            ("elections", Json::num(self.elections as f64)),
+        ])
+    }
+}
+
+fn base_cfg(scale: Scale, variant: Variant, seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.protocol = crate::config::ProtocolConfig::for_variant(scale.n, variant);
+    cfg.workload.clients = 10;
+    cfg.workload.duration_us = scale.duration_us;
+    cfg.workload.warmup_us = scale.warmup_us;
+    cfg.seed = seed;
+    cfg
+}
+
+/// The deterministic durability scenario: six cells under one seed.
+pub fn recovery_comparison(scale: Scale, seed: u64) -> Vec<RecoveryPoint> {
+    let mut points = Vec::new();
+    let d = scale.duration_us;
+
+    // Cell 1 — kill-and-restart, per variant: follower n-1 dies at 30%
+    // of the run and restarts from storage at 50%.
+    for variant in [Variant::Raft, Variant::Pull] {
+        let mut cfg = base_cfg(scale, variant, seed);
+        cfg.workload.rate = KILL_RATE;
+        let victim = scale.n - 1;
+        let faults = FaultSchedule::kill_restart(d * 3 / 10, d / 2, victim);
+        let r = run_with_faults(&cfg, faults);
+        points.push(RecoveryPoint::from_report(format!("kill/{}", r.variant), &r));
+    }
+
+    // Cell 2 — snapshot catch-up vs tail replay: the same paused-follower
+    // scenario (crash at 25%, recover at 60%) with snapshots + compaction
+    // on vs off. Everything else — seed, schedule, workload — is shared,
+    // so the leader-egress difference is the catch-up mechanism alone.
+    for (label, interval) in [("snapshot", CATCHUP_INTERVAL), ("replay", 0)] {
+        let mut cfg = base_cfg(scale, Variant::Raft, seed);
+        cfg.workload.rate = CATCHUP_RATE;
+        cfg.workload.keys = 64;
+        cfg.protocol.storage.snapshot_interval_entries = interval;
+        cfg.protocol.storage.retain_entries = CATCHUP_INTERVAL;
+        let victim = scale.n - 1;
+        let faults = FaultSchedule::new(vec![
+            crate::sim::Fault::Crash { at: d / 4, replica: victim },
+            crate::sim::Fault::Recover { at: d * 6 / 10, replica: victim },
+        ]);
+        let r = run_with_faults(&cfg, faults);
+        points.push(RecoveryPoint::from_report(format!("catchup/{label}"), &r));
+    }
+
+    // Cell 3 — fsync batching: group commit on, a real barrier price, and
+    // an open-loop offered load; `batch` vs `never`.
+    for (label, mode) in [("batch", FsyncMode::Batch), ("never", FsyncMode::Never)] {
+        let mut cfg = base_cfg(scale, Variant::Raft, seed);
+        cfg.workload.arrival = ArrivalModel::Open;
+        cfg.workload.rate = FSYNC_RATE;
+        cfg.workload.max_inflight = 64;
+        cfg.protocol.batch.enabled = true;
+        cfg.protocol.batch.flush_us = 500;
+        cfg.protocol.storage.fsync = mode;
+        cfg.cost.fsync_us = FSYNC_US;
+        let r = run_with_faults(&cfg, FaultSchedule::none());
+        points.push(RecoveryPoint::from_report(format!("fsync/{label}"), &r));
+    }
+
+    points
+}
+
+/// The CI gate over the six cells.
+pub fn recovery_gate(points: &[RecoveryPoint]) -> Result<(), String> {
+    let find = |cell: &str| {
+        points
+            .iter()
+            .find(|p| p.cell == cell)
+            .ok_or_else(|| format!("gate: cell '{cell}' missing from results"))
+    };
+    // Safety everywhere first — an unsafe run's numbers are meaningless.
+    if let Some(bad) = points.iter().find(|p| !p.safety_ok) {
+        return Err(format!("gate: safety violated in cell '{}'", bad.cell));
+    }
+    // 1. Kill-and-restart: no committed entry lost, service continued.
+    for variant in ["raft", "pull"] {
+        let p = find(&format!("kill/{variant}"))?;
+        if !p.recovery_ok {
+            return Err(format!("gate: '{}' lost committed entries across the kill", p.cell));
+        }
+        if p.completed == 0 {
+            return Err(format!("gate: '{}' served no requests", p.cell));
+        }
+    }
+    // 2. Snapshot catch-up strictly cheaper than tail replay on leader
+    // egress, with the lagging follower actually caught up in both runs.
+    let snap = find("catchup/snapshot")?;
+    let replay = find("catchup/replay")?;
+    if snap.snapshots_taken == 0 {
+        return Err("gate: catchup/snapshot run never snapshotted".into());
+    }
+    if snap.snapshots_installed == 0 {
+        return Err("gate: laggard was never caught up via InstallSnapshot".into());
+    }
+    if snap.leader_egress_bytes >= replay.leader_egress_bytes {
+        return Err(format!(
+            "gate: snapshot catch-up leader egress {} is not strictly below tail replay's {}",
+            snap.leader_egress_bytes, replay.leader_egress_bytes
+        ));
+    }
+    for p in [snap, replay] {
+        if p.min_commit * 10 < p.max_commit * 9 {
+            return Err(format!(
+                "gate: '{}' laggard stuck at {} of {}",
+                p.cell, p.min_commit, p.max_commit
+            ));
+        }
+    }
+    // 3. Batched fsync within 1.3x of free on completed requests.
+    let batch = find("fsync/batch")?;
+    let never = find("fsync/never")?;
+    if batch.fsyncs == 0 {
+        return Err("gate: fsync/batch issued no barriers".into());
+    }
+    if never.fsyncs != 0 {
+        return Err(format!("gate: fsync/never issued {} barriers", never.fsyncs));
+    }
+    if batch.completed == 0 {
+        return Err("gate: fsync/batch served no requests".into());
+    }
+    if batch.completed * 13 < never.completed * 10 {
+        return Err(format!(
+            "gate: fsync=batch completed {} vs never's {} — outside the 1.3x budget",
+            batch.completed, never.completed
+        ));
+    }
+    Ok(())
+}
+
+/// Render the whole scenario (config + cells + gate verdict) as the
+/// `BENCH_PR7.json` document.
+pub fn bench_pr7_json(scale: Scale, seed: u64, points: &[RecoveryPoint]) -> Json {
+    let gate = recovery_gate(points);
+    Json::obj(vec![
+        ("bench", Json::str("durability-recovery")),
+        ("n", Json::num(scale.n as f64)),
+        ("duration_us", Json::num(scale.duration_us as f64)),
+        ("warmup_us", Json::num(scale.warmup_us as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("fsync_us", Json::num(FSYNC_US)),
+        ("snapshot_interval_entries", Json::num(CATCHUP_INTERVAL as f64)),
+        ("cells", Json::arr(points.iter().map(|p| p.to_json()))),
+        ("gate_durability", Json::Bool(gate.is_ok())),
+        (
+            "gate_detail",
+            match gate {
+                Ok(()) => Json::str(
+                    "kill/restart lossless; snapshot catch-up below tail replay; \
+                     fsync=batch within 1.3x of never",
+                ),
+                Err(e) => Json::str(&e),
+            },
+        ),
+    ])
+}
+
+/// Print the cell table.
+pub fn print_recovery(points: &[RecoveryPoint]) {
+    println!("\n== durability cells (kill/restart, snapshot catch-up, fsync batching) ==");
+    println!(
+        "{:<18} {:>10} {:>10} {:>10} {:>14} {:>8} {:>6}/{:<6} {:>8} {:>8}",
+        "cell", "completed", "max_cmt", "min_cmt", "leader_bytes", "fsyncs", "snap", "inst",
+        "safety", "recov"
+    );
+    for p in points {
+        println!(
+            "{:<18} {:>10} {:>10} {:>10} {:>14} {:>8} {:>6}/{:<6} {:>8} {:>8}",
+            p.cell,
+            p.completed,
+            p.max_commit,
+            p.min_commit,
+            p.leader_egress_bytes,
+            p.fsyncs,
+            p.snapshots_taken,
+            p.snapshots_installed,
+            if p.safety_ok { "OK" } else { "VIOLATED" },
+            if p.recovery_ok { "OK" } else { "LOST" }
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scale {
+        Scale { reps: 1, duration_us: 1_500_000, warmup_us: 300_000, n: 7 }
+    }
+
+    #[test]
+    fn comparison_produces_all_six_cells_safely() {
+        let pts = recovery_comparison(tiny(), 7);
+        assert_eq!(pts.len(), 6);
+        for p in &pts {
+            assert!(p.safety_ok, "{}", p.cell);
+            assert!(p.completed > 0, "{}: no requests completed", p.cell);
+        }
+        let cells: Vec<&str> = pts.iter().map(|p| p.cell.as_str()).collect();
+        let want = [
+            "kill/raft",
+            "kill/pull",
+            "catchup/snapshot",
+            "catchup/replay",
+            "fsync/batch",
+            "fsync/never",
+        ];
+        for cell in want {
+            assert!(cells.contains(&cell), "missing cell {cell}: {cells:?}");
+        }
+    }
+
+    #[test]
+    fn gate_passes_at_moderate_scale_and_rejects_tampering() {
+        // The quick-bench shape: n=11, 3s window — long enough that the
+        // paused follower misses more than the retain margin and the
+        // snapshot path actually fires. CI gates the claim at n=51.
+        let scale = Scale { reps: 1, duration_us: 3_000_000, warmup_us: 500_000, n: 11 };
+        let pts = recovery_comparison(scale, 7);
+        recovery_gate(&pts).expect("durability gate must hold at moderate scale");
+        // Tamper: pretend the snapshot run paid more egress than replay.
+        let mut bad = pts.clone();
+        for p in bad.iter_mut() {
+            if p.cell == "catchup/snapshot" {
+                p.leader_egress_bytes = u64::MAX;
+            }
+        }
+        assert!(recovery_gate(&bad).is_err());
+        // Tamper: a lost committed prefix must fail the gate.
+        let mut bad = pts.clone();
+        for p in bad.iter_mut() {
+            if p.cell == "kill/pull" {
+                p.recovery_ok = false;
+            }
+        }
+        assert!(recovery_gate(&bad).is_err());
+    }
+
+    #[test]
+    fn bench_json_round_trips_with_gate_fields() {
+        let pts = recovery_comparison(tiny(), 7);
+        let j = bench_pr7_json(tiny(), 7, &pts);
+        assert_eq!(j.get("cells").and_then(|v| v.as_arr()).unwrap().len(), 6);
+        assert!(j.get("gate_durability").and_then(|g| g.as_bool()).is_some());
+        let text = j.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("bench").and_then(|b| b.as_str()), Some("durability-recovery"));
+    }
+}

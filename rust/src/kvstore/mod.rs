@@ -51,6 +51,10 @@ pub enum Command {
     Put { key: u64, value: u64 },
     Get { key: u64 },
     Delete { key: u64 },
+    /// Non-idempotent increment: `map[key] += delta` (wrapping). Exists so
+    /// recovery tests can detect double-apply — replaying a `Put` is
+    /// invisible, replaying an `Add` is not.
+    Add { key: u64, delta: u64 },
 }
 
 /// Result of applying a command.
@@ -87,6 +91,11 @@ impl KvStore {
             }
             Command::Get { key } => Output::Value(self.map.get(&key).copied()),
             Command::Delete { key } => Output::Value(self.map.remove(&key)),
+            Command::Add { key, delta } => {
+                let slot = self.map.entry(key).or_insert(0);
+                *slot = slot.wrapping_add(delta);
+                Output::Value(Some(*slot))
+            }
         }
     }
 
@@ -111,6 +120,25 @@ impl KvStore {
     pub fn digest(&self) -> u64 {
         self.digest
     }
+
+    /// Snapshot export: the map as key-sorted pairs (so identical state
+    /// serialises byte-identically) plus the apply counters.
+    pub fn export(&self) -> (Vec<(u64, u64)>, u64, u64) {
+        let mut pairs: Vec<(u64, u64)> = self.map.iter().map(|(&k, &v)| (k, v)).collect();
+        pairs.sort_unstable_by_key(|&(k, _)| k);
+        (pairs, self.applied, self.digest)
+    }
+
+    /// Rebuild a store from a snapshot image. The digest is carried over,
+    /// not recomputed — it pins the command *sequence*, which the pairs
+    /// alone cannot reproduce.
+    pub fn restore(pairs: &[(u64, u64)], applied: u64, digest: u64) -> Self {
+        let mut map = FastMap::default();
+        for &(k, v) in pairs {
+            map.insert(k, v);
+        }
+        Self { map, applied, digest }
+    }
 }
 
 fn cmd_hash(cmd: &Command) -> u64 {
@@ -119,6 +147,7 @@ fn cmd_hash(cmd: &Command) -> u64 {
         Command::Put { key, value } => mix(key.wrapping_mul(3).wrapping_add(value) ^ 0x1),
         Command::Get { key } => mix(key ^ 0x2_0000),
         Command::Delete { key } => mix(key ^ 0x3_0000_0000),
+        Command::Add { key, delta } => mix(key.wrapping_mul(5).wrapping_add(delta) ^ 0x4_000),
     }
 }
 
@@ -180,5 +209,40 @@ mod tests {
         a.apply(&Command::Get { key: 7 });
         b.apply(&Command::Delete { key: 7 });
         assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn add_is_not_idempotent() {
+        let mut kv = KvStore::new();
+        assert_eq!(kv.apply(&Command::Add { key: 4, delta: 3 }), Output::Value(Some(3)));
+        assert_eq!(kv.apply(&Command::Add { key: 4, delta: 3 }), Output::Value(Some(6)));
+        assert_eq!(kv.get(4), Some(6));
+        // Wrapping, never panicking, even at the boundary.
+        kv.apply(&Command::Add { key: 4, delta: u64::MAX });
+        assert_eq!(kv.get(4), Some(5));
+    }
+
+    #[test]
+    fn export_restore_round_trips_state_and_counters() {
+        let mut kv = KvStore::new();
+        kv.apply(&Command::Put { key: 9, value: 1 });
+        kv.apply(&Command::Put { key: 2, value: 7 });
+        kv.apply(&Command::Add { key: 2, delta: 5 });
+        let (pairs, applied, digest) = kv.export();
+        assert_eq!(pairs, vec![(2, 12), (9, 1)]); // sorted by key
+        assert_eq!(applied, 3);
+
+        let restored = KvStore::restore(&pairs, applied, digest);
+        assert_eq!(restored.get(2), Some(12));
+        assert_eq!(restored.get(9), Some(1));
+        assert_eq!(restored.applied_count(), 3);
+        assert_eq!(restored.digest(), kv.digest());
+        // Divergence detection still works after restore: applying the
+        // same next command on both yields equal digests.
+        let mut a = kv.clone();
+        let mut b = restored;
+        a.apply(&Command::Delete { key: 9 });
+        b.apply(&Command::Delete { key: 9 });
+        assert_eq!(a.digest(), b.digest());
     }
 }

@@ -31,4 +31,5 @@ pub mod kvstore;
 pub mod prop;
 pub mod raft;
 pub mod runtime;
+pub mod storage;
 pub mod util;

@@ -33,6 +33,7 @@ fn run(args: Vec<String>) -> Result<(), String> {
         "bench-pr3" => cmd_bench_pr3(&cli),
         "bench-pr4" => cmd_bench_pr4(&cli),
         "bench-pr6" => cmd_bench_pr6(&cli),
+        "bench-pr7" => cmd_bench_pr7(&cli),
         "live" => cmd_live(&cli),
         "fleet" => cmd_fleet(&cli),
         "artifacts-check" => cmd_artifacts_check(&cli),
@@ -368,6 +369,42 @@ fn cmd_bench_pr6(cli: &Cli) -> Result<(), String> {
     println!("\nwrote {out}");
     harness::throughput_gate(&points)?;
     println!("gate OK: batched cells complete strictly more at p99 within 1.5x, per pair");
+    Ok(())
+}
+
+/// PR 7 bench: the durability subsystem's three claims — kill-and-restart
+/// recovery for {raft, pull} at n=51 (n=11 under --quick), snapshot
+/// catch-up strictly below tail replay on leader egress, and fsync=batch
+/// within 1.3x of fsync=never under group commit. Writes `BENCH_PR7.json`
+/// (CI uploads it as an artifact) and exits non-zero if any claim fails —
+/// the durability `bench-smoke` gate.
+fn cmd_bench_pr7(cli: &Cli) -> Result<(), String> {
+    let mut s = scale(cli);
+    if cli.has("quick") {
+        s.n = 11;
+    }
+    if let Some(n) = cli.get_u64("n")? {
+        s.n = n as usize;
+    }
+    let seed = cli.get_u64("seed")?.unwrap_or(20230713);
+    let out = cli.get("out").unwrap_or("BENCH_PR7.json");
+    println!(
+        "== bench-pr7: durability (kill/restart, snapshot catch-up, fsync batching; \
+         n={}, seed={}, {}s sim) ==",
+        s.n,
+        seed,
+        s.duration_us as f64 / 1e6
+    );
+    let points = harness::recovery_comparison(s, seed);
+    harness::print_recovery(&points);
+    let doc = harness::bench_pr7_json(s, seed, &points);
+    std::fs::write(out, doc.to_string_pretty()).map_err(|e| format!("write {out}: {e}"))?;
+    println!("\nwrote {out}");
+    harness::recovery_gate(&points)?;
+    println!(
+        "gate OK: kill/restart lossless; snapshot catch-up below tail replay; \
+         fsync=batch within 1.3x of never"
+    );
     Ok(())
 }
 

@@ -18,6 +18,7 @@ impl Node {
         self.current_term += 1;
         self.role = Role::Candidate;
         self.voted_for = Some(self.id);
+        self.persist_hard_state();
         self.votes.clear();
         self.votes.insert(self.id);
         self.leader_hint = None;
@@ -95,6 +96,9 @@ impl Node {
             && self.log.candidate_up_to_date(args.last_log_index, args.last_log_term);
         if grant {
             self.voted_for = Some(args.candidate);
+            // The vote must be durable before the reply leaves — a restart
+            // that forgot it could double-vote in the same term.
+            self.persist_hard_state();
             // Granting a vote resets the election timer (§5.2).
             self.election_deadline = self.random_election_deadline(now);
         }

@@ -1,9 +1,25 @@
 //! Replicated log store with Raft's log-matching semantics.
 //!
-//! Indices are 1-based (`0` = empty sentinel, term 0). The store keeps the
-//! whole log in memory — the paper's experiments run the replication phase
-//! only, without snapshots/compaction, and so do we (compaction is listed
-//! as out of scope in DESIGN.md).
+//! Indices are 1-based (`0` = empty sentinel, term 0). Since PR 7 the
+//! store is **offset-aware**: compaction (storage module) drops a prefix
+//! of entries and re-anchors the log at `(prefix_index, prefix_term)` —
+//! the index/term of the last dropped entry, which stays answerable via
+//! [`term_at`] as the log-matching anchor for AppendEntries starting at
+//! [`first_index`]. Entries strictly below the anchor answer `None`:
+//! every consumer must go through these accessors rather than assuming
+//! `index == position + 1` (`DESIGN.md` §6).
+//!
+//! The two mutation paths are named for their semantics:
+//! [`truncate_and_append`] is the leader-truncation path (AppendEntries
+//! §5.3 — conflicts truncate our tail) and [`append_matching`] is the
+//! pull-append path (anti-entropy — never truncates, stops at the first
+//! conflict). Both report what they changed in a [`LogMutation`] so a
+//! write-ahead log can journal exactly the performed operations.
+//!
+//! [`term_at`]: LogStore::term_at
+//! [`first_index`]: LogStore::first_index
+//! [`truncate_and_append`]: LogStore::truncate_and_append
+//! [`append_matching`]: LogStore::append_matching
 
 use super::types::{LogIndex, Term};
 use crate::kvstore::Command;
@@ -17,29 +33,75 @@ pub struct LogEntry {
     pub cmd: Command,
 }
 
-/// In-memory log store.
+/// What a mutation actually did — consumed by [`crate::storage::WalStorage`]
+/// to journal the equivalent records, ignored by pure in-memory use.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LogMutation {
+    /// Highest contiguous index verified term-identical to the request
+    /// (the prefix a commit index may be adopted over).
+    pub covered: LogIndex,
+    /// A term conflict stopped an [`append_matching`] walk early.
+    ///
+    /// [`append_matching`]: LogStore::append_matching
+    pub conflicted: bool,
+    /// The tail was truncated down to this index (leader path only).
+    pub truncated_to: Option<LogIndex>,
+    /// New entries were appended starting at this index (through
+    /// `covered`; the appended entries are the input batch's suffix).
+    pub appended_from: Option<LogIndex>,
+}
+
+/// In-memory log store (the tail above the compaction anchor).
 #[derive(Clone, Debug, Default)]
 pub struct LogStore {
+    /// `entries[p]` holds index `prefix_index + 1 + p`.
     entries: Vec<LogEntry>,
+    /// Index of the last compacted-away entry (0 = nothing compacted).
+    prefix_index: LogIndex,
+    /// Term of that entry (0 for the empty sentinel).
+    prefix_term: Term,
 }
 
 impl LogStore {
     pub fn new() -> Self {
-        Self { entries: Vec::new() }
+        Self::default()
     }
 
-    /// Index of the last entry (0 when empty).
+    /// Position of `index` in `entries` (caller checks range).
+    #[inline]
+    fn pos(&self, index: LogIndex) -> usize {
+        debug_assert!(index > self.prefix_index);
+        (index - self.prefix_index - 1) as usize
+    }
+
+    /// Lowest index still present as an entry (`last_index + 1` when the
+    /// tail is empty).
+    #[inline]
+    pub fn first_index(&self) -> LogIndex {
+        self.prefix_index + 1
+    }
+
+    /// The compaction anchor `(index, term)` — `(0, 0)` before any
+    /// compaction.
+    #[inline]
+    pub fn anchor(&self) -> (LogIndex, Term) {
+        (self.prefix_index, self.prefix_term)
+    }
+
+    /// Index of the last entry (the anchor index when the tail is empty;
+    /// 0 when empty and uncompacted).
     #[inline]
     pub fn last_index(&self) -> LogIndex {
-        self.entries.len() as LogIndex
+        self.prefix_index + self.entries.len() as LogIndex
     }
 
-    /// Term of the last entry (0 when empty).
+    /// Term of the last entry (anchor term when the tail is empty).
     #[inline]
     pub fn last_term(&self) -> Term {
-        self.entries.last().map_or(0, |e| e.term)
+        self.entries.last().map_or(self.prefix_term, |e| e.term)
     }
 
+    /// Number of retained entries (the tail above the anchor).
     #[inline]
     pub fn len(&self) -> usize {
         self.entries.len()
@@ -49,22 +111,26 @@ impl LogStore {
         self.entries.is_empty()
     }
 
-    /// Term of the entry at `index` (`Some(0)` for index 0; `None` if the
-    /// index is past the end of the log).
+    /// Term of the entry at `index`: `Some` within the retained tail and
+    /// at the anchor (including the index-0 sentinel), `None` below the
+    /// anchor (compacted away) or past the end.
     #[inline]
     pub fn term_at(&self, index: LogIndex) -> Option<Term> {
-        if index == 0 {
-            return Some(0);
+        if index == self.prefix_index {
+            return Some(self.prefix_term);
         }
-        self.entries.get(index as usize - 1).map(|e| e.term)
+        if index < self.prefix_index {
+            return None;
+        }
+        self.entries.get(self.pos(index)).map(|e| e.term)
     }
 
     #[inline]
     pub fn get(&self, index: LogIndex) -> Option<&LogEntry> {
-        if index == 0 {
+        if index <= self.prefix_index {
             return None;
         }
-        self.entries.get(index as usize - 1)
+        self.entries.get(self.pos(index))
     }
 
     /// Append a fresh entry (leader path). Returns its index.
@@ -81,13 +147,20 @@ impl LogStore {
         self.term_at(prev_index) == Some(prev_term)
     }
 
-    /// Follower append path (AppendEntries §5.3): assuming
+    /// Leader-truncation append path (AppendEntries §5.3): assuming
     /// `matches(prev_index, prev_term)`, reconcile `new_entries` into the
-    /// log: skip entries already present with the same term, truncate on the
-    /// first conflict, then append the remainder. Returns the index of the
-    /// last entry covered by the request.
-    pub fn reconcile(&mut self, prev_index: LogIndex, new_entries: &[LogEntry]) -> LogIndex {
+    /// log — skip entries already present with the same term, truncate on
+    /// the first conflict, then append the remainder.
+    pub fn truncate_and_append(
+        &mut self,
+        prev_index: LogIndex,
+        new_entries: &[LogEntry],
+    ) -> LogMutation {
         debug_assert!(self.term_at(prev_index).is_some());
+        let mut m = LogMutation {
+            covered: prev_index + new_entries.len() as LogIndex,
+            ..LogMutation::default()
+        };
         let mut idx = prev_index;
         let mut it = new_entries.iter();
         // Skip the prefix that already matches.
@@ -99,12 +172,15 @@ impl LogStore {
                 Some(_) => {
                     // Conflict: truncate from idx on, then append this entry
                     // and the rest.
-                    self.entries.truncate(idx as usize - 1);
+                    self.entries.truncate(self.pos(idx));
                     self.entries.push(e.clone());
+                    m.truncated_to = Some(idx - 1);
+                    m.appended_from = Some(idx);
                     break;
                 }
                 None => {
                     self.entries.push(e.clone());
+                    m.appended_from = Some(idx);
                     break;
                 }
             }
@@ -114,50 +190,60 @@ impl LogStore {
             debug_assert_eq!(e.index, idx);
             self.entries.push(e.clone());
         }
-        prev_index + new_entries.len() as LogIndex
+        m
     }
 
-    /// Anti-entropy append path (pull replies): like [`reconcile`], but
-    /// **never truncates**. Entries already present with the same term are
-    /// skipped, entries past the end of the log are appended, and the walk
-    /// stops at the first term conflict, leaving the local log untouched
-    /// from there — a pulled batch may come from a stale peer whose log
-    /// matches the anchor while its *tail* is older than ours, and rolling
-    /// our tail back is only safe for the leader's AppendEntries repair.
+    /// Pull-append path (anti-entropy replies): like
+    /// [`truncate_and_append`], but **never truncates**. Entries already
+    /// present with the same term are skipped, entries past the end of the
+    /// log are appended, and the walk stops at the first term conflict,
+    /// leaving the local log untouched from there — a pulled batch may
+    /// come from a stale peer whose log matches the anchor while its
+    /// *tail* is older than ours, and rolling our tail back is only safe
+    /// for the leader's AppendEntries repair.
     ///
-    /// Returns `(covered, conflicted)`: `covered` is the highest contiguous
-    /// index through which this log is verified term-identical to the
-    /// sender's batch (the prefix a commit index may be adopted over);
-    /// `conflicted` is true when a term conflict stopped the walk early.
-    ///
-    /// [`reconcile`]: LogStore::reconcile
-    pub fn extend_matching(
+    /// [`truncate_and_append`]: LogStore::truncate_and_append
+    pub fn append_matching(
         &mut self,
         prev_index: LogIndex,
         new_entries: &[LogEntry],
-    ) -> (LogIndex, bool) {
+    ) -> LogMutation {
         debug_assert!(self.term_at(prev_index).is_some());
+        let mut m = LogMutation::default();
         let mut idx = prev_index;
         for e in new_entries {
             debug_assert_eq!(e.index, idx + 1, "entry indices must be contiguous");
             match self.term_at(idx + 1) {
                 Some(t) if t == e.term => {} // already have it
-                Some(_) => return (idx, true), // conflict: stop, never truncate
-                None => self.entries.push(e.clone()),
+                Some(_) => {
+                    // Conflict: stop, never truncate.
+                    m.covered = idx;
+                    m.conflicted = true;
+                    return m;
+                }
+                None => {
+                    self.entries.push(e.clone());
+                    m.appended_from.get_or_insert(idx + 1);
+                }
             }
             idx += 1;
         }
-        (idx, false)
+        m.covered = idx;
+        m
     }
 
     /// Clone the entries in `(from, to]` into an `Arc` slice for cheap
-    /// fan-out into gossip messages.
+    /// fan-out into gossip messages. Clamped to the retained tail —
+    /// compacted indices simply aren't served (callers that need them go
+    /// through the snapshot instead).
     pub fn slice(&self, from_exclusive: LogIndex, to_inclusive: LogIndex) -> Arc<Vec<LogEntry>> {
-        let lo = from_exclusive as usize;
-        let hi = (to_inclusive as usize).min(self.entries.len());
-        if lo >= hi {
+        let from = from_exclusive.max(self.prefix_index);
+        let to = to_inclusive.min(self.last_index());
+        if from >= to {
             return Arc::new(Vec::new());
         }
+        let lo = (from - self.prefix_index) as usize;
+        let hi = (to - self.prefix_index) as usize;
         Arc::new(self.entries[lo..hi].to_vec())
     }
 
@@ -169,7 +255,51 @@ impl LogStore {
         cand_last_term > lt || (cand_last_term == lt && cand_last_index >= li)
     }
 
-    /// Iterate over all entries (tests / state-machine rebuild).
+    /// Drop entries at and below `to`, re-anchoring the log there. Returns
+    /// whether anything was dropped. Clamped to the retained range; the
+    /// caller (storage layer) is responsible for never compacting past
+    /// what a snapshot covers.
+    pub fn compact_to(&mut self, to: LogIndex) -> bool {
+        let to = to.min(self.last_index());
+        if to <= self.prefix_index {
+            return false;
+        }
+        let term = self.term_at(to).expect("compaction point within log");
+        self.entries.drain(..(to - self.prefix_index) as usize);
+        self.prefix_index = to;
+        self.prefix_term = term;
+        true
+    }
+
+    /// Re-anchor at a snapshot boundary (`InstallSnapshot`): if our log
+    /// already matches the anchor, this is a plain compaction and any tail
+    /// beyond it survives; otherwise the log diverges (or is too short)
+    /// and the tail is discarded wholesale.
+    pub fn rebase(&mut self, anchor_index: LogIndex, anchor_term: Term) {
+        if self.matches(anchor_index, anchor_term) {
+            self.compact_to(anchor_index);
+        } else {
+            self.entries.clear();
+            self.prefix_index = anchor_index;
+            self.prefix_term = anchor_term;
+        }
+    }
+
+    /// Truncate the tail down to `last` (WAL replay). No-op when `last`
+    /// is at or past the end.
+    pub(crate) fn truncate_to(&mut self, last: LogIndex) {
+        let keep = last.saturating_sub(self.prefix_index) as usize;
+        self.entries.truncate(keep);
+    }
+
+    /// Push a pre-built entry at the end (WAL replay; index must be
+    /// contiguous).
+    pub(crate) fn push(&mut self, e: LogEntry) {
+        debug_assert_eq!(e.index, self.last_index() + 1, "push must be contiguous");
+        self.entries.push(e);
+    }
+
+    /// Iterate over the retained entries (tests / WAL rewrite).
     pub fn iter(&self) -> impl Iterator<Item = &LogEntry> {
         self.entries.iter()
     }
@@ -187,6 +317,7 @@ mod tests {
     #[test]
     fn empty_log_sentinels() {
         let log = LogStore::new();
+        assert_eq!(log.first_index(), 1);
         assert_eq!(log.last_index(), 0);
         assert_eq!(log.last_term(), 0);
         assert_eq!(log.term_at(0), Some(0));
@@ -207,70 +338,77 @@ mod tests {
     }
 
     #[test]
-    fn reconcile_appends_new() {
+    fn truncate_and_append_appends_new() {
         let mut log = LogStore::new();
-        let last = log.reconcile(0, &[e(1, 1), e(1, 2)]);
-        assert_eq!(last, 2);
+        let m = log.truncate_and_append(0, &[e(1, 1), e(1, 2)]);
+        assert_eq!(m.covered, 2);
+        assert_eq!(m.truncated_to, None);
+        assert_eq!(m.appended_from, Some(1));
         assert_eq!(log.last_index(), 2);
     }
 
     #[test]
-    fn reconcile_idempotent_on_duplicates() {
+    fn truncate_and_append_idempotent_on_duplicates() {
         let mut log = LogStore::new();
-        log.reconcile(0, &[e(1, 1), e(1, 2), e(1, 3)]);
+        log.truncate_and_append(0, &[e(1, 1), e(1, 2), e(1, 3)]);
         // Re-delivering the same entries (gossip duplicates!) must not
         // truncate or duplicate anything.
-        let last = log.reconcile(0, &[e(1, 1), e(1, 2), e(1, 3)]);
-        assert_eq!(last, 3);
+        let m = log.truncate_and_append(0, &[e(1, 1), e(1, 2), e(1, 3)]);
+        assert_eq!(m.covered, 3);
+        assert_eq!((m.truncated_to, m.appended_from), (None, None));
         assert_eq!(log.last_index(), 3);
         assert_eq!(log.term_at(3), Some(1));
     }
 
     #[test]
-    fn reconcile_truncates_conflicts() {
+    fn truncate_and_append_truncates_conflicts() {
         let mut log = LogStore::new();
-        log.reconcile(0, &[e(1, 1), e(1, 2), e(1, 3)]);
+        log.truncate_and_append(0, &[e(1, 1), e(1, 2), e(1, 3)]);
         // New leader at term 2 overwrites index 2..3.
-        let last = log.reconcile(1, &[e(2, 2)]);
-        assert_eq!(last, 2);
+        let m = log.truncate_and_append(1, &[e(2, 2)]);
+        assert_eq!(m.covered, 2);
+        assert_eq!(m.truncated_to, Some(1));
+        assert_eq!(m.appended_from, Some(2));
         assert_eq!(log.last_index(), 2);
         assert_eq!(log.term_at(2), Some(2));
         assert_eq!(log.term_at(3), None);
     }
 
     #[test]
-    fn reconcile_does_not_truncate_beyond_request() {
+    fn truncate_and_append_does_not_truncate_beyond_request() {
         let mut log = LogStore::new();
-        log.reconcile(0, &[e(1, 1), e(1, 2), e(1, 3), e(1, 4)]);
+        log.truncate_and_append(0, &[e(1, 1), e(1, 2), e(1, 3), e(1, 4)]);
         // A *stale* request covering only 1..2 with matching terms must keep
         // the suffix (Raft §5.3: only conflicts truncate).
-        let last = log.reconcile(0, &[e(1, 1), e(1, 2)]);
-        assert_eq!(last, 2);
+        let m = log.truncate_and_append(0, &[e(1, 1), e(1, 2)]);
+        assert_eq!(m.covered, 2);
         assert_eq!(log.last_index(), 4, "matching prefix must not truncate suffix");
     }
 
     #[test]
-    fn extend_matching_appends_and_skips() {
+    fn append_matching_appends_and_skips() {
         let mut log = LogStore::new();
-        log.reconcile(0, &[e(1, 1), e(1, 2)]);
+        log.truncate_and_append(0, &[e(1, 1), e(1, 2)]);
         // Overlap at index 2 is skipped, 3..4 appended.
-        let (covered, conflicted) = log.extend_matching(1, &[e(1, 2), e(1, 3), e(1, 4)]);
-        assert_eq!((covered, conflicted), (4, false));
+        let m = log.append_matching(1, &[e(1, 2), e(1, 3), e(1, 4)]);
+        assert_eq!((m.covered, m.conflicted), (4, false));
+        assert_eq!(m.appended_from, Some(3));
         assert_eq!(log.last_index(), 4);
         // Full-duplicate batch: idempotent, full coverage.
-        let (covered, conflicted) = log.extend_matching(0, &[e(1, 1), e(1, 2)]);
-        assert_eq!((covered, conflicted), (2, false));
+        let m = log.append_matching(0, &[e(1, 1), e(1, 2)]);
+        assert_eq!((m.covered, m.conflicted), (2, false));
+        assert_eq!(m.appended_from, None);
         assert_eq!(log.last_index(), 4);
     }
 
     #[test]
-    fn extend_matching_stops_at_conflict_without_truncating() {
+    fn append_matching_stops_at_conflict_without_truncating() {
         let mut log = LogStore::new();
-        log.reconcile(0, &[e(1, 1), e(2, 2), e(2, 3)]);
+        log.truncate_and_append(0, &[e(1, 1), e(2, 2), e(2, 3)]);
         // A stale peer's old-term tail matches at the anchor but conflicts
         // at index 2: nothing is lost, coverage stops before the conflict.
-        let (covered, conflicted) = log.extend_matching(1, &[e(1, 2), e(1, 3)]);
-        assert_eq!((covered, conflicted), (1, true));
+        let m = log.append_matching(1, &[e(1, 2), e(1, 3)]);
+        assert_eq!((m.covered, m.conflicted), (1, true));
         assert_eq!(log.last_index(), 3);
         assert_eq!(log.term_at(2), Some(2));
         assert_eq!(log.term_at(3), Some(2));
@@ -310,8 +448,9 @@ mod tests {
     #[test]
     fn log_matching_property() {
         // If two logs have the same (index, term) entry then all earlier
-        // entries are identical — by construction of reconcile. Simulate two
-        // followers fed overlapping slices from the same leader log.
+        // entries are identical — by construction of truncate_and_append.
+        // Simulate two followers fed overlapping slices from the same
+        // leader log.
         let mut leader = LogStore::new();
         for i in 1..=10u64 {
             leader.append(if i <= 5 { 1 } else { 2 }, Command::Put { key: i, value: i });
@@ -319,13 +458,75 @@ mod tests {
         let mut f1 = LogStore::new();
         let mut f2 = LogStore::new();
         let all: Vec<LogEntry> = leader.iter().cloned().collect();
-        f1.reconcile(0, &all[..7]);
-        f2.reconcile(0, &all[..4]);
-        f2.reconcile(2, &all[2..9]);
+        f1.truncate_and_append(0, &all[..7]);
+        f2.truncate_and_append(0, &all[..4]);
+        f2.truncate_and_append(2, &all[2..9]);
         // Shared index 7 has same term -> prefixes identical.
         assert_eq!(f1.term_at(7), f2.term_at(7));
         for i in 1..=7u64 {
             assert_eq!(f1.get(i), f2.get(i));
         }
+    }
+
+    #[test]
+    fn compaction_reanchors_accessors() {
+        let mut log = LogStore::new();
+        for i in 1..=8u64 {
+            log.append(if i <= 4 { 1 } else { 2 }, Command::Put { key: i, value: i });
+        }
+        assert!(log.compact_to(5));
+        assert_eq!(log.anchor(), (5, 2));
+        assert_eq!(log.first_index(), 6);
+        assert_eq!(log.last_index(), 8);
+        assert_eq!(log.last_term(), 2);
+        assert_eq!(log.term_at(5), Some(2), "anchor term still answerable");
+        assert_eq!(log.term_at(4), None);
+        assert!(log.get(5).is_none());
+        assert_eq!(log.get(6).unwrap().index, 6);
+        assert!(log.matches(5, 2));
+        assert!(!log.matches(5, 1));
+        // Appends continue from the compacted tail.
+        assert_eq!(log.append(3, Command::Noop), 9);
+        // Compacting backwards or past the end is a no-op / clamped.
+        assert!(!log.compact_to(3));
+        assert!(log.compact_to(99));
+        assert_eq!(log.anchor(), (9, 3));
+        assert!(log.is_empty());
+        assert_eq!(log.last_term(), 3, "empty tail falls back to anchor term");
+    }
+
+    #[test]
+    fn mutations_after_compaction_stay_correct() {
+        let mut log = LogStore::new();
+        for _ in 1..=6 {
+            log.append(1, Command::Noop);
+        }
+        log.compact_to(4);
+        // Leader repair anchored at the compaction point.
+        let m = log.truncate_and_append(4, &[e(1, 5), e(2, 6), e(2, 7)]);
+        assert_eq!(m.covered, 7);
+        assert_eq!(m.truncated_to, Some(5), "old term-1 index 6 conflicted");
+        assert_eq!(log.term_at(6), Some(2));
+        // Pull path across the anchor.
+        let m = log.append_matching(6, &[e(2, 7), e(2, 8)]);
+        assert_eq!((m.covered, m.conflicted), (8, false));
+        assert_eq!(log.last_index(), 8);
+    }
+
+    #[test]
+    fn rebase_keeps_matching_tail_or_discards() {
+        let mut log = LogStore::new();
+        for _ in 1..=6 {
+            log.append(2, Command::Noop);
+        }
+        // Matching anchor: plain compaction, tail survives.
+        log.rebase(4, 2);
+        assert_eq!((log.first_index(), log.last_index()), (5, 6));
+        // Divergent anchor past our end: wholesale replace.
+        log.rebase(10, 3);
+        assert_eq!((log.first_index(), log.last_index()), (11, 10));
+        assert_eq!(log.last_term(), 3);
+        assert!(log.is_empty());
+        assert_eq!(log.append(3, Command::Noop), 11);
     }
 }

@@ -130,6 +130,29 @@ pub struct PullReplyArgs {
     pub known_round: u64,
 }
 
+/// Install a state-machine snapshot on a laggard whose `next_index` fell
+/// below the leader's compaction horizon: the log tail it needs no longer
+/// exists as entries, so the leader ships the snapshot image instead of a
+/// replay (PR 7; DESIGN.md §6). The follower answers with a plain
+/// [`AppendEntriesReply`] carrying `match_hint = last_index`, so leader-
+/// side bookkeeping is shared with the entry path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InstallSnapshotArgs {
+    pub term: Term,
+    pub leader: NodeId,
+    /// Last log index / term the snapshot covers (log-matching anchor).
+    pub last_index: LogIndex,
+    pub last_term: Term,
+    /// Commands applied to produce the image (`KvStore::applied_count`).
+    pub applied: u64,
+    /// Apply digest for divergence checks after install.
+    pub digest: u64,
+    /// The key/value image, sorted by key; `Arc`-shared across fan-out.
+    pub pairs: Arc<Vec<(u64, u64)>>,
+    /// Sequence number for RPC retransmission matching (as AppendEntries).
+    pub seq: u64,
+}
+
 /// All replica-to-replica messages.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Message {
@@ -139,6 +162,7 @@ pub enum Message {
     RequestVoteReply(RequestVoteReply),
     PullRequest(PullRequestArgs),
     PullReply(PullReplyArgs),
+    InstallSnapshot(InstallSnapshotArgs),
 }
 
 impl Message {
@@ -164,6 +188,7 @@ impl Message {
             Message::RequestVoteReply(r) => r.term,
             Message::PullRequest(p) => p.term,
             Message::PullReply(p) => p.term,
+            Message::InstallSnapshot(s) => s.term,
         }
     }
 
@@ -176,6 +201,7 @@ impl Message {
             Message::RequestVoteReply(_) => "vote_reply",
             Message::PullRequest(_) => "pull_req",
             Message::PullReply(_) => "pull_reply",
+            Message::InstallSnapshot(_) => "install_snapshot",
         }
     }
 
@@ -194,6 +220,7 @@ impl Message {
             Message::RequestVoteReply(r) => r.from < n,
             Message::PullRequest(p) => p.from < n,
             Message::PullReply(r) => r.from < n && r.leader_hint.is_none_or(|h| h < n),
+            Message::InstallSnapshot(s) => s.leader < n,
         }
     }
 
@@ -266,6 +293,11 @@ impl Message {
                 // known_round(8) + entry count(4).
                 let hint = 1 + if r.leader_hint.is_some() { 4 } else { 0 };
                 FRAME + 50 + hint + PER_ENTRY * r.entries.len() as u64
+            }
+            Message::InstallSnapshot(s) => {
+                // term(8) leader(4) last_index(8) last_term(8) applied(8)
+                // digest(8) seq(8) + pair count(4) + 16 per pair.
+                FRAME + 56 + 16 * s.pairs.len() as u64
             }
         }
     }
@@ -396,6 +428,36 @@ mod tests {
             known_round: 0,
         });
         assert!(req.wire_bytes() < pr.wire_bytes());
+    }
+
+    #[test]
+    fn install_snapshot_kind_size_and_ids() {
+        let snap = |leader, pairs: u64| {
+            Message::InstallSnapshot(InstallSnapshotArgs {
+                term: 3,
+                leader,
+                last_index: 40,
+                last_term: 3,
+                applied: 40,
+                digest: 7,
+                pairs: Arc::new((0..pairs).map(|i| (i, i)).collect()),
+                seq: 9,
+            })
+        };
+        let m = snap(0, 8);
+        assert_eq!(m.kind(), "install_snapshot");
+        assert_eq!(m.term(), 3);
+        assert_eq!(m.entry_count(), 0, "pairs are not log entries");
+        assert!(!m.is_gossip());
+        // Linear in pair count, 16 bytes each.
+        assert_eq!(snap(0, 10).wire_bytes() - snap(0, 0).wire_bytes(), 160);
+        // A snapshot of the whole state beats replaying a long tail: with
+        // k live keys it costs ~16k bytes where the tail costs 33/entry.
+        assert!(snap(0, 64).wire_bytes() < 64 * Message::WIRE_BYTES_PER_ENTRY);
+        // Wire-supplied leader ids are boundary-checked like every message.
+        assert!(snap(4, 0).node_ids_in_range(5));
+        assert!(!snap(5, 0).node_ids_in_range(5));
+        assert!(snap(1, 3).wire_valid_for(5));
     }
 
     #[test]

@@ -10,10 +10,10 @@ pub mod strategy;
 pub mod types;
 pub mod view;
 
-pub use log::{LogEntry, LogStore};
+pub use log::{LogEntry, LogMutation, LogStore};
 pub use message::{
-    AppendEntriesArgs, AppendEntriesReply, GossipMeta, Message, PullReplyArgs, PullRequestArgs,
-    RequestVoteArgs, RequestVoteReply,
+    AppendEntriesArgs, AppendEntriesReply, GossipMeta, InstallSnapshotArgs, Message,
+    PullReplyArgs, PullRequestArgs, RequestVoteArgs, RequestVoteReply,
 };
 pub use node::{Action, ClientResult, Counters, Node};
 pub use strategy::ReplicationStrategy;

@@ -15,7 +15,6 @@
 //! once at construction from [`Variant`] via the strategy registry
 //! (`super::strategy::build`).
 
-use super::log::LogStore;
 use super::message::Message;
 use super::strategy::ReplicationStrategy;
 use super::types::{LogIndex, NodeId, RequestId, Role, Term, Time};
@@ -23,8 +22,10 @@ use super::view::ClusterView;
 use crate::config::ProtocolConfig;
 use crate::epidemic::{EpidemicState, LogView, Permutation};
 use crate::kvstore::{Command, KvStore, Output};
+use crate::storage::{open_storage, Snapshot, Storage};
 use crate::util::rng::Xoshiro256;
 use std::collections::{BTreeMap, HashSet};
+use std::sync::Arc;
 
 /// Result delivered to a client.
 #[derive(Clone, Debug, PartialEq)]
@@ -98,6 +99,12 @@ pub struct Counters {
     pub promotions: u64,
     pub demoted_current: u64,
     pub best_effort_bytes: u64,
+    /// Durability subsystem (`storage/`): snapshots this node took at the
+    /// `snapshot_interval_entries` trigger, and snapshots installed from a
+    /// leader's `InstallSnapshot` after falling behind the compaction
+    /// horizon.
+    pub snapshots_taken: u64,
+    pub snapshots_installed: u64,
 }
 
 /// The protocol state machine for one replica.
@@ -105,11 +112,13 @@ pub struct Node {
     pub(crate) id: NodeId,
     pub(crate) cfg: ProtocolConfig,
 
-    // Persistent state (in-memory here; experiments run the replication
-    // phase, as in the paper).
+    // Persistent state, mirrored in `log` (the [`Storage`] backend):
+    // `current_term`/`voted_for` are the working copies, re-persisted via
+    // `persist_hard_state` at every transition; the backend is what a
+    // restart recovers (`recover_in_place`).
     pub(crate) current_term: Term,
     pub(crate) voted_for: Option<NodeId>,
-    pub(crate) log: LogStore,
+    pub(crate) log: Box<dyn Storage>,
 
     // Volatile state.
     pub(crate) role: Role,
@@ -162,6 +171,20 @@ pub struct Node {
 impl Node {
     pub fn new(id: NodeId, cfg: ProtocolConfig, seed: u64) -> Self {
         assert!(id < cfg.n, "node id {id} out of range for n={}", cfg.n);
+        let storage = open_storage(&cfg.storage, id)
+            .unwrap_or_else(|e| panic!("node {id}: cannot open storage: {e}"));
+        Self::with_storage(id, cfg, seed, storage)
+    }
+
+    /// Construct on an already-opened [`Storage`] backend, recovering any
+    /// persisted hard state and snapshot it holds (a reopened WAL).
+    pub fn with_storage(
+        id: NodeId,
+        cfg: ProtocolConfig,
+        seed: u64,
+        storage: Box<dyn Storage>,
+    ) -> Self {
+        assert!(id < cfg.n, "node id {id} out of range for n={}", cfg.n);
         let mut rng = Xoshiro256::seed_from_u64(seed ^ (id as u64).wrapping_mul(0xA24BAED4963EE407));
         let perm = Permutation::new(cfg.n, id, &mut rng);
         let strategy = super::strategy::build(&cfg);
@@ -171,7 +194,7 @@ impl Node {
             id,
             current_term: 0,
             voted_for: None,
-            log: LogStore::new(),
+            log: storage,
             role: Role::Follower,
             commit_index: 0,
             last_applied: 0,
@@ -194,8 +217,59 @@ impl Node {
             counters: Counters::default(),
             cfg,
         };
+        // A reopened backend (WAL restart) carries hard state and possibly
+        // a snapshot — adopt them before the first entry point runs. Fresh
+        // backends answer `(0, None)` / no snapshot, leaving construction
+        // unchanged.
+        let (term, voted_for) = node.log.term_vote();
+        node.current_term = term;
+        node.voted_for = voted_for;
+        if let Some(s) = node.log.snapshot().cloned() {
+            node.kv = KvStore::restore(&s.pairs, s.applied, s.digest);
+            node.commit_index = s.last_index;
+            node.last_applied = s.last_index;
+        }
         node.election_deadline = node.random_election_deadline(0);
         node
+    }
+
+    /// Kill-and-restart recovery, in place: drop every piece of volatile
+    /// state and rebuild from the [`Storage`] backend, exactly as a fresh
+    /// process reopening the same disk would (the simulator's
+    /// `Fault::Restart` and the live cluster's `--kill-at` recipe both
+    /// route here). The log, hard state and snapshot survive; role, commit
+    /// index, state machine, leader bookkeeping and the strategy's
+    /// in-flight round state do not.
+    pub fn recover_in_place(&mut self, now: Time) {
+        let (term, voted_for) = self.log.term_vote();
+        self.current_term = term;
+        self.voted_for = voted_for;
+        self.role = Role::Follower;
+        self.leader_hint = None;
+        let snap = self.log.snapshot().cloned();
+        let snap_idx = snap.as_ref().map_or(0, |s| s.last_index);
+        self.kv = match &snap {
+            Some(s) => KvStore::restore(&s.pairs, s.applied, s.digest),
+            None => KvStore::new(),
+        };
+        // Commit knowledge is volatile: re-applying the suffix above the
+        // snapshot is safe (the restored KvStore is the snapshot image),
+        // and `advance_commit` resumes applying at `snap_idx + 1` — never
+        // from index 0 (the double-apply regression test pins this).
+        self.commit_index = snap_idx;
+        self.last_applied = snap_idx;
+        self.followers = vec![FollowerSlot::default(); self.cfg.n];
+        self.pending.clear();
+        self.batch.clear();
+        self.batch_bytes = 0;
+        self.batch_deadline = Time::MAX;
+        self.votes.clear();
+        self.vote_gossip_seen.clear();
+        self.vote_gossip_term = 0;
+        self.seq = 0;
+        self.strategy = Some(super::strategy::build(&self.cfg));
+        self.view = ClusterView::new(&self.cfg, self.id);
+        self.election_deadline = self.random_election_deadline(now);
     }
 
     // ---- accessors --------------------------------------------------------
@@ -232,8 +306,8 @@ impl Node {
         &self.kv
     }
 
-    pub fn log(&self) -> &LogStore {
-        &self.log
+    pub fn log(&self) -> &dyn Storage {
+        self.log.as_ref()
     }
 
     /// The §3.2 decentralised-commit state, if this node's strategy keeps
@@ -315,6 +389,7 @@ impl Node {
     pub fn bootstrap_leader(&mut self, now: Time) -> Vec<Action> {
         self.current_term = 1;
         self.voted_for = Some(self.id);
+        self.persist_hard_state();
         let mut actions = Vec::new();
         self.become_leader(now, &mut actions);
         actions
@@ -324,6 +399,7 @@ impl Node {
     pub fn bootstrap_follower(&mut self, now: Time, leader: NodeId) {
         self.current_term = 1;
         self.voted_for = Some(leader);
+        self.persist_hard_state();
         self.leader_hint = Some(leader);
         self.role = Role::Follower;
         self.election_deadline = self.random_election_deadline(now);
@@ -347,6 +423,9 @@ impl Node {
             let index = self.log.append(self.current_term, cmd);
             self.counters.entries_appended += 1;
             self.pending.insert(index, req);
+            // No batch to amortise against: `fsync = batch` degenerates to
+            // one barrier per command on this path.
+            self.log.sync();
             self.with_strategy(|s, node| s.on_client_request(node, now, &mut actions));
             if self.view.solo_quorum() {
                 // Trivial quorum (n = 1): no reply will ever arrive to
@@ -386,6 +465,10 @@ impl Node {
             self.counters.entries_appended += 1;
             self.pending.insert(index, req);
         }
+        // The group-commit boundary doubles as the fsync-batching boundary
+        // (`fsync = batch`): one barrier covers the whole appended batch,
+        // issued before the strategy disseminates it.
+        self.log.sync();
         self.with_strategy(|s, node| s.on_batch_flush(node, now, actions));
         if self.view.solo_quorum() {
             self.with_strategy(|s, node| s.advance_leader_commit(node, actions));
@@ -471,8 +554,78 @@ impl Node {
                 debug_assert_eq!(r.term, self.current_term);
                 self.with_strategy(|s, node| s.on_pull_reply(node, now, r, &mut actions));
             }
+            Message::InstallSnapshot(args) => {
+                self.on_install_snapshot(now, args, &mut actions);
+            }
         }
         actions
+    }
+
+    /// Follower side of `InstallSnapshot` — strategy-independent (every
+    /// variant repairs laggards past the compaction horizon the same way).
+    /// Replies with an `AppendEntriesReply` so the leader's per-follower
+    /// bookkeeping is shared with the ordinary repair path.
+    fn on_install_snapshot(
+        &mut self,
+        now: Time,
+        args: super::message::InstallSnapshotArgs,
+        actions: &mut Vec<Action>,
+    ) {
+        if args.term < self.current_term {
+            // Stale leader: teach it the newer term.
+            let reply = super::message::AppendEntriesReply {
+                term: self.current_term,
+                from: self.id,
+                success: false,
+                match_hint: self.log.last_index(),
+                round: None,
+                epidemic: None,
+                seq: args.seq,
+            };
+            self.counters.replies_sent += 1;
+            self.send(args.leader, Message::AppendEntriesReply(reply), actions);
+            return;
+        }
+        debug_assert_eq!(args.term, self.current_term);
+        if self.role == Role::Candidate {
+            self.role = Role::Follower;
+            self.votes.clear();
+            actions.push(Action::RoleChanged { role: Role::Follower, term: self.current_term });
+        }
+        self.leader_hint = Some(args.leader);
+        self.election_deadline = self.random_election_deadline(now);
+        if args.last_index > self.last_applied {
+            let snap = Snapshot {
+                last_index: args.last_index,
+                last_term: args.last_term,
+                applied: args.applied,
+                digest: args.digest,
+                pairs: Arc::clone(&args.pairs),
+            };
+            self.log.install_snapshot(snap);
+            self.log.sync();
+            self.kv = KvStore::restore(&args.pairs, args.applied, args.digest);
+            self.last_applied = args.last_index;
+            if args.last_index > self.commit_index {
+                let from = self.commit_index;
+                self.commit_index = args.last_index;
+                actions.push(Action::Committed { from, to: args.last_index });
+            }
+            self.counters.snapshots_installed += 1;
+        }
+        // Duplicate/stale installs still ack so the leader's next_index
+        // moves past the horizon instead of resending the snapshot.
+        let reply = super::message::AppendEntriesReply {
+            term: self.current_term,
+            from: self.id,
+            success: true,
+            match_hint: self.log.last_index(),
+            round: None,
+            epidemic: None,
+            seq: args.seq,
+        };
+        self.counters.replies_sent += 1;
+        self.send(args.leader, Message::AppendEntriesReply(reply), actions);
     }
 
     /// Timer tick: the host calls this at (or after) `next_deadline`.
@@ -524,11 +677,18 @@ impl Node {
         now + if hi > lo { self.rng.next_range(lo, hi) } else { lo }
     }
 
+    /// Persist the Raft hard state (`current_term`, `voted_for`) through
+    /// the storage backend — called at every transition of either.
+    pub(crate) fn persist_hard_state(&mut self) {
+        self.log.persist_term_vote(self.current_term, self.voted_for);
+    }
+
     /// Adopt a higher `term` and fall back to follower.
     pub(crate) fn step_down(&mut self, now: Time, term: Term, actions: &mut Vec<Action>) {
         debug_assert!(term > self.current_term);
         self.current_term = term;
         self.voted_for = None;
+        self.persist_hard_state();
         self.role = Role::Follower;
         self.votes.clear();
         self.leader_hint = None;
@@ -577,6 +737,36 @@ impl Node {
                 }
             }
         }
+        self.maybe_snapshot();
+    }
+
+    /// Periodic snapshot + compaction (`[storage]`): once
+    /// `snapshot_interval_entries` commands have been applied past the
+    /// previous snapshot, capture the state machine and drop the log
+    /// prefix, keeping a `retain_entries` margin so slightly-behind peers
+    /// are still repaired by cheap tail replay rather than a full
+    /// snapshot transfer.
+    fn maybe_snapshot(&mut self) {
+        let interval = self.cfg.storage.snapshot_interval_entries;
+        if interval == 0 || self.last_applied < self.log.snapshot_index() + interval {
+            return;
+        }
+        let last_index = self.last_applied;
+        let last_term = match self.log.term_at(last_index) {
+            Some(t) => t,
+            None => return, // applied prefix already compacted (just installed)
+        };
+        let (pairs, applied, digest) = self.kv.export();
+        self.log.save_snapshot(Snapshot {
+            last_index,
+            last_term,
+            applied,
+            digest,
+            pairs: Arc::new(pairs),
+        });
+        self.counters.snapshots_taken += 1;
+        let horizon = last_index.saturating_sub(self.cfg.storage.retain_entries);
+        self.log.compact_to(horizon);
     }
 
     pub(crate) fn send(&mut self, to: NodeId, msg: Message, actions: &mut Vec<Action>) {
@@ -777,6 +967,44 @@ mod tests {
             assert!(replied, "variant {variant:?} must self-commit the flushed batch");
             assert_eq!(node.kv().get(1), Some(2));
         }
+    }
+
+    #[test]
+    fn recovery_does_not_double_apply_non_idempotent_commands() {
+        // PR 7 regression: recovery must resume applying at the snapshot
+        // index, never from 0. `Command::Add` is non-idempotent, so a
+        // re-applied prefix would inflate the value past the true sum.
+        let mut c = cfg(1, Variant::Raft);
+        c.storage.snapshot_interval_entries = 4;
+        c.storage.retain_entries = 4;
+        let mut node = Node::new(0, c, 1);
+        node.bootstrap_leader(0);
+        for i in 0..10u64 {
+            node.client_request(10 + i, i, Command::Add { key: 7, delta: 5 });
+        }
+        assert_eq!(node.kv().get(7), Some(50), "10 increments of 5 applied once");
+        assert!(node.counters.snapshots_taken > 0, "interval=4 must have fired");
+        let snap_idx = node.log().snapshot_index();
+        assert!(snap_idx > 0 && snap_idx < node.last_index(), "a live suffix above the snapshot");
+        let applied_before = node.kv().applied_count();
+        let mut reference = node.kv().clone(); // pre-kill state, for the digest check
+
+        node.recover_in_place(1_000);
+        assert_eq!(node.last_applied, snap_idx, "recovery resumes at the snapshot, not 0");
+        assert!(node.kv().applied_count() < applied_before, "KvStore is the snapshot image");
+
+        // Re-elect (n=1 self-commits): only the suffix above the snapshot
+        // is replayed, plus the new leader no-op. A from-zero replay would
+        // land on 50 + snapshot-prefix worth of extra increments.
+        node.bootstrap_leader(2_000);
+        assert_eq!(node.kv().get(7), Some(50), "suffix replayed exactly once");
+        assert_eq!(node.kv().applied_count(), applied_before + 1, "old commands + new no-op");
+        reference.apply(&Command::Noop); // the re-election no-op
+        assert_eq!(
+            node.kv().digest(),
+            reference.digest(),
+            "snapshot image + suffix + no-op folds to the same order-sensitive digest"
+        );
     }
 
     #[test]

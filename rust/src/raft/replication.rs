@@ -5,12 +5,14 @@
 //! commit rule. The variant-specific paths (per-request broadcast, §3.1
 //! gossip rounds, §3.2 decentralised commit) live in `super::strategy`.
 
-use super::message::{AppendEntriesArgs, AppendEntriesReply, Message};
+use super::message::{AppendEntriesArgs, AppendEntriesReply, InstallSnapshotArgs, Message};
 use super::node::{Action, Node};
 use super::types::{LogIndex, NodeId, Time};
 
 impl Node {
     /// Send a classic AppendEntries RPC to `peer` covering up to `last`.
+    /// A peer whose `next_index` fell behind the compaction horizon cannot
+    /// be repaired by tail replay any more — it gets the snapshot instead.
     pub(crate) fn send_entries_rpc(
         &mut self,
         now: Time,
@@ -20,7 +22,13 @@ impl Node {
     ) {
         let next = self.followers[peer].next_index.max(1);
         let prev = next - 1;
-        let prev_term = self.log.term_at(prev).expect("prev within log");
+        let prev_term = match self.log.term_at(prev) {
+            Some(t) => t,
+            None => {
+                self.send_install_snapshot(now, peer, actions);
+                return;
+            }
+        };
         let hi = last.min(prev + self.cfg.max_entries_per_rpc as LogIndex);
         let entries = self.log.slice(prev, hi);
         let seq = self.next_seq();
@@ -37,6 +45,33 @@ impl Node {
         self.followers[peer].last_rpc_at = now;
         self.counters.rpcs_sent += 1;
         self.send(peer, Message::AppendEntries(args), actions);
+    }
+
+    /// Ship the current snapshot to a laggard past the compaction horizon.
+    /// The follower acks with an ordinary `AppendEntriesReply` whose
+    /// `match_hint` is the snapshot index, so `update_follower_on_reply`
+    /// moves `next_index` past the horizon and tail replay resumes.
+    pub(crate) fn send_install_snapshot(
+        &mut self,
+        now: Time,
+        peer: NodeId,
+        actions: &mut Vec<Action>,
+    ) {
+        let snap = self.log.snapshot().expect("compacted log implies a snapshot").clone();
+        let seq = self.next_seq();
+        let args = InstallSnapshotArgs {
+            term: self.current_term,
+            leader: self.id,
+            last_index: snap.last_index,
+            last_term: snap.last_term,
+            applied: snap.applied,
+            digest: snap.digest,
+            pairs: snap.pairs,
+            seq,
+        };
+        self.followers[peer].last_rpc_at = now;
+        self.counters.rpcs_sent += 1;
+        self.send(peer, Message::InstallSnapshot(args), actions);
     }
 
     /// Resend repair RPCs that timed out (strategies with out-of-band
@@ -71,7 +106,36 @@ impl Node {
         for peer in self.view.demoted_rotation() {
             let next = self.followers[peer].next_index.max(1);
             let prev = next - 1;
-            let prev_term = self.log.term_at(prev).expect("prev within log");
+            let prev_term = match self.log.term_at(prev) {
+                Some(t) => t,
+                None => {
+                    // Behind the compaction horizon: tail replay cannot
+                    // repair this peer. Ship the snapshot when the budget
+                    // affords it, else skip this round (a re-promotion
+                    // repairs it through the voter path regardless).
+                    let snap =
+                        self.log.snapshot().expect("compacted log implies a snapshot").clone();
+                    let seq = self.next_seq();
+                    let msg = Message::InstallSnapshot(InstallSnapshotArgs {
+                        term: self.current_term,
+                        leader: self.id,
+                        last_index: snap.last_index,
+                        last_term: snap.last_term,
+                        applied: snap.applied,
+                        digest: snap.digest,
+                        pairs: snap.pairs,
+                        seq,
+                    });
+                    if self.view.try_spend_best_effort(msg.wire_bytes(), &mut self.counters) {
+                        self.followers[peer].best_effort_through =
+                            self.log.first_index().saturating_sub(1);
+                        self.followers[peer].last_rpc_at = now;
+                        self.counters.rpcs_sent += 1;
+                        self.send(peer, msg, actions);
+                    }
+                    continue;
+                }
+            };
             let backlog = last.saturating_sub(prev);
             let seq = self.next_seq();
             let mut args = AppendEntriesArgs {
@@ -124,12 +188,28 @@ impl Node {
     }
 
     /// Follower-side AppendEntries processing: log-matching check plus
-    /// reconcile. Returns `(success, match_hint)` exactly as the reply
-    /// should carry them.
+    /// leader-truncation reconcile. Returns `(success, match_hint)` exactly
+    /// as the reply should carry them. A success reply implies durability,
+    /// so the storage barrier is issued here, before the reply leaves.
     pub(crate) fn apply_append_entries(&mut self, args: &AppendEntriesArgs) -> (bool, LogIndex) {
-        if self.log.matches(args.prev_log_index, args.prev_log_term) {
-            let covered = self.log.reconcile(args.prev_log_index, &args.entries);
-            self.counters.entries_appended += args.entries.len() as u64;
+        // A request reaching below our compaction horizon describes
+        // committed state we already hold (Log Matching on the committed
+        // prefix): re-anchor the walk at the horizon and keep only the
+        // entries above it.
+        let anchor = self.log.first_index() - 1;
+        let (prev, prev_term, entries) = if args.prev_log_index < anchor {
+            let skip = (anchor - args.prev_log_index) as usize;
+            if skip >= args.entries.len() {
+                return (true, anchor); // entirely below the horizon: pure ack
+            }
+            (anchor, args.entries[skip - 1].term, &args.entries[skip..])
+        } else {
+            (args.prev_log_index, args.prev_log_term, &args.entries[..])
+        };
+        if self.log.matches(prev, prev_term) {
+            let covered = self.log.truncate_and_append(prev, entries);
+            self.counters.entries_appended += entries.len() as u64;
+            self.log.sync();
             (true, covered)
         } else {
             (false, self.log.last_index())

@@ -260,7 +260,12 @@ pub(crate) fn start_seed_round(
     planner.end_round(&mut node.counters);
     let round = round_clock.start_round(node.current_term);
     node.counters.rounds_started += 1;
-    let base = commit_history.front().copied().unwrap_or(0).min(node.commit_index);
+    // Clamp to the compaction anchor: the margin must not reach below the
+    // entries the log still retains (a follower that far behind fail-matches
+    // the round and is repaired via InstallSnapshot instead).
+    let anchor = node.log.first_index() - 1;
+    let base =
+        commit_history.front().copied().unwrap_or(0).min(node.commit_index).max(anchor);
     commit_history.push_back(node.commit_index);
     if commit_history.len() > 3 {
         commit_history.pop_front();

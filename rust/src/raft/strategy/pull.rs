@@ -35,7 +35,7 @@
 //! * a matched anchor pins the shared *prefix*, not the served suffix: the
 //!   responder may be a stale laggard whose old-term tail happens to start
 //!   at the anchor. Pulled batches are therefore folded in with
-//!   `LogStore::extend_matching`, which skips duplicates and appends past
+//!   `Storage::append_matching`, which skips duplicates and appends past
 //!   the end but **never truncates** — a conflicting suffix is dropped
 //!   (counted `pull_stale`) and repair is left to the leader's
 //!   AppendEntries path. Truncating here could roll back entries already
@@ -575,10 +575,14 @@ impl ReplicationStrategy for PullStrategy {
         // our log while this pull was in flight). Our tail may already be
         // acked into the leader's monotone match accounting, so rolling it
         // back here could commit an index a counted majority member no
-        // longer holds; `extend_matching` stops at the first term conflict
+        // longer holds; `append_matching` stops at the first term conflict
         // and leaves truncation to the leader's AppendEntries repair.
-        let (covered, conflicted) = node.log.extend_matching(reply.prev_log_index, &reply.entries);
+        let (covered, conflicted) = node.log.append_matching(reply.prev_log_index, &reply.entries);
         node.counters.entries_appended += node.log.last_index() - before;
+        if node.log.last_index() > before {
+            // Pulled entries feed commit adoption below — flush them first.
+            node.log.sync();
+        }
         if conflicted || node.log.last_index() == before {
             // Nothing new: an overlapping duplicate, or a stale suffix —
             // redundancy evidence for the seed controller (folds into this

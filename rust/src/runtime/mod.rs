@@ -12,7 +12,7 @@
 //!
 //! The PJRT path needs the external `xla` crate, which is not vendored (the
 //! crate builds offline with zero dependencies), so everything that touches
-//! PJRT is gated behind the `xla` cargo feature (see DESIGN.md §6). Without
+//! PJRT is gated behind the `xla` cargo feature (see DESIGN.md §7). Without
 //! the feature the native batched implementation — used by the simulator,
 //! the fleet study's default backend, and all tests — is fully functional,
 //! and the HLO entry points return a descriptive error at load time.

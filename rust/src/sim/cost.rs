@@ -63,6 +63,14 @@ impl CostModel {
     pub fn tick_cost(&self) -> u64 {
         self.cfg.tick_us.round() as u64
     }
+
+    /// Cost of `count` fsync barriers issued while processing one work
+    /// item (the storage layer counts them; `fsync = "batch"` issues one
+    /// per flushed batch instead of one per entry — that gap is this
+    /// model's whole point).
+    pub fn fsync_cost(&self, count: u64) -> u64 {
+        (count as f64 * self.cfg.fsync_us).round() as u64
+    }
 }
 
 fn carries_epidemic(msg: &Message) -> bool {
@@ -145,6 +153,16 @@ mod tests {
         let m = CostModel::new(CostConfig::default());
         assert!(m.client_recv_cost() > m.recv_cost(&ae(0, false)));
         assert!(m.client_reply_cost() > m.send_cost(&ae(0, false)));
+    }
+
+    #[test]
+    fn fsync_cost_follows_config() {
+        let m = CostModel::new(CostConfig::default());
+        assert_eq!(m.fsync_cost(10), 0, "fsync is free by default");
+        let mut cfg = CostConfig::default();
+        cfg.fsync_us = 200.0;
+        let m = CostModel::new(cfg);
+        assert_eq!(m.fsync_cost(3), 600);
     }
 
     #[test]

@@ -21,6 +21,11 @@ pub enum Fault {
     Heal { at: Time },
     /// Change the uniform message-loss probability.
     SetLoss { at: Time, loss: f64 },
+    /// Replica dies: all volatile state is lost. Unlike `Crash`, only what
+    /// its `Storage` persisted (log, term/vote, snapshot) survives.
+    Kill { at: Time, replica: NodeId },
+    /// Killed replica comes back, recovering from its `Storage`.
+    Restart { at: Time, replica: NodeId },
 }
 
 impl Fault {
@@ -30,7 +35,9 @@ impl Fault {
             | Fault::Recover { at, .. }
             | Fault::Partition { at, .. }
             | Fault::Heal { at }
-            | Fault::SetLoss { at, .. } => *at,
+            | Fault::SetLoss { at, .. }
+            | Fault::Kill { at, .. }
+            | Fault::Restart { at, .. } => *at,
         }
     }
 }
@@ -69,6 +76,57 @@ impl FaultSchedule {
             Fault::Crash { at, replica: leader },
             Fault::Recover { at: until, replica: leader },
         ])
+    }
+
+    /// Convenience: kill `replica` at `at`, restart it from storage at
+    /// `until`.
+    pub fn kill_restart(at: Time, until: Time, replica: NodeId) -> Self {
+        Self::new(vec![
+            Fault::Kill { at, replica },
+            Fault::Restart { at: until, replica },
+        ])
+    }
+
+    /// Random kill/restart schedule for recovery property tests: up to
+    /// `max_faults` kill/restart pairs, never taking down more than a
+    /// minority at once so the cluster keeps committing between kills.
+    pub fn random_kill_restart(
+        rng: &mut Xoshiro256,
+        n: usize,
+        horizon: Time,
+        max_faults: usize,
+    ) -> Self {
+        let mut faults = Vec::new();
+        let minority = (n - 1) / 2;
+        if minority == 0 || horizon < 1000 {
+            return Self::none();
+        }
+        let mut down: Vec<(NodeId, Time)> = Vec::new();
+        let count = rng.next_below(max_faults as u64 + 1) as usize;
+        let mut t: Time = rng.next_range(1, horizon / 2);
+        for _ in 0..count {
+            down.retain(|&(_, until)| until > t);
+            if down.len() < minority {
+                let mut victim = rng.next_below(n as u64) as NodeId;
+                let mut tries = 0;
+                while down.iter().any(|&(r, _)| r == victim) && tries < 8 {
+                    victim = rng.next_below(n as u64) as NodeId;
+                    tries += 1;
+                }
+                if !down.iter().any(|&(r, _)| r == victim) {
+                    let restart_at = (t + rng.next_range(horizon / 20, horizon / 4))
+                        .min(horizon.saturating_sub(1));
+                    faults.push(Fault::Kill { at: t, replica: victim });
+                    faults.push(Fault::Restart { at: restart_at, replica: victim });
+                    down.push((victim, restart_at));
+                }
+            }
+            t += rng.next_range(horizon / 20, horizon / 5);
+            if t >= horizon {
+                break;
+            }
+        }
+        Self::new(faults)
     }
 
     /// Random schedule for property tests: up to `max_faults` crash/recover
@@ -179,6 +237,37 @@ mod tests {
                     }
                     _ => {}
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn kill_restart_helper() {
+        let s = FaultSchedule::kill_restart(1_000, 5_000, 3);
+        assert_eq!(s.iter().count(), 2);
+        assert_eq!(s.iter().next().unwrap(), &Fault::Kill { at: 1_000, replica: 3 });
+    }
+
+    #[test]
+    fn random_kill_restart_never_downs_majority() {
+        for seed in 0..50 {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let s = FaultSchedule::random_kill_restart(&mut rng, 5, 10_000_000, 6);
+            let mut down = std::collections::HashSet::new();
+            for f in s.iter() {
+                match f {
+                    Fault::Kill { replica, .. } => {
+                        down.insert(*replica);
+                        assert!(down.len() <= 2, "seed {seed}: majority killed");
+                    }
+                    Fault::Restart { replica, .. } => {
+                        down.remove(replica);
+                    }
+                    other => panic!("unexpected fault {other:?}"),
+                }
+            }
+            for f in s.iter() {
+                assert!(f.at() < 10_000_000);
             }
         }
     }

@@ -62,10 +62,25 @@ pub struct SimReport {
     /// for closed-loop runs. Whole-run count, not warmup-clipped — it is a
     /// capacity statement, like egress.
     pub shed: u64,
+    /// Durability subsystem (PR 7, `[storage]`): fsync barriers summed
+    /// across replicas (virtual for in-memory storage — the same count the
+    /// WAL would issue, so `cost.fsync_us` can be charged uniformly),
+    /// snapshots taken locally and installed from a leader's
+    /// `InstallSnapshot`. Whole-run counts.
+    pub fsyncs: u64,
+    pub snapshots_taken: u64,
+    pub snapshots_installed: u64,
+    /// Kill/restart recovery check: every entry committed before a `Kill`
+    /// was still committed (same term) at end of run. Trivially true when
+    /// the schedule has no kills.
+    pub recovery_ok: bool,
     /// Cross-replica committed-prefix agreement held at end of run.
     pub safety_ok: bool,
     /// Highest commit index across replicas at end of run.
     pub max_commit: u64,
+    /// Lowest commit index across replicas at end of run (how far the most
+    /// lagged replica — e.g. a snapshot-restored laggard — caught up).
+    pub min_commit: u64,
     /// Simulated events processed (host-side performance diagnostics).
     pub events_processed: u64,
     /// Wall-clock host time to run the simulation (s).
@@ -112,8 +127,13 @@ impl SimReport {
             ("demoted_current", Json::num(self.demoted_current as f64)),
             ("best_effort_bytes", Json::num(self.best_effort_bytes as f64)),
             ("shed", Json::num(self.shed as f64)),
+            ("fsyncs", Json::num(self.fsyncs as f64)),
+            ("snapshots_taken", Json::num(self.snapshots_taken as f64)),
+            ("snapshots_installed", Json::num(self.snapshots_installed as f64)),
+            ("recovery_ok", Json::Bool(self.recovery_ok)),
             ("safety_ok", Json::Bool(self.safety_ok)),
             ("max_commit", Json::num(self.max_commit as f64)),
+            ("min_commit", Json::num(self.min_commit as f64)),
             ("events_processed", Json::num(self.events_processed as f64)),
             ("host_secs", Json::num(self.host_secs)),
         ])

@@ -158,6 +158,17 @@ impl ActionSink for SimSink<'_> {
     }
 }
 
+/// Committed prefix recorded at the moment of a `Fault::Kill`: recovery is
+/// only correct if everything committed before the kill is still committed
+/// (with the same terms) at end of run.
+struct KilledPrefix {
+    commit: u64,
+    /// `(index, term)` for every committed entry still in the killed
+    /// replica's log (entries below its compaction horizon are covered by
+    /// its snapshot and checked via `commit` alone).
+    entries: Vec<(u64, Term)>,
+}
+
 struct SimReplica {
     node: Node,
     inbox: VecDeque<Work>,
@@ -183,6 +194,7 @@ pub struct Simulation {
     workload: Workload,
     collector: Collector,
     faults: Vec<Fault>,
+    killed_prefixes: Vec<KilledPrefix>,
     elections: u64,
     events: u64,
 }
@@ -217,6 +229,7 @@ impl Simulation {
             workload,
             collector,
             faults: faults.into_vec(),
+            killed_prefixes: Vec::new(),
             elections: 0,
             events: 0,
             cfg,
@@ -316,8 +329,15 @@ impl Simulation {
             Work::Tick => (self.cost.tick_cost(), NodeInput::Tick),
         };
         let last_before = self.replicas[replica].node.last_index();
+        let fsyncs_before = self.replicas[replica].node.log().fsyncs();
         let actions = input.apply(&mut self.replicas[replica].node, now);
-        let total = recv_cost + self.actions_cost(&actions);
+        // Fsync barriers issued by this work item stall the replica's core
+        // like any other service time (MemStorage counts them virtually,
+        // so the charge is identical to what a WAL-backed run would pay).
+        let fsync_delta =
+            self.replicas[replica].node.log().fsyncs() - fsyncs_before;
+        let total =
+            recv_cost + self.actions_cost(&actions) + self.cost.fsync_cost(fsync_delta);
         let done = now + total.max(1);
         // Leader appends feed the Fig 7 interval clock.
         {
@@ -394,6 +414,31 @@ impl Simulation {
             Fault::Partition { groups, .. } => self.net.set_partition(groups),
             Fault::Heal { .. } => self.net.heal(),
             Fault::SetLoss { loss, .. } => self.net.set_loss(loss),
+            Fault::Kill { replica, .. } => {
+                // Record what the victim had committed: recovery must not
+                // lose any of it. Then freeze the replica like a crash —
+                // the volatile-state wipe happens at restart.
+                let r = &mut self.replicas[replica];
+                let commit = r.node.commit_index();
+                let first = r.node.log().first_index();
+                let entries = (first..=commit)
+                    .filter_map(|idx| r.node.log().term_at(idx).map(|t| (idx, t)))
+                    .collect();
+                self.killed_prefixes.push(KilledPrefix { commit, entries });
+                r.crashed = true;
+                r.inbox.clear();
+                r.timer_gen += 1;
+                r.timer_at = Time::MAX;
+            }
+            Fault::Restart { replica, .. } => {
+                let now = self.now;
+                let r = &mut self.replicas[replica];
+                if r.crashed {
+                    r.node.recover_in_place(now);
+                    r.crashed = false;
+                    self.schedule_timer(replica);
+                }
+            }
         }
     }
 
@@ -518,12 +563,36 @@ impl Simulation {
         let mut safety_ok = true;
         for r in &self.replicas {
             let upto = r.node.commit_index();
-            for idx in 1..=upto {
+            // Entries below either side's compaction horizon live in a
+            // snapshot rather than the log; the overlap that is still in
+            // both logs must agree entry-for-entry.
+            let from = r
+                .node
+                .log()
+                .first_index()
+                .max(ref_node.log().first_index());
+            for idx in from..=upto {
                 let a = r.node.log().get(idx);
                 let b = ref_node.log().get(idx);
                 if a.is_none() || a != b {
                     safety_ok = false;
                     break;
+                }
+            }
+        }
+        // Kill/restart recovery: everything committed before each kill must
+        // still be committed, with the same terms, at end of run.
+        let mut recovery_ok = true;
+        for rec in &self.killed_prefixes {
+            if ref_node.commit_index() < rec.commit {
+                recovery_ok = false;
+            }
+            for &(idx, term) in &rec.entries {
+                if idx < ref_node.log().first_index() {
+                    continue; // compacted on the reference — covered above
+                }
+                if ref_node.log().term_at(idx) != Some(term) {
+                    recovery_ok = false;
                 }
             }
         }
@@ -564,6 +633,17 @@ impl Simulation {
         let promotions = self.replicas.iter().map(|r| r.node.counters.promotions).sum();
         let demoted_current = self.replicas[leader].node.counters.demoted_current;
         let best_effort_bytes = self.replicas[leader].node.counters.best_effort_bytes;
+        let fsyncs = self.replicas.iter().map(|r| r.node.log().fsyncs()).sum();
+        let snapshots_taken =
+            self.replicas.iter().map(|r| r.node.counters.snapshots_taken).sum();
+        let snapshots_installed =
+            self.replicas.iter().map(|r| r.node.counters.snapshots_installed).sum();
+        let min_commit = self
+            .replicas
+            .iter()
+            .map(|r| r.node.commit_index())
+            .min()
+            .unwrap_or(0);
         let leader_egress_bytes = self.collector.egress_bytes[leader];
         let peer_egress_bytes_total = (0..n)
             .filter(|&i| i != leader)
@@ -604,8 +684,13 @@ impl Simulation {
             demoted_current,
             best_effort_bytes,
             shed: self.workload.shed,
+            fsyncs,
+            snapshots_taken,
+            snapshots_installed,
+            recovery_ok,
             safety_ok,
             max_commit: ref_node.commit_index(),
+            min_commit,
             events_processed: self.events,
             host_secs,
         }
@@ -904,6 +989,100 @@ mod tests {
             assert!(report.completed > 100, "{variant:?} batched progress");
             assert_eq!(report.elections, 0, "{variant:?} batched leader stability");
         }
+    }
+
+    #[test]
+    fn storage_knobs_without_cost_are_bit_identical() {
+        // The in-memory storage backend must reproduce the pre-storage
+        // runs exactly: fsync accounting is virtual, so with
+        // `cost.fsync_us = 0` (the default) no knob may perturb RNG draws,
+        // message counts or timing.
+        for variant in [Variant::Raft, Variant::Pull, Variant::V1] {
+            let base = run_experiment(&quick_cfg(7, variant));
+            let mut cfg = quick_cfg(7, variant);
+            cfg.protocol.storage.fsync = crate::config::FsyncMode::Always;
+            cfg.protocol.storage.retain_entries = 4096; // knob without effect
+            let off = run_experiment(&cfg);
+            assert_eq!(base.messages, off.messages, "{variant:?}");
+            assert_eq!(base.completed, off.completed, "{variant:?}");
+            assert_eq!(base.mean_latency_us, off.mean_latency_us, "{variant:?}");
+            assert!(off.fsyncs > 0, "{variant:?}: always-mode must count barriers");
+            assert_eq!(base.fsyncs, 0, "{variant:?}: never-mode counts nothing");
+        }
+    }
+
+    #[test]
+    fn kill_restart_preserves_committed_prefix() {
+        // A killed follower loses its volatile state and recovers from
+        // storage; nothing committed before the kill may be lost.
+        for variant in [Variant::Raft, Variant::Pull] {
+            let mut cfg = quick_cfg(5, variant);
+            cfg.workload.duration_us = 6_000_000;
+            cfg.workload.warmup_us = 500_000;
+            let faults = FaultSchedule::kill_restart(2_000_000, 3_500_000, 3);
+            let report = run_with_faults(&cfg, faults);
+            assert!(report.safety_ok, "{variant:?}: safety across kill/restart");
+            assert!(report.recovery_ok, "{variant:?}: committed entries lost");
+            assert!(report.completed > 100, "{variant:?}: service must continue");
+            assert_eq!(report.elections, 0, "{variant:?}: follower kill must not depose");
+        }
+    }
+
+    #[test]
+    fn snapshots_compact_and_catch_up_a_restarted_follower() {
+        // Small snapshot interval: replicas snapshot + compact during the
+        // run, and a killed follower restarting behind the leader's
+        // compaction horizon is caught up via InstallSnapshot.
+        for variant in [Variant::Raft, Variant::Pull] {
+            let mut cfg = quick_cfg(5, variant);
+            cfg.workload.duration_us = 6_000_000;
+            cfg.workload.warmup_us = 500_000;
+            cfg.workload.rate = 400.0;
+            cfg.protocol.storage.snapshot_interval_entries = 100;
+            cfg.protocol.storage.retain_entries = 100;
+            let faults = FaultSchedule::kill_restart(2_000_000, 4_000_000, 3);
+            let report = run_with_faults(&cfg, faults);
+            assert!(report.safety_ok, "{variant:?}");
+            assert!(report.recovery_ok, "{variant:?}");
+            assert!(report.snapshots_taken > 0, "{variant:?}: nobody snapshotted");
+            assert!(
+                report.min_commit * 10 >= report.max_commit * 9,
+                "{variant:?}: restarted follower stuck at {} vs {}",
+                report.min_commit,
+                report.max_commit
+            );
+        }
+    }
+
+    #[test]
+    fn fsync_always_costs_more_than_batch() {
+        // With a real fsync price and group commit on, per-entry barriers
+        // (always) must complete fewer requests than per-batch barriers
+        // (batch), which in turn stay close to free (never).
+        let mk = |mode| {
+            let mut cfg = quick_cfg(5, Variant::Raft);
+            cfg.workload.arrival = crate::config::ArrivalModel::Open;
+            cfg.workload.rate = 4_000.0;
+            cfg.workload.max_inflight = 64;
+            cfg.protocol.batch.enabled = true;
+            cfg.protocol.batch.flush_us = 500;
+            cfg.protocol.storage.fsync = mode;
+            cfg.cost.fsync_us = 400.0;
+            cfg
+        };
+        use crate::config::FsyncMode;
+        let never = run_experiment(&mk(FsyncMode::Never));
+        let batch = run_experiment(&mk(FsyncMode::Batch));
+        let always = run_experiment(&mk(FsyncMode::Always));
+        assert!(never.safety_ok && batch.safety_ok && always.safety_ok);
+        assert!(always.fsyncs > batch.fsyncs, "batching must coalesce barriers");
+        assert_eq!(never.fsyncs, 0);
+        assert!(
+            always.completed < batch.completed,
+            "per-entry barriers ({}) must cost throughput vs batched ({})",
+            always.completed,
+            batch.completed
+        );
     }
 
     #[test]

@@ -1,0 +1,310 @@
+//! In-memory [`Storage`] — the simulator's backend, bit-identical to the
+//! pre-trait `LogStore` behavior (pinned by the
+//! `storage_disabled_is_bit_identical` runner test).
+//!
+//! Durability is modelled, not performed: every point where a durable
+//! backend would issue a write barrier increments a virtual `fsyncs`
+//! counter instead, following the same `[storage] fsync` policy as the
+//! WAL. The simulator charges `cost.fsync_us` per increment, so fsync
+//! batching can be studied at n=51 without touching a disk, and with
+//! `fsync = never` (the default) the counter stays at zero and nothing
+//! about the simulation changes.
+
+use super::{Snapshot, Storage};
+use crate::config::FsyncMode;
+use crate::kvstore::Command;
+use crate::raft::log::{LogEntry, LogStore};
+use crate::raft::types::{LogIndex, NodeId, Term};
+use std::sync::Arc;
+
+/// In-memory storage: the offset-aware [`LogStore`] plus Raft hard state,
+/// the newest snapshot, and the virtual barrier counter.
+#[derive(Clone, Debug)]
+pub struct MemStorage {
+    log: LogStore,
+    term: Term,
+    voted_for: Option<NodeId>,
+    snap: Option<Snapshot>,
+    mode: FsyncMode,
+    dirty: bool,
+    fsyncs: u64,
+}
+
+impl Default for MemStorage {
+    fn default() -> Self {
+        Self::new(FsyncMode::Never)
+    }
+}
+
+impl MemStorage {
+    pub fn new(mode: FsyncMode) -> Self {
+        Self {
+            log: LogStore::new(),
+            term: 0,
+            voted_for: None,
+            snap: None,
+            mode,
+            dirty: false,
+            fsyncs: 0,
+        }
+    }
+
+    /// The wrapped log (WAL mirror + tests).
+    pub(crate) fn log(&self) -> &LogStore {
+        &self.log
+    }
+
+    pub(crate) fn log_mut(&mut self) -> &mut LogStore {
+        &mut self.log
+    }
+
+    /// One log mutation happened: under `always` it costs a barrier right
+    /// away, under `batch` it arms the next [`Storage::sync`].
+    fn mark_dirty(&mut self) {
+        match self.mode {
+            FsyncMode::Always => self.fsyncs += 1,
+            FsyncMode::Batch => self.dirty = true,
+            FsyncMode::Never => {}
+        }
+    }
+}
+
+impl Storage for MemStorage {
+    fn first_index(&self) -> LogIndex {
+        self.log.first_index()
+    }
+
+    fn last_index(&self) -> LogIndex {
+        self.log.last_index()
+    }
+
+    fn last_term(&self) -> Term {
+        self.log.last_term()
+    }
+
+    fn term_at(&self, index: LogIndex) -> Option<Term> {
+        self.log.term_at(index)
+    }
+
+    fn get(&self, index: LogIndex) -> Option<&LogEntry> {
+        self.log.get(index)
+    }
+
+    fn slice(&self, from_exclusive: LogIndex, to_inclusive: LogIndex) -> Arc<Vec<LogEntry>> {
+        self.log.slice(from_exclusive, to_inclusive)
+    }
+
+    fn append(&mut self, term: Term, cmd: Command) -> LogIndex {
+        let idx = self.log.append(term, cmd);
+        self.mark_dirty();
+        idx
+    }
+
+    fn truncate_and_append(&mut self, prev_index: LogIndex, entries: &[LogEntry]) -> LogIndex {
+        let m = self.log.truncate_and_append(prev_index, entries);
+        if m.truncated_to.is_some() || m.appended_from.is_some() {
+            self.mark_dirty();
+        }
+        m.covered
+    }
+
+    fn append_matching(
+        &mut self,
+        prev_index: LogIndex,
+        entries: &[LogEntry],
+    ) -> (LogIndex, bool) {
+        let m = self.log.append_matching(prev_index, entries);
+        if m.appended_from.is_some() {
+            self.mark_dirty();
+        }
+        (m.covered, m.conflicted)
+    }
+
+    fn persist_term_vote(&mut self, term: Term, voted_for: Option<NodeId>) {
+        self.term = term;
+        self.voted_for = voted_for;
+        // Hard state flushes immediately under any durable policy: a vote
+        // must be stable before the reply leaves.
+        if self.mode != FsyncMode::Never {
+            self.fsyncs += 1;
+            self.dirty = false;
+        }
+    }
+
+    fn term_vote(&self) -> (Term, Option<NodeId>) {
+        (self.term, self.voted_for)
+    }
+
+    fn save_snapshot(&mut self, snap: Snapshot) {
+        self.snap = Some(snap);
+        self.mark_dirty();
+    }
+
+    fn snapshot(&self) -> Option<&Snapshot> {
+        self.snap.as_ref()
+    }
+
+    fn install_snapshot(&mut self, snap: Snapshot) {
+        self.log.rebase(snap.last_index, snap.last_term);
+        self.snap = Some(snap);
+        self.mark_dirty();
+    }
+
+    fn compact_to(&mut self, index: LogIndex) {
+        // Never drop entries no snapshot covers.
+        let horizon = index.min(self.snapshot_index());
+        if self.log.compact_to(horizon) {
+            self.mark_dirty();
+        }
+    }
+
+    fn sync(&mut self) -> bool {
+        if self.mode == FsyncMode::Batch && self.dirty {
+            self.dirty = false;
+            self.fsyncs += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn fsyncs(&self) -> u64 {
+        self.fsyncs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(term: Term, index: LogIndex) -> LogEntry {
+        LogEntry { term, index, cmd: Command::Put { key: index, value: term } }
+    }
+
+    fn snap_at(index: LogIndex, term: Term) -> Snapshot {
+        Snapshot {
+            last_index: index,
+            last_term: term,
+            applied: index,
+            digest: 7,
+            pairs: Arc::new(vec![(1, 1)]),
+        }
+    }
+
+    #[test]
+    fn storage_trait_surface_matches_logstore() {
+        let mut s = MemStorage::new(FsyncMode::Never);
+        assert_eq!(s.append(1, Command::Noop), 1);
+        assert_eq!(s.append(1, Command::Noop), 2);
+        assert_eq!(s.truncate_and_append(2, &[entry(1, 3), entry(1, 4)]), 4);
+        assert_eq!(s.append_matching(4, &[entry(1, 5)]), (5, false));
+        assert_eq!(s.last_index(), 5);
+        assert_eq!(s.first_index(), 1);
+        assert!(s.matches(3, 1));
+        assert!(s.candidate_up_to_date(5, 1));
+        assert!(!s.candidate_up_to_date(4, 1));
+        assert_eq!(s.fsyncs(), 0, "fsync = never counts nothing");
+        assert!(!s.sync());
+    }
+
+    #[test]
+    fn term_vote_round_trips() {
+        let mut s = MemStorage::new(FsyncMode::Never);
+        assert_eq!(s.term_vote(), (0, None));
+        s.persist_term_vote(3, Some(1));
+        assert_eq!(s.term_vote(), (3, Some(1)));
+    }
+
+    #[test]
+    fn batch_mode_counts_one_barrier_per_sync() {
+        let mut s = MemStorage::new(FsyncMode::Batch);
+        s.append(1, Command::Noop);
+        s.append(1, Command::Noop);
+        assert_eq!(s.fsyncs(), 0, "batched: nothing until the flush boundary");
+        assert!(s.sync());
+        assert_eq!(s.fsyncs(), 1);
+        assert!(!s.sync(), "clean store needs no barrier");
+        assert_eq!(s.fsyncs(), 1);
+    }
+
+    #[test]
+    fn always_mode_counts_per_mutation() {
+        let mut s = MemStorage::new(FsyncMode::Always);
+        s.append(1, Command::Noop);
+        s.append(1, Command::Noop);
+        assert_eq!(s.fsyncs(), 2);
+        assert!(!s.sync(), "nothing pending under always");
+    }
+
+    #[test]
+    fn term_vote_flushes_immediately_in_batch_mode() {
+        let mut s = MemStorage::new(FsyncMode::Batch);
+        s.append(1, Command::Noop);
+        s.persist_term_vote(2, Some(0));
+        assert_eq!(s.fsyncs(), 1, "vote persist is its own barrier");
+        assert!(!s.sync(), "the vote flush covered the pending append");
+    }
+
+    #[test]
+    fn snapshot_save_and_compaction() {
+        let mut s = MemStorage::new(FsyncMode::Never);
+        for i in 1..=10 {
+            s.append(1, Command::Put { key: i, value: i });
+        }
+        s.save_snapshot(snap_at(6, 1));
+        assert_eq!(s.snapshot_index(), 6);
+        // Compaction is clamped to the snapshot horizon.
+        s.compact_to(9);
+        assert_eq!(s.first_index(), 7);
+        assert_eq!(s.last_index(), 10);
+        assert_eq!(s.term_at(6), Some(1), "anchor term survives compaction");
+        assert_eq!(s.term_at(5), None, "below the anchor is gone");
+        assert!(s.get(6).is_none());
+        assert_eq!(s.get(7).unwrap().index, 7);
+        // Retain margin: compacting to less than the horizon keeps a tail.
+        let mut s2 = MemStorage::new(FsyncMode::Never);
+        for i in 1..=10 {
+            s2.append(1, Command::Put { key: i, value: i });
+        }
+        s2.save_snapshot(snap_at(6, 1));
+        s2.compact_to(4);
+        assert_eq!(s2.first_index(), 5, "retained entries below the snapshot");
+        assert_eq!(s2.snapshot_index(), 6);
+    }
+
+    #[test]
+    fn install_snapshot_replaces_or_keeps_matching_tail() {
+        // Divergent log: wiped.
+        let mut s = MemStorage::new(FsyncMode::Never);
+        for _ in 1..=4 {
+            s.append(1, Command::Noop);
+        }
+        s.install_snapshot(snap_at(8, 2));
+        assert_eq!((s.first_index(), s.last_index(), s.last_term()), (9, 8, 2));
+        assert_eq!(s.term_at(8), Some(2));
+        assert_eq!(s.snapshot_index(), 8);
+        // Matching log: tail beyond the snapshot survives.
+        let mut s = MemStorage::new(FsyncMode::Never);
+        for _ in 1..=6 {
+            s.append(2, Command::Noop);
+        }
+        s.install_snapshot(snap_at(4, 2));
+        assert_eq!((s.first_index(), s.last_index()), (5, 6));
+        assert_eq!(s.get(6).unwrap().term, 2);
+    }
+
+    #[test]
+    fn slice_respects_compaction_offset() {
+        let mut s = MemStorage::new(FsyncMode::Never);
+        for i in 1..=10 {
+            s.append(1, Command::Put { key: i, value: i });
+        }
+        s.save_snapshot(snap_at(5, 1));
+        s.compact_to(5);
+        let batch = s.slice(5, 8);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].index, 6);
+        assert!(s.slice(0, 3).is_empty(), "compacted range yields nothing");
+        assert_eq!(s.slice(0, 99).len(), 5, "clamped to the retained tail");
+    }
+}

@@ -1,0 +1,220 @@
+//! Durability subsystem: the [`Storage`] trait and its two implementations.
+//!
+//! The trait subsumes the old ad-hoc `LogStore` surface (append /
+//! leader-truncation / pull-append / term+vote metadata) and adds the
+//! state-machine snapshot save/load that compaction needs. Every log
+//! access in the protocol core goes through this trait, and every index
+//! accessor is offset-aware: after compaction the log starts at
+//! `first_index() > 1` and `term_at`/`get` answer `None` below it
+//! (`DESIGN.md` §6).
+//!
+//! Two implementations:
+//!
+//! * [`MemStorage`] — the in-memory store the simulator runs on. It is
+//!   bit-identical to the pre-trait behavior (pinned by the
+//!   `storage_disabled_is_bit_identical` runner test); "fsyncs" are
+//!   counted as virtual barriers so the simulator can charge an fsync
+//!   latency cost without touching a disk.
+//! * [`WalStorage`] — an append-only write-ahead log of CRC'd
+//!   length-prefixed records (reusing the PR 5 codec's fixed-width entry
+//!   encoding) plus an atomically-replaced snapshot file. Fsync is
+//!   batched at the group-commit `on_batch_flush` boundary via
+//!   [`Storage::sync`].
+//!
+//! The mutation surface is deliberately narrow and named for semantics,
+//! not mechanism:
+//!
+//! * [`Storage::truncate_and_append`] — the **leader-truncation** path
+//!   (AppendEntries §5.3): conflicts with the leader's batch truncate the
+//!   local tail.
+//! * [`Storage::append_matching`] — the **pull-append** path (anti-entropy
+//!   replies): never truncates, stops at the first term conflict.
+
+pub mod memory;
+pub mod wal;
+
+pub use memory::MemStorage;
+pub use wal::WalStorage;
+
+use crate::config::StorageConfig;
+use crate::kvstore::Command;
+use crate::raft::log::LogEntry;
+use crate::raft::types::{LogIndex, NodeId, Term};
+use std::sync::Arc;
+
+/// A point-in-time state-machine image: everything a replica needs to
+/// serve reads and resume applying at `last_index + 1`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    /// Last log index the snapshot covers (the compaction horizon).
+    pub last_index: LogIndex,
+    /// Term of the entry at `last_index` (log-matching anchor).
+    pub last_term: Term,
+    /// Commands applied to produce this image (`KvStore::applied_count`).
+    pub applied: u64,
+    /// Order-sensitive apply digest (`KvStore::digest`) for cross-replica
+    /// divergence checks after an install.
+    pub digest: u64,
+    /// The key/value map, sorted by key so snapshots of identical state
+    /// are byte-identical. Behind an `Arc`: `InstallSnapshot` fan-out
+    /// shares one allocation.
+    pub pairs: Arc<Vec<(u64, u64)>>,
+}
+
+impl Snapshot {
+    /// Exact wire size of the pairs payload (u32 count + 16 bytes each) —
+    /// used by `Message::wire_bytes` and the WAL snapshot file alike.
+    pub fn pairs_wire_bytes(&self) -> u64 {
+        4 + 16 * self.pairs.len() as u64
+    }
+}
+
+/// Persistent state for one replica. Object-safe (`Box<dyn Storage>` is a
+/// `Node` field); all methods are infallible at this layer — a WAL that
+/// cannot write is a fatal condition for the process, not a recoverable
+/// protocol event.
+pub trait Storage: Send {
+    // ---- read surface (offset-aware) -----------------------------------
+
+    /// Lowest index still present as an entry (`prefix + 1`; 1 when
+    /// nothing was ever compacted, `last_index() + 1` for an empty tail).
+    fn first_index(&self) -> LogIndex;
+    /// Index of the last entry (0 when empty and uncompacted).
+    fn last_index(&self) -> LogIndex;
+    /// Term of the last entry (0 when empty and uncompacted).
+    fn last_term(&self) -> Term;
+    /// Term at `index`: `Some(0)` for the empty sentinel 0, the compaction
+    /// anchor's term at `first_index() - 1`, `None` below that (compacted
+    /// away) or past the end.
+    fn term_at(&self, index: LogIndex) -> Option<Term>;
+    /// The entry at `index` (`None` at/below the compaction anchor or past
+    /// the end).
+    fn get(&self, index: LogIndex) -> Option<&LogEntry>;
+    /// Clone the entries in `(from, to]` into an `Arc` batch for cheap
+    /// fan-out. Clamped to the retained range.
+    fn slice(&self, from_exclusive: LogIndex, to_inclusive: LogIndex) -> Arc<Vec<LogEntry>>;
+
+    /// Raft log-matching check: does this log contain `(prev_index,
+    /// prev_term)`?
+    fn matches(&self, prev_index: LogIndex, prev_term: Term) -> bool {
+        self.term_at(prev_index) == Some(prev_term)
+    }
+
+    /// Raft election restriction: is a candidate with `(cand_last_index,
+    /// cand_last_term)` at least as up-to-date as this log?
+    fn candidate_up_to_date(&self, cand_last_index: LogIndex, cand_last_term: Term) -> bool {
+        let (li, lt) = (self.last_index(), self.last_term());
+        cand_last_term > lt || (cand_last_term == lt && cand_last_index >= li)
+    }
+
+    // ---- mutation surface ----------------------------------------------
+
+    /// Leader path: append a fresh entry, returning its index.
+    fn append(&mut self, term: Term, cmd: Command) -> LogIndex;
+
+    /// Leader-truncation path (AppendEntries §5.3): assuming
+    /// `matches(prev_index, ·)`, skip entries already present with the
+    /// same term, truncate the tail at the first conflict, append the
+    /// remainder. Returns the last index covered by the request.
+    fn truncate_and_append(&mut self, prev_index: LogIndex, entries: &[LogEntry]) -> LogIndex;
+
+    /// Pull-append path (anti-entropy): like [`truncate_and_append`] but
+    /// **never truncates** — the walk stops at the first term conflict.
+    /// Returns `(covered, conflicted)`.
+    ///
+    /// [`truncate_and_append`]: Storage::truncate_and_append
+    fn append_matching(
+        &mut self,
+        prev_index: LogIndex,
+        entries: &[LogEntry],
+    ) -> (LogIndex, bool);
+
+    // ---- term / vote metadata ------------------------------------------
+
+    /// Persist the Raft hard state. Durable implementations flush this
+    /// immediately (a vote must be on disk before the reply leaves).
+    fn persist_term_vote(&mut self, term: Term, voted_for: Option<NodeId>);
+    /// The persisted hard state (what a restart recovers).
+    fn term_vote(&self) -> (Term, Option<NodeId>);
+
+    // ---- snapshots + compaction ----------------------------------------
+
+    /// Persist a state-machine snapshot (atomic replace of any previous
+    /// one). Does not compact — call [`compact_to`] separately so a
+    /// `retain_entries` margin can be kept for cheap tail repair.
+    ///
+    /// [`compact_to`]: Storage::compact_to
+    fn save_snapshot(&mut self, snap: Snapshot);
+    /// The newest saved snapshot, if any.
+    fn snapshot(&self) -> Option<&Snapshot>;
+    /// Index covered by the newest snapshot (0 when none).
+    fn snapshot_index(&self) -> LogIndex {
+        self.snapshot().map_or(0, |s| s.last_index)
+    }
+    /// Replace log + state-machine image wholesale (follower receiving
+    /// `InstallSnapshot`): saves the snapshot and re-anchors the log at
+    /// `snap.last_index`, keeping a matching tail if one exists.
+    fn install_snapshot(&mut self, snap: Snapshot);
+    /// Drop entries at and below `index` (clamped to the snapshot horizon:
+    /// entries not covered by a snapshot are never dropped).
+    fn compact_to(&mut self, index: LogIndex);
+
+    // ---- durability ----------------------------------------------------
+
+    /// Flush pending mutations (the group-commit `on_batch_flush`
+    /// boundary under `fsync = batch`). Returns true when a real barrier
+    /// was issued (or counted, for [`MemStorage`]'s virtual ones).
+    fn sync(&mut self) -> bool;
+    /// Barriers issued so far — the simulator charges `cost.fsync_us` per
+    /// increment, the live report prints it.
+    fn fsyncs(&self) -> u64;
+}
+
+/// Open the storage backend `[storage]` selects: in-memory when `dir` is
+/// empty, a per-replica WAL under `dir/node-<id>/` otherwise.
+pub fn open_storage(cfg: &StorageConfig, node_id: NodeId) -> Result<Box<dyn Storage>, String> {
+    if cfg.dir.is_empty() {
+        Ok(Box::new(MemStorage::new(cfg.fsync)))
+    } else {
+        let dir = std::path::Path::new(&cfg.dir).join(format!("node-{node_id}"));
+        let wal = WalStorage::open(&dir, cfg.fsync)
+            .map_err(|e| format!("storage.dir {}: {e}", dir.display()))?;
+        Ok(Box::new(wal))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FsyncMode, StorageConfig};
+
+    #[test]
+    fn open_storage_picks_backend_from_dir() {
+        let mem = open_storage(&StorageConfig::default(), 0).unwrap();
+        assert_eq!(mem.first_index(), 1);
+        assert_eq!(mem.fsyncs(), 0);
+
+        let tmp = wal::testutil::TempDir::new("open-storage");
+        let cfg = StorageConfig {
+            dir: tmp.path().to_string_lossy().into_owned(),
+            fsync: FsyncMode::Batch,
+            ..StorageConfig::default()
+        };
+        let mut wal = open_storage(&cfg, 3).unwrap();
+        wal.append(1, Command::Noop);
+        assert!(tmp.path().join("node-3").join("wal.log").exists());
+    }
+
+    #[test]
+    fn snapshot_wire_bytes_linear_in_pairs() {
+        let snap = |k: usize| Snapshot {
+            last_index: 10,
+            last_term: 1,
+            applied: 10,
+            digest: 0,
+            pairs: Arc::new((0..k as u64).map(|i| (i, i)).collect()),
+        };
+        assert_eq!(snap(0).pairs_wire_bytes(), 4);
+        assert_eq!(snap(8).pairs_wire_bytes() - snap(0).pairs_wire_bytes(), 8 * 16);
+    }
+}

@@ -1,0 +1,718 @@
+//! Append-only write-ahead log [`Storage`] (DESIGN.md §6).
+//!
+//! Layout under the per-replica directory (`<storage.dir>/node-<id>/`):
+//!
+//! ```text
+//! wal.log       sequence of records: [len u32][crc32 u32][payload]
+//! snapshot.bin  newest snapshot: [crc32 u32][payload], tmp+rename
+//! ```
+//!
+//! Record payloads (first byte is the tag):
+//!
+//! | tag | record    | payload after the tag                          |
+//! |-----|-----------|------------------------------------------------|
+//! | 1   | Entry     | 33-byte codec entry (term, index, command)     |
+//! | 2   | Truncate  | last retained index `u64`                      |
+//! | 3   | TermVote  | term `u64`, presence `u8`, voted-for `u32`     |
+//! | 4   | Compact   | anchor index `u64`, anchor term `u64`          |
+//!
+//! The entry payload is byte-identical to the wire codec's fixed-width
+//! entry encoding (`transport::codec::encode_entry`), so disk and wire
+//! share one format. CRCs are CRC-32 (IEEE); recovery replays records in
+//! order and **stops at the first invalid one** (bad length, bad CRC,
+//! non-contiguous index), truncating the file there — a torn tail from a
+//! mid-write crash costs the un-synced suffix and nothing else, and never
+//! panics.
+//!
+//! Fsync policy (`[storage] fsync`): `always` issues a barrier per
+//! mutating call, `batch` arms one for the next [`Storage::sync`] (the
+//! group-commit flush boundary), `never` writes without barriers. Term /
+//! vote persistence flushes immediately under any durable policy. After
+//! snapshot + compaction the WAL is rewritten (tmp+rename) to just the
+//! retained tail, bounding its size.
+
+use super::memory::MemStorage;
+use super::{Snapshot, Storage};
+use crate::config::FsyncMode;
+use crate::kvstore::Command;
+use crate::raft::log::LogEntry;
+use crate::raft::types::{LogIndex, NodeId, Term};
+use crate::transport::codec::{self, ENTRY_WIRE_BYTES};
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const REC_ENTRY: u8 = 1;
+const REC_TRUNCATE: u8 = 2;
+const REC_TERM_VOTE: u8 = 3;
+const REC_COMPACT: u8 = 4;
+
+/// Largest legal record payload (entry records are 34 bytes; the bound
+/// stops a corrupt length prefix from ever looking valid).
+const MAX_RECORD_LEN: usize = 64;
+
+// ---- CRC-32 (IEEE 802.3, reflected) ------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 over `bytes` (IEEE polynomial, as used by gzip/zlib).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC_TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+// ---- little-endian slice readers ---------------------------------------
+
+fn rd_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b[..4].try_into().expect("4 bytes"))
+}
+
+fn rd_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().expect("8 bytes"))
+}
+
+// ---- the storage impl --------------------------------------------------
+
+/// Durable [`Storage`]: an in-memory mirror (the offset-aware log) plus
+/// the WAL file and snapshot file that recreate it after a restart.
+pub struct WalStorage {
+    mem: MemStorage,
+    dir: PathBuf,
+    file: File,
+    mode: FsyncMode,
+    dirty: bool,
+    fsyncs: u64,
+}
+
+impl WalStorage {
+    /// Open (or create) the WAL under `dir`, replaying snapshot + records
+    /// into the in-memory mirror. A torn or corrupt tail is truncated;
+    /// everything up to the last valid record is recovered.
+    pub fn open(dir: &Path, mode: FsyncMode) -> std::io::Result<Self> {
+        fs::create_dir_all(dir)?;
+        let mut mem = MemStorage::new(FsyncMode::Never);
+
+        if let Ok(bytes) = fs::read(dir.join("snapshot.bin")) {
+            if let Some(snap) = decode_snapshot(&bytes) {
+                mem.install_snapshot(snap);
+            }
+        }
+
+        let wal_path = dir.join("wal.log");
+        let bytes = fs::read(&wal_path).unwrap_or_default();
+        let valid = replay(&mut mem, &bytes);
+        if valid < bytes.len() {
+            // Torn tail: cut the file back to the last valid record so
+            // future appends continue from a clean boundary.
+            let f = OpenOptions::new().write(true).open(&wal_path)?;
+            f.set_len(valid as u64)?;
+        }
+
+        // A Compact record without its snapshot (crash between the two
+        // writes, or a lost snapshot file) leaves a log that starts above
+        // an unrecoverable state-machine prefix. Reset to an empty log —
+        // the leader will repair via InstallSnapshot — keeping only the
+        // hard state, which is what Raft's safety actually needs.
+        let mut reset = false;
+        if mem.snapshot().is_none() && mem.log().anchor().0 > 0 {
+            let (term, vote) = mem.term_vote();
+            mem = MemStorage::new(FsyncMode::Never);
+            mem.persist_term_vote(term, vote);
+            reset = true;
+        }
+
+        let file = OpenOptions::new().create(true).append(true).open(&wal_path)?;
+        let mut wal =
+            Self { mem, dir: dir.to_path_buf(), file, mode, dirty: false, fsyncs: 0 };
+        if reset {
+            wal.rewrite_wal();
+        }
+        Ok(wal)
+    }
+
+    /// The replica directory this WAL lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn barrier(&mut self) {
+        self.file.sync_data().expect("WAL fsync");
+        self.fsyncs += 1;
+        self.dirty = false;
+    }
+
+    fn mark_dirty(&mut self) {
+        match self.mode {
+            FsyncMode::Always => self.barrier(),
+            FsyncMode::Batch => self.dirty = true,
+            FsyncMode::Never => {}
+        }
+    }
+
+    fn write_record(&mut self, payload: &[u8]) {
+        let mut buf = Vec::with_capacity(8 + payload.len());
+        append_record(&mut buf, payload);
+        self.file.write_all(&buf).expect("WAL append");
+        self.mark_dirty();
+    }
+
+    fn write_entry(&mut self, e: &LogEntry) {
+        self.write_record(&entry_payload(e));
+    }
+
+    /// Rewrite the WAL to exactly the mirror's retained state (after
+    /// compaction / snapshot install): hard state, anchor, tail entries.
+    /// tmp+rename so a crash mid-rewrite leaves the old file intact.
+    fn rewrite_wal(&mut self) {
+        let mut buf = Vec::new();
+        let (term, vote) = self.mem.term_vote();
+        append_record(&mut buf, &term_vote_payload(term, vote));
+        let (anchor_index, anchor_term) = self.mem.log().anchor();
+        if anchor_index > 0 {
+            append_record(&mut buf, &compact_payload(anchor_index, anchor_term));
+        }
+        for e in self.mem.log().iter() {
+            append_record(&mut buf, &entry_payload(e));
+        }
+        let tmp = self.dir.join("wal.log.tmp");
+        let mut f = File::create(&tmp).expect("WAL rewrite create");
+        f.write_all(&buf).expect("WAL rewrite write");
+        if self.mode != FsyncMode::Never {
+            f.sync_data().expect("WAL rewrite fsync");
+            self.fsyncs += 1;
+        }
+        drop(f);
+        fs::rename(&tmp, self.dir.join("wal.log")).expect("WAL rewrite rename");
+        self.file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.dir.join("wal.log"))
+            .expect("WAL reopen");
+        self.dirty = false;
+    }
+
+    fn write_snapshot_file(&mut self, snap: &Snapshot) {
+        let bytes = encode_snapshot(snap);
+        let tmp = self.dir.join("snapshot.bin.tmp");
+        let mut f = File::create(&tmp).expect("snapshot create");
+        f.write_all(&bytes).expect("snapshot write");
+        if self.mode != FsyncMode::Never {
+            f.sync_data().expect("snapshot fsync");
+            self.fsyncs += 1;
+        }
+        drop(f);
+        fs::rename(&tmp, self.dir.join("snapshot.bin")).expect("snapshot rename");
+    }
+}
+
+impl Storage for WalStorage {
+    fn first_index(&self) -> LogIndex {
+        self.mem.first_index()
+    }
+
+    fn last_index(&self) -> LogIndex {
+        self.mem.last_index()
+    }
+
+    fn last_term(&self) -> Term {
+        self.mem.last_term()
+    }
+
+    fn term_at(&self, index: LogIndex) -> Option<Term> {
+        self.mem.term_at(index)
+    }
+
+    fn get(&self, index: LogIndex) -> Option<&LogEntry> {
+        self.mem.get(index)
+    }
+
+    fn slice(&self, from_exclusive: LogIndex, to_inclusive: LogIndex) -> Arc<Vec<LogEntry>> {
+        self.mem.slice(from_exclusive, to_inclusive)
+    }
+
+    fn append(&mut self, term: Term, cmd: Command) -> LogIndex {
+        let idx = self.mem.append(term, cmd);
+        let e = self.mem.get(idx).expect("just appended").clone();
+        self.write_entry(&e);
+        idx
+    }
+
+    fn truncate_and_append(&mut self, prev_index: LogIndex, entries: &[LogEntry]) -> LogIndex {
+        let m = self.mem.log_mut().truncate_and_append(prev_index, entries);
+        if let Some(t) = m.truncated_to {
+            self.write_record(&truncate_payload(t));
+        }
+        if let Some(f) = m.appended_from {
+            for e in &entries[(f - prev_index - 1) as usize..] {
+                self.write_entry(e);
+            }
+        }
+        m.covered
+    }
+
+    fn append_matching(
+        &mut self,
+        prev_index: LogIndex,
+        entries: &[LogEntry],
+    ) -> (LogIndex, bool) {
+        let m = self.mem.log_mut().append_matching(prev_index, entries);
+        if let Some(f) = m.appended_from {
+            let lo = (f - prev_index - 1) as usize;
+            let hi = (m.covered - prev_index) as usize;
+            for e in &entries[lo..hi] {
+                self.write_entry(e);
+            }
+        }
+        (m.covered, m.conflicted)
+    }
+
+    fn persist_term_vote(&mut self, term: Term, voted_for: Option<NodeId>) {
+        self.mem.persist_term_vote(term, voted_for);
+        self.write_record(&term_vote_payload(term, voted_for));
+        // A vote must be stable before the reply leaves, whatever the
+        // batching policy (`always` already flushed in write_record).
+        if self.mode == FsyncMode::Batch {
+            self.barrier();
+        }
+    }
+
+    fn term_vote(&self) -> (Term, Option<NodeId>) {
+        self.mem.term_vote()
+    }
+
+    fn save_snapshot(&mut self, snap: Snapshot) {
+        self.write_snapshot_file(&snap);
+        self.mem.save_snapshot(snap);
+    }
+
+    fn snapshot(&self) -> Option<&Snapshot> {
+        self.mem.snapshot()
+    }
+
+    fn install_snapshot(&mut self, snap: Snapshot) {
+        self.write_snapshot_file(&snap);
+        self.mem.install_snapshot(snap);
+        self.rewrite_wal();
+    }
+
+    fn compact_to(&mut self, index: LogIndex) {
+        let before = self.mem.first_index();
+        self.mem.compact_to(index);
+        if self.mem.first_index() != before {
+            self.rewrite_wal();
+        }
+    }
+
+    fn sync(&mut self) -> bool {
+        if self.mode == FsyncMode::Batch && self.dirty {
+            self.barrier();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn fsyncs(&self) -> u64 {
+        self.fsyncs
+    }
+}
+
+// ---- record / snapshot codecs ------------------------------------------
+
+fn append_record(buf: &mut Vec<u8>, payload: &[u8]) {
+    debug_assert!(payload.len() <= MAX_RECORD_LEN);
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&crc32(payload).to_le_bytes());
+    buf.extend_from_slice(payload);
+}
+
+fn entry_payload(e: &LogEntry) -> Vec<u8> {
+    let mut p = Vec::with_capacity(1 + ENTRY_WIRE_BYTES);
+    p.push(REC_ENTRY);
+    codec::encode_entry(&mut p, e);
+    p
+}
+
+fn truncate_payload(last: LogIndex) -> Vec<u8> {
+    let mut p = Vec::with_capacity(9);
+    p.push(REC_TRUNCATE);
+    p.extend_from_slice(&last.to_le_bytes());
+    p
+}
+
+fn term_vote_payload(term: Term, vote: Option<NodeId>) -> Vec<u8> {
+    let mut p = Vec::with_capacity(14);
+    p.push(REC_TERM_VOTE);
+    p.extend_from_slice(&term.to_le_bytes());
+    p.push(vote.is_some() as u8);
+    let id = vote.map_or(0u32, |v| u32::try_from(v).expect("NodeId fits in u32"));
+    p.extend_from_slice(&id.to_le_bytes());
+    p
+}
+
+fn compact_payload(anchor_index: LogIndex, anchor_term: Term) -> Vec<u8> {
+    let mut p = Vec::with_capacity(17);
+    p.push(REC_COMPACT);
+    p.extend_from_slice(&anchor_index.to_le_bytes());
+    p.extend_from_slice(&anchor_term.to_le_bytes());
+    p
+}
+
+fn encode_snapshot(snap: &Snapshot) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(36 + 16 * snap.pairs.len());
+    payload.extend_from_slice(&snap.last_index.to_le_bytes());
+    payload.extend_from_slice(&snap.last_term.to_le_bytes());
+    payload.extend_from_slice(&snap.applied.to_le_bytes());
+    payload.extend_from_slice(&snap.digest.to_le_bytes());
+    payload.extend_from_slice(&(snap.pairs.len() as u32).to_le_bytes());
+    for (k, v) in snap.pairs.iter() {
+        payload.extend_from_slice(&k.to_le_bytes());
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&crc32(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn decode_snapshot(bytes: &[u8]) -> Option<Snapshot> {
+    if bytes.len() < 4 + 36 {
+        return None;
+    }
+    let (crc, payload) = (rd_u32(bytes), &bytes[4..]);
+    if crc32(payload) != crc {
+        return None;
+    }
+    let count = rd_u32(&payload[32..]) as usize;
+    if payload.len() != 36 + 16 * count {
+        return None;
+    }
+    let mut pairs = Vec::with_capacity(count);
+    for i in 0..count {
+        let at = 36 + 16 * i;
+        pairs.push((rd_u64(&payload[at..]), rd_u64(&payload[at + 8..])));
+    }
+    Some(Snapshot {
+        last_index: rd_u64(payload),
+        last_term: rd_u64(&payload[8..]),
+        applied: rd_u64(&payload[16..]),
+        digest: rd_u64(&payload[24..]),
+        pairs: Arc::new(pairs),
+    })
+}
+
+/// Replay records into the mirror; returns the byte length of the valid
+/// prefix. Stops (without panicking) at the first bad length, bad CRC,
+/// short payload, or non-contiguous entry.
+fn replay(mem: &mut MemStorage, bytes: &[u8]) -> usize {
+    let mut pos = 0usize;
+    while bytes.len() - pos >= 8 {
+        let len = rd_u32(&bytes[pos..]) as usize;
+        if len == 0 || len > MAX_RECORD_LEN || bytes.len() - pos - 8 < len {
+            break;
+        }
+        let crc = rd_u32(&bytes[pos + 4..]);
+        let payload = &bytes[pos + 8..pos + 8 + len];
+        if crc32(payload) != crc || !apply_record(mem, payload) {
+            break;
+        }
+        pos += 8 + len;
+    }
+    pos
+}
+
+fn apply_record(mem: &mut MemStorage, payload: &[u8]) -> bool {
+    match payload[0] {
+        REC_ENTRY if payload.len() == 1 + ENTRY_WIRE_BYTES => {
+            let Ok(e) = codec::decode_entry(&payload[1..]) else { return false };
+            let log = mem.log_mut();
+            if e.index <= log.anchor().0 {
+                return true; // below the anchor: the snapshot covers it
+            }
+            if e.index <= log.last_index() {
+                if log.term_at(e.index) == Some(e.term) {
+                    return true; // duplicate replay
+                }
+                log.truncate_to(e.index - 1);
+                log.push(e);
+            } else if e.index == log.last_index() + 1 {
+                log.push(e);
+            } else {
+                return false; // gap: corrupt stream
+            }
+            true
+        }
+        REC_TRUNCATE if payload.len() == 9 => {
+            mem.log_mut().truncate_to(rd_u64(&payload[1..]));
+            true
+        }
+        REC_TERM_VOTE if payload.len() == 14 => {
+            let term = rd_u64(&payload[1..]);
+            let vote = match payload[9] {
+                0 => None,
+                1 => Some(rd_u32(&payload[10..]) as NodeId),
+                _ => return false,
+            };
+            mem.persist_term_vote(term, vote);
+            true
+        }
+        REC_COMPACT if payload.len() == 17 => {
+            let (index, term) = (rd_u64(&payload[1..]), rd_u64(&payload[9..]));
+            mem.log_mut().rebase(index, term);
+            true
+        }
+        _ => false,
+    }
+}
+
+// ---- test support ------------------------------------------------------
+
+/// Unique per-test directories under the OS temp dir, removed on drop —
+/// WAL tests must never leave files outside `TMPDIR` (CI checks the tree
+/// stays clean).
+#[cfg(test)]
+pub(crate) mod testutil {
+    use std::path::{Path, PathBuf};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    pub struct TempDir(PathBuf);
+
+    impl TempDir {
+        pub fn new(tag: &str) -> Self {
+            static SEQ: AtomicU64 = AtomicU64::new(0);
+            let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+            let dir = std::env::temp_dir()
+                .join(format!("epiraft-{tag}-{}-{seq}", std::process::id()));
+            std::fs::create_dir_all(&dir).expect("create temp dir");
+            TempDir(dir)
+        }
+
+        pub fn path(&self) -> &Path {
+            &self.0
+        }
+    }
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::TempDir;
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn e(term: Term, index: LogIndex) -> LogEntry {
+        LogEntry { term, index, cmd: Command::Put { key: index, value: term * 100 } }
+    }
+
+    fn snap_at(index: LogIndex, term: Term) -> Snapshot {
+        Snapshot {
+            last_index: index,
+            last_term: term,
+            applied: index,
+            digest: 0xDEAD,
+            pairs: Arc::new(vec![(1, 10), (2, 20)]),
+        }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // IEEE CRC-32 of "123456789" is the classic check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn wal_persists_across_reopen() {
+        let tmp = TempDir::new("wal-reopen");
+        {
+            let mut w = WalStorage::open(tmp.path(), FsyncMode::Batch).unwrap();
+            w.append(1, Command::Put { key: 7, value: 9 });
+            w.append(1, Command::Noop);
+            w.truncate_and_append(2, &[e(1, 3), e(1, 4)]);
+            // Leader-truncation conflict: index 3..4 replaced at term 2.
+            w.truncate_and_append(2, &[e(2, 3)]);
+            w.append_matching(3, &[e(2, 4), e(2, 5)]);
+            w.persist_term_vote(2, Some(1));
+            w.sync();
+        }
+        let w = WalStorage::open(tmp.path(), FsyncMode::Batch).unwrap();
+        assert_eq!(w.last_index(), 5);
+        assert_eq!(w.term_at(2), Some(1));
+        assert_eq!(w.term_at(3), Some(2), "truncation record replayed");
+        assert_eq!(w.term_at(5), Some(2));
+        assert_eq!(w.get(1).unwrap().cmd, Command::Put { key: 7, value: 9 });
+        assert_eq!(w.term_vote(), (2, Some(1)));
+    }
+
+    #[test]
+    fn fsync_policy_counts() {
+        let tmp = TempDir::new("wal-fsync");
+        let mut w = WalStorage::open(tmp.path(), FsyncMode::Batch).unwrap();
+        w.append(1, Command::Noop);
+        w.append(1, Command::Noop);
+        assert_eq!(w.fsyncs(), 0);
+        assert!(w.sync(), "dirty batch flushes");
+        assert_eq!(w.fsyncs(), 1);
+        assert!(!w.sync(), "clean WAL: no barrier");
+
+        let tmp2 = TempDir::new("wal-fsync-always");
+        let mut a = WalStorage::open(tmp2.path(), FsyncMode::Always).unwrap();
+        a.append(1, Command::Noop);
+        a.append(1, Command::Noop);
+        assert_eq!(a.fsyncs(), 2, "always: one barrier per mutation");
+    }
+
+    #[test]
+    fn snapshot_and_compaction_survive_reopen() {
+        let tmp = TempDir::new("wal-snap");
+        {
+            let mut w = WalStorage::open(tmp.path(), FsyncMode::Batch).unwrap();
+            for i in 1..=10 {
+                w.append(1, Command::Put { key: i, value: i });
+            }
+            w.save_snapshot(snap_at(6, 1));
+            w.compact_to(6);
+            w.sync();
+        }
+        let w = WalStorage::open(tmp.path(), FsyncMode::Batch).unwrap();
+        assert_eq!(w.first_index(), 7);
+        assert_eq!(w.last_index(), 10);
+        assert_eq!(w.term_at(6), Some(1), "anchor from the rewritten WAL");
+        assert_eq!(w.snapshot_index(), 6);
+        let snap = w.snapshot().unwrap();
+        assert_eq!(snap.digest, 0xDEAD);
+        assert_eq!(*snap.pairs, vec![(1, 10), (2, 20)]);
+    }
+
+    #[test]
+    fn install_snapshot_resets_and_survives() {
+        let tmp = TempDir::new("wal-install");
+        {
+            let mut w = WalStorage::open(tmp.path(), FsyncMode::Batch).unwrap();
+            for _ in 1..=3 {
+                w.append(1, Command::Noop);
+            }
+            w.install_snapshot(snap_at(20, 4));
+            w.append(4, Command::Noop); // index 21
+            w.sync();
+        }
+        let w = WalStorage::open(tmp.path(), FsyncMode::Batch).unwrap();
+        assert_eq!((w.first_index(), w.last_index()), (21, 21));
+        assert_eq!(w.term_at(20), Some(4));
+        assert_eq!(w.snapshot_index(), 20);
+    }
+
+    #[test]
+    fn torn_write_recovery_stops_at_last_valid_record() {
+        // Build a WAL, then truncate the file at every prefix length: the
+        // replayed log must be a valid prefix, never a panic; and the
+        // reopened WAL must keep accepting appends.
+        let tmp = TempDir::new("wal-torn");
+        let total = {
+            let mut w = WalStorage::open(tmp.path(), FsyncMode::Never).unwrap();
+            for i in 1..=20 {
+                w.append(1, Command::Put { key: i, value: i });
+            }
+            w.persist_term_vote(3, Some(0));
+            fs::metadata(tmp.path().join("wal.log")).unwrap().len()
+        };
+        let pristine = fs::read(tmp.path().join("wal.log")).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        for _ in 0..32 {
+            let cut = rng.next_below(total + 1);
+            fs::write(tmp.path().join("wal.log"), &pristine[..cut as usize]).unwrap();
+            let mut w = WalStorage::open(tmp.path(), FsyncMode::Never).unwrap();
+            assert!(w.last_index() <= 20);
+            for i in 1..=w.last_index() {
+                assert_eq!(w.get(i).unwrap().cmd, Command::Put { key: i, value: i });
+            }
+            // The torn tail was truncated: appends continue cleanly.
+            let next = w.last_index() + 1;
+            assert_eq!(w.append(2, Command::Noop), next);
+            let w2 = WalStorage::open(tmp.path(), FsyncMode::Never).unwrap();
+            assert_eq!(w2.last_index(), next);
+            assert_eq!(w2.term_at(next), Some(2));
+        }
+    }
+
+    #[test]
+    fn corrupt_record_truncates_suffix() {
+        let tmp = TempDir::new("wal-corrupt");
+        {
+            let mut w = WalStorage::open(tmp.path(), FsyncMode::Never).unwrap();
+            for i in 1..=10 {
+                w.append(1, Command::Put { key: i, value: i });
+            }
+        }
+        let mut bytes = fs::read(tmp.path().join("wal.log")).unwrap();
+        // Flip a payload byte mid-file: CRC check must stop replay there.
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        fs::write(tmp.path().join("wal.log"), &bytes).unwrap();
+        let w = WalStorage::open(tmp.path(), FsyncMode::Never).unwrap();
+        assert!(w.last_index() < 10, "suffix after the corrupt record dropped");
+        // The file was truncated to the valid prefix: reopening is stable.
+        let again = WalStorage::open(tmp.path(), FsyncMode::Never).unwrap();
+        assert_eq!(again.last_index(), w.last_index());
+    }
+
+    #[test]
+    fn lost_snapshot_with_compacted_wal_resets_log() {
+        let tmp = TempDir::new("wal-lost-snap");
+        {
+            let mut w = WalStorage::open(tmp.path(), FsyncMode::Never).unwrap();
+            for i in 1..=10 {
+                w.append(2, Command::Put { key: i, value: i });
+            }
+            w.persist_term_vote(2, Some(0));
+            w.save_snapshot(snap_at(8, 2));
+            w.compact_to(8);
+        }
+        fs::remove_file(tmp.path().join("snapshot.bin")).unwrap();
+        let w = WalStorage::open(tmp.path(), FsyncMode::Never).unwrap();
+        assert_eq!(w.last_index(), 0, "unrecoverable prefix: log reset");
+        assert_eq!(w.first_index(), 1);
+        assert_eq!(w.term_vote(), (2, Some(0)), "hard state survives");
+        // And the reset state is itself persistent.
+        let again = WalStorage::open(tmp.path(), FsyncMode::Never).unwrap();
+        assert_eq!(again.last_index(), 0);
+        assert_eq!(again.term_vote(), (2, Some(0)));
+    }
+
+    #[test]
+    fn snapshot_codec_round_trip_and_rejects_corruption() {
+        let snap = snap_at(42, 3);
+        let bytes = encode_snapshot(&snap);
+        assert_eq!(decode_snapshot(&bytes).as_ref(), Some(&snap));
+        let mut bad = bytes.clone();
+        bad[10] ^= 1;
+        assert_eq!(decode_snapshot(&bad), None, "CRC catches corruption");
+        assert_eq!(decode_snapshot(&bytes[..bytes.len() - 1]), None, "short file rejected");
+        assert_eq!(decode_snapshot(b""), None);
+    }
+}

@@ -29,8 +29,8 @@ use crate::epidemic::EpidemicState;
 use crate::kvstore::Command;
 use crate::raft::log::LogEntry;
 use crate::raft::message::{
-    AppendEntriesArgs, AppendEntriesReply, GossipMeta, Message, PullReplyArgs, PullRequestArgs,
-    RequestVoteArgs, RequestVoteReply,
+    AppendEntriesArgs, AppendEntriesReply, GossipMeta, InstallSnapshotArgs, Message,
+    PullReplyArgs, PullRequestArgs, RequestVoteArgs, RequestVoteReply,
 };
 use crate::raft::types::NodeId;
 use crate::util::bitset::Bitmap;
@@ -54,6 +54,7 @@ const KIND_VOTE: u8 = 3;
 const KIND_VOTE_REPLY: u8 = 4;
 const KIND_PULL_REQ: u8 = 5;
 const KIND_PULL_REPLY: u8 = 6;
+const KIND_INSTALL_SNAPSHOT: u8 = 7;
 
 /// Fixed encoded size of one log entry (term + index + tagged command).
 pub const ENTRY_WIRE_BYTES: usize = 33;
@@ -159,10 +160,33 @@ fn put_command(buf: &mut Vec<u8>, cmd: &Command) {
         Command::Put { key, value } => (1, key, value),
         Command::Get { key } => (2, key, 0),
         Command::Delete { key } => (3, key, 0),
+        Command::Add { key, delta } => (4, key, delta),
     };
     put_u8(buf, tag);
     put_u64(buf, a);
     put_u64(buf, b);
+}
+
+/// Encode one log entry in the fixed 33-byte layout — the same bytes the
+/// framed wire format carries per entry. The storage WAL reuses this for
+/// its entry records so on-disk and on-wire entry encodings are one
+/// format.
+pub fn encode_entry(buf: &mut Vec<u8>, e: &LogEntry) {
+    put_u64(buf, e.term);
+    put_u64(buf, e.index);
+    put_command(buf, &e.cmd);
+}
+
+/// Decode one fixed-width entry (strict: exactly [`ENTRY_WIRE_BYTES`]).
+pub fn decode_entry(bytes: &[u8]) -> Result<LogEntry, DecodeError> {
+    let mut c = Cursor::new(bytes);
+    let term = c.u64()?;
+    let index = c.u64()?;
+    let cmd = get_command(&mut c)?;
+    if c.remaining() != 0 {
+        return Err(DecodeError::TrailingBytes(c.remaining()));
+    }
+    Ok(LogEntry { term, index, cmd })
 }
 
 fn put_entries(buf: &mut Vec<u8>, entries: &[LogEntry]) {
@@ -278,6 +302,22 @@ pub fn encode(msg: &Message, buf: &mut Vec<u8>) -> usize {
             put_u64(buf, r.known_round);
             put_entries(buf, &r.entries);
         }
+        Message::InstallSnapshot(s) => {
+            put_u8(buf, KIND_INSTALL_SNAPSHOT);
+            put_u64(buf, s.term);
+            put_node(buf, s.leader);
+            put_u64(buf, s.last_index);
+            put_u64(buf, s.last_term);
+            put_u64(buf, s.applied);
+            put_u64(buf, s.digest);
+            put_u64(buf, s.seq);
+            let count = u32::try_from(s.pairs.len()).expect("snapshot pairs fit in u32");
+            put_u32(buf, count);
+            for (k, v) in s.pairs.iter() {
+                put_u64(buf, *k);
+                put_u64(buf, *v);
+            }
+        }
     }
     let len = buf.len() - start - 4;
     let len = u32::try_from(len).expect("frame fits in u32");
@@ -354,6 +394,7 @@ fn get_command(c: &mut Cursor<'_>) -> Result<Command, DecodeError> {
         1 => Ok(Command::Put { key: a, value: b }),
         2 => Ok(Command::Get { key: a }),
         3 => Ok(Command::Delete { key: a }),
+        4 => Ok(Command::Add { key: a, delta: b }),
         _ => Err(DecodeError::Malformed("unknown command tag")),
     }
 }
@@ -503,6 +544,36 @@ pub fn decode_payload(payload: &[u8]) -> Result<Message, DecodeError> {
                 commit_index,
                 leader_hint,
                 known_round,
+            })
+        }
+        KIND_INSTALL_SNAPSHOT => {
+            let term = c.u64()?;
+            let leader = c.node()?;
+            let last_index = c.u64()?;
+            let last_term = c.u64()?;
+            let applied = c.u64()?;
+            let digest = c.u64()?;
+            let seq = c.u64()?;
+            let count = c.u32()? as usize;
+            // As with entries: bound the allocation by the bytes present.
+            if count.checked_mul(16).is_none_or(|need| need > c.remaining()) {
+                return Err(DecodeError::Truncated);
+            }
+            let mut pairs = Vec::with_capacity(count);
+            for _ in 0..count {
+                let k = c.u64()?;
+                let v = c.u64()?;
+                pairs.push((k, v));
+            }
+            Message::InstallSnapshot(InstallSnapshotArgs {
+                term,
+                leader,
+                last_index,
+                last_term,
+                applied,
+                digest,
+                pairs: Arc::new(pairs),
+                seq,
             })
         }
         other => return Err(DecodeError::BadKind(other)),
@@ -678,6 +749,59 @@ mod tests {
         let at = buf.len() - 4;
         buf[at..].copy_from_slice(&u32::MAX.to_le_bytes());
         assert_eq!(decode(&buf).unwrap_err(), DecodeError::Truncated);
+    }
+
+    #[test]
+    fn install_snapshot_round_trip_matches_size_model() {
+        let msg = Message::InstallSnapshot(InstallSnapshotArgs {
+            term: 4,
+            leader: 2,
+            last_index: 100,
+            last_term: 4,
+            applied: 100,
+            digest: 0xABCD,
+            pairs: Arc::new(vec![(1, 10), (2, 20), (9, 90)]),
+            seq: 17,
+        });
+        let buf = encode_to_vec(&msg);
+        assert_eq!(buf.len() as u64, msg.wire_bytes(), "wire_bytes parity");
+        let (decoded, consumed) = decode(&buf).unwrap().expect("complete frame");
+        assert_eq!(consumed, buf.len());
+        assert_eq!(decoded, msg);
+        // A corrupt pair count fails before allocating.
+        let mut bad = buf.clone();
+        let at = bad.len() - 3 * 16 - 4;
+        bad[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(decode(&bad).unwrap_err(), DecodeError::Truncated);
+    }
+
+    #[test]
+    fn entry_codec_round_trips_all_command_tags() {
+        let cmds = [
+            Command::Noop,
+            Command::Put { key: 3, value: 9 },
+            Command::Get { key: 5 },
+            Command::Delete { key: 8 },
+            Command::Add { key: 2, delta: 41 },
+        ];
+        for (i, cmd) in cmds.into_iter().enumerate() {
+            let e = LogEntry { term: 2, index: i as u64 + 1, cmd };
+            let mut buf = Vec::new();
+            encode_entry(&mut buf, &e);
+            assert_eq!(buf.len(), ENTRY_WIRE_BYTES);
+            assert_eq!(decode_entry(&buf).unwrap(), e);
+        }
+        // Strictness: short and long inputs both fail.
+        let mut buf = Vec::new();
+        encode_entry(&mut buf, &LogEntry { term: 1, index: 1, cmd: Command::Noop });
+        assert_eq!(decode_entry(&buf[..10]).unwrap_err(), DecodeError::Truncated);
+        buf.push(0);
+        assert_eq!(decode_entry(&buf).unwrap_err(), DecodeError::TrailingBytes(1));
+        // Unknown command tags are rejected wherever entries decode.
+        let mut bad = Vec::new();
+        encode_entry(&mut bad, &LogEntry { term: 1, index: 1, cmd: Command::Noop });
+        bad[16] = 99; // tag byte
+        assert!(matches!(decode_entry(&bad).unwrap_err(), DecodeError::Malformed(_)));
     }
 
     #[test]

@@ -22,6 +22,7 @@ fn all_shipped_configs_parse_and_validate() {
         "unreliable",
         "live-tcp",
         "open-loop",
+        "durable",
     ];
     for name in names {
         let cfg = load(name);
@@ -127,6 +128,45 @@ fn unreliable_config_demotes_its_slow_replicas_and_runs() {
     let mut cfg = load("unreliable");
     cfg.set("protocol.unreliable.enabled", "false").unwrap();
     cfg.validate().unwrap();
+}
+
+#[test]
+fn durable_config_pins_the_wal_knobs_and_runs_in_memory() {
+    use epiraft::config::FsyncMode;
+    let cfg = load("durable");
+    assert_eq!(cfg.protocol.storage.dir, "data", "the preset's point is the WAL");
+    assert_eq!(cfg.protocol.storage.fsync, FsyncMode::Batch);
+    assert_eq!(cfg.protocol.storage.snapshot_interval_entries, 1000);
+    assert_eq!(cfg.protocol.storage.retain_entries, 1024);
+    assert_eq!(cfg.cluster.kill_node, 2);
+    assert_eq!(cfg.cluster.restart_after_us, 500_000);
+    assert_eq!(cfg.cost.fsync_us, 200.0);
+    // The preset must survive a dump/set round trip: every key it sets is
+    // a key `config-dump` emits and `Config::set` accepts.
+    let mut rebuilt = epiraft::config::Config::default();
+    for (k, v) in epiraft::config::dump(&cfg) {
+        rebuilt.set(&k, &v).unwrap_or_else(|e| panic!("{k}={v}: {e}"));
+    }
+    rebuilt.validate().unwrap();
+    assert_eq!(rebuilt.protocol.storage.dir, "data");
+    assert_eq!(rebuilt.protocol.storage.fsync, FsyncMode::Batch);
+    // Sim run on the same knobs minus the directory: `MemStorage` counts
+    // the same virtual barriers and takes the same snapshots without
+    // touching a disk (the checkout must stay clean under `cargo test`).
+    let mut cfg = load("durable");
+    cfg.set("storage.dir", "").unwrap();
+    cfg.protocol.n = 9;
+    cfg.protocol.storage.snapshot_interval_entries = 50;
+    cfg.protocol.storage.retain_entries = 50;
+    cfg.workload.clients = 10;
+    cfg.workload.duration_us = 2_000_000;
+    cfg.workload.warmup_us = 400_000;
+    cfg.validate().unwrap();
+    let report = run_experiment(&cfg);
+    assert!(report.safety_ok);
+    assert!(report.completed > 0, "durable preset must serve requests");
+    assert!(report.fsyncs > 0, "fsync = batch must count barriers");
+    assert!(report.snapshots_taken > 0, "interval 50 must trigger snapshots");
 }
 
 #[test]

@@ -1,4 +1,4 @@
-//! Property-based safety tests (DESIGN.md §7): for all three protocol
+//! Property-based safety tests (DESIGN.md §8): for all three protocol
 //! variants, under random fault schedules (crashes, partitions, loss
 //! bursts), the cluster never violates Raft's state-machine safety — no
 //! two replicas disagree on any committed prefix — and the epidemic
@@ -317,6 +317,47 @@ fn committed_entries_survive_leader_crash() {
             );
         }
     });
+}
+
+#[test]
+fn committed_prefix_monotone_across_random_kill_restart() {
+    // PR 7: under random kill-and-restart schedules (process death losing
+    // all volatile state, recovery from the Storage backend alone), every
+    // variant must preserve the committed prefix each killed replica had
+    // at the moment of death — the end-of-run cluster agrees on a log that
+    // extends every recorded prefix (recovery_ok), on top of the usual
+    // committed-prefix agreement (safety_ok). Half the cases also enable
+    // snapshots + compaction so recovery exercises the snapshot path.
+    for variant in Variant::ALL {
+        forall(&format!("kill-restart-{}", variant.name()), 8, |g| {
+            let mut cfg = random_cfg(g, variant);
+            cfg.network.loss = 0.0; // isolate the kill/restart fault mode
+            if g.bool_with(0.5) {
+                cfg.protocol.storage.snapshot_interval_entries = g.u64_in(50, 300);
+                cfg.protocol.storage.retain_entries =
+                    cfg.protocol.storage.snapshot_interval_entries + g.u64_in(0, 200);
+            }
+            let mut rng = Xoshiro256::seed_from_u64(cfg.seed ^ 0x1337_D1E);
+            let faults = FaultSchedule::random_kill_restart(
+                &mut rng,
+                cfg.protocol.n,
+                cfg.workload.duration_us,
+                4,
+            );
+            let report = run_with_faults(&cfg, faults);
+            assert!(
+                report.safety_ok,
+                "{variant:?}: divergence under kill/restart (n={}, seed={})",
+                cfg.protocol.n, cfg.seed
+            );
+            assert!(
+                report.recovery_ok,
+                "{variant:?}: a killed replica's committed prefix was lost \
+                 (n={}, seed={}, snap_interval={})",
+                cfg.protocol.n, cfg.seed, cfg.protocol.storage.snapshot_interval_entries
+            );
+        });
+    }
 }
 
 #[test]
