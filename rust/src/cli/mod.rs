@@ -11,6 +11,8 @@
 //! epiraft bench-pr4  [--quick] [--n N] [--k K] [--rate R] [--seed S] [--out FILE]
 //! epiraft bench-pr6  [--quick] [--n N] [--tcp-n N] [--seed S] [--out FILE]
 //! epiraft bench-pr7  [--quick] [--n N] [--seed S] [--out FILE]
+//! epiraft bench-pr8  [--quick] [--n N] [--protocol-n N] [--fleet-n N]
+//!                    [--shards K] [--seed S] [--out FILE]
 //! epiraft live       [--variant v] [--n N] [--clients C] [--secs S]
 //!                    [--transport {mpsc|tcp}] [--node-id I]
 //!                    [--kill-at US] [--kill-node I] [--restart-after US]
@@ -190,6 +192,16 @@ USAGE:
       leader-egress bytes than tail replay, and fsync=batch completes
       within 1.3x of fsync=never.
 
+  epiraft bench-pr8 [--quick] [--n N] [--protocol-n N] [--fleet-n N]
+                    [--shards K] [--seed S] [--out FILE]
+      Simulator-at-scale suite: V2 with compact epidemic payloads off vs on
+      (default n=501; byte-only change, strictly cheaper), raft/v2/pull
+      protocol metrics at --protocol-n (default 2001; safe, leader-stable,
+      classic strictly costlier at the leader), and the fleet convergence
+      point at --fleet-n (default 10000) with sharded rounds bit-identical
+      to single-thread; writes BENCH_PR8.json and fails if any cell's
+      claim fails.
+
   epiraft live [--variant v] [--n N] [--clients C] [--secs S]
                [--transport mpsc|tcp] [--node-id I]
                [--kill-at US] [--kill-node I] [--restart-after US]
@@ -205,9 +217,11 @@ USAGE:
       --restart-after US later (default 500000) — e.g.
       `epiraft live --config configs/durable.toml --transport tcp --kill-at 2000000`.
 
-  epiraft fleet [--n N] [--backend native|hlo] [--seed S]
+  epiraft fleet [--n N] [--backend native|hlo] [--seed S] [--shards K] [--quick]
       Convergence study of the V2 commit structures (rounds vs fanout),
-      through the native or the AOT-compiled HLO/PJRT backend.
+      through the native or the AOT-compiled HLO/PJRT backend. --shards K
+      spreads native rounds over K worker threads (identical results);
+      --quick trims the fanout sweep to {2, 8}.
 
   epiraft artifacts-check [--dir artifacts]
       Load the AOT-compiled HLO kernels via PJRT and verify them against

@@ -35,6 +35,11 @@ pub struct ProtocolConfig {
     /// Ablation: V2 followers also send success responses (default off —
     /// DESIGN.md §4.3).
     pub v2_success_responses: bool,
+    /// Encode epidemic payloads with the compact per-message repr (sparse
+    /// index list when fewer set bits than bitmap words; dense otherwise —
+    /// DESIGN.md §Scale). Off by default: the classic dense frames stay
+    /// byte-identical to earlier releases.
+    pub compact_payloads: bool,
     /// Ablation: coalescing window for classic Raft broadcasts (µs);
     /// 0 = broadcast per client request (Paxi behaviour).
     pub raft_coalesce_us: u64,
@@ -333,6 +338,7 @@ impl Default for ProtocolConfig {
             max_entries_per_rpc: 1024,
             leader_noop: true,
             v2_success_responses: false,
+            compact_payloads: false,
             raft_coalesce_us: 0,
             gossip_votes: false,
             pull_interval_us: 5_000,
@@ -928,6 +934,7 @@ impl Config {
             "protocol.v2_success_responses" => {
                 self.protocol.v2_success_responses = parse_bool(v)?
             }
+            "protocol.compact_payloads" => self.protocol.compact_payloads = parse_bool(v)?,
             "protocol.raft_coalesce_us" => self.protocol.raft_coalesce_us = parse_u64(v)?,
             "protocol.gossip_votes" => self.protocol.gossip_votes = parse_bool(v)?,
             "protocol.pull_interval_us" => self.protocol.pull_interval_us = parse_u64(v)?,
@@ -1132,6 +1139,7 @@ pub fn dump(cfg: &Config) -> BTreeMap<String, String> {
     m.insert("protocol.max_entries_per_rpc".into(), p.max_entries_per_rpc.to_string());
     m.insert("protocol.leader_noop".into(), p.leader_noop.to_string());
     m.insert("protocol.v2_success_responses".into(), p.v2_success_responses.to_string());
+    m.insert("protocol.compact_payloads".into(), p.compact_payloads.to_string());
     m.insert("protocol.raft_coalesce_us".into(), p.raft_coalesce_us.to_string());
     m.insert("protocol.gossip_votes".into(), p.gossip_votes.to_string());
     m.insert("protocol.pull_interval_us".into(), p.pull_interval_us.to_string());

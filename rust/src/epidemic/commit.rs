@@ -134,6 +134,32 @@ impl EpidemicState {
         debug_assert!(self.invariant_holds());
     }
 
+    /// Algorithm 3 applied to a received wire payload — exactly
+    /// [`EpidemicState::merge`]'s semantics, folding the payload's bits
+    /// into the local bitmap without materializing a full n-bit temporary
+    /// (O(set bits) for sparse payloads).
+    pub fn merge_payload(&mut self, p: &crate::epidemic::EpidemicPayload) {
+        // line 1: take the larger max_commit.
+        self.max_commit = self.max_commit.max(p.max_commit);
+        // lines 2-4: votes for a >= index certify ours; OR them in.
+        if self.next_commit <= p.next_commit {
+            p.or_into(&mut self.bitmap);
+        }
+        // lines 5-7: our vote target is already majority-confirmed — adopt
+        // the more advanced received vote wholesale.
+        if self.next_commit <= self.max_commit {
+            p.write_into(&mut self.bitmap);
+            self.next_commit = p.next_commit;
+        }
+        // Restore the invariant in the corner where the received state was
+        // itself stale (see `merge`).
+        if self.next_commit <= self.max_commit {
+            self.bitmap.clear();
+            self.next_commit = self.max_commit + 1;
+        }
+        debug_assert!(self.invariant_holds());
+    }
+
     /// §3.2 election rule: on starting an election or learning of a new
     /// term, reset the vote — a new leader may own a shorter log than the
     /// index being voted on.

@@ -4,9 +4,11 @@
 //! `Update`/`Merge` (§3.2, Algorithms 2–3).
 
 pub mod commit;
+pub mod payload;
 pub mod permutation;
 pub mod round;
 
 pub use commit::{EpidemicState, LogView};
+pub use payload::EpidemicPayload;
 pub use permutation::Permutation;
 pub use round::{RoundClass, RoundClock};

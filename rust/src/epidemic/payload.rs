@@ -1,0 +1,314 @@
+//! Compact wire form of the §3.2 commit triple.
+//!
+//! A gossiped [`EpidemicState`] always carries the full n-bit bitmap, so
+//! at n=10k every AppendEntries pays ~1.25 KiB of bitmap whether one vote
+//! or five thousand are recorded. [`EpidemicPayload`] is the per-message
+//! encoding choice: **dense** (the raw word array, byte-identical to the
+//! historical wire format) or **sparse** (the sorted set-bit indices) —
+//! whichever is smaller, decided per message at build time. Both are
+//! u32-word streams, so the crossover is exact: sparse wins iff
+//! `count_ones < ceil(n/32)`, i.e. fewer than ~1/32 of bits set.
+//!
+//! The payload is immutable and reference-counted: one build per gossip
+//! round or reply, then O(1) `clone()` per fanout target. Merges fold the
+//! payload straight into a node's [`EpidemicState`] bitmap
+//! ([`EpidemicState::merge_payload`]) without materializing an n-bit
+//! temporary for the sparse form.
+//!
+//! Sparse encoding is gated by `protocol.compact_payloads` (default off):
+//! with the knob off every payload is dense and the wire bytes are
+//! byte-identical to the pre-compaction format.
+
+use super::commit::EpidemicState;
+use crate::raft::types::LogIndex;
+use crate::util::bitset::{Bitmap, WORD_BITS};
+use std::sync::Arc;
+
+/// How the vote bitmap rides the wire.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum PayloadBits {
+    /// Raw bitmap words, least-significant first (`ceil(n/32)` of them).
+    Dense(Arc<Vec<u32>>),
+    /// Strictly-increasing set-bit indices, each `< n`.
+    Sparse(Arc<Vec<u32>>),
+}
+
+/// A commit triple as carried inside gossiped AppendEntries and replies.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EpidemicPayload {
+    n: u32,
+    pub max_commit: LogIndex,
+    pub next_commit: LogIndex,
+    bits: PayloadBits,
+}
+
+impl EpidemicPayload {
+    /// Snapshot `state` for sending. With `compact` the smaller of the two
+    /// encodings is chosen; without it the payload is always dense (the
+    /// historical wire format, bit for bit).
+    pub fn from_state(state: &EpidemicState, compact: bool) -> Self {
+        let words = state.bitmap.words();
+        let ones = state.bitmap.count_ones();
+        let bits = if compact && ones < words.len() {
+            PayloadBits::Sparse(Arc::new(state.bitmap.iter_ones().map(|i| i as u32).collect()))
+        } else {
+            PayloadBits::Dense(Arc::new(words.to_vec()))
+        };
+        Self {
+            n: u32::try_from(state.n()).expect("cluster size fits in u32"),
+            max_commit: state.max_commit,
+            next_commit: state.next_commit,
+            bits,
+        }
+    }
+
+    /// Rebuild a dense payload from decoded wire words. Bits above `n` are
+    /// masked off (same contract as [`Bitmap::from_words`]); the word count
+    /// is the codec's to validate.
+    pub fn dense_from_words(
+        n: usize,
+        max_commit: LogIndex,
+        next_commit: LogIndex,
+        words: Vec<u32>,
+    ) -> Self {
+        debug_assert_eq!(words.len(), n.div_ceil(WORD_BITS));
+        let bm = Bitmap::from_words(n, words);
+        Self {
+            n: n as u32,
+            max_commit,
+            next_commit,
+            bits: PayloadBits::Dense(Arc::new(bm.words().to_vec())),
+        }
+    }
+
+    /// Rebuild a sparse payload from decoded indices. Rejects indices that
+    /// are out of range or not strictly increasing — a desynchronized
+    /// stream must fail loudly.
+    pub fn sparse_from_indices(
+        n: usize,
+        max_commit: LogIndex,
+        next_commit: LogIndex,
+        indices: Vec<u32>,
+    ) -> Result<Self, &'static str> {
+        let mut prev: Option<u32> = None;
+        for &i in &indices {
+            if i as usize >= n {
+                return Err("sparse bitmap index out of range");
+            }
+            if prev.is_some_and(|p| p >= i) {
+                return Err("sparse bitmap indices not strictly increasing");
+            }
+            prev = Some(i);
+        }
+        Ok(Self {
+            n: n as u32,
+            max_commit,
+            next_commit,
+            bits: PayloadBits::Sparse(Arc::new(indices)),
+        })
+    }
+
+    /// Cluster size this payload's bitmap covers.
+    pub fn n(&self) -> usize {
+        self.n as usize
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.bits, PayloadBits::Sparse(_))
+    }
+
+    /// u32 words this payload's bitmap occupies on the wire — the honest
+    /// size [`crate::raft::message::Message::wire_bytes`] charges.
+    pub fn wire_words(&self) -> usize {
+        match &self.bits {
+            PayloadBits::Dense(w) => w.len(),
+            PayloadBits::Sparse(ix) => ix.len(),
+        }
+    }
+
+    /// Dense word view (`None` for sparse payloads) — the codec's encoder.
+    pub fn dense_words(&self) -> Option<&[u32]> {
+        match &self.bits {
+            PayloadBits::Dense(w) => Some(w),
+            PayloadBits::Sparse(_) => None,
+        }
+    }
+
+    /// Sparse index view (`None` for dense payloads) — the codec's encoder.
+    pub fn sparse_indices(&self) -> Option<&[u32]> {
+        match &self.bits {
+            PayloadBits::Dense(_) => None,
+            PayloadBits::Sparse(ix) => Some(ix),
+        }
+    }
+
+    /// Whether bit `i` is set.
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.n as usize);
+        match &self.bits {
+            PayloadBits::Dense(w) => (w[i / WORD_BITS] >> (i % WORD_BITS)) & 1 == 1,
+            PayloadBits::Sparse(ix) => ix.binary_search(&(i as u32)).is_ok(),
+        }
+    }
+
+    /// Vote count carried.
+    pub fn count_ones(&self) -> usize {
+        match &self.bits {
+            PayloadBits::Dense(w) => w.iter().map(|w| w.count_ones() as usize).sum(),
+            PayloadBits::Sparse(ix) => ix.len(),
+        }
+    }
+
+    /// OR this payload's bits into `bm` (Algorithm 3 lines 2-4). O(words)
+    /// dense, O(set bits) sparse — never an n-bit temporary.
+    pub fn or_into(&self, bm: &mut Bitmap) {
+        assert_eq!(bm.len(), self.n as usize, "bitmap size mismatch");
+        match &self.bits {
+            PayloadBits::Dense(w) => bm.or_words(w),
+            PayloadBits::Sparse(ix) => {
+                for &i in ix.iter() {
+                    bm.set(i as usize);
+                }
+            }
+        }
+    }
+
+    /// Overwrite `bm` with this payload's bits (Algorithm 3 lines 5-7),
+    /// reusing `bm`'s allocation.
+    pub fn write_into(&self, bm: &mut Bitmap) {
+        assert_eq!(bm.len(), self.n as usize, "bitmap size mismatch");
+        match &self.bits {
+            PayloadBits::Dense(w) => bm.copy_from_words(w),
+            PayloadBits::Sparse(ix) => {
+                bm.clear();
+                for &i in ix.iter() {
+                    bm.set(i as usize);
+                }
+            }
+        }
+    }
+
+    /// Materialize the full triple (tests and assertions only — the
+    /// protocol merges through `or_into`/`write_into`).
+    pub fn to_state(&self) -> EpidemicState {
+        let mut bm = Bitmap::zeros(self.n as usize);
+        self.or_into(&mut bm);
+        EpidemicState { bitmap: bm, max_commit: self.max_commit, next_commit: self.next_commit }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::epidemic::LogView;
+    use crate::util::rng::Xoshiro256;
+
+    fn arb_state(
+        rng: &mut Xoshiro256,
+        n: usize,
+        density_num: u64,
+        density_den: u64,
+    ) -> EpidemicState {
+        let mut s = EpidemicState::new(n);
+        for i in 0..n {
+            if rng.next_u64() % density_den < density_num {
+                s.bitmap.set(i);
+            }
+        }
+        s.max_commit = rng.next_u64() % 50;
+        s.next_commit = s.max_commit + 1 + rng.next_u64() % 10;
+        s
+    }
+
+    #[test]
+    fn dense_payload_round_trips() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for n in [1usize, 5, 32, 33, 100] {
+            let s = arb_state(&mut rng, n, 1, 3);
+            let p = EpidemicPayload::from_state(&s, false);
+            assert!(!p.is_sparse(), "compact off must always pick dense");
+            assert_eq!(p.wire_words(), s.bitmap.words().len());
+            assert_eq!(p.to_state(), s);
+        }
+    }
+
+    #[test]
+    fn sparse_payload_round_trips_and_wins_when_sparse() {
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        for n in [33usize, 100, 501] {
+            // ~1/64 density: well below the 1/32 crossover.
+            let s = arb_state(&mut rng, n, 1, 64);
+            let p = EpidemicPayload::from_state(&s, true);
+            assert_eq!(p.to_state(), s);
+            if s.bitmap.count_ones() < s.bitmap.words().len() {
+                assert!(p.is_sparse());
+                assert_eq!(p.wire_words(), s.bitmap.count_ones());
+                assert!(p.wire_words() < s.bitmap.words().len());
+            }
+        }
+    }
+
+    #[test]
+    fn compact_choice_is_exact_at_the_crossover() {
+        // n=64 -> 2 words. 1 set bit: sparse. 2 set bits: dense (tie goes
+        // dense — equal size, cheaper merge).
+        let mut s = EpidemicState::new(64);
+        s.bitmap.set(7);
+        assert!(EpidemicPayload::from_state(&s, true).is_sparse());
+        s.bitmap.set(40);
+        assert!(!EpidemicPayload::from_state(&s, true).is_sparse());
+    }
+
+    #[test]
+    fn get_agrees_across_encodings() {
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let s = arb_state(&mut rng, 70, 1, 40);
+        let dense = EpidemicPayload::from_state(&s, false);
+        let maybe_sparse = EpidemicPayload::from_state(&s, true);
+        for i in 0..70 {
+            assert_eq!(dense.get(i), s.bitmap.get(i));
+            assert_eq!(maybe_sparse.get(i), s.bitmap.get(i));
+        }
+        assert_eq!(dense.count_ones(), s.bitmap.count_ones());
+        assert_eq!(maybe_sparse.count_ones(), s.bitmap.count_ones());
+    }
+
+    #[test]
+    fn sparse_validation_rejects_bad_indices() {
+        assert!(EpidemicPayload::sparse_from_indices(10, 0, 1, vec![3, 3]).is_err());
+        assert!(EpidemicPayload::sparse_from_indices(10, 0, 1, vec![5, 4]).is_err());
+        assert!(EpidemicPayload::sparse_from_indices(10, 0, 1, vec![10]).is_err());
+        assert!(EpidemicPayload::sparse_from_indices(10, 0, 1, vec![0, 9]).is_ok());
+    }
+
+    #[test]
+    fn sparse_merge_equals_dense_merge_property() {
+        // The tentpole property: merging through either encoding of the
+        // same received state produces identical local state.
+        let mut rng = Xoshiro256::seed_from_u64(14);
+        for case in 0..200 {
+            let n = 1 + (rng.next_u64() % 130) as usize;
+            let mut local_a = arb_state(&mut rng, n, 1, 4);
+            let mut local_b = local_a.clone();
+            let mut local_c = local_a.clone();
+            let recv = arb_state(&mut rng, n, 1, if case % 2 == 0 { 40 } else { 3 });
+            local_a.merge(&recv);
+            local_b.merge_payload(&EpidemicPayload::from_state(&recv, false));
+            local_c.merge_payload(&EpidemicPayload::from_state(&recv, true));
+            assert_eq!(local_a, local_b, "dense payload merge diverged (n={n})");
+            assert_eq!(local_a, local_c, "sparse payload merge diverged (n={n})");
+        }
+    }
+
+    #[test]
+    fn own_bit_then_payload_round_trip() {
+        // n=40 spans two bitmap words, so a single set bit is below the
+        // crossover and must ride sparse.
+        let mut s = EpidemicState::new(40);
+        s.maybe_set_own_bit(4, LogView { last_index: 2, last_term: 1, current_term: 1 });
+        let p = EpidemicPayload::from_state(&s, true);
+        assert!(p.is_sparse());
+        assert!(p.get(4) && !p.get(3));
+        assert_eq!(p.to_state(), s);
+    }
+}

@@ -8,6 +8,7 @@ pub mod bench_stats;
 pub mod egress;
 pub mod figures;
 pub mod recovery;
+pub mod scale;
 pub mod throughput;
 pub mod unreliable;
 
@@ -24,6 +25,10 @@ pub use figures::{
 };
 pub use recovery::{
     bench_pr7_json, print_recovery, recovery_comparison, recovery_gate, RecoveryPoint,
+};
+pub use scale::{
+    bench_pr8_json, compact_comparison, fleet_scale, print_scale, protocol_metrics, scale_gate,
+    CompactPoint, FleetCell, ProtocolPoint,
 };
 pub use throughput::{
     bench_pr6_json, print_throughput, sim_throughput_comparison, throughput_comparison,

@@ -1,0 +1,444 @@
+//! PR 8 measurement plumbing: the event-driven simulator core at scale.
+//!
+//! This is the scenario behind `epiraft bench-pr8`, the committed
+//! `BENCH_PR8.json`, and CI's `scale-smoke` gate. Three cells:
+//!
+//! 1. **Compact payloads** (n=501, V2): the same run with
+//!    `protocol.compact_payloads` off vs on must complete identically —
+//!    the encoding is wire-only — while every egress meter shrinks.
+//! 2. **Protocol metrics** (n=2001): raft / v2 / pull each safe and
+//!    leader-stable at four-digit n, with classic Raft's leader egress
+//!    strictly above both epidemic variants' (the paper's scaling claim,
+//!    two orders of magnitude past its n=51 testbed).
+//! 3. **Fleet** (n=10 000): the sharded native engine bit-identical to
+//!    the single-thread run, converging well under the round cap.
+//!
+//! Wall-clock per cell is *recorded* (events, heap traffic, host µs per
+//! simulated second) but never gated on — the gates are deterministic.
+
+use super::figures::Scale;
+use crate::config::Config;
+use crate::raft::Variant;
+use crate::sim::{converge, converge_sharded, run_experiment, Backend, ConvergenceReport, SimReport};
+use crate::util::json::Json;
+
+/// Fleet cell geometry: the n=10k convergence point and its sharding.
+pub const FLEET_N: usize = 10_000;
+pub const FLEET_FANOUT: usize = 8;
+pub const FLEET_SHARDS: usize = 8;
+
+/// One run of the compact-payload cell (V2, same seed, knob off vs on).
+#[derive(Clone, Debug)]
+pub struct CompactPoint {
+    /// "dense" (knob off) or "compact" (knob on).
+    pub mode: &'static str,
+    pub completed: u64,
+    pub messages: u64,
+    pub mean_latency_us: f64,
+    pub leader_egress_bytes: u64,
+    pub peer_egress_bytes_total: u64,
+    pub safety_ok: bool,
+    pub elections: u64,
+    pub events_processed: u64,
+    pub heap_pushes: u64,
+    pub peak_queue_depth: u64,
+    pub host_us_per_sim_sec: f64,
+}
+
+impl CompactPoint {
+    fn from_report(mode: &'static str, r: &SimReport) -> Self {
+        Self {
+            mode,
+            completed: r.completed,
+            messages: r.messages,
+            mean_latency_us: r.mean_latency_us,
+            leader_egress_bytes: r.leader_egress_bytes,
+            peer_egress_bytes_total: r.peer_egress_bytes_total,
+            safety_ok: r.safety_ok,
+            elections: r.elections,
+            events_processed: r.events_processed,
+            heap_pushes: r.heap_pushes,
+            peak_queue_depth: r.peak_queue_depth,
+            host_us_per_sim_sec: r.host_us_per_sim_sec,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::str(self.mode)),
+            ("completed", Json::num(self.completed as f64)),
+            ("messages", Json::num(self.messages as f64)),
+            ("mean_latency_us", Json::num(self.mean_latency_us)),
+            ("leader_egress_bytes", Json::num(self.leader_egress_bytes as f64)),
+            (
+                "peer_egress_bytes_total",
+                Json::num(self.peer_egress_bytes_total as f64),
+            ),
+            ("safety_ok", Json::Bool(self.safety_ok)),
+            ("elections", Json::num(self.elections as f64)),
+            ("events_processed", Json::num(self.events_processed as f64)),
+            ("heap_pushes", Json::num(self.heap_pushes as f64)),
+            ("peak_queue_depth", Json::num(self.peak_queue_depth as f64)),
+            ("host_us_per_sim_sec", Json::num(self.host_us_per_sim_sec)),
+        ])
+    }
+}
+
+/// One variant's run in the n=2001 protocol-metrics cell.
+#[derive(Clone, Debug)]
+pub struct ProtocolPoint {
+    pub variant: &'static str,
+    pub completed: u64,
+    pub throughput: f64,
+    pub p99_latency_us: u64,
+    /// Follower commit-interval p99 (leader append -> follower commit).
+    pub commit_p99_us: u64,
+    pub leader_egress_bytes: u64,
+    pub safety_ok: bool,
+    pub elections: u64,
+    pub events_processed: u64,
+    pub peak_queue_depth: u64,
+    pub host_us_per_sim_sec: f64,
+}
+
+impl ProtocolPoint {
+    fn from_report(r: &SimReport) -> Self {
+        Self {
+            variant: r.variant,
+            completed: r.completed,
+            throughput: r.throughput,
+            p99_latency_us: r.p99_latency_us,
+            commit_p99_us: r.commit_interval.p99(),
+            leader_egress_bytes: r.leader_egress_bytes,
+            safety_ok: r.safety_ok,
+            elections: r.elections,
+            events_processed: r.events_processed,
+            peak_queue_depth: r.peak_queue_depth,
+            host_us_per_sim_sec: r.host_us_per_sim_sec,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(self.variant)),
+            ("completed", Json::num(self.completed as f64)),
+            ("throughput", Json::num(self.throughput)),
+            ("p99_latency_us", Json::num(self.p99_latency_us as f64)),
+            ("commit_p99_us", Json::num(self.commit_p99_us as f64)),
+            ("leader_egress_bytes", Json::num(self.leader_egress_bytes as f64)),
+            ("safety_ok", Json::Bool(self.safety_ok)),
+            ("elections", Json::num(self.elections as f64)),
+            ("events_processed", Json::num(self.events_processed as f64)),
+            ("peak_queue_depth", Json::num(self.peak_queue_depth as f64)),
+            ("host_us_per_sim_sec", Json::num(self.host_us_per_sim_sec)),
+        ])
+    }
+}
+
+/// The fleet cell: single-thread and sharded runs of the same seed.
+#[derive(Clone, Debug)]
+pub struct FleetCell {
+    pub single: ConvergenceReport,
+    pub sharded: ConvergenceReport,
+}
+
+fn cell_config(scale: Scale, variant: Variant, rate: f64, seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.protocol = crate::config::ProtocolConfig::for_variant(scale.n, variant);
+    cfg.workload.clients = 10;
+    cfg.workload.rate = rate;
+    cfg.workload.duration_us = scale.duration_us;
+    cfg.workload.warmup_us = scale.warmup_us;
+    cfg.seed = seed;
+    cfg
+}
+
+/// Cell 1: V2 at `scale.n` with the compact-payload knob off, then on —
+/// one config bit apart, same seed.
+pub fn compact_comparison(scale: Scale, rate: f64, seed: u64) -> Vec<CompactPoint> {
+    let mut out = Vec::new();
+    for (mode, compact) in [("dense", false), ("compact", true)] {
+        let mut cfg = cell_config(scale, Variant::V2, rate, seed);
+        cfg.protocol.compact_payloads = compact;
+        out.push(CompactPoint::from_report(mode, &run_experiment(&cfg)));
+    }
+    out
+}
+
+/// Cell 2: raft / v2 / pull at `scale.n`, one config per variant.
+/// Compact payloads on for the epidemic variants — this cell is the
+/// new encoding's production posture at scale.
+pub fn protocol_metrics(scale: Scale, rate: f64, seed: u64) -> Vec<ProtocolPoint> {
+    [Variant::Raft, Variant::V2, Variant::Pull]
+        .iter()
+        .map(|&variant| {
+            let mut cfg = cell_config(scale, variant, rate, seed);
+            cfg.protocol.compact_payloads = true;
+            ProtocolPoint::from_report(&run_experiment(&cfg))
+        })
+        .collect()
+}
+
+/// Cell 3: the n=10k fleet, single-thread then sharded, same seed.
+pub fn fleet_scale(n: usize, fanout: usize, seed: u64, shards: usize) -> FleetCell {
+    FleetCell {
+        single: converge(n, fanout, 1, &Backend::Native, seed),
+        sharded: converge_sharded(n, fanout, 1, &Backend::Native, seed, shards),
+    }
+}
+
+/// The CI gate — deterministic outcomes only, never wall-clock.
+pub fn scale_gate(
+    compact: &[CompactPoint],
+    protocol: &[ProtocolPoint],
+    fleet: &FleetCell,
+) -> Result<(), String> {
+    // Cell 1: compact payloads change bytes and nothing else.
+    let dense = compact
+        .iter()
+        .find(|p| p.mode == "dense")
+        .ok_or("gate: dense point missing")?;
+    let packed = compact
+        .iter()
+        .find(|p| p.mode == "compact")
+        .ok_or("gate: compact point missing")?;
+    for p in compact {
+        if !p.safety_ok {
+            return Err(format!("gate: safety violated in the '{}' compact run", p.mode));
+        }
+        if p.elections > 0 {
+            return Err(format!("gate: leader deposed in the '{}' compact run", p.mode));
+        }
+    }
+    if packed.completed != dense.completed || packed.messages != dense.messages {
+        return Err(format!(
+            "gate: compact encoding perturbed the run (completed {} vs {}, messages {} vs {})",
+            packed.completed, dense.completed, packed.messages, dense.messages
+        ));
+    }
+    if dense.completed == 0 {
+        return Err("gate: compact cell served no requests".into());
+    }
+    if packed.leader_egress_bytes >= dense.leader_egress_bytes {
+        return Err(format!(
+            "gate: compact leader egress {} not strictly below dense {}",
+            packed.leader_egress_bytes, dense.leader_egress_bytes
+        ));
+    }
+    if packed.peer_egress_bytes_total >= dense.peer_egress_bytes_total {
+        return Err(format!(
+            "gate: compact peer egress {} not strictly below dense {}",
+            packed.peer_egress_bytes_total, dense.peer_egress_bytes_total
+        ));
+    }
+    // Cell 2: safe, leader-stable and serving at n=2001, with classic
+    // Raft's leader egress strictly above both epidemic variants'.
+    let find = |name: &str| {
+        protocol
+            .iter()
+            .find(|p| p.variant == name)
+            .ok_or_else(|| format!("gate: variant '{name}' missing from the scale cell"))
+    };
+    for p in protocol {
+        if !p.safety_ok {
+            return Err(format!("gate: safety violated in the '{}' scale run", p.variant));
+        }
+        if p.elections > 0 {
+            return Err(format!(
+                "gate: leader deposed ({} election(s)) in the '{}' scale run",
+                p.elections, p.variant
+            ));
+        }
+        if p.completed == 0 {
+            return Err(format!("gate: '{}' served no requests at scale", p.variant));
+        }
+        if p.commit_p99_us == 0 || p.commit_p99_us > 10_000_000 {
+            return Err(format!(
+                "gate: '{}' commit p99 {}us is not sane",
+                p.variant, p.commit_p99_us
+            ));
+        }
+    }
+    let raft = find(Variant::Raft.name())?;
+    let v2 = find(Variant::V2.name())?;
+    let pull = find(Variant::Pull.name())?;
+    if raft.leader_egress_bytes <= v2.leader_egress_bytes {
+        return Err(format!(
+            "gate: classic leader egress {} not strictly above v2's {}",
+            raft.leader_egress_bytes, v2.leader_egress_bytes
+        ));
+    }
+    if raft.leader_egress_bytes <= pull.leader_egress_bytes {
+        return Err(format!(
+            "gate: classic leader egress {} not strictly above pull's {}",
+            raft.leader_egress_bytes, pull.leader_egress_bytes
+        ));
+    }
+    // Cell 3: sharding is invisible in the outcome, and the fleet
+    // actually converges (the cap in `converge` is 10_000 rounds).
+    if fleet.single != fleet.sharded {
+        return Err(format!(
+            "gate: sharded fleet diverged from single-thread \
+             (rounds {} vs {}, messages {} vs {})",
+            fleet.sharded.rounds_to_all_commit,
+            fleet.single.rounds_to_all_commit,
+            fleet.sharded.messages,
+            fleet.single.messages
+        ));
+    }
+    if fleet.single.rounds_to_all_commit >= 100 {
+        return Err(format!(
+            "gate: n={} fleet took {} rounds to converge (cap 100)",
+            fleet.single.n, fleet.single.rounds_to_all_commit
+        ));
+    }
+    Ok(())
+}
+
+/// Render the whole scenario as the `BENCH_PR8.json` document.
+pub fn bench_pr8_json(
+    compact_scale: Scale,
+    protocol_scale: Scale,
+    seed: u64,
+    compact: &[CompactPoint],
+    protocol: &[ProtocolPoint],
+    fleet: &FleetCell,
+) -> Json {
+    let gate = scale_gate(compact, protocol, fleet);
+    Json::obj(vec![
+        ("bench", Json::str("simulator-at-scale")),
+        ("compact_n", Json::num(compact_scale.n as f64)),
+        ("protocol_n", Json::num(protocol_scale.n as f64)),
+        ("fleet_n", Json::num(FLEET_N as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("compact", Json::arr(compact.iter().map(|p| p.to_json()))),
+        ("protocol", Json::arr(protocol.iter().map(|p| p.to_json()))),
+        ("fleet_single", fleet.single.to_json()),
+        ("fleet_sharded", fleet.sharded.to_json()),
+        ("gate_scale", Json::Bool(gate.is_ok())),
+        (
+            "gate_detail",
+            match gate {
+                Ok(()) => Json::str(
+                    "compact encoding byte-only; n=2001 safe and cheaper than classic; \
+                     n=10k fleet sharded == single-thread",
+                ),
+                Err(e) => Json::str(&e),
+            },
+        ),
+    ])
+}
+
+/// Print the three cells.
+pub fn print_scale(compact: &[CompactPoint], protocol: &[ProtocolPoint], fleet: &FleetCell) {
+    println!("\n== compact payloads (V2): dense vs compact encoding ==");
+    println!(
+        "{:<8} {:>10} {:>10} {:>16} {:>16} {:>12}",
+        "mode", "completed", "messages", "leader_bytes", "peer_bytes", "host_us/s"
+    );
+    for p in compact {
+        println!(
+            "{:<8} {:>10} {:>10} {:>16} {:>16} {:>12.0}",
+            p.mode,
+            p.completed,
+            p.messages,
+            p.leader_egress_bytes,
+            p.peer_egress_bytes_total,
+            p.host_us_per_sim_sec
+        );
+    }
+    println!("\n== protocol metrics at scale ==");
+    println!(
+        "{:<8} {:>10} {:>12} {:>14} {:>16} {:>12} {:>12}",
+        "variant", "completed", "p99_lat_us", "commit_p99_us", "leader_bytes", "events", "host_us/s"
+    );
+    for p in protocol {
+        println!(
+            "{:<8} {:>10} {:>12} {:>14} {:>16} {:>12} {:>12.0}",
+            p.variant,
+            p.completed,
+            p.p99_latency_us,
+            p.commit_p99_us,
+            p.leader_egress_bytes,
+            p.events_processed,
+            p.host_us_per_sim_sec
+        );
+    }
+    println!("\n== fleet convergence (n={}, F={}) ==", fleet.single.n, fleet.single.fanout);
+    for (label, r) in [("single", &fleet.single), ("sharded", &fleet.sharded)] {
+        println!(
+            "{:<8} shards={:<3} rounds(first)={:<4} rounds(all)={:<4} messages={:<10} host={:.2}s",
+            label,
+            r.shards,
+            r.rounds_to_first_commit,
+            r.rounds_to_all_commit,
+            r.messages,
+            r.host_secs
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tiny scales: the cells' *mechanics* (gate wiring, JSON shape) are
+    // testable without four-digit n; `bench-pr8` itself runs the real
+    // sizes in the scale-smoke CI job.
+    fn tiny_compact() -> Scale {
+        Scale { reps: 1, duration_us: 1_500_000, warmup_us: 300_000, n: 40 }
+    }
+
+    fn tiny_protocol() -> Scale {
+        Scale { reps: 1, duration_us: 1_500_000, warmup_us: 300_000, n: 15 }
+    }
+
+    fn tiny_cells() -> (Vec<CompactPoint>, Vec<ProtocolPoint>, FleetCell) {
+        (
+            compact_comparison(tiny_compact(), 300.0, 7),
+            protocol_metrics(tiny_protocol(), 300.0, 7),
+            fleet_scale(201, 5, 7, 3),
+        )
+    }
+
+    #[test]
+    fn gate_passes_at_tiny_scale_and_rejects_tampering() {
+        let (compact, protocol, fleet) = tiny_cells();
+        scale_gate(&compact, &protocol, &fleet).expect("tiny-scale gate");
+        // Tamper 1: pretend compact encoding changed the outcome.
+        let mut bad = compact.clone();
+        bad[1].completed += 1;
+        assert!(scale_gate(&bad, &protocol, &fleet).is_err());
+        // Tamper 2: pretend compact encoding saved nothing.
+        let mut bad = compact.clone();
+        bad[1].leader_egress_bytes = bad[0].leader_egress_bytes;
+        assert!(scale_gate(&bad, &protocol, &fleet).is_err());
+        // Tamper 3: pretend classic got cheaper than v2.
+        let mut bad = protocol.clone();
+        for p in bad.iter_mut() {
+            if p.variant == Variant::Raft.name() {
+                p.leader_egress_bytes = 0;
+            }
+        }
+        assert!(scale_gate(&compact, &bad, &fleet).is_err());
+        // Tamper 4: pretend the shards diverged.
+        let mut bad = fleet.clone();
+        bad.sharded.messages += 1;
+        assert!(scale_gate(&compact, &protocol, &bad).is_err());
+    }
+
+    #[test]
+    fn bench_json_has_cells_and_gate() {
+        let (compact, protocol, fleet) = tiny_cells();
+        let j = bench_pr8_json(tiny_compact(), tiny_protocol(), 7, &compact, &protocol, &fleet);
+        assert_eq!(j.get("compact").and_then(|v| v.as_arr()).unwrap().len(), 2);
+        assert_eq!(j.get("protocol").and_then(|v| v.as_arr()).unwrap().len(), 3);
+        assert!(j.get("gate_scale").and_then(|g| g.as_bool()).is_some());
+        let text = j.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("bench").and_then(|b| b.as_str()),
+            Some("simulator-at-scale")
+        );
+    }
+}

@@ -34,6 +34,7 @@ fn run(args: Vec<String>) -> Result<(), String> {
         "bench-pr4" => cmd_bench_pr4(&cli),
         "bench-pr6" => cmd_bench_pr6(&cli),
         "bench-pr7" => cmd_bench_pr7(&cli),
+        "bench-pr8" => cmd_bench_pr8(&cli),
         "live" => cmd_live(&cli),
         "fleet" => cmd_fleet(&cli),
         "artifacts-check" => cmd_artifacts_check(&cli),
@@ -408,6 +409,56 @@ fn cmd_bench_pr7(cli: &Cli) -> Result<(), String> {
     Ok(())
 }
 
+/// PR 8 bench: the simulator core at scale — compact epidemic payloads at
+/// n=501 (byte-only, strictly cheaper), raft/v2/pull protocol metrics at
+/// n=2001 (safe, leader-stable, classic strictly more expensive at the
+/// leader), and the n=10k fleet with sharded rounds bit-identical to
+/// single-thread. Writes `BENCH_PR8.json` (CI uploads it as an artifact)
+/// and exits non-zero if any cell's claim fails — the `scale-smoke` gate.
+fn cmd_bench_pr8(cli: &Cli) -> Result<(), String> {
+    use epiraft::harness::scale::{FLEET_FANOUT, FLEET_N, FLEET_SHARDS};
+    let quick = cli.has("quick");
+    let mut compact_scale = Scale { reps: 1, duration_us: 3_000_000, warmup_us: 500_000, n: 501 };
+    let mut protocol_scale =
+        Scale { reps: 1, duration_us: 2_000_000, warmup_us: 500_000, n: 2001 };
+    if quick {
+        compact_scale.duration_us = 1_500_000;
+        compact_scale.warmup_us = 300_000;
+        protocol_scale.duration_us = 1_000_000;
+        protocol_scale.warmup_us = 300_000;
+    }
+    if let Some(n) = cli.get_u64("n")? {
+        compact_scale.n = n as usize;
+    }
+    if let Some(n) = cli.get_u64("protocol-n")? {
+        protocol_scale.n = n as usize;
+    }
+    let fleet_n = cli.get_u64("fleet-n")?.unwrap_or(FLEET_N as u64) as usize;
+    let shards = cli.get_u64("shards")?.unwrap_or(FLEET_SHARDS as u64) as usize;
+    let seed = cli.get_u64("seed")?.unwrap_or(20230713);
+    let out = cli.get("out").unwrap_or("BENCH_PR8.json");
+    println!(
+        "== bench-pr8: simulator at scale (compact n={}, protocol n={}, fleet n={}x{} shards, \
+         seed={}) ==",
+        compact_scale.n, protocol_scale.n, fleet_n, shards, seed
+    );
+    let compact = harness::compact_comparison(compact_scale, 200.0, seed);
+    let protocol = harness::protocol_metrics(protocol_scale, 50.0, seed);
+    let fleet = harness::fleet_scale(fleet_n, FLEET_FANOUT, seed, shards);
+    harness::print_scale(&compact, &protocol, &fleet);
+    let doc =
+        harness::bench_pr8_json(compact_scale, protocol_scale, seed, &compact, &protocol, &fleet);
+    std::fs::write(out, doc.to_string_pretty()).map_err(|e| format!("write {out}: {e}"))?;
+    println!("\nwrote {out}");
+    harness::scale_gate(&compact, &protocol, &fleet)?;
+    println!(
+        "gate OK: compact encoding byte-only and strictly cheaper; n={} safe with classic \
+         costlier than v2/pull; n={} fleet sharded == single-thread",
+        protocol_scale.n, fleet_n
+    );
+    Ok(())
+}
+
 fn cmd_live(cli: &Cli) -> Result<(), String> {
     let mut cfg = cli.build_config()?;
     if cli.get("secs").is_none() {
@@ -424,12 +475,18 @@ fn cmd_live(cli: &Cli) -> Result<(), String> {
 
 /// Fleet convergence study (A3): rounds for the §3.2 structures to commit
 /// an index at every replica, by fanout — through the native or HLO/PJRT
-/// backend.
+/// backend. `--shards` spreads native rounds over worker threads (same
+/// results, less wall-clock — how the study reaches n=10k); `--quick`
+/// trims the fanout sweep.
 fn cmd_fleet(cli: &Cli) -> Result<(), String> {
-    use epiraft::sim::{converge, Backend};
+    use epiraft::sim::{converge_sharded, Backend};
     let n = cli.get_u64("n")?.unwrap_or(51) as usize;
     let seed = cli.get_u64("seed")?.unwrap_or(1);
+    let shards = cli.get_u64("shards")?.unwrap_or(1) as usize;
     let use_hlo = cli.get("backend") == Some("hlo");
+    if use_hlo && shards > 1 {
+        return Err("--shards applies to the native backend only".into());
+    }
     let engine;
     let exec;
     let backend = if use_hlo {
@@ -441,15 +498,19 @@ fn cmd_fleet(cli: &Cli) -> Result<(), String> {
         Backend::Native
     };
     println!(
-        "== A3 — epidemic commit convergence (n={n}, backend={}) ==",
+        "== A3 — epidemic commit convergence (n={n}, backend={}, shards={shards}) ==",
         backend.name()
     );
-    println!("{:<8} {:>16} {:>16} {:>12}", "fanout", "rounds(first)", "rounds(all)", "messages");
-    for fanout in [1usize, 2, 3, 5, 8, 12] {
-        let r = converge(n, fanout, 1, &backend, seed);
+    println!(
+        "{:<8} {:>16} {:>16} {:>12} {:>10}",
+        "fanout", "rounds(first)", "rounds(all)", "messages", "host_s"
+    );
+    let fanouts: &[usize] = if cli.has("quick") { &[2, 8] } else { &[1, 2, 3, 5, 8, 12] };
+    for &fanout in fanouts {
+        let r = converge_sharded(n, fanout, 1, &backend, seed, shards);
         println!(
-            "{:<8} {:>16} {:>16} {:>12}",
-            fanout, r.rounds_to_first_commit, r.rounds_to_all_commit, r.messages
+            "{:<8} {:>16} {:>16} {:>12} {:>10.2}",
+            fanout, r.rounds_to_first_commit, r.rounds_to_all_commit, r.messages, r.host_secs
         );
     }
     Ok(())

@@ -138,6 +138,11 @@ impl Node {
             f.best_effort_through = 0;
         }
         self.pending.clear();
+        // All repair flags were just cleared; the match histogram is stale
+        // against the reset slots (and the view reset below bumps the
+        // membership epoch anyway — 0 is the always-invalid marker).
+        self.repairing_count = 0;
+        self.commit_hist_epoch = 0;
         // Demotion evidence is leadership-scoped: a new leadership starts
         // from a fully-voting view and re-detects unhealthy peers.
         self.view.reset_for_leadership();

@@ -12,7 +12,7 @@
 
 use super::log::LogEntry;
 use super::types::{LogIndex, NodeId, Term};
-use crate::epidemic::EpidemicState;
+use crate::epidemic::EpidemicPayload;
 use std::sync::Arc;
 
 /// Gossip metadata attached to epidemically propagated AppendEntries.
@@ -23,8 +23,9 @@ pub struct GossipMeta {
     /// Relay hop count (0 = sent by the leader itself). Diagnostic — the
     /// protocol terminates relaying via RoundLC, not TTL.
     pub hops: u32,
-    /// V2 commit structures, merged-in by every relayer (§3.2).
-    pub epidemic: Option<EpidemicState>,
+    /// V2 commit structures, merged-in by every relayer (§3.2), in their
+    /// per-message dense/sparse wire encoding.
+    pub epidemic: Option<EpidemicPayload>,
 }
 
 /// AppendEntries request (classic RPC when `gossip == None`).
@@ -54,7 +55,7 @@ pub struct AppendEntriesReply {
     /// Round this reply answers (gossip path), if any.
     pub round: Option<u64>,
     /// V2: responder's commit structures ride back to the leader.
-    pub epidemic: Option<EpidemicState>,
+    pub epidemic: Option<EpidemicPayload>,
     pub seq: u64,
 }
 
@@ -233,7 +234,7 @@ impl Message {
         if !self.node_ids_in_range(n) {
             return false;
         }
-        let epi_ok = |e: &Option<EpidemicState>| e.as_ref().is_none_or(|s| s.n() == n);
+        let epi_ok = |e: &Option<EpidemicPayload>| e.as_ref().is_none_or(|s| s.n() == n);
         match self {
             Message::AppendEntries(a) => a.gossip.as_ref().is_none_or(|g| epi_ok(&g.epidemic)),
             Message::AppendEntriesReply(r) => epi_ok(&r.epidemic),
@@ -261,9 +262,12 @@ impl Message {
     pub fn wire_bytes(&self) -> u64 {
         const FRAME: u64 = Message::WIRE_FRAME_OVERHEAD;
         const PER_ENTRY: u64 = Message::WIRE_BYTES_PER_ENTRY;
-        // Presence byte + (n, max_commit, next_commit, word count, words).
-        let epidemic_bytes = |e: &Option<EpidemicState>| -> u64 {
-            1 + e.as_ref().map_or(0, |s| 24 + 4 * s.bitmap.words().len() as u64)
+        // Repr byte + (n, max_commit, next_commit, count, u32 stream):
+        // `wire_words` is bitmap words for dense payloads, set-bit indices
+        // for sparse ones — per-message O(set bits) when compact payloads
+        // are on.
+        let epidemic_bytes = |e: &Option<EpidemicPayload>| -> u64 {
+            1 + e.as_ref().map_or(0, |s| 24 + 4 * s.wire_words() as u64)
         };
         match self {
             Message::AppendEntries(a) => {
@@ -391,7 +395,9 @@ mod tests {
                 gossip: Some(GossipMeta {
                     round: 1,
                     hops: 0,
-                    epidemic: epidemic.then(|| crate::epidemic::EpidemicState::new(51)),
+                    epidemic: epidemic.then(|| {
+                        EpidemicPayload::from_state(&crate::epidemic::EpidemicState::new(51), false)
+                    }),
                 }),
                 seq: 0,
             })
@@ -403,6 +409,25 @@ mod tests {
         );
         // The V2 triple costs extra bytes.
         assert!(ae(0, true).wire_bytes() > ae(0, false).wire_bytes());
+        // A sparse payload charges by set bits, not n: one vote at n=51 is
+        // one wire word where the dense form is ceil(51/32) = 2.
+        let mut one_vote = crate::epidemic::EpidemicState::new(51);
+        one_vote.bitmap.set(3);
+        let sparse_ae = |payload: EpidemicPayload| {
+            Message::AppendEntries(AppendEntriesArgs {
+                term: 1,
+                leader: 0,
+                prev_log_index: 0,
+                prev_log_term: 0,
+                entries: entries(0),
+                leader_commit: 0,
+                gossip: Some(GossipMeta { round: 1, hops: 0, epidemic: Some(payload) }),
+                seq: 0,
+            })
+        };
+        let dense = sparse_ae(EpidemicPayload::from_state(&one_vote, false));
+        let sparse = sparse_ae(EpidemicPayload::from_state(&one_vote, true));
+        assert_eq!(dense.wire_bytes() - sparse.wire_bytes(), 4);
         // A pull reply with the same batch is no heavier than a gossiped
         // append carrying it (the strategy's egress claim depends on this
         // being an apples-to-apples model).
@@ -499,7 +524,8 @@ mod tests {
     #[test]
     fn wire_valid_for_rejects_mismatched_epidemic_sizes() {
         use crate::epidemic::EpidemicState;
-        let gossip_ae = |epi: Option<EpidemicState>| {
+        let pay = |n: usize| EpidemicPayload::from_state(&EpidemicState::new(n), false);
+        let gossip_ae = |epi: Option<EpidemicPayload>| {
             Message::AppendEntries(AppendEntriesArgs {
                 term: 1,
                 leader: 0,
@@ -512,17 +538,17 @@ mod tests {
             })
         };
         assert!(gossip_ae(None).wire_valid_for(5));
-        assert!(gossip_ae(Some(EpidemicState::new(5))).wire_valid_for(5));
+        assert!(gossip_ae(Some(pay(5))).wire_valid_for(5));
         // A triple sized for a different cluster would hit the merge
         // algebra's bitmap-size assertion — the boundary must drop it.
-        assert!(!gossip_ae(Some(EpidemicState::new(7))).wire_valid_for(5));
+        assert!(!gossip_ae(Some(pay(7))).wire_valid_for(5));
         let reply = Message::AppendEntriesReply(AppendEntriesReply {
             term: 1,
             from: 1,
             success: true,
             match_hint: 0,
             round: None,
-            epidemic: Some(EpidemicState::new(9)),
+            epidemic: Some(pay(9)),
             seq: 0,
         });
         assert!(!reply.wire_valid_for(5));

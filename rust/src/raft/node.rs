@@ -130,6 +130,21 @@ pub struct Node {
     // Leader state.
     pub(crate) followers: Vec<FollowerSlot>,
     pub(crate) pending: BTreeMap<LogIndex, RequestId>,
+    /// Histogram of voter-follower `match_index` values, maintained
+    /// incrementally by `update_follower_on_reply` so the classic commit
+    /// rule (`classic_commit_candidate`) walks a few histogram buckets per
+    /// reply instead of sorting all n match indices. Rebuilt lazily
+    /// whenever `commit_hist_epoch` falls behind the view's membership
+    /// epoch (demotion/promotion changed the voter set).
+    pub(crate) commit_hist: BTreeMap<LogIndex, u64>,
+    /// [`ClusterView::epoch`] value the histogram was built against;
+    /// 0 = always invalid (view epochs start at 1 and never return to 0,
+    /// even across the view rebuilds of `recover_in_place`).
+    pub(crate) commit_hist_epoch: u64,
+    /// Number of follower slots with `repairing == true` — lets the leader
+    /// tick and deadline paths skip their O(n) follower scans entirely
+    /// when no repair is in flight (the common case at large n).
+    pub(crate) repairing_count: usize,
 
     // Group-commit queue (`[protocol.batch]`, DESIGN.md §3.4): client
     // commands waiting for a flush, with their reply routing. Commands
@@ -202,6 +217,9 @@ impl Node {
             leader_hint: None,
             followers: vec![FollowerSlot::default(); n],
             pending: BTreeMap::new(),
+            commit_hist: BTreeMap::new(),
+            commit_hist_epoch: 0,
+            repairing_count: 0,
             batch: Vec::new(),
             batch_bytes: 0,
             batch_deadline: Time::MAX,
@@ -260,6 +278,9 @@ impl Node {
         self.last_applied = snap_idx;
         self.followers = vec![FollowerSlot::default(); self.cfg.n];
         self.pending.clear();
+        self.commit_hist.clear();
+        self.commit_hist_epoch = 0;
+        self.repairing_count = 0;
         self.batch.clear();
         self.batch_bytes = 0;
         self.batch_deadline = Time::MAX;
@@ -643,7 +664,10 @@ impl Node {
                 // round interval, piggybacked on the existing leader ticks
                 // (no extra timers; inert unless `[protocol.unreliable]`).
                 let commit = self.commit_index;
-                self.view.evaluate(now, commit, &mut self.followers, &mut self.counters);
+                let repairs_cleared =
+                    self.view.evaluate(now, commit, &mut self.followers, &mut self.counters);
+                debug_assert!(repairs_cleared <= self.repairing_count);
+                self.repairing_count -= repairs_cleared;
                 self.with_strategy(|s, node| s.on_leader_tick(node, now, &mut actions));
             }
             Role::Follower | Role::Candidate => {
@@ -692,6 +716,9 @@ impl Node {
         self.role = Role::Follower;
         self.votes.clear();
         self.leader_hint = None;
+        // Leadership-scoped caches: the match-index histogram is only
+        // meaningful while leading (become_leader re-invalidates too).
+        self.commit_hist_epoch = 0;
         self.election_deadline = self.random_election_deadline(now);
         // Strategy-side per-term state: round schedule, commit history,
         // §3.2 vote structures.

@@ -79,6 +79,9 @@ impl Node {
     /// demoted peers are reached by the budgeted best-effort path instead —
     /// and each timeout is negative health evidence for the view.
     pub(crate) fn retransmit_repairs(&mut self, now: Time, actions: &mut Vec<Action>) {
+        if self.repairing_count == 0 {
+            return; // nothing in repair: skip the O(n) voter scan
+        }
         let last = self.log.last_index();
         let repairing: Vec<NodeId> =
             self.view.voters().filter(|&p| p != self.id && self.followers[p].repairing).collect();
@@ -238,20 +241,35 @@ impl Node {
         // voters enter the repair machinery — demoted peers are served by
         // the budgeted best-effort path instead.
         let voter = self.view.is_voter(reply.from);
+        let hist_live = voter && self.commit_hist_epoch == self.view.epoch();
         let slot = &mut self.followers[reply.from];
         if reply.success {
+            let old_match = slot.match_index;
             slot.match_index = slot.match_index.max(reply.match_hint);
             slot.next_index = slot.next_index.max(reply.match_hint + 1);
+            let new_match = slot.match_index;
             if slot.repairing {
                 if !voter {
                     slot.repairing = false; // demoted mid-repair: forget it
-                } else if slot.match_index >= self.commit_index && slot.next_index > last {
+                    self.repairing_count -= 1;
+                } else if new_match >= self.commit_index && slot.next_index > last {
                     slot.repairing = false;
+                    self.repairing_count -= 1;
                 } else {
                     // Keep feeding the catch-up pipeline.
                     self.counters.repair_rpcs += 1;
                     self.send_entries_rpc(now, reply.from, last, actions);
                 }
+            }
+            // Move this follower's ack between histogram buckets so the
+            // commit rule never rescans all n slots.
+            if hist_live && new_match != old_match {
+                let cnt = self.commit_hist.get_mut(&old_match).expect("old match bucket");
+                *cnt -= 1;
+                if *cnt == 0 {
+                    self.commit_hist.remove(&old_match);
+                }
+                *self.commit_hist.entry(new_match).or_insert(0) += 1;
             }
         } else {
             // Log mismatch at the follower: jump next_index back to its
@@ -259,11 +277,17 @@ impl Node {
             let hint_next = reply.match_hint + 1;
             slot.next_index = slot.next_index.min(hint_next).max(1);
             if voter {
-                slot.repairing = true;
+                if !slot.repairing {
+                    slot.repairing = true;
+                    self.repairing_count += 1;
+                }
                 self.counters.repair_rpcs += 1;
                 self.send_entries_rpc(now, reply.from, last, actions);
             } else {
-                slot.repairing = false;
+                if slot.repairing {
+                    slot.repairing = false;
+                    self.repairing_count -= 1;
+                }
                 // The peer's log diverges from what best-effort assumed
                 // (e.g. an in-flight batch was lost): forget the coverage
                 // watermark so the next best-effort batch counts as fresh.
@@ -283,27 +307,72 @@ impl Node {
     /// feeds).
     ///
     /// [`ClusterView::quorum_size`]: super::view::ClusterView::quorum_size
-    pub(crate) fn classic_commit_candidate(&self) -> Option<LogIndex> {
+    ///
+    /// Implementation: instead of sorting all n match indices per reply,
+    /// the candidate is read off the incrementally-maintained
+    /// `commit_hist` (see the field docs in `node.rs`) — a walk over at
+    /// most `quorum_size` histogram buckets. The histogram is rebuilt
+    /// lazily when the view's membership epoch moved (demotion/promotion
+    /// changed the voter set), which is rare.
+    pub(crate) fn classic_commit_candidate(&mut self) -> Option<LogIndex> {
         debug_assert_eq!(self.role, super::types::Role::Leader);
-        let mut matches: Vec<LogIndex> = self
-            .view
-            .voters()
-            .map(|i| {
-                if i == self.id {
-                    self.log.last_index()
-                } else {
-                    self.followers[i].match_index
+        if self.commit_hist_epoch != self.view.epoch() {
+            self.rebuild_commit_hist();
+        }
+        let q = self.view.quorum_size();
+        let candidate = if q == 1 {
+            self.log.last_index()
+        } else {
+            // The leader's own log head is the largest of the voter values
+            // (match bookkeeping never exceeds what the leader sent), so
+            // the q-th largest overall is the (q-1)-th largest follower
+            // ack: walk the buckets from the top until they cover it.
+            let mut need = (q - 1) as u64;
+            let mut at = 0;
+            for (&idx, &cnt) in self.commit_hist.iter().rev() {
+                if cnt >= need {
+                    at = idx;
+                    break;
                 }
-            })
-            .collect();
-        matches.sort_unstable_by(|a, b| b.cmp(a));
-        let candidate = matches[self.view.quorum_size() - 1];
+                need -= cnt;
+            }
+            at
+        };
+        #[cfg(debug_assertions)]
+        {
+            // The histogram walk must agree with the direct sort-based
+            // rule — the debug test suite pins the equivalence.
+            let mut matches: Vec<LogIndex> = self
+                .view
+                .voters()
+                .map(|i| {
+                    if i == self.id {
+                        self.log.last_index()
+                    } else {
+                        self.followers[i].match_index
+                    }
+                })
+                .collect();
+            matches.sort_unstable_by(|a, b| b.cmp(a));
+            debug_assert_eq!(candidate, matches[q - 1], "histogram commit rule diverged");
+        }
         if candidate > self.commit_index && self.log.term_at(candidate) == Some(self.current_term)
         {
             Some(candidate)
         } else {
             None
         }
+    }
+
+    /// Rebuild the match-index histogram against the current voter set.
+    fn rebuild_commit_hist(&mut self) {
+        self.commit_hist.clear();
+        for i in 0..self.cfg.n {
+            if i != self.id && self.view.is_voter(i) {
+                *self.commit_hist.entry(self.followers[i].match_index).or_insert(0) += 1;
+            }
+        }
+        self.commit_hist_epoch = self.view.epoch();
     }
 }
 
@@ -484,8 +553,8 @@ mod tests {
         assert_eq!(relays.len(), 3);
         if let Message::AppendEntries(a) = &relays[0].1 {
             let epi = a.gossip.as_ref().unwrap().epidemic.as_ref().unwrap();
-            assert!(epi.bitmap.get(3), "relayer's own vote is in the payload");
-            assert!(epi.bitmap.get(0), "leader's vote was carried in");
+            assert!(epi.get(3), "relayer's own vote is in the payload");
+            assert!(epi.get(0), "leader's vote was carried in");
         }
     }
 

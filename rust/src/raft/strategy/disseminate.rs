@@ -39,7 +39,7 @@ use super::super::message::{AppendEntriesArgs, GossipMeta, Message};
 use super::super::node::{Action, Counters, Node};
 use super::super::types::{LogIndex, NodeId, Role, Time};
 use crate::config::ProtocolConfig;
-use crate::epidemic::{EpidemicState, Permutation, RoundClock};
+use crate::epidemic::{EpidemicPayload, Permutation, RoundClock};
 use std::collections::VecDeque;
 use std::sync::Arc;
 
@@ -246,7 +246,7 @@ pub(crate) fn start_seed_round(
     commit_history: &mut VecDeque<LogIndex>,
     node: &mut Node,
     now: Time,
-    epidemic: Option<EpidemicState>,
+    epidemic: Option<EpidemicPayload>,
     actions: &mut Vec<Action>,
 ) -> Time {
     debug_assert_eq!(node.role, Role::Leader);

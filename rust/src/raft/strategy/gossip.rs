@@ -18,7 +18,7 @@ use super::super::types::{LogIndex, Role, Time};
 use super::disseminate::{DisseminationPlanner, GOSSIP_FLOOR};
 use super::ReplicationStrategy;
 use crate::config::ProtocolConfig;
-use crate::epidemic::{EpidemicState, RoundClass, RoundClock};
+use crate::epidemic::{EpidemicPayload, EpidemicState, RoundClass, RoundClock};
 use std::collections::VecDeque;
 use std::sync::Arc;
 
@@ -82,31 +82,41 @@ impl GossipStrategy {
     }
 
     /// §3.2 `Merge` of a received structure triple, then `Update` (V2 only).
+    /// Works directly on the wire payload — a sparse payload is folded in
+    /// O(set bits) without materialising an n-bit temporary.
     fn merge_and_update(
         &mut self,
         node: &mut Node,
-        other: &EpidemicState,
+        other: &EpidemicPayload,
         actions: &mut Vec<Action>,
     ) {
         if let Some(epi) = self.epi.as_mut() {
             node.counters.merges += 1;
-            epi.merge(other);
+            epi.merge_payload(other);
             epi.maybe_set_own_bit(node.id, node.log_view());
             Self::run_update(epi, node, actions);
         }
+    }
+
+    /// Snapshot the local structures as a wire payload (V2 only). With
+    /// `protocol.compact_payloads` the sparse repr is chosen whenever it is
+    /// strictly smaller; otherwise the historical dense frames are emitted.
+    fn payload(&self, node: &Node) -> Option<EpidemicPayload> {
+        self.epi.as_ref().map(|e| EpidemicPayload::from_state(e, node.cfg.compact_payloads))
     }
 
     /// §3.1 — start one epidemic round: stamp `RoundLC`, batch the entries
     /// not yet committed, send to the next `F` permutation targets (shared
     /// machinery: [`super::start_seed_round`]).
     fn start_round(&mut self, node: &mut Node, now: Time, actions: &mut Vec<Action>) {
+        let epidemic = self.payload(node);
         self.next_round_at = super::start_seed_round(
             &mut self.planner,
             &mut self.round_clock,
             &mut self.commit_history,
             node,
             now,
-            self.epi.clone(),
+            epidemic,
             actions,
         );
     }
@@ -137,7 +147,7 @@ impl GossipStrategy {
             success,
             match_hint,
             round: None,
-            epidemic: self.epi.clone(),
+            epidemic: self.payload(node),
             seq: args.seq,
         };
         node.counters.replies_sent += 1;
@@ -198,7 +208,7 @@ impl GossipStrategy {
                         success,
                         match_hint,
                         round: Some(meta.round),
-                        epidemic: self.epi.clone(),
+                        epidemic: self.payload(node),
                         seq: args.seq,
                     };
                     node.counters.replies_sent += 1;
@@ -211,7 +221,9 @@ impl GossipStrategy {
                 // round boundary: fold the feedback gathered since the
                 // previous one before choosing the relay fanout.
                 self.planner.end_round(&mut node.counters);
-                let epidemic = self.epi.clone();
+                // Built once per receipt; per-target clones are O(1) (the
+                // payload shares its bit storage via `Arc`).
+                let epidemic = self.payload(node);
                 let targets = self.planner.plan_round(&mut node.perm);
                 for to in targets {
                     if to == args.leader && meta.hops > 0 && self.epi.is_none() {
@@ -296,9 +308,13 @@ impl ReplicationStrategy for GossipStrategy {
 
     fn leader_deadline(&self, node: &Node) -> Time {
         let mut dl = self.next_round_at;
-        for f in node.followers.iter() {
-            if f.repairing {
-                dl = dl.min(f.last_rpc_at + node.cfg.rpc_timeout_us);
+        // With nothing in repair (the common case at large n) the round
+        // timer alone decides the deadline — skip the O(n) slot scan.
+        if node.repairing_count != 0 {
+            for f in node.followers.iter() {
+                if f.repairing {
+                    dl = dl.min(f.last_rpc_at + node.cfg.rpc_timeout_us);
+                }
             }
         }
         dl

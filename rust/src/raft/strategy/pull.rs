@@ -376,9 +376,12 @@ impl ReplicationStrategy for PullStrategy {
 
     fn leader_deadline(&self, node: &Node) -> Time {
         let mut dl = self.next_round_at;
-        for f in node.followers.iter() {
-            if f.repairing {
-                dl = dl.min(f.last_rpc_at + node.cfg.rpc_timeout_us);
+        // Skip the O(n) slot scan while nothing is in repair.
+        if node.repairing_count != 0 {
+            for f in node.followers.iter() {
+                if f.repairing {
+                    dl = dl.min(f.last_rpc_at + node.cfg.rpc_timeout_us);
+                }
             }
         }
         dl

@@ -107,6 +107,11 @@ pub struct ClusterView {
     budget_bytes: u64,
     /// Rotation cursor so best-effort traffic cycles through demoted peers.
     best_effort_cursor: usize,
+    /// Membership epoch: bumped on every voter-set change (demotion,
+    /// promotion, leadership reset). Starts at 1 and never returns to 0,
+    /// so callers can cache voter-set-derived state keyed by this value
+    /// and use 0 as an always-invalid marker (`Node::commit_hist_epoch`).
+    epoch: u64,
 }
 
 impl ClusterView {
@@ -131,6 +136,7 @@ impl ClusterView {
             commit_snaps: std::collections::VecDeque::with_capacity(8),
             budget_bytes: cfg.unreliable.best_effort_bytes,
             best_effort_cursor: 0,
+            epoch: 1,
         }
     }
 
@@ -175,6 +181,11 @@ impl ClusterView {
 
     pub fn voter_count(&self) -> usize {
         self.voter_count
+    }
+
+    /// Current membership epoch (see the field docs; monotone, never 0).
+    pub(crate) fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     pub fn demoted_count(&self) -> usize {
@@ -273,18 +284,22 @@ impl ClusterView {
     ///   index (promotion only ever grows the quorum, so it is always
     ///   safe — the catch-up condition just stops a still-lagging peer from
     ///   oscillating between the two states).
+    ///
+    /// Returns how many `repairing` flags it cleared (demotion forgets
+    /// repair state) so the caller can keep its repair count in sync
+    /// without rescanning the slots.
     pub(crate) fn evaluate(
         &mut self,
         now: Time,
         commit_index: LogIndex,
         followers: &mut [FollowerSlot],
         counters: &mut Counters,
-    ) {
+    ) -> usize {
         if !self.cfg.enabled {
-            return;
+            return 0;
         }
         if now < self.last_eval_at.saturating_add(self.eval_interval_us) {
-            return;
+            return 0;
         }
         let prev_commit = self.last_eval_commit;
         self.last_eval_at = now;
@@ -307,6 +322,7 @@ impl ClusterView {
         // bank an unbounded burst).
         self.budget_bytes = (self.budget_bytes + self.cfg.best_effort_bytes)
             .min(self.cfg.best_effort_bytes.saturating_mul(4));
+        let mut repairs_cleared = 0;
         for i in 0..self.n {
             if i == self.me {
                 continue;
@@ -339,7 +355,11 @@ impl ClusterView {
                 {
                     self.peers[i].voter = false;
                     self.voter_count -= 1;
-                    followers[i].repairing = false;
+                    self.epoch += 1;
+                    if followers[i].repairing {
+                        followers[i].repairing = false;
+                        repairs_cleared += 1;
+                    }
                     followers[i].best_effort_through = 0;
                     counters.demotions += 1;
                 }
@@ -348,10 +368,12 @@ impl ClusterView {
             {
                 self.peers[i].voter = true;
                 self.voter_count += 1;
+                self.epoch += 1;
                 counters.promotions += 1;
             }
         }
         counters.demoted_current = self.demoted_count() as u64;
+        repairs_cleared
     }
 
     /// Best-effort budget currently available (callers size their batches
@@ -387,6 +409,7 @@ impl ClusterView {
         for p in self.peers.iter_mut() {
             *p = PeerHealth::fresh();
         }
+        self.epoch += 1;
         self.voter_count = self.n;
         self.last_eval_at = 0;
         self.last_eval_commit = 0;

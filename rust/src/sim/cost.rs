@@ -86,7 +86,7 @@ fn carries_epidemic(msg: &Message) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::epidemic::EpidemicState;
+    use crate::epidemic::{EpidemicPayload, EpidemicState};
     use crate::kvstore::Command;
     use crate::raft::{AppendEntriesArgs, AppendEntriesReply, GossipMeta, LogEntry, Message};
     use std::sync::Arc;
@@ -106,7 +106,8 @@ mod tests {
             gossip: Some(GossipMeta {
                 round: 1,
                 hops: 0,
-                epidemic: epidemic.then(|| EpidemicState::new(5)),
+                epidemic: epidemic
+                    .then(|| EpidemicPayload::from_state(&EpidemicState::new(5), false)),
             }),
             seq: 0,
         })
@@ -134,7 +135,7 @@ mod tests {
             success: true,
             match_hint: 0,
             round: None,
-            epidemic: Some(EpidemicState::new(5)),
+            epidemic: Some(EpidemicPayload::from_state(&EpidemicState::new(5), false)),
             seq: 0,
         });
         assert!(m.recv_cost(&reply) > m.config().msg_recv_us as u64);

@@ -8,14 +8,22 @@
 //! until an index is majority-committed everywhere?** — the mechanism
 //! behind V2's latency premium in Fig 4 and its flat leader CPU in Fig 6.
 //!
-//! The per-round fold+update runs through either backend of
-//! [`MergeExecutor`] — the native Rust loop or the AOT-compiled
-//! Pallas/JAX `cluster_step` executable via PJRT — with bit-identical
-//! results (asserted in tests).
+//! The native backend is a scalar double-buffered engine: one snapshot of
+//! the previous round, then each replica folds its inbox and runs Update
+//! independently. Because a round is embarrassingly parallel over
+//! receivers, the fold can be sharded across threads over disjoint replica
+//! ranges with a barrier at the round boundary — bit-identical to the
+//! single-thread run by construction (asserted in tests), which is what
+//! lets the convergence study reach n = 10 000. The AOT-compiled
+//! Pallas/JAX `cluster_step` executable via PJRT remains available as the
+//! [`Backend::Hlo`] path; it retains the artifact's SoA geometry (mailbox
+//! cap, bitmap word count), so the native/HLO equivalence test runs at
+//! scales where those caps never bind.
 
-use crate::epidemic::{EpidemicState, Permutation};
+use crate::epidemic::{EpidemicState, LogView, Permutation};
 use crate::raft::view::ClusterView;
-use crate::runtime::{Geometry, MergeExecutor};
+use crate::runtime::MergeExecutor;
+use crate::util::json::Json;
 use crate::util::rng::Xoshiro256;
 
 /// Which engine folds the per-round message batches.
@@ -34,7 +42,7 @@ impl Backend<'_> {
 }
 
 /// Result of one convergence run.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct ConvergenceReport {
     pub n: usize,
     pub fanout: usize,
@@ -45,6 +53,43 @@ pub struct ConvergenceReport {
     pub rounds_to_all_commit: usize,
     /// Messages exchanged until full convergence.
     pub messages: u64,
+    /// Worker threads the native rounds ran on (1 = single-thread).
+    pub shards: usize,
+    /// Wall-clock host time for the whole run (s).
+    pub host_secs: f64,
+}
+
+/// Equality covers the simulation outcome only: `shards` and `host_secs`
+/// describe *how* the run executed, and the sharding contract is precisely
+/// that they may vary while everything else stays bit-identical.
+impl PartialEq for ConvergenceReport {
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n
+            && self.fanout == other.fanout
+            && self.rounds_to_first_commit == other.rounds_to_first_commit
+            && self.rounds_to_all_commit == other.rounds_to_all_commit
+            && self.messages == other.messages
+    }
+}
+
+impl ConvergenceReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("fanout", Json::num(self.fanout as f64)),
+            (
+                "rounds_to_first_commit",
+                Json::num(self.rounds_to_first_commit as f64),
+            ),
+            (
+                "rounds_to_all_commit",
+                Json::num(self.rounds_to_all_commit as f64),
+            ),
+            ("messages", Json::num(self.messages as f64)),
+            ("shards", Json::num(self.shards as f64)),
+            ("host_secs", Json::num(self.host_secs)),
+        ])
+    }
 }
 
 /// Fleet of epidemic states gossiping in lockstep rounds.
@@ -52,11 +97,15 @@ pub struct FleetSim {
     n: usize,
     fanout: usize,
     states: Vec<EpidemicState>,
+    /// Previous-round snapshot buffer (double buffering: reused across
+    /// rounds so a 10k-replica fleet does not reallocate per round).
+    scratch: Vec<EpidemicState>,
     perms: Vec<Permutation>,
-    geometry: Geometry,
     /// The §3.2 bitmap quorum — constant for the fleet's lifetime, taken
     /// from the view's quorum arithmetic once at construction.
     quorum: u32,
+    /// Worker threads for native rounds (1 = stay on the caller thread).
+    shards: usize,
 }
 
 impl FleetSim {
@@ -72,7 +121,7 @@ impl FleetSim {
             let mut s = EpidemicState::new(n);
             s.maybe_set_own_bit(
                 i,
-                crate::epidemic::LogView { last_index: last_index as u64, last_term: 1, current_term: 1 },
+                LogView { last_index: last_index as u64, last_term: 1, current_term: 1 },
             );
             states.push(s);
             perms.push(Permutation::new(n, i, &mut rng.fork(i as u64)));
@@ -81,12 +130,17 @@ impl FleetSim {
             n,
             fanout,
             states,
+            scratch: Vec::new(),
             perms,
             quorum: ClusterView::full(n).epidemic_quorum() as u32,
-            // Geometry for batched native folding (HLO overrides with the
-            // artifact's geometry).
-            geometry: Geometry { b: n, m: 16, w: 2 },
+            shards: 1,
         }
+    }
+
+    /// Shard native rounds across `shards` worker threads (clamped to
+    /// [1, n]). The per-round result is independent of this setting.
+    pub fn set_shards(&mut self, shards: usize) {
+        self.shards = shards.clamp(1, self.n);
     }
 
     pub fn states(&self) -> &[EpidemicState] {
@@ -96,21 +150,71 @@ impl FleetSim {
     /// Run one lockstep gossip round, folding with `backend`. Returns the
     /// number of messages sent. `last_index` is every replica's log end.
     pub fn round(&mut self, backend: &Backend, last_index: u32) -> u64 {
-        let n = self.n;
-        let maj = self.quorum;
-        // Deliver: per-target message lists (snapshot of sender states).
-        let mut inbox: Vec<Vec<usize>> = vec![Vec::new(); n];
+        match backend {
+            Backend::Native => self.native_round(last_index),
+            Backend::Hlo(exec) => self.hlo_round(exec, last_index),
+        }
+    }
+
+    /// Draw this round's permutation targets (deterministic: senders in
+    /// replica order, so each inbox lists senders ascending) and count the
+    /// messages.
+    fn build_inbox(&mut self) -> (Vec<Vec<u32>>, u64) {
+        let mut inbox: Vec<Vec<u32>> = vec![Vec::new(); self.n];
         let mut messages = 0u64;
         for (i, perm) in self.perms.iter_mut().enumerate() {
             for t in perm.next_round(self.fanout) {
-                inbox[t].push(i);
+                inbox[t].push(i as u32);
                 messages += 1;
             }
         }
-        let geo = match backend {
-            Backend::Native => self.geometry,
-            Backend::Hlo(exec) => exec.geometry,
+        (inbox, messages)
+    }
+
+    /// Scalar double-buffered round: snapshot the previous states, then
+    /// every receiver folds its full inbox (no mailbox cap) and runs one
+    /// Update pass. Receivers only read the snapshot, so disjoint replica
+    /// ranges can run on separate threads with no effect on the result.
+    fn native_round(&mut self, last_index: u32) -> u64 {
+        let (inbox, messages) = self.build_inbox();
+        let quorum = self.quorum as usize;
+        let log = LogView { last_index: last_index as u64, last_term: 1, current_term: 1 };
+        let Self { states, scratch, shards, .. } = self;
+        scratch.clone_from(states); // scratch := previous round's states
+        let prev: &[EpidemicState] = scratch;
+        let inbox: &[Vec<u32>] = &inbox;
+        let step = |base: usize, slice: &mut [EpidemicState]| {
+            for (r, s) in slice.iter_mut().enumerate() {
+                let i = base + r;
+                for &from in &inbox[i] {
+                    s.merge(&prev[from as usize]);
+                }
+                s.update_step(i, quorum, log);
+            }
         };
+        if *shards <= 1 {
+            step(0, states);
+        } else {
+            let chunk = states.len().div_ceil(*shards);
+            std::thread::scope(|scope| {
+                for (ci, slice) in states.chunks_mut(chunk).enumerate() {
+                    let step = &step;
+                    scope.spawn(move || step(ci * chunk, slice));
+                }
+            });
+        }
+        messages
+    }
+
+    /// SoA round through the AOT `cluster_step` executable. Keeps the
+    /// artifact's geometry: inboxes truncate at its mailbox cap and the
+    /// bitmap is limited to its word count — faithful to the compiled
+    /// kernel, which is the point of this backend.
+    fn hlo_round(&mut self, exec: &MergeExecutor, last_index: u32) -> u64 {
+        let n = self.n;
+        let maj = self.quorum;
+        let (inbox, messages) = self.build_inbox();
+        let geo = exec.geometry;
         let w = geo.w;
         let m_cap = geo.m;
         // Process replicas in chunks of geo.b rows.
@@ -138,7 +242,7 @@ impl FleetSim {
                 let senders = &inbox[i];
                 count[r] = senders.len().min(m_cap) as u32;
                 for (k, &from) in senders.iter().take(m_cap).enumerate() {
-                    let src = &snapshot[from];
+                    let src = &snapshot[from as usize];
                     let base = (r * m_cap + k) * w;
                     msgs_bm[base..base + src.bitmap.words().len()]
                         .copy_from_slice(src.bitmap.words());
@@ -146,22 +250,12 @@ impl FleetSim {
                     msgs_nc[r * m_cap + k] = src.next_commit as u32;
                 }
             }
-            let (out_bm, out_mc, out_nc) = match backend {
-                Backend::Native => {
-                    let (fb, fm, fnc) = crate::runtime::merge_exec::native_merge_fold(
-                        geo, &bm, &mc, &nc, &msgs_bm, &msgs_mc, &msgs_nc, &count,
-                    );
-                    crate::runtime::merge_exec::native_quorum_update(
-                        geo, fb, fm, fnc, &me, maj, &last_ix, &last_eq,
-                    )
-                }
-                Backend::Hlo(exec) => exec
-                    .hlo_cluster_step(
-                        &bm, &mc, &nc, &msgs_bm, &msgs_mc, &msgs_nc, &count, &me, maj,
-                        &last_ix, &last_eq,
-                    )
-                    .expect("hlo fleet step"),
-            };
+            let (out_bm, out_mc, out_nc) = exec
+                .hlo_cluster_step(
+                    &bm, &mc, &nc, &msgs_bm, &msgs_mc, &msgs_nc, &count, &me, maj,
+                    &last_ix, &last_eq,
+                )
+                .expect("hlo fleet step");
             for r in 0..rows {
                 let i = row + r;
                 self.states[i] = crate::runtime::FleetState {
@@ -178,7 +272,7 @@ impl FleetSim {
 }
 
 /// Run to convergence: rounds until every replica's `max_commit` reaches
-/// `target` (caps at `max_rounds`).
+/// `target` (caps at `max_rounds`). Single-threaded rounds.
 pub fn converge(
     n: usize,
     fanout: usize,
@@ -186,11 +280,27 @@ pub fn converge(
     backend: &Backend,
     seed: u64,
 ) -> ConvergenceReport {
+    converge_sharded(n, fanout, target, backend, seed, 1)
+}
+
+/// [`converge`] with native rounds sharded over `shards` worker threads.
+/// The outcome fields of the report are independent of `shards`.
+pub fn converge_sharded(
+    n: usize,
+    fanout: usize,
+    target: u32,
+    backend: &Backend,
+    seed: u64,
+    shards: usize,
+) -> ConvergenceReport {
+    let host_start = std::time::Instant::now();
     let last_index = target;
     let mut sim = FleetSim::new(n, fanout, last_index, seed);
+    sim.set_shards(shards);
     let mut first = 0usize;
     let mut messages = 0u64;
     let max_rounds = 10_000;
+    let mut all = max_rounds;
     for round in 1..=max_rounds {
         messages += sim.round(backend, last_index);
         let max_any = sim.states.iter().map(|s| s.max_commit).max().unwrap();
@@ -199,21 +309,18 @@ pub fn converge(
             first = round;
         }
         if min_all >= target as u64 {
-            return ConvergenceReport {
-                n,
-                fanout,
-                rounds_to_first_commit: first,
-                rounds_to_all_commit: round,
-                messages,
-            };
+            all = round;
+            break;
         }
     }
     ConvergenceReport {
         n,
         fanout,
         rounds_to_first_commit: first,
-        rounds_to_all_commit: max_rounds,
+        rounds_to_all_commit: all,
         messages,
+        shards: sim.shards,
+        host_secs: host_start.elapsed().as_secs_f64(),
     }
 }
 
@@ -261,6 +368,59 @@ mod tests {
         let c = converge(31, 3, 2, &Backend::Native, 6);
         // Different permutations; usually different message count.
         assert!(a.messages > 0 && c.messages > 0);
+    }
+
+    #[test]
+    fn fleet_handles_multi_word_bitmaps() {
+        // n > 64 exceeds the old SoA geometry (two bitmap words); the
+        // scalar engine must converge and keep the §3.2 invariant.
+        let r = converge(201, 5, 1, &Backend::Native, 11);
+        assert!(r.rounds_to_first_commit >= 1);
+        assert!(
+            r.rounds_to_all_commit < 100,
+            "201 replicas at F=5 should converge fast, took {}",
+            r.rounds_to_all_commit
+        );
+        let mut sim = FleetSim::new(201, 5, 1, 11);
+        for _ in 0..r.rounds_to_all_commit {
+            sim.round(&Backend::Native, 1);
+        }
+        for s in sim.states() {
+            assert!(s.invariant_holds());
+        }
+    }
+
+    #[test]
+    fn sharded_rounds_are_bit_identical_to_single_thread() {
+        // The PR 8 sharding contract at n = 1001: same seed, any shard
+        // count, every replica's state identical after every round.
+        for seed in [5u64, 9, 20230713] {
+            for fanout in [2usize, 8] {
+                let mut single = FleetSim::new(1001, fanout, 1, seed);
+                let mut sharded = FleetSim::new(1001, fanout, 1, seed);
+                sharded.set_shards(4);
+                for round in 0..4 {
+                    let a = single.round(&Backend::Native, 1);
+                    let b = sharded.round(&Backend::Native, 1);
+                    assert_eq!(a, b, "seed {seed} F={fanout} round {round}: messages");
+                    assert_eq!(
+                        single.states(),
+                        sharded.states(),
+                        "seed {seed} F={fanout} round {round}: states diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_converge_report_matches_single_thread() {
+        let single = converge(1001, 8, 1, &Backend::Native, 20230713);
+        let sharded = converge_sharded(1001, 8, 1, &Backend::Native, 20230713, 4);
+        // Outcome equality (PartialEq ignores shards/host_secs by design).
+        assert_eq!(single, sharded);
+        assert_eq!(single.shards, 1);
+        assert_eq!(sharded.shards, 4);
     }
 
     #[test]

@@ -83,6 +83,16 @@ pub struct SimReport {
     pub min_commit: u64,
     /// Simulated events processed (host-side performance diagnostics).
     pub events_processed: u64,
+    /// Event-queue traffic (PR 8): total pushes (including tiebreak
+    /// sequence numbers burned on events scheduled past the horizon),
+    /// total pops (equals `events_processed`), and the deepest the heap
+    /// ever got. Together with `host_us_per_sim_sec` these locate the
+    /// simulator's own costs when scaling n.
+    pub heap_pushes: u64,
+    pub heap_pops: u64,
+    pub peak_queue_depth: u64,
+    /// Host wall-clock µs spent per simulated second.
+    pub host_us_per_sim_sec: f64,
     /// Wall-clock host time to run the simulation (s).
     pub host_secs: f64,
 }
@@ -135,6 +145,10 @@ impl SimReport {
             ("max_commit", Json::num(self.max_commit as f64)),
             ("min_commit", Json::num(self.min_commit as f64)),
             ("events_processed", Json::num(self.events_processed as f64)),
+            ("heap_pushes", Json::num(self.heap_pushes as f64)),
+            ("heap_pops", Json::num(self.heap_pops as f64)),
+            ("peak_queue_depth", Json::num(self.peak_queue_depth as f64)),
+            ("host_us_per_sim_sec", Json::num(self.host_us_per_sim_sec)),
             ("host_secs", Json::num(self.host_secs)),
         ])
     }

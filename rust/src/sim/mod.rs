@@ -12,7 +12,7 @@ pub mod workload;
 
 pub use cost::CostModel;
 pub use fault::{Fault, FaultSchedule};
-pub use fleet::{converge, Backend, ConvergenceReport, FleetSim};
+pub use fleet::{converge, converge_sharded, Backend, ConvergenceReport, FleetSim};
 pub use metrics::{Collector, SimReport};
 pub use net::SimNet;
 pub use runner::{run_cold_start, run_experiment, run_with_faults, Simulation};

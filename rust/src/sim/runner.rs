@@ -446,7 +446,10 @@ impl Simulation {
     pub fn run(mut self) -> SimReport {
         let host_start = std::time::Instant::now();
         let duration = self.cfg.workload.duration_us;
-        while let Some(Scheduled { at, ev, .. }) = self.queue.pop() {
+        let mut peak_queue_depth = 0usize;
+        loop {
+            peak_queue_depth = peak_queue_depth.max(self.queue.len());
+            let Some(Scheduled { at, ev, .. }) = self.queue.pop() else { break };
             if at > duration {
                 break;
             }
@@ -532,11 +535,11 @@ impl Simulation {
                 Ev::Fault { idx } => self.apply_fault(idx),
             }
         }
-        self.finish(host_start.elapsed().as_secs_f64())
+        self.finish(host_start.elapsed().as_secs_f64(), peak_queue_depth)
     }
 
     /// End-of-run safety check + report assembly.
-    fn finish(self, host_secs: f64) -> SimReport {
+    fn finish(self, host_secs: f64, peak_queue_depth: usize) -> SimReport {
         if std::env::var_os("EPIRAFT_DEBUG_COUNTERS").is_some() {
             for (i, r) in self.replicas.iter().enumerate() {
                 if r.node.is_leader() || i <= 1 {
@@ -692,6 +695,11 @@ impl Simulation {
             max_commit: ref_node.commit_index(),
             min_commit,
             events_processed: self.events,
+            heap_pushes: self.seq,
+            heap_pops: self.events,
+            peak_queue_depth: peak_queue_depth as u64,
+            host_us_per_sim_sec: host_secs * 1e6
+                / (self.cfg.workload.duration_us as f64 / 1e6),
             host_secs,
         }
     }
@@ -976,6 +984,59 @@ mod tests {
             assert_eq!(base.completed, off.completed, "{variant:?}");
             assert_eq!(base.mean_latency_us, off.mean_latency_us, "{variant:?}");
         }
+    }
+
+    #[test]
+    fn compact_payloads_only_changes_egress() {
+        // `protocol.compact_payloads` swaps the wire encoding of epidemic
+        // bitmaps, nothing else: the cost model prices presence, not size,
+        // so timing, RNG draws, message counts and completions must all be
+        // identical — only the byte meters may (and must) shrink. The
+        // encoding only has room to win at n > 32 (more than one bitmap
+        // word): each ballot reset leaves a near-empty bitmap that the
+        // sparse repr carries in fewer words.
+        let base = run_experiment(&quick_cfg(40, Variant::V2));
+        let mut cfg = quick_cfg(40, Variant::V2);
+        cfg.protocol.compact_payloads = true;
+        let compact = run_experiment(&cfg);
+        assert_eq!(base.messages, compact.messages);
+        assert_eq!(base.completed, compact.completed);
+        assert_eq!(base.mean_latency_us, compact.mean_latency_us);
+        assert_eq!(base.elections, compact.elections);
+        assert!(
+            compact.leader_egress_bytes < base.leader_egress_bytes,
+            "compact leader egress {} must undercut dense {}",
+            compact.leader_egress_bytes,
+            base.leader_egress_bytes
+        );
+        assert!(
+            compact.peer_egress_bytes_total < base.peer_egress_bytes_total,
+            "compact peer egress {} must undercut dense {}",
+            compact.peer_egress_bytes_total,
+            base.peer_egress_bytes_total
+        );
+        // V1, classic Raft and Pull carry no epidemic commit structures
+        // (V1's gossip metadata has `epidemic: None`): the knob is inert.
+        for variant in [Variant::Raft, Variant::V1, Variant::Pull] {
+            let base = run_experiment(&quick_cfg(9, variant));
+            let mut cfg = quick_cfg(9, variant);
+            cfg.protocol.compact_payloads = true;
+            let compact = run_experiment(&cfg);
+            assert_eq!(base.leader_egress_bytes, compact.leader_egress_bytes, "{variant:?}");
+            assert_eq!(base.completed, compact.completed, "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn perf_counters_are_populated_and_consistent() {
+        let report = run_experiment(&quick_cfg(5, Variant::V2));
+        assert_eq!(report.events_processed, report.heap_pops);
+        // Every pop was once a push; pushes past the horizon never pop.
+        assert!(report.heap_pushes >= report.heap_pops);
+        assert!(report.heap_pops > 0);
+        assert!(report.peak_queue_depth > 0);
+        assert!(report.peak_queue_depth <= report.heap_pushes);
+        assert!(report.host_us_per_sim_sec > 0.0);
     }
 
     #[test]

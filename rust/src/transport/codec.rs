@@ -25,7 +25,7 @@
 //! bitmap shape mismatches are all hard errors — a desynchronized stream
 //! must fail loudly, not deliver garbage into the protocol core.
 
-use crate::epidemic::EpidemicState;
+use crate::epidemic::EpidemicPayload;
 use crate::kvstore::Command;
 use crate::raft::log::LogEntry;
 use crate::raft::message::{
@@ -33,7 +33,6 @@ use crate::raft::message::{
     PullReplyArgs, PullRequestArgs, RequestVoteArgs, RequestVoteReply,
 };
 use crate::raft::types::NodeId;
-use crate::util::bitset::Bitmap;
 use std::io::Read;
 use std::sync::Arc;
 
@@ -199,21 +198,41 @@ fn put_entries(buf: &mut Vec<u8>, entries: &[LogEntry]) {
     }
 }
 
-fn put_epidemic(buf: &mut Vec<u8>, e: &Option<EpidemicState>) {
-    match e {
-        None => put_u8(buf, 0),
-        Some(s) => {
-            put_u8(buf, 1);
-            let n = u32::try_from(s.n()).expect("cluster size fits in u32");
+/// Epidemic payload repr tags. `0`/`1` are the historical presence byte
+/// (absent / dense words), so dense frames are byte-identical to the
+/// pre-compaction format; `2` is the sparse set-bit index list.
+const EPI_ABSENT: u8 = 0;
+const EPI_DENSE: u8 = 1;
+const EPI_SPARSE: u8 = 2;
+
+fn put_epidemic(buf: &mut Vec<u8>, e: &Option<EpidemicPayload>) {
+    let Some(p) = e else {
+        put_u8(buf, EPI_ABSENT);
+        return;
+    };
+    let n = u32::try_from(p.n()).expect("cluster size fits in u32");
+    match (p.dense_words(), p.sparse_indices()) {
+        (Some(words), _) => {
+            put_u8(buf, EPI_DENSE);
             put_u32(buf, n);
-            put_u64(buf, s.max_commit);
-            put_u64(buf, s.next_commit);
-            let words = s.bitmap.words();
+            put_u64(buf, p.max_commit);
+            put_u64(buf, p.next_commit);
             put_u32(buf, words.len() as u32);
             for w in words {
                 put_u32(buf, *w);
             }
         }
+        (_, Some(indices)) => {
+            put_u8(buf, EPI_SPARSE);
+            put_u32(buf, n);
+            put_u64(buf, p.max_commit);
+            put_u64(buf, p.next_commit);
+            put_u32(buf, indices.len() as u32);
+            for i in indices {
+                put_u32(buf, *i);
+            }
+        }
+        (None, None) => unreachable!("payload is dense or sparse"),
     }
 }
 
@@ -416,26 +435,36 @@ fn get_entries(c: &mut Cursor<'_>) -> Result<Arc<Vec<LogEntry>>, DecodeError> {
     Ok(Arc::new(entries))
 }
 
-fn get_epidemic(c: &mut Cursor<'_>) -> Result<Option<EpidemicState>, DecodeError> {
-    if !c.boolean()? {
+fn get_epidemic(c: &mut Cursor<'_>) -> Result<Option<EpidemicPayload>, DecodeError> {
+    let repr = c.u8()?;
+    if repr == EPI_ABSENT {
         return Ok(None);
+    }
+    if repr != EPI_DENSE && repr != EPI_SPARSE {
+        return Err(DecodeError::Malformed("unknown epidemic payload repr"));
     }
     let n = c.u32()? as usize;
     let max_commit = c.u64()?;
     let next_commit = c.u64()?;
-    let words_len = c.u32()? as usize;
-    if words_len != n.div_ceil(crate::util::bitset::WORD_BITS) {
-        return Err(DecodeError::Malformed("bitmap word count does not match n"));
-    }
-    if words_len.checked_mul(4).is_none_or(|need| need > c.remaining()) {
+    let count = c.u32()? as usize;
+    if count.checked_mul(4).is_none_or(|need| need > c.remaining()) {
         return Err(DecodeError::Truncated);
     }
-    let mut words = Vec::with_capacity(words_len);
-    for _ in 0..words_len {
-        words.push(c.u32()?);
+    let mut stream = Vec::with_capacity(count);
+    for _ in 0..count {
+        stream.push(c.u32()?);
     }
-    let bitmap = Bitmap::from_words(n, words);
-    Ok(Some(EpidemicState { bitmap, max_commit, next_commit }))
+    if repr == EPI_DENSE {
+        if count != n.div_ceil(crate::util::bitset::WORD_BITS) {
+            return Err(DecodeError::Malformed("bitmap word count does not match n"));
+        }
+        Ok(Some(EpidemicPayload::dense_from_words(n, max_commit, next_commit, stream)))
+    } else {
+        // Sparse: `count` set-bit indices, strictly increasing, each < n.
+        EpidemicPayload::sparse_from_indices(n, max_commit, next_commit, stream)
+            .map(Some)
+            .map_err(DecodeError::Malformed)
+    }
 }
 
 /// Decode one frame *payload* — the bytes after the `u32` length prefix.
@@ -802,6 +831,60 @@ mod tests {
         encode_entry(&mut bad, &LogEntry { term: 1, index: 1, cmd: Command::Noop });
         bad[16] = 99; // tag byte
         assert!(matches!(decode_entry(&bad).unwrap_err(), DecodeError::Malformed(_)));
+    }
+
+    #[test]
+    fn epidemic_payload_reprs_round_trip_and_validate() {
+        use crate::epidemic::{EpidemicPayload, EpidemicState};
+        let mut s = EpidemicState::new(51);
+        s.bitmap.set(2);
+        s.bitmap.set(40);
+        s.max_commit = 3;
+        s.next_commit = 4;
+        let msg = |p: EpidemicPayload| {
+            Message::AppendEntriesReply(AppendEntriesReply {
+                term: 3,
+                from: 1,
+                success: true,
+                match_hint: 4,
+                round: Some(9),
+                epidemic: Some(p),
+                seq: 7,
+            })
+        };
+        for compact in [false, true] {
+            let m = msg(EpidemicPayload::from_state(&s, compact));
+            let buf = encode_to_vec(&m);
+            assert_eq!(buf.len() as u64, m.wire_bytes(), "size model (compact={compact})");
+            let (decoded, consumed) = decode(&buf).unwrap().expect("complete frame");
+            assert_eq!(consumed, buf.len());
+            assert_eq!(decoded, m, "repr preserved over the wire");
+        }
+        // Sparse malformed inputs are rejected, not misread: flip the repr
+        // of a dense frame to sparse — its word stream is not a strictly
+        // increasing index list bounded by n (51 words of count=2 would be
+        // fine, but count 2 with word values 0x4.. exceeding n fails).
+        let sparse = msg(EpidemicPayload::from_state(&s, true));
+        let mut buf = encode_to_vec(&sparse);
+        // Repr byte sits after frame(4) + version(1) + kind(1) + term(8) +
+        // from(4) + success(1) + match_hint(8) + round presence(1) + round(8)
+        // + seq(8).
+        let at = 4 + 2 + 8 + 4 + 1 + 8 + 1 + 8 + 8;
+        assert_eq!(buf[at], 2, "sparse repr byte");
+        buf[at] = 9;
+        assert!(matches!(decode(&buf).unwrap_err(), DecodeError::Malformed(_)));
+        // Non-increasing indices are rejected.
+        let mut dup = encode_to_vec(&sparse);
+        // Index stream starts after repr(1) + n(4) + max(8) + next(8) +
+        // count(4); duplicate the first index into the second slot.
+        let ix0 = at + 1 + 4 + 8 + 8 + 4;
+        let first: [u8; 4] = dup[ix0..ix0 + 4].try_into().unwrap();
+        dup[ix0 + 4..ix0 + 8].copy_from_slice(&first);
+        assert!(matches!(decode(&dup).unwrap_err(), DecodeError::Malformed(_)));
+        // A corrupt sparse count fails as Truncated before allocating.
+        let mut big = encode_to_vec(&sparse);
+        big[at + 21..at + 25].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(decode(&big).unwrap_err(), DecodeError::Truncated);
     }
 
     #[test]

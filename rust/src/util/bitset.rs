@@ -16,9 +16,15 @@ pub struct Bitmap {
 
 impl std::fmt::Debug for Bitmap {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "Bitmap[")?;
-        for i in 0..self.n {
-            write!(f, "{}", if self.get(i) { '1' } else { '0' })?;
+        // Word-wise hex, least-significant word first (the wire order): a
+        // per-bit loop is O(n) per format call and dominates logging at
+        // n=10k.
+        write!(f, "Bitmap[n={};", self.n)?;
+        for (i, w) in self.words.iter().enumerate() {
+            if i > 0 {
+                write!(f, ".")?;
+            }
+            write!(f, "{w:08x}")?;
         }
         write!(f, "]")
     }
@@ -95,6 +101,12 @@ impl Bitmap {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
 
+    /// Alias for [`Bitmap::count`] under the std-like name.
+    #[inline]
+    pub fn count_ones(&self) -> usize {
+        self.count()
+    }
+
     /// Bitwise OR with another bitmap (Algorithm 3 line 3). Panics if sizes
     /// differ — merging bitmaps from different cluster sizes is a logic bug.
     pub fn or_with(&mut self, other: &Bitmap) {
@@ -104,15 +116,48 @@ impl Bitmap {
         }
     }
 
+    /// OR raw words in (the compact-payload dense merge path). Panics if
+    /// the word count doesn't match — same contract as [`Bitmap::or_with`].
+    pub fn or_words(&mut self, words: &[u32]) {
+        assert_eq!(self.words.len(), words.len(), "bitmap size mismatch");
+        for (a, b) in self.words.iter_mut().zip(words.iter()) {
+            *a |= *b;
+        }
+    }
+
+    /// Overwrite with raw words in place (no reallocation — the
+    /// compact-payload dense adopt path). Panics on word-count mismatch;
+    /// bits above `n` are masked off like [`Bitmap::from_words`].
+    pub fn copy_from_words(&mut self, words: &[u32]) {
+        assert_eq!(self.words.len(), words.len(), "bitmap size mismatch");
+        self.words.copy_from_slice(words);
+        self.mask_tail();
+    }
+
     /// True when the vote count reaches `majority` (⌊n/2⌋+1 for the caller).
     #[inline]
     pub fn has_majority(&self, majority: usize) -> bool {
         self.count() >= majority
     }
 
-    /// Iterator over the set bit positions.
+    /// Iterator over the set bit positions. Word-at-a-time with
+    /// `trailing_zeros` — O(words + set bits), not O(n): the sparse payload
+    /// encoder walks this at every send.
     pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
-        (0..self.n).filter(move |&i| self.get(i))
+        self.words.iter().enumerate().flat_map(|(wi, &word)| {
+            std::iter::successors(
+                if word == 0 { None } else { Some(word) },
+                |w| {
+                    let w = w & (w - 1); // clear lowest set bit
+                    if w == 0 {
+                        None
+                    } else {
+                        Some(w)
+                    }
+                },
+            )
+            .map(move |w| wi * WORD_BITS + w.trailing_zeros() as usize)
+        })
     }
 }
 
@@ -214,9 +259,43 @@ mod tests {
     }
 
     #[test]
+    fn iter_ones_matches_naive_scan() {
+        // The word/trailing_zeros fast path must agree with the per-bit
+        // definition for awkward shapes: empty, full, word boundaries.
+        for n in [1usize, 31, 32, 33, 64, 65, 100] {
+            let mut b = Bitmap::zeros(n);
+            for i in (0..n).filter(|i| i % 7 == 0 || i % 13 == 3) {
+                b.set(i);
+            }
+            let fast: Vec<usize> = b.iter_ones().collect();
+            let naive: Vec<usize> = (0..n).filter(|&i| b.get(i)).collect();
+            assert_eq!(fast, naive, "n={n}");
+            assert_eq!(fast.len(), b.count_ones());
+        }
+    }
+
+    #[test]
+    fn or_and_copy_from_words() {
+        let mut b = Bitmap::zeros(40);
+        b.set(1);
+        b.or_words(&[0x8, 0x1]);
+        assert!(b.get(1) && b.get(3) && b.get(32));
+        assert_eq!(b.count(), 3);
+        // copy_from_words overwrites and masks the tail (40 bits -> bits
+        // 40..64 of the second word must vanish).
+        b.copy_from_words(&[0x2, u32::MAX]);
+        assert!(b.get(1) && !b.get(3));
+        assert_eq!(b.count(), 1 + 8);
+    }
+
+    #[test]
     fn debug_format_compact() {
         let mut b = Bitmap::zeros(4);
         b.set(1);
-        assert_eq!(format!("{b:?}"), "Bitmap[0100]");
+        assert_eq!(format!("{b:?}"), "Bitmap[n=4;00000002]");
+        let mut wide = Bitmap::zeros(40);
+        wide.set(0);
+        wide.set(33);
+        assert_eq!(format!("{wide:?}"), "Bitmap[n=40;00000001.00000002]");
     }
 }

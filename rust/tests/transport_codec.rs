@@ -7,7 +7,7 @@
 //! equality that keeps the simulator's egress numbers meaningful
 //! (BENCH_PR2–PR4 all gate on them).
 
-use epiraft::epidemic::EpidemicState;
+use epiraft::epidemic::{EpidemicPayload, EpidemicState};
 use epiraft::kvstore::Command;
 use epiraft::raft::{
     AppendEntriesArgs, AppendEntriesReply, GossipMeta, LogEntry, Message, PullReplyArgs,
@@ -39,21 +39,26 @@ fn arb_entries(rng: &mut Xoshiro256, max: u64) -> Arc<Vec<LogEntry>> {
     )
 }
 
-fn arb_epidemic(rng: &mut Xoshiro256) -> Option<EpidemicState> {
+fn arb_epidemic(rng: &mut Xoshiro256) -> Option<EpidemicPayload> {
     if rng.next_below(2) == 0 {
         return None;
     }
     // Up to several bitmap words, so multi-word layouts are exercised.
     let n = 1 + rng.next_below(130) as usize;
     let mut s = EpidemicState::new(n);
+    // Mixed densities: ~1/3 set bits forces the dense repr even under
+    // `compact`, ~1/48 usually crosses into sparse — both wire encodings
+    // and the crossover itself are exercised.
+    let denom = if rng.next_below(2) == 0 { 3 } else { 48 };
     for i in 0..n {
-        if rng.next_below(3) == 0 {
+        if rng.next_below(denom) == 0 {
             s.bitmap.set(i);
         }
     }
     s.max_commit = rng.next_below(1 << 30);
     s.next_commit = s.max_commit + 1 + rng.next_below(64);
-    Some(s)
+    let compact = rng.next_below(2) == 0;
+    Some(EpidemicPayload::from_state(&s, compact))
 }
 
 fn arb_gossip(rng: &mut Xoshiro256) -> Option<GossipMeta> {
