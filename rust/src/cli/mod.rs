@@ -13,8 +13,10 @@
 //! epiraft bench-pr7  [--quick] [--n N] [--seed S] [--out FILE]
 //! epiraft bench-pr8  [--quick] [--n N] [--protocol-n N] [--fleet-n N]
 //!                    [--shards K] [--seed S] [--out FILE]
+//! epiraft bench-pr9  [--quick] [--n N] [--tcp-n N] [--seed S] [--out FILE]
 //! epiraft live       [--variant v] [--n N] [--clients C] [--secs S]
 //!                    [--transport {mpsc|tcp}] [--node-id I]
+//!                    [--metrics-addr HOST:PORT]
 //!                    [--kill-at US] [--kill-node I] [--restart-after US]
 //! epiraft artifacts-check [--dir artifacts]
 //! epiraft config-dump
@@ -120,6 +122,9 @@ impl Cli {
         if let Some(id) = self.get("node-id") {
             cfg.set("cluster.node_id", id)?;
         }
+        if let Some(addr) = self.get("metrics-addr") {
+            cfg.set("telemetry.metrics_addr", addr)?;
+        }
         if let Some(at) = self.get("kill-at") {
             cfg.set("cluster.kill_at_us", at)?;
         }
@@ -202,8 +207,17 @@ USAGE:
       to single-thread; writes BENCH_PR8.json and fails if any cell's
       claim fails.
 
+  epiraft bench-pr9 [--quick] [--n N] [--tcp-n N] [--seed S] [--out FILE]
+      Telemetry soak and sim-vs-live cross-check ({raft, pull} sampled over
+      time in the sim at n=51 plus a loopback-TCP live cluster of --tcp-n
+      replicas, all through the shared telemetry series); writes
+      BENCH_PR9.json and fails unless the pull variant's leader-egress
+      share is strictly below classic's on every host and classic's live
+      share agrees with the sim prediction within tolerance.
+
   epiraft live [--variant v] [--n N] [--clients C] [--secs S]
                [--transport mpsc|tcp] [--node-id I]
+               [--metrics-addr HOST:PORT]
                [--kill-at US] [--kill-node I] [--restart-after US]
       Run the live thread-per-replica cluster (real time). The default
       mpsc transport moves messages over in-process channels; --transport
@@ -211,7 +225,9 @@ USAGE:
       and real sockets (loopback by default; [cluster.peers] in a config
       file for multi-host addresses). --node-id I runs only replica I in
       this process (multi-process mode; requires tcp + a full peer table;
-      clients are driven from replica 0's process). --kill-at US kills
+      clients are driven from replica 0's process). --metrics-addr serves
+      Prometheus-style text exposition at http://HOST:PORT/metrics for the
+      duration of the run (port 0 picks a free port). --kill-at US kills
       replica --kill-node (default 0) after US microseconds, losing all
       its volatile state, and restarts it from its [storage] backend
       --restart-after US later (default 500000) — e.g.
@@ -306,6 +322,13 @@ mod tests {
         assert_eq!(cfg.cluster.restart_after_us, 750_000);
         // kill_node must name a replica.
         assert!(parse("live --n 5 --kill-at 1000 --kill-node 9").build_config().is_err());
+    }
+
+    #[test]
+    fn metrics_addr_flows_into_telemetry_config() {
+        let cfg = parse("live --n 3 --metrics-addr 127.0.0.1:0").build_config().unwrap();
+        assert_eq!(cfg.telemetry.metrics_addr, "127.0.0.1:0");
+        assert!(parse("run --n 3").build_config().unwrap().telemetry.metrics_addr.is_empty());
     }
 
     #[test]

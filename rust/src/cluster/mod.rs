@@ -27,6 +27,7 @@ use crate::config::{ArrivalModel, Config, TransportKind};
 use crate::driver::{self, ActionSink, NodeInput};
 use crate::kvstore::Command;
 use crate::raft::{ClientResult, Message, Node, NodeId, RequestId, Time};
+use crate::telemetry::{self, Frame, Gauge, Kind, MetricsServer, Registry, Sampler};
 use crate::transport::tcp::{PeerSender, PeerTable, TcpEndpoint, TransportStats};
 use crate::util::histogram::Histogram;
 use crate::util::rng::Xoshiro256;
@@ -122,6 +123,11 @@ pub struct LiveReport {
     /// sim's leader/peer egress split (0 under mpsc).
     pub leader_egress_bytes: u64,
     pub peer_egress_bytes_total: u64,
+    /// Telemetry time series (PR 9, `[telemetry] interval_us > 0`): the
+    /// sampler's ring at end of run — same series names the sim publishes
+    /// in `SimReport::samples`, so `harness/soak.rs` can cross-check the
+    /// two hosts frame-for-frame. Empty when sampling is off.
+    pub samples: Vec<Frame>,
 }
 
 impl LiveReport {
@@ -158,6 +164,9 @@ impl LiveReport {
         }
         if self.timeouts > 0 {
             s.push_str(&format!("client timeouts: {}\n", self.timeouts));
+        }
+        if !self.samples.is_empty() {
+            s.push_str(&format!("telemetry: {} frames sampled\n", self.samples.len()));
         }
         s.push_str(&format!(
             "log consistency: {}\n",
@@ -215,11 +224,14 @@ struct ReplicaHandle {
 
 /// Spawn one replica's event loop. Returns the node, its thread CPU time
 /// and the number of reply channels evicted after client timeouts.
+/// `(commit, apply)` are the replica's telemetry gauges, refreshed after
+/// every step (two relaxed stores per loop — nothing on the send path).
 fn spawn_replica(
     mut node: Node,
     rx: Receiver<Input>,
     peers: Vec<Option<PeerLink>>,
     epoch: Instant,
+    gauges: (Gauge, Gauge),
 ) -> thread::JoinHandle<(Node, u64, u64)> {
     thread::spawn(move || {
         let mut reply_channels: HashMap<RequestId, PendingReply> = HashMap::new();
@@ -265,6 +277,8 @@ fn spawn_replica(
             let now = now_us(&epoch);
             let mut sink = LiveSink { peers: &peers, reply_channels: &mut reply_channels };
             driver::step(&mut node, now, input, &mut sink);
+            gauges.0.set(node.commit_index());
+            gauges.1.set(node.applied_index());
             if now >= next_evict_at {
                 timeouts += evict_stale_replies(&mut reply_channels, now, REPLY_TTL_US);
                 next_evict_at = now + REPLY_EVICT_PERIOD_US;
@@ -338,6 +352,57 @@ fn peer_links(
         .collect()
 }
 
+/// Adopt one endpoint's [`TransportStats`] into the registry as polled
+/// per-replica series (reconnects, drops, outbox depth, and the
+/// per-peer egress split). Polled closures read the host-owned atomics
+/// at scrape/sample time only — the send path pays nothing.
+fn register_transport_stats(reg: &Registry, id: NodeId, n: usize, stats: &Arc<TransportStats>) {
+    let lbl = telemetry::replica_label(id);
+    let s = Arc::clone(stats);
+    reg.poll(telemetry::S_RECONNECTS, &lbl, Kind::Counter, move || s.reconnects());
+    let s = Arc::clone(stats);
+    reg.poll(telemetry::S_OUTBOX_DROPS, &lbl, Kind::Counter, move || s.outbox_drops());
+    let s = Arc::clone(stats);
+    reg.poll(telemetry::S_OUTBOX_DEPTH, &lbl, Kind::Gauge, move || s.outbox_depth());
+    let s = Arc::clone(stats);
+    reg.poll(telemetry::S_BOUNDARY_DROPS, &lbl, Kind::Counter, move || s.boundary_drops());
+    let s = Arc::clone(stats);
+    reg.poll(telemetry::S_DECODE_ERRORS, &lbl, Kind::Counter, move || s.decode_errors());
+    for peer in 0..n {
+        if peer == id {
+            continue;
+        }
+        let labels = format!("{lbl},{}", telemetry::label("peer", &peer.to_string()));
+        let s = Arc::clone(stats);
+        reg.poll(telemetry::S_PEER_EGRESS, &labels, Kind::Counter, move || {
+            s.egress_bytes_to(peer)
+        });
+    }
+}
+
+/// Start the optional `/metrics` server and sampler per `[telemetry]`.
+fn start_telemetry(
+    cfg: &Config,
+    registry: &Arc<Registry>,
+) -> Result<(Option<MetricsServer>, Option<Sampler>), String> {
+    let server = if cfg.telemetry.metrics_addr.is_empty() {
+        None
+    } else {
+        Some(MetricsServer::start(&cfg.telemetry.metrics_addr, Arc::clone(registry))?)
+    };
+    let sampler = if cfg.telemetry.interval_us > 0 {
+        Some(Sampler::start(
+            Arc::clone(registry),
+            cfg.telemetry.interval_us,
+            cfg.telemetry.ring,
+            &cfg.telemetry.trace_path,
+        )?)
+    } else {
+        None
+    };
+    Ok((server, sampler))
+}
+
 /// Run a live cluster per `cfg` and drive it with closed-loop clients.
 /// With `cluster.node_id` set, runs only that replica in this process
 /// (multi-process mode; see `run_live_single`).
@@ -390,6 +455,25 @@ pub fn run_live(cfg: &Config) -> Result<LiveReport, String> {
         }
     }
 
+    // Telemetry: adopt every endpoint's transport stats, plus the
+    // unlabeled leader/peer egress split both hosts publish (replica 0
+    // bootstraps as leader and these runs hold it stable).
+    let registry = Arc::new(Registry::new());
+    for (id, ep) in endpoints.iter().enumerate() {
+        register_transport_stats(&registry, id, n, &ep.stats());
+    }
+    if let Some(first) = endpoints.first() {
+        let leader_stats = first.stats();
+        registry.poll(telemetry::S_LEADER_EGRESS, "", Kind::Counter, move || {
+            leader_stats.egress_bytes_total()
+        });
+        let peer_stats: Vec<Arc<TransportStats>> =
+            endpoints.iter().skip(1).map(|e| e.stats()).collect();
+        registry.poll(telemetry::S_PEER_EGRESS_TOTAL, "", Kind::Counter, move || {
+            peer_stats.iter().map(|s| s.egress_bytes_total()).sum()
+        });
+    }
+
     // Fault injection: hard-close one replica's connections mid-run.
     if use_tcp && cfg.cluster.kill_link_at_us > 0 {
         let killer = endpoints[cfg.cluster.kill_link_node].link_killer();
@@ -430,12 +514,18 @@ pub fn run_live(cfg: &Config) -> Result<LiveReport, String> {
             let mut sink = LiveSink { peers: &peers, reply_channels: &mut boot_replies };
             driver::dispatch(id, node.is_leader(), boot_actions, &mut sink);
         }
-        let join = spawn_replica(node, rx, peers, epoch);
+        let gauges = (
+            registry.gauge(telemetry::S_COMMIT_INDEX, &telemetry::replica_label(id)),
+            registry.gauge(telemetry::S_APPLY_INDEX, &telemetry::replica_label(id)),
+        );
+        let join = spawn_replica(node, rx, peers, epoch, gauges);
         handles.push(ReplicaHandle { sender: senders[id].clone(), join });
     }
 
+    let (metrics_server, sampler) = start_telemetry(cfg, &registry)?;
+
     // Clients.
-    let (completed, hist, shed) = run_clients(cfg, Arc::new(senders.clone()));
+    let (completed, hist, shed) = run_clients(cfg, Arc::new(senders.clone()), &registry);
 
     // Stop everything.
     for h in &handles {
@@ -449,6 +539,12 @@ pub fn run_live(cfg: &Config) -> Result<LiveReport, String> {
         cpu_us.push(cpu);
         nodes.push(node);
         timeouts += evicted;
+    }
+    // Final sampler tick runs before the endpoints die, so the last frame
+    // carries the run's closing counter values.
+    let samples = sampler.map_or_else(Vec::new, Sampler::stop);
+    if let Some(server) = metrics_server {
+        server.shutdown();
     }
     let stats: Vec<Arc<TransportStats>> = endpoints.iter().map(|e| e.stats()).collect();
     for ep in endpoints {
@@ -500,6 +596,7 @@ pub fn run_live(cfg: &Config) -> Result<LiveReport, String> {
         shed,
         leader_egress_bytes,
         peer_egress_bytes_total,
+        samples,
     })
 }
 
@@ -535,6 +632,17 @@ fn run_live_single(cfg: &Config, id: NodeId) -> Result<LiveReport, String> {
         });
     }
 
+    // Telemetry: this process sees its own endpoint only, so the
+    // unlabeled egress split covers the local replica's side.
+    let registry = Arc::new(Registry::new());
+    register_transport_stats(&registry, id, n, &endpoint.stats());
+    {
+        let stats = endpoint.stats();
+        let series =
+            if id == 0 { telemetry::S_LEADER_EGRESS } else { telemetry::S_PEER_EGRESS_TOTAL };
+        registry.poll(series, "", Kind::Counter, move || stats.egress_bytes_total());
+    }
+
     let mut node = Node::new(id, cfg.protocol.clone(), cfg.seed ^ 0xC1u64 ^ id as u64);
     let boot_actions = if id == 0 {
         node.bootstrap_leader(0)
@@ -548,12 +656,17 @@ fn run_live_single(cfg: &Config, id: NodeId) -> Result<LiveReport, String> {
         let mut sink = LiveSink { peers: &peers, reply_channels: &mut boot_replies };
         driver::dispatch(id, node.is_leader(), boot_actions, &mut sink);
     }
-    let join = spawn_replica(node, rx, peers, epoch);
+    let gauges = (
+        registry.gauge(telemetry::S_COMMIT_INDEX, &telemetry::replica_label(id)),
+        registry.gauge(telemetry::S_APPLY_INDEX, &telemetry::replica_label(id)),
+    );
+    let join = spawn_replica(node, rx, peers, epoch, gauges);
+    let (metrics_server, sampler) = start_telemetry(cfg, &registry)?;
 
     // Clients target the local replica only (replica 0 bootstraps as the
     // leader, so its process is the one that drives load).
     let (completed, hist, shed) = if id == 0 {
-        run_clients(cfg, Arc::new(vec![tx.clone()]))
+        run_clients(cfg, Arc::new(vec![tx.clone()]), &registry)
     } else {
         let run = Duration::from_micros(cfg.workload.duration_us);
         thread::sleep(run + Duration::from_millis(100));
@@ -562,6 +675,10 @@ fn run_live_single(cfg: &Config, id: NodeId) -> Result<LiveReport, String> {
 
     let _ = tx.send(Input::Stop);
     let (node, cpu, timeouts) = join.join().expect("replica thread panicked");
+    let samples = sampler.map_or_else(Vec::new, Sampler::stop);
+    if let Some(server) = metrics_server {
+        server.shutdown();
+    }
     let stats = endpoint.stats();
     endpoint.shutdown();
     if id == 0 && completed == 0 {
@@ -603,6 +720,7 @@ fn run_live_single(cfg: &Config, id: NodeId) -> Result<LiveReport, String> {
         // local replica's side of the cluster.
         leader_egress_bytes: if id == 0 { stats.egress_bytes_total() } else { 0 },
         peer_egress_bytes_total: if id == 0 { 0 } else { stats.egress_bytes_total() },
+        samples,
     })
 }
 
@@ -618,7 +736,18 @@ fn run_live_single(cfg: &Config, id: NodeId) -> Result<LiveReport, String> {
 /// serving when its next arrival lands *sheds* that arrival — overload
 /// drops at admission instead of queueing without bound, and the count
 /// comes back in `LiveReport::shed`.
-fn run_clients(cfg: &Config, senders: Arc<Vec<Sender<Input>>>) -> (u64, Histogram, u64) {
+fn run_clients(
+    cfg: &Config,
+    senders: Arc<Vec<Sender<Input>>>,
+    reg: &Registry,
+) -> (u64, Histogram, u64) {
+    // Client-side telemetry: one shared latency histogram plus the
+    // completed/shed counters, updated as replies land so a `/metrics`
+    // scrape mid-run sees live values (the per-thread `Histogram` below
+    // still feeds the report, exactly as before).
+    let lat_series = reg.histogram(telemetry::S_REQUEST_LATENCY, "");
+    let completed_series = reg.counter(telemetry::S_COMPLETED, "");
+    let shed_series = reg.counter(telemetry::S_SHED, "");
     let duration = Duration::from_micros(cfg.workload.duration_us);
     let warmup = Duration::from_micros(cfg.workload.warmup_us);
     let open = cfg.workload.arrival == ArrivalModel::Open;
@@ -637,6 +766,9 @@ fn run_clients(cfg: &Config, senders: Arc<Vec<Sender<Input>>>) -> (u64, Histogra
         let keys = cfg.workload.keys;
         let wf = cfg.workload.write_fraction;
         let seed = cfg.seed ^ 0xC11E47 ^ c as u64;
+        let lat_series = lat_series.clone();
+        let completed_series = completed_series.clone();
+        let shed_series = shed_series.clone();
         client_joins.push(thread::spawn(move || {
             let nrep = senders.len();
             let mut rng = Xoshiro256::seed_from_u64(seed);
@@ -695,7 +827,10 @@ fn run_clients(cfg: &Config, senders: Arc<Vec<Sender<Input>>>) -> (u64, Histogra
                         Ok((rid, ClientResult::Ok(_))) if rid == req => {
                             if start.elapsed() > warmup {
                                 completed += 1;
-                                hist.record(sent.elapsed().as_micros() as u64);
+                                let lat = sent.elapsed().as_micros() as u64;
+                                hist.record(lat);
+                                lat_series.record(lat);
+                                completed_series.inc();
                             }
                             done = true;
                         }
@@ -732,6 +867,7 @@ fn run_clients(cfg: &Config, senders: Arc<Vec<Sender<Input>>>) -> (u64, Histogra
                     next_arrival_us += rng.next_exp(mean_us).max(1.0) as u64;
                     while next_arrival_us <= elapsed {
                         shed += 1;
+                        shed_series.inc();
                         next_arrival_us += rng.next_exp(mean_us).max(1.0) as u64;
                     }
                 }
@@ -821,6 +957,45 @@ mod tests {
         assert!(report.completed > 0, "open-loop clients must complete requests");
         assert!(report.logs_consistent);
         assert_eq!(report.leader_egress_bytes, 0, "mpsc carries no TCP bytes");
+    }
+
+    #[test]
+    fn telemetry_sampler_captures_live_series() {
+        // PR 9: with sampling on, the live run returns frames carrying
+        // the per-replica commit/apply gauges and the client-side request
+        // series; the final frame (taken at sampler stop, after every
+        // reply has landed) must agree with the report's own counters.
+        let mut cfg = live_cfg(Variant::Raft);
+        cfg.workload.duration_us = 600_000;
+        cfg.workload.warmup_us = 100_000;
+        cfg.telemetry.interval_us = 100_000;
+        let report = run_live(&cfg).unwrap();
+        assert!(report.completed > 0);
+        assert!(!report.samples.is_empty(), "sampler returned no frames");
+        let last = report.samples.last().unwrap();
+        let commit_key =
+            format!("{}{{{}}}", telemetry::S_COMMIT_INDEX, telemetry::replica_label(0));
+        assert!(
+            last.get(&commit_key).unwrap_or(0.0) > 0.0,
+            "leader commit gauge missing/zero in {last:?}"
+        );
+        let apply_key = format!("{}{{{}}}", telemetry::S_APPLY_INDEX, telemetry::replica_label(0));
+        assert!(last.get(&apply_key).unwrap_or(0.0) > 0.0);
+        assert_eq!(
+            last.get(telemetry::S_COMPLETED),
+            Some(report.completed as f64),
+            "completed counter must agree with the report"
+        );
+        let lat_count = format!("{}_count", telemetry::S_REQUEST_LATENCY);
+        assert_eq!(last.get(&lat_count), Some(report.completed as f64));
+        assert!(report.render().contains("frames sampled"));
+        // Sampling off: no frames, and the render line disappears.
+        let mut quiet = live_cfg(Variant::Raft);
+        quiet.workload.duration_us = 300_000;
+        quiet.workload.warmup_us = 50_000;
+        let r2 = run_live(&quiet).unwrap();
+        assert!(r2.samples.is_empty());
+        assert!(!r2.render().contains("frames sampled"));
     }
 
     #[test]

@@ -798,6 +798,36 @@ impl Default for WorkloadConfig {
     }
 }
 
+/// `[telemetry]` — the observability layer (DESIGN.md §10): how often
+/// the sampler snapshots the metrics registry, how many frames the
+/// in-memory ring keeps, where the JSONL trace goes, and where the live
+/// `/metrics` HTTP endpoint binds. Everything is off by default; the
+/// simulator honors `interval_us`/`ring`/`trace_path` (virtual clock),
+/// the live cluster honors all four (wall clock).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryConfig {
+    /// Sampling interval in µs. 0 (default) disables sampling.
+    pub interval_us: u64,
+    /// Max frames the in-memory ring retains (oldest dropped first).
+    pub ring: usize,
+    /// JSONL trace file path; "" (default) = no trace file.
+    pub trace_path: String,
+    /// `host:port` for the live `/metrics` endpoint; "" (default) = off.
+    /// The CLI shorthand is `--metrics-addr`.
+    pub metrics_addr: String,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        Self {
+            interval_us: 0,
+            ring: 1024,
+            trace_path: String::new(),
+            metrics_addr: String::new(),
+        }
+    }
+}
+
 /// Top-level experiment configuration.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Config {
@@ -806,6 +836,7 @@ pub struct Config {
     pub cost: CostConfig,
     pub workload: WorkloadConfig,
     pub cluster: ClusterConfig,
+    pub telemetry: TelemetryConfig,
     pub seed: u64,
 }
 
@@ -857,6 +888,12 @@ impl Config {
         }
         if self.workload.warmup_us >= self.workload.duration_us {
             return Err("workload.warmup_us must be < duration_us".into());
+        }
+        if self.telemetry.ring == 0 {
+            return Err("telemetry.ring must be >= 1".into());
+        }
+        if !self.telemetry.metrics_addr.is_empty() && !self.telemetry.metrics_addr.contains(':') {
+            return Err("telemetry.metrics_addr must be host:port".into());
         }
         Ok(())
     }
@@ -1029,6 +1066,10 @@ impl Config {
             "workload.zipf_theta" => self.workload.zipf_theta = parse_f64(v)?,
             "workload.duration_us" => self.workload.duration_us = parse_u64(v)?,
             "workload.warmup_us" => self.workload.warmup_us = parse_u64(v)?,
+            "telemetry.interval_us" => self.telemetry.interval_us = parse_u64(v)?,
+            "telemetry.ring" => self.telemetry.ring = parse_u64(v)? as usize,
+            "telemetry.trace_path" => self.telemetry.trace_path = v.to_string(),
+            "telemetry.metrics_addr" => self.telemetry.metrics_addr = v.to_string(),
             _ => return Err(format!("unknown config key: {key}")),
         }
         Ok(())
@@ -1216,6 +1257,10 @@ pub fn dump(cfg: &Config) -> BTreeMap<String, String> {
     m.insert("workload.zipf_theta".into(), cfg.workload.zipf_theta.to_string());
     m.insert("workload.duration_us".into(), cfg.workload.duration_us.to_string());
     m.insert("workload.warmup_us".into(), cfg.workload.warmup_us.to_string());
+    m.insert("telemetry.interval_us".into(), cfg.telemetry.interval_us.to_string());
+    m.insert("telemetry.ring".into(), cfg.telemetry.ring.to_string());
+    m.insert("telemetry.trace_path".into(), format!("\"{}\"", cfg.telemetry.trace_path));
+    m.insert("telemetry.metrics_addr".into(), format!("\"{}\"", cfg.telemetry.metrics_addr));
     m
 }
 
@@ -1390,13 +1435,39 @@ rate = 2500.5
 
     #[test]
     fn dump_covers_set_roundtrip() {
-        let cfg = presets::fig4(Variant::V1, 1234.0);
+        let mut cfg = presets::fig4(Variant::V1, 1234.0);
+        cfg.set("telemetry.interval_us", "250000").unwrap();
+        cfg.set("telemetry.ring", "64").unwrap();
+        cfg.set("telemetry.trace_path", "\"/tmp/trace.jsonl\"").unwrap();
+        cfg.set("telemetry.metrics_addr", "\"127.0.0.1:9464\"").unwrap();
         let dumped = dump(&cfg);
         let mut rebuilt = Config::default();
         for (k, v) in &dumped {
             rebuilt.set(k, v).unwrap();
         }
         assert_eq!(rebuilt, cfg);
+    }
+
+    #[test]
+    fn telemetry_keys_parse_and_validate() {
+        let mut cfg = Config::default();
+        cfg.set("telemetry.interval_us", "100000").unwrap();
+        cfg.set("telemetry.ring", "256").unwrap();
+        cfg.set("telemetry.trace_path", "\"soak.jsonl\"").unwrap();
+        cfg.set("telemetry.metrics_addr", "\"127.0.0.1:0\"").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.telemetry.interval_us, 100_000);
+        assert_eq!(cfg.telemetry.ring, 256);
+        assert_eq!(cfg.telemetry.trace_path, "soak.jsonl");
+        assert_eq!(cfg.telemetry.metrics_addr, "127.0.0.1:0");
+        // A zero-capacity ring can hold no samples; reject it.
+        let mut cfg = Config::default();
+        cfg.set("telemetry.ring", "0").unwrap();
+        assert!(cfg.validate().is_err(), "telemetry.ring = 0 must be rejected");
+        // A metrics address without a port cannot bind.
+        let mut cfg = Config::default();
+        cfg.set("telemetry.metrics_addr", "\"localhost\"").unwrap();
+        assert!(cfg.validate().is_err(), "portless metrics_addr must be rejected");
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod egress;
 pub mod figures;
 pub mod recovery;
 pub mod scale;
+pub mod soak;
 pub mod throughput;
 pub mod unreliable;
 
@@ -29,6 +30,10 @@ pub use recovery::{
 pub use scale::{
     bench_pr8_json, compact_comparison, fleet_scale, print_scale, protocol_metrics, scale_gate,
     CompactPoint, FleetCell, ProtocolPoint,
+};
+pub use soak::{
+    bench_pr9_json, print_soak, sim_soak_comparison, soak_comparison, soak_gate, SoakPoint,
+    SIM_LIVE_TOLERANCE,
 };
 pub use throughput::{
     bench_pr6_json, print_throughput, sim_throughput_comparison, throughput_comparison,

@@ -1,0 +1,458 @@
+//! PR 9 measurement plumbing: the telemetry soak and the sim-vs-live
+//! cross-check behind `epiraft bench-pr9`, the committed
+//! `BENCH_PR9.json`, and CI's `bench-smoke` gate.
+//!
+//! The paper's central claim is a statement about the *leader's share*
+//! of replication egress: classic Raft concentrates it, the epidemic
+//! pull variant spreads it across peers. Until now that claim was
+//! checked per host in isolation — sim totals in PR 2, live TCP totals
+//! in PR 5/6. This scenario samples both hosts *over time* through the
+//! shared telemetry series (`telemetry::S_*`, DESIGN.md §10) and gates
+//! on two things at once:
+//!
+//! * **ordering, per host** — the pull variant's leader-egress share
+//!   `leader / (leader + peers)` is strictly below classic Raft's, in
+//!   the simulator (n = `Scale::n`) *and* on loopback TCP (n =
+//!   `tcp_n`);
+//! * **agreement, across hosts** — classic Raft's *live* leader share
+//!   agrees with the simulator's prediction at the same n within
+//!   [`SIM_LIVE_TOLERANCE`]. Both hosts meter replica-to-replica bytes
+//!   with the same size model (`Message::wire_bytes` in the sim, the
+//!   codec's actual framed bytes on TCP), so the share — a ratio, which
+//!   cancels rate and duration — is the honest point of contact.
+//!
+//! Every cell runs the PR 6 open-loop workload with telemetry sampling
+//! on, and the gate also insists the sampled series behave: ≥ 2 frames
+//! per cell and a monotone leader-egress counter across them.
+
+use super::figures::Scale;
+use crate::cluster::{run_live, LiveReport};
+use crate::config::{ArrivalModel, Config};
+use crate::raft::Variant;
+use crate::sim::{run_experiment, SimReport};
+use crate::telemetry::{Frame, S_LEADER_EGRESS};
+use crate::util::json::Json;
+
+const SIM: &str = "sim";
+const TCP: &str = "tcp";
+
+/// How far the live classic-Raft leader share may sit from the
+/// simulator's prediction at the same n (absolute share, i.e. 15
+/// percentage points). The sim prices messages with `Message::
+/// wire_bytes`; the live cluster counts the codec's real framed bytes —
+/// the model tracks the codec closely, but reconnect retransmits and
+/// repair traffic land only on one side, hence the headroom.
+pub const SIM_LIVE_TOLERANCE: f64 = 0.15;
+
+/// One (host, variant, n) cell of the soak grid.
+#[derive(Clone, Debug)]
+pub struct SoakPoint {
+    /// `"sim"` (discrete-event) or `"tcp"` (loopback live cluster).
+    pub host: &'static str,
+    pub variant: &'static str,
+    pub n: usize,
+    pub completed: u64,
+    pub shed: u64,
+    pub leader_egress_bytes: u64,
+    pub peer_egress_bytes_total: u64,
+    /// `leader / (leader + peers)` — the quantity the paper is about.
+    pub leader_share: f64,
+    /// Telemetry frames sampled over the run.
+    pub frames: u64,
+    /// The sampled leader-egress series never decreased.
+    pub egress_monotone: bool,
+    /// Sim cells only; 0 on tcp.
+    pub elections: u64,
+    pub max_commit: u64,
+    /// `safety_ok` (sim) / `logs_consistent` (tcp).
+    pub safe: bool,
+}
+
+fn share(leader: u64, peers: u64) -> f64 {
+    let total = leader + peers;
+    if total == 0 {
+        0.0
+    } else {
+        leader as f64 / total as f64
+    }
+}
+
+/// True when the sampled leader-egress series never decreases. Vacuously
+/// true for empty samples — the gate checks frame counts separately.
+fn monotone_leader_egress(samples: &[Frame]) -> bool {
+    let mut last = f64::MIN;
+    for f in samples {
+        let Some(v) = f.get(S_LEADER_EGRESS) else { return false };
+        if v < last {
+            return false;
+        }
+        last = v;
+    }
+    true
+}
+
+impl SoakPoint {
+    fn from_sim(r: &SimReport) -> SoakPoint {
+        SoakPoint {
+            host: SIM,
+            variant: r.variant,
+            n: r.n,
+            completed: r.completed,
+            shed: r.shed,
+            leader_egress_bytes: r.leader_egress_bytes,
+            peer_egress_bytes_total: r.peer_egress_bytes_total,
+            leader_share: share(r.leader_egress_bytes, r.peer_egress_bytes_total),
+            frames: r.samples.len() as u64,
+            egress_monotone: monotone_leader_egress(&r.samples),
+            elections: r.elections,
+            max_commit: r.max_commit,
+            safe: r.safety_ok,
+        }
+    }
+
+    fn from_live(r: &LiveReport) -> SoakPoint {
+        SoakPoint {
+            host: TCP,
+            variant: r.variant,
+            n: r.n,
+            completed: r.completed,
+            shed: r.shed,
+            leader_egress_bytes: r.leader_egress_bytes,
+            peer_egress_bytes_total: r.peer_egress_bytes_total,
+            leader_share: share(r.leader_egress_bytes, r.peer_egress_bytes_total),
+            frames: r.samples.len() as u64,
+            egress_monotone: monotone_leader_egress(&r.samples),
+            elections: 0,
+            max_commit: r.commit_index.iter().copied().max().unwrap_or(0),
+            safe: r.logs_consistent,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("host", Json::str(self.host)),
+            ("variant", Json::str(self.variant)),
+            ("n", Json::num(self.n as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("leader_egress_bytes", Json::num(self.leader_egress_bytes as f64)),
+            ("peer_egress_bytes_total", Json::num(self.peer_egress_bytes_total as f64)),
+            ("leader_share", Json::num(self.leader_share)),
+            ("frames", Json::num(self.frames as f64)),
+            ("egress_monotone", Json::Bool(self.egress_monotone)),
+            ("elections", Json::num(self.elections as f64)),
+            ("max_commit", Json::num(self.max_commit as f64)),
+            ("safe", Json::Bool(self.safe)),
+        ])
+    }
+}
+
+/// The two variants the claim compares: classic push fan-out vs the
+/// epidemic pull mesh (PR 2's pair, now sampled over time).
+fn grid_variants() -> [Variant; 2] {
+    [Variant::Raft, Variant::Pull]
+}
+
+/// Shared cell shape: the PR 6 open-loop workload at a rate every cell
+/// can sustain (the claim is about egress *shares*, not capacity), with
+/// telemetry sampling on at a tenth of the run.
+fn soak_cfg(n: usize, variant: Variant, duration_us: u64, warmup_us: u64, seed: u64) -> Config {
+    let mut cfg = Config {
+        protocol: crate::config::ProtocolConfig::for_variant(n, variant),
+        ..Config::default()
+    };
+    cfg.workload.arrival = ArrivalModel::Open;
+    cfg.workload.rate = 300.0;
+    cfg.workload.max_inflight = 16;
+    cfg.workload.duration_us = duration_us;
+    cfg.workload.warmup_us = warmup_us;
+    cfg.telemetry.interval_us = (duration_us / 10).max(50_000);
+    // The comparison is about egress attribution, not leader stability:
+    // keep the leader seated even if a large-n classic cell queues work
+    // ahead of its heartbeat (same reasoning as the PR 6 cells).
+    cfg.protocol.election_timeout_min_us = cfg.protocol.election_timeout_min_us.max(500_000);
+    cfg.protocol.election_timeout_max_us = cfg.protocol.election_timeout_max_us.max(1_000_000);
+    cfg.seed = seed;
+    cfg
+}
+
+/// The deterministic half of the grid: {raft, pull} in the simulator at
+/// `scale.n`, plus — when it differs — the same pair at `tcp_n`, the
+/// prediction the live cells are checked against. Tier-1 tests gate on
+/// this half; the TCP half is wall-clock and belongs to CI.
+pub fn sim_soak_comparison(scale: Scale, tcp_n: usize, seed: u64) -> Vec<SoakPoint> {
+    let mut out = Vec::new();
+    let mut ns = vec![scale.n];
+    if tcp_n != scale.n {
+        ns.push(tcp_n);
+    }
+    for n in ns {
+        for variant in grid_variants() {
+            let cfg = soak_cfg(n, variant, scale.duration_us, scale.warmup_us, seed);
+            out.push(SoakPoint::from_sim(&run_experiment(&cfg)));
+        }
+    }
+    out
+}
+
+/// The full grid: the sim half plus {raft, pull} on a loopback-TCP live
+/// cluster of `tcp_n` replicas, sampled by the live `Sampler`.
+pub fn soak_comparison(scale: Scale, tcp_n: usize, seed: u64) -> Result<Vec<SoakPoint>, String> {
+    let mut out = sim_soak_comparison(scale, tcp_n, seed);
+    for variant in grid_variants() {
+        let duration = scale.duration_us.min(3_000_000);
+        let warmup = scale.warmup_us.min(duration / 5);
+        let mut cfg = soak_cfg(tcp_n, variant, duration, warmup, seed);
+        cfg.telemetry.interval_us = 100_000;
+        cfg.set("cluster.transport", "tcp").expect("tcp transport knob");
+        out.push(SoakPoint::from_live(&run_live(&cfg)?));
+    }
+    Ok(out)
+}
+
+fn find<'a>(
+    points: &'a [SoakPoint],
+    host: &str,
+    variant: &str,
+    n: usize,
+) -> Result<&'a SoakPoint, String> {
+    points
+        .iter()
+        .find(|p| p.host == host && p.variant == variant && p.n == n)
+        .ok_or_else(|| format!("gate: cell {host}/{variant}/n={n} missing from results"))
+}
+
+/// The CI gate (`epiraft bench-pr9` exit status):
+///
+/// * every cell is safe, completed something, sampled ≥ 2 telemetry
+///   frames with a monotone leader-egress series, and split its egress
+///   meaningfully (leader and peers both nonzero);
+/// * sim cells kept their leader;
+/// * per (host, n) group: the pull cell's leader-egress share is
+///   *strictly* below classic Raft's;
+/// * for every tcp group, a sim group at the same n exists and classic
+///   Raft's live share sits within [`SIM_LIVE_TOLERANCE`] of the sim
+///   prediction.
+pub fn soak_gate(points: &[SoakPoint]) -> Result<(), String> {
+    if points.is_empty() {
+        return Err("gate: no cells measured".into());
+    }
+    for p in points {
+        let cell = format!("{}/{}/n={}", p.host, p.variant, p.n);
+        if !p.safe {
+            return Err(format!("gate: safety violated in the {cell} run"));
+        }
+        if p.completed == 0 {
+            return Err(format!("gate: nothing completed in the {cell} run"));
+        }
+        if p.host == SIM && p.elections > 0 {
+            return Err(format!(
+                "gate: leader deposed ({} election(s)) in the {cell} run",
+                p.elections
+            ));
+        }
+        if p.frames < 2 {
+            return Err(format!(
+                "gate: only {} telemetry frame(s) sampled in the {cell} run",
+                p.frames
+            ));
+        }
+        if !p.egress_monotone {
+            return Err(format!(
+                "gate: sampled leader-egress series not monotone in the {cell} run"
+            ));
+        }
+        if p.leader_egress_bytes == 0 || p.peer_egress_bytes_total == 0 {
+            return Err(format!(
+                "gate: degenerate egress split ({} leader / {} peers) in the {cell} run",
+                p.leader_egress_bytes, p.peer_egress_bytes_total
+            ));
+        }
+    }
+    let mut groups: Vec<(&str, usize)> = Vec::new();
+    for p in points {
+        if !groups.contains(&(p.host, p.n)) {
+            groups.push((p.host, p.n));
+        }
+    }
+    for &(host, n) in &groups {
+        let raft = find(points, host, "raft", n)?;
+        let pull = find(points, host, "pull", n)?;
+        if pull.leader_share >= raft.leader_share {
+            return Err(format!(
+                "gate: {host}/n={n} pull leader share {:.3} is not strictly below classic's {:.3}",
+                pull.leader_share, raft.leader_share
+            ));
+        }
+    }
+    for &(host, n) in &groups {
+        if host != TCP {
+            continue;
+        }
+        let live = find(points, TCP, "raft", n)?;
+        let sim = find(points, SIM, "raft", n).map_err(|_| {
+            format!("gate: tcp group n={n} has no sim prediction cell to cross-check against")
+        })?;
+        let delta = (live.leader_share - sim.leader_share).abs();
+        if delta > SIM_LIVE_TOLERANCE {
+            return Err(format!(
+                "gate: classic leader share disagrees across hosts at n={n}: \
+                 live {:.3} vs sim {:.3} (|Δ| {:.3} > {SIM_LIVE_TOLERANCE})",
+                live.leader_share, sim.leader_share, delta
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Render the whole scenario (config + grid + gate verdict) as the
+/// `BENCH_PR9.json` document.
+pub fn bench_pr9_json(scale: Scale, tcp_n: usize, seed: u64, points: &[SoakPoint]) -> Json {
+    let gate = soak_gate(points);
+    Json::obj(vec![
+        ("bench", Json::str("telemetry-soak-cross-check")),
+        ("n", Json::num(scale.n as f64)),
+        ("tcp_n", Json::num(tcp_n as f64)),
+        ("duration_us", Json::num(scale.duration_us as f64)),
+        ("warmup_us", Json::num(scale.warmup_us as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("sim_live_tolerance", Json::num(SIM_LIVE_TOLERANCE)),
+        ("points", Json::arr(points.iter().map(|p| p.to_json()))),
+        ("gate_leader_share", Json::Bool(gate.is_ok())),
+        (
+            "gate_detail",
+            match gate {
+                Ok(()) => Json::str(
+                    "pull leader-egress share strictly below classic's per (host, n); \
+                     live classic share within tolerance of the sim prediction",
+                ),
+                Err(e) => Json::str(&e),
+            },
+        ),
+    ])
+}
+
+/// Print the comparison table.
+pub fn print_soak(points: &[SoakPoint]) {
+    println!("\n== telemetry soak: leader egress share, sim vs live (same series) ==");
+    println!(
+        "{:<4} {:<6} {:>4} {:>10} {:>14} {:>14} {:>7} {:>7} {:>8}",
+        "host", "var", "n", "completed", "leader(B)", "peers(B)", "share", "frames", "safety"
+    );
+    for p in points {
+        println!(
+            "{:<4} {:<6} {:>4} {:>10} {:>14} {:>14} {:>7.3} {:>7} {:>8}",
+            p.host,
+            p.variant,
+            p.n,
+            p.completed,
+            p.leader_egress_bytes,
+            p.peer_egress_bytes_total,
+            p.leader_share,
+            p.frames,
+            if p.safe { "OK" } else { "VIOLATED" }
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scale {
+        Scale { reps: 1, duration_us: 1_500_000, warmup_us: 300_000, n: 15 }
+    }
+
+    #[test]
+    fn sim_comparison_covers_both_ns_and_samples_frames() {
+        let pts = sim_soak_comparison(tiny(), 5, 11);
+        assert_eq!(pts.len(), 4, "2 ns x 2 variants");
+        for p in &pts {
+            assert_eq!(p.host, "sim");
+            assert!(p.safe, "{}/n={}", p.variant, p.n);
+            assert!(p.completed > 0, "{}/n={}", p.variant, p.n);
+            assert!(p.frames >= 2, "{}/n={}: {} frames", p.variant, p.n, p.frames);
+            assert!(p.egress_monotone, "{}/n={}", p.variant, p.n);
+            assert!(p.leader_share > 0.0 && p.leader_share < 1.0);
+        }
+        for n in [15, 5] {
+            for variant in ["raft", "pull"] {
+                find(&pts, "sim", variant, n).expect("cell present");
+            }
+        }
+        // Same scale.n and tcp_n: no duplicate cells.
+        assert_eq!(sim_soak_comparison(tiny(), 15, 11).len(), 2);
+    }
+
+    #[test]
+    fn gate_passes_on_the_sim_grid_and_rejects_tampering() {
+        let pts = sim_soak_comparison(tiny(), 5, 11);
+        soak_gate(&pts).expect("pull share must undercut classic in both sim groups");
+        // Swap the shares: ordering must fail.
+        let mut bad = pts.clone();
+        for p in bad.iter_mut() {
+            if p.variant == "pull" {
+                p.leader_share = 0.99;
+            }
+        }
+        assert!(soak_gate(&bad).is_err(), "inverted shares must fail the gate");
+        // Strip the samples: the soak is about time series, not totals.
+        let mut bad = pts.clone();
+        bad[0].frames = 0;
+        assert!(soak_gate(&bad).is_err(), "a frameless cell must fail the gate");
+        let mut bad = pts.clone();
+        bad[1].egress_monotone = false;
+        assert!(soak_gate(&bad).is_err(), "a non-monotone series must fail the gate");
+        // A tcp cell with no sim prediction at its n must fail loudly.
+        let mut orphan = pts.clone();
+        let mut fake = pts[0].clone();
+        fake.host = "tcp";
+        fake.n = 3;
+        let mut fake_pull = fake.clone();
+        fake_pull.variant = "pull";
+        fake_pull.leader_share = 0.1;
+        orphan.push(fake);
+        orphan.push(fake_pull);
+        assert!(soak_gate(&orphan).is_err(), "unpredicted tcp group must fail");
+    }
+
+    #[test]
+    fn gate_cross_checks_live_against_sim_within_tolerance() {
+        let pts = sim_soak_comparison(tiny(), 5, 11);
+        // Synthesize the live cells from the sim prediction: within
+        // tolerance passes, outside fails.
+        let mk_live = |delta: f64| -> Vec<SoakPoint> {
+            let mut all = pts.clone();
+            for variant in ["raft", "pull"] {
+                let sim = find(&pts, "sim", variant, 5).unwrap();
+                let mut live = sim.clone();
+                live.host = "tcp";
+                live.leader_share = (sim.leader_share + delta).clamp(0.001, 0.999);
+                all.push(live);
+            }
+            all
+        };
+        soak_gate(&mk_live(0.05)).expect("agreeing live cells must pass");
+        assert!(
+            soak_gate(&mk_live(SIM_LIVE_TOLERANCE + 0.05)).is_err(),
+            "a live share outside tolerance must fail"
+        );
+    }
+
+    #[test]
+    fn bench_json_round_trips_with_gate_fields() {
+        let pts = sim_soak_comparison(tiny(), 5, 11);
+        let j = bench_pr9_json(tiny(), 5, 11, &pts);
+        assert_eq!(j.get("points").and_then(|v| v.as_arr()).unwrap().len(), 4);
+        assert!(j.get("gate_leader_share").and_then(|g| g.as_bool()).is_some());
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.get("bench").and_then(|b| b.as_str()),
+            Some("telemetry-soak-cross-check")
+        );
+        assert_eq!(
+            parsed.get("sim_live_tolerance").and_then(Json::as_f64),
+            Some(SIM_LIVE_TOLERANCE)
+        );
+    }
+}

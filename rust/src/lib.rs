@@ -32,4 +32,5 @@ pub mod prop;
 pub mod raft;
 pub mod runtime;
 pub mod storage;
+pub mod telemetry;
 pub mod util;

@@ -35,6 +35,7 @@ fn run(args: Vec<String>) -> Result<(), String> {
         "bench-pr6" => cmd_bench_pr6(&cli),
         "bench-pr7" => cmd_bench_pr7(&cli),
         "bench-pr8" => cmd_bench_pr8(&cli),
+        "bench-pr9" => cmd_bench_pr9(&cli),
         "live" => cmd_live(&cli),
         "fleet" => cmd_fleet(&cli),
         "artifacts-check" => cmd_artifacts_check(&cli),
@@ -455,6 +456,45 @@ fn cmd_bench_pr8(cli: &Cli) -> Result<(), String> {
         "gate OK: compact encoding byte-only and strictly cheaper; n={} safe with classic \
          costlier than v2/pull; n={} fleet sharded == single-thread",
         protocol_scale.n, fleet_n
+    );
+    Ok(())
+}
+
+/// PR 9 bench: the telemetry soak — {raft, pull} under the open-loop
+/// workload, sampled over time through the shared telemetry series in the
+/// simulator at n=51 and on a loopback-TCP live cluster of --tcp-n
+/// replicas. Writes `BENCH_PR9.json` (CI uploads it as an artifact) and
+/// exits non-zero unless the pull variant's leader-egress share is
+/// strictly below classic's on every host and classic's live share agrees
+/// with the sim prediction within tolerance — the telemetry `bench-smoke`
+/// gate.
+fn cmd_bench_pr9(cli: &Cli) -> Result<(), String> {
+    let mut s = scale(cli);
+    s.n = 51;
+    if let Some(n) = cli.get_u64("n")? {
+        s.n = n as usize;
+    }
+    let tcp_n = cli.get_u64("tcp-n")?.unwrap_or(5) as usize;
+    let seed = cli.get_u64("seed")?.unwrap_or(20230713);
+    let out = cli.get("out").unwrap_or("BENCH_PR9.json");
+    println!(
+        "== bench-pr9: telemetry soak + sim/live cross-check (n={}, tcp_n={}, seed={}, \
+         {}s sim) ==",
+        s.n,
+        tcp_n,
+        seed,
+        s.duration_us as f64 / 1e6
+    );
+    let points = harness::soak_comparison(s, tcp_n, seed)?;
+    harness::print_soak(&points);
+    let doc = harness::bench_pr9_json(s, tcp_n, seed, &points);
+    std::fs::write(out, doc.to_string_pretty()).map_err(|e| format!("write {out}: {e}"))?;
+    println!("\nwrote {out}");
+    harness::soak_gate(&points)?;
+    println!(
+        "gate OK: pull leader share strictly below classic on both hosts; live classic \
+         share within {} of the sim prediction",
+        harness::SIM_LIVE_TOLERANCE
     );
     Ok(())
 }

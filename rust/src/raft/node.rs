@@ -105,6 +105,11 @@ pub struct Counters {
     /// horizon.
     pub snapshots_taken: u64,
     pub snapshots_installed: u64,
+    /// Snapshots sent because the view's lag signal flagged a follower
+    /// still above the compaction horizon for whom the snapshot undercut
+    /// the tail replay on wire bytes (PR 9; a subset of the
+    /// `InstallSnapshot` sends, which `rpcs_sent` counts as usual).
+    pub lag_snapshots: u64,
 }
 
 /// The protocol state machine for one replica.
@@ -313,6 +318,11 @@ impl Node {
 
     pub fn commit_index(&self) -> LogIndex {
         self.commit_index
+    }
+
+    /// Highest log index applied to the state machine (telemetry gauge).
+    pub fn applied_index(&self) -> LogIndex {
+        self.last_applied
     }
 
     pub fn last_index(&self) -> LogIndex {

@@ -13,6 +13,10 @@ impl Node {
     /// Send a classic AppendEntries RPC to `peer` covering up to `last`.
     /// A peer whose `next_index` fell behind the compaction horizon cannot
     /// be repaired by tail replay any more — it gets the snapshot instead.
+    /// A peer still *above* the horizon but flagged by the view's lag
+    /// signal also gets the snapshot when that is strictly cheaper on the
+    /// wire than replaying the tail it replaces (see
+    /// [`Node::lag_snapshot_wins`]).
     pub(crate) fn send_entries_rpc(
         &mut self,
         now: Time,
@@ -29,6 +33,11 @@ impl Node {
                 return;
             }
         };
+        if self.lag_snapshot_wins(peer, next) {
+            self.counters.lag_snapshots += 1;
+            self.send_install_snapshot(now, peer, actions);
+            return;
+        }
         let hi = last.min(prev + self.cfg.max_entries_per_rpc as LogIndex);
         let entries = self.log.slice(prev, hi);
         let seq = self.next_seq();
@@ -72,6 +81,34 @@ impl Node {
         self.followers[peer].last_rpc_at = now;
         self.counters.rpcs_sent += 1;
         self.send(peer, Message::InstallSnapshot(args), actions);
+    }
+
+    /// The PR 7 follow-on: should `peer` be repaired with the snapshot
+    /// even though tail replay *could* reach it? Yes iff the view's lag
+    /// signal flags it (persistently behind a full evaluation window —
+    /// not merely a round stale) and shipping the snapshot costs strictly
+    /// fewer wire bytes than replaying the tail the snapshot would
+    /// replace (entries `next ..= snapshot.last_index`). A healthy peer a
+    /// few entries behind never trips this: its match index tracks the
+    /// lag reference, and for short gaps the per-entry replay undercuts
+    /// the full state image anyway.
+    fn lag_snapshot_wins(&self, peer: NodeId, next: LogIndex) -> bool {
+        if !self.view.is_lagging(self.followers[peer].match_index) {
+            return false;
+        }
+        let Some(snap) = self.log.snapshot() else {
+            return false;
+        };
+        if snap.last_index < next {
+            return false; // the snapshot covers nothing the peer is missing
+        }
+        let replaced_entries = snap.last_index + 1 - next;
+        let replay_bytes = replaced_entries * Message::WIRE_BYTES_PER_ENTRY;
+        // term(8) leader(4) last_index(8) last_term(8) applied(8)
+        // digest(8) seq(8) + the counted pairs payload — mirrors
+        // `Message::wire_bytes` for `InstallSnapshot` without cloning.
+        let snap_bytes = Message::WIRE_FRAME_OVERHEAD + 52 + snap.pairs_wire_bytes();
+        snap_bytes < replay_bytes
     }
 
     /// Resend repair RPCs that timed out (strategies with out-of-band

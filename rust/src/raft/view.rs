@@ -103,6 +103,13 @@ pub struct ClusterView {
     /// flag anyone either, because every caught-up peer matches the parked
     /// snapshot.
     commit_snaps: std::collections::VecDeque<LogIndex>,
+    /// The oldest snapshot in a *full* `commit_snaps` window, refreshed
+    /// each evaluation — the published face of the lag signal
+    /// (`is_lagging`). Unlike the demotion machinery it is maintained
+    /// even with unreliable mode off: the replication layer consults it
+    /// to prefer `InstallSnapshot` over a long tail replay for
+    /// persistently-lagging followers (PR 9).
+    lag_ref: Option<LogIndex>,
     /// Best-effort byte budget (token bucket, refilled per evaluation).
     budget_bytes: u64,
     /// Rotation cursor so best-effort traffic cycles through demoted peers.
@@ -134,6 +141,7 @@ impl ClusterView {
             last_eval_at: 0,
             last_eval_commit: 0,
             commit_snaps: std::collections::VecDeque::with_capacity(8),
+            lag_ref: None,
             budget_bytes: cfg.unreliable.best_effort_bytes,
             best_effort_cursor: 0,
             epoch: 1,
@@ -267,6 +275,23 @@ impl ClusterView {
         self.peers[peer].score
     }
 
+    /// Where the commit index stood a full evaluation window ago — the
+    /// lag reference `is_lagging` compares against. `None` until the
+    /// window fills (bootstrap, or a fresh leadership).
+    pub fn lag_reference(&self) -> Option<LogIndex> {
+        self.lag_ref
+    }
+
+    /// The view's lag signal for one peer: it has acked at least once
+    /// (`match_index > 0`, so bootstrap stragglers don't count) but its
+    /// match index trails the commit index of a full window ago —
+    /// persistently slow, not merely a round or two stale. The demotion
+    /// machinery treats this as unhealthy; the replication layer uses it
+    /// to repair via `InstallSnapshot` instead of a long tail replay.
+    pub fn is_lagging(&self, match_index: LogIndex) -> bool {
+        match_index > 0 && self.lag_ref.is_some_and(|l| match_index < l)
+    }
+
     // ---- the demotion state machine ---------------------------------------
 
     /// One evaluation round (rate-limited to the strategy round interval;
@@ -295,9 +320,6 @@ impl ClusterView {
         followers: &mut [FollowerSlot],
         counters: &mut Counters,
     ) -> usize {
-        if !self.cfg.enabled {
-            return 0;
-        }
         if now < self.last_eval_at.saturating_add(self.eval_interval_us) {
             return 0;
         }
@@ -308,15 +330,22 @@ impl ClusterView {
         // evaluations ago (`demote_after + 3` rounds — the slack keeps a
         // healthy peer's ordinary ack staleness, a round or two, well
         // clear of the signal). Only meaningful once the window has filled.
+        // Maintained whether or not unreliable mode is on: the demotion
+        // machinery below is gated, but `is_lagging` also drives the
+        // replication layer's snapshot-vs-tail-replay choice.
         let lag_window = self.cfg.demote_after as usize + 3;
         let lag_ref = if self.commit_snaps.len() >= lag_window {
             self.commit_snaps.front().copied()
         } else {
             None
         };
+        self.lag_ref = lag_ref;
         self.commit_snaps.push_back(commit_index);
         while self.commit_snaps.len() > lag_window {
             self.commit_snaps.pop_front();
+        }
+        if !self.cfg.enabled {
+            return 0;
         }
         // Refill the best-effort budget (bounded so idle periods cannot
         // bank an unbounded burst).
@@ -414,6 +443,7 @@ impl ClusterView {
         self.last_eval_at = 0;
         self.last_eval_commit = 0;
         self.commit_snaps.clear();
+        self.lag_ref = None;
         self.budget_bytes = self.cfg.best_effort_bytes;
         self.best_effort_cursor = 0;
     }
@@ -716,6 +746,36 @@ mod tests {
         assert!(view.is_voter(1));
         assert_eq!(view.voter_count(), 5);
         assert_eq!(view.health(1), 1.0);
+    }
+
+    #[test]
+    fn lag_signal_works_with_unreliable_mode_off() {
+        // The lag window is maintained regardless of the demotion policy:
+        // a classic (unreliable-off) leader still gets `is_lagging` for
+        // the replication layer's snapshot-vs-tail-replay choice.
+        let cfg = ProtocolConfig { n: 5, ..ProtocolConfig::default() };
+        assert!(!cfg.unreliable.enabled);
+        let mut view = ClusterView::new(&cfg, 0);
+        let mut f = slots(5);
+        let mut c = Counters::default();
+        assert_eq!(view.lag_reference(), None);
+        assert!(!view.is_lagging(1), "no reference yet -> nobody lags");
+        // Window = demote_after + 3 evaluations; commit advances 100/round.
+        let window = cfg.unreliable.demote_after as u64 + 3;
+        for r in 0..window + 2 {
+            let at = view.eval_interval_us * (r + 1);
+            view.evaluate(at, (r + 1) * 100, &mut f, &mut c);
+        }
+        let lag_ref = view.lag_reference().expect("window filled");
+        assert!(lag_ref >= 100, "reference trails current commit by the window");
+        assert!(view.is_lagging(lag_ref - 1));
+        assert!(!view.is_lagging(lag_ref), "at the reference is not lagging");
+        assert!(!view.is_lagging(0), "bootstrap straggler never counts as lag");
+        // Demotion machinery stayed off the whole time.
+        assert_eq!(view.voter_count(), 5);
+        assert_eq!(c.demotions, 0);
+        view.reset_for_leadership();
+        assert_eq!(view.lag_reference(), None, "leadership reset clears the signal");
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! and the leader-receive→replica-commit interval distribution (Fig 7).
 
 use crate::raft::{NodeId, Time};
+use crate::telemetry::Frame;
 use crate::util::histogram::Histogram;
 use crate::util::json::Json;
 
@@ -95,6 +96,11 @@ pub struct SimReport {
     pub host_us_per_sim_sec: f64,
     /// Wall-clock host time to run the simulation (s).
     pub host_secs: f64,
+    /// Telemetry time series (PR 9, `[telemetry] interval_us > 0`): one
+    /// `Frame` per virtual-clock sample tick, carrying the same series
+    /// names the live cluster exposes on `/metrics` (see
+    /// `telemetry::S_*`). Empty when sampling is off.
+    pub samples: Vec<Frame>,
 }
 
 impl SimReport {
@@ -150,6 +156,9 @@ impl SimReport {
             ("peak_queue_depth", Json::num(self.peak_queue_depth as f64)),
             ("host_us_per_sim_sec", Json::num(self.host_us_per_sim_sec)),
             ("host_secs", Json::num(self.host_secs)),
+            // Sample frames stay in memory for the soak harness; the report
+            // JSON carries only the count so bench artifacts stay small.
+            ("sample_frames", Json::num(self.samples.len() as f64)),
         ])
     }
 }
@@ -173,6 +182,8 @@ pub struct Collector {
     /// model), charged at send time whether or not the network drops the
     /// message — egress is what leaves the NIC.
     pub egress_bytes: Vec<u64>,
+    /// Telemetry frames captured at virtual-clock sample ticks (PR 9).
+    pub samples: Vec<Frame>,
 }
 
 impl Collector {
@@ -189,6 +200,7 @@ impl Collector {
             messages: 0,
             events: 0,
             egress_bytes: vec![0; n],
+            samples: Vec::new(),
         }
     }
 

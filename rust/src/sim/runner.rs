@@ -20,6 +20,7 @@ use crate::kvstore::Command;
 use crate::raft::{
     Action, ClientResult, Message, Node, NodeId, RequestId, Role, Term, Time,
 };
+use crate::telemetry::{self, Frame};
 use crate::util::rng::Xoshiro256;
 use std::collections::{BinaryHeap, VecDeque};
 
@@ -62,6 +63,12 @@ enum Ev {
     TimerCheck { replica: NodeId, gen: u64 },
     /// Next fault in the schedule.
     Fault { idx: usize },
+    /// Telemetry sample tick (PR 9, `[telemetry] interval_us > 0`): read
+    /// the collector and replica gauges into a `Frame`. Never scheduled
+    /// when sampling is off, so disabled runs stay bit-identical; when on
+    /// it only *reads* state (extra heap traffic may reorder same-instant
+    /// tiebreaks, but the run is still deterministic for a fixed config).
+    TelemetrySample,
 }
 
 struct Scheduled {
@@ -273,6 +280,10 @@ impl Simulation {
         for (idx, at) in fault_times.into_iter().enumerate() {
             sim.push(at, Ev::Fault { idx });
         }
+        let sample_dt = sim.cfg.telemetry.interval_us;
+        if sample_dt > 0 {
+            sim.push(sample_dt, Ev::TelemetrySample);
+        }
         sim
     }
 
@@ -442,6 +453,41 @@ impl Simulation {
         }
     }
 
+    /// Capture one telemetry [`Frame`] at virtual time `at`, publishing
+    /// the same series names the live cluster exposes on `/metrics`
+    /// (`telemetry::S_*`). Read-only over collector + replica state.
+    fn telemetry_sample(&mut self, at: Time) {
+        let n = self.cfg.protocol.n;
+        let leader =
+            (0..n).find(|&i| self.replicas[i].node.is_leader()).unwrap_or(0);
+        let leader_egress = self.collector.egress_bytes[leader];
+        let peer_egress: u64 = (0..n)
+            .filter(|&i| i != leader)
+            .map(|i| self.collector.egress_bytes[i])
+            .sum();
+        let commit = self
+            .replicas
+            .iter()
+            .map(|r| r.node.commit_index())
+            .max()
+            .unwrap_or(0);
+        let applied = self.replicas[leader].node.applied_index();
+        let lat = &self.collector.latency;
+        let values = vec![
+            (telemetry::S_COMMIT_INDEX.to_string(), commit as f64),
+            (telemetry::S_APPLY_INDEX.to_string(), applied as f64),
+            (telemetry::S_LEADER_EGRESS.to_string(), leader_egress as f64),
+            (telemetry::S_PEER_EGRESS_TOTAL.to_string(), peer_egress as f64),
+            (telemetry::S_COMPLETED.to_string(), self.collector.completed as f64),
+            (telemetry::S_SHED.to_string(), self.workload.shed as f64),
+            (format!("{}_count", telemetry::S_REQUEST_LATENCY), lat.count() as f64),
+            (format!("{}_mean", telemetry::S_REQUEST_LATENCY), lat.mean()),
+            (format!("{}_p50", telemetry::S_REQUEST_LATENCY), lat.p50() as f64),
+            (format!("{}_p99", telemetry::S_REQUEST_LATENCY), lat.p99() as f64),
+        ];
+        self.collector.samples.push(Frame { t_us: at, values });
+    }
+
     /// Run to completion and produce the report.
     pub fn run(mut self) -> SimReport {
         let host_start = std::time::Instant::now();
@@ -533,13 +579,29 @@ impl Simulation {
                     self.enqueue_work(replica, Work::Tick);
                 }
                 Ev::Fault { idx } => self.apply_fault(idx),
+                Ev::TelemetrySample => {
+                    self.telemetry_sample(at);
+                    let dt = self.cfg.telemetry.interval_us;
+                    self.push(at + dt, Ev::TelemetrySample);
+                }
             }
         }
         self.finish(host_start.elapsed().as_secs_f64(), peak_queue_depth)
     }
 
     /// End-of-run safety check + report assembly.
-    fn finish(self, host_secs: f64, peak_queue_depth: usize) -> SimReport {
+    fn finish(mut self, host_secs: f64, peak_queue_depth: usize) -> SimReport {
+        let samples = std::mem::take(&mut self.collector.samples);
+        // Mirror the live Sampler's JSONL trace when a path is configured
+        // (sim runs and live runs never share a process, so no clash).
+        if !self.cfg.telemetry.trace_path.is_empty() {
+            if let Ok(mut f) = std::fs::File::create(&self.cfg.telemetry.trace_path) {
+                use std::io::Write;
+                for fr in &samples {
+                    let _ = writeln!(f, "{}", fr.to_json().to_string_compact());
+                }
+            }
+        }
         if std::env::var_os("EPIRAFT_DEBUG_COUNTERS").is_some() {
             for (i, r) in self.replicas.iter().enumerate() {
                 if r.node.is_leader() || i <= 1 {
@@ -701,6 +763,7 @@ impl Simulation {
             host_us_per_sim_sec: host_secs * 1e6
                 / (self.cfg.workload.duration_us as f64 / 1e6),
             host_secs,
+            samples,
         }
     }
 
@@ -1239,6 +1302,84 @@ mod tests {
         let report = sim.run();
         assert!(report.safety_ok);
         assert!(report.max_commit > 50, "commit advances with tiny fanout");
+    }
+
+    #[test]
+    fn telemetry_sampling_collects_frames_without_perturbing_the_run() {
+        use crate::telemetry as tm;
+        // Off (the default): no frames, and the run is the bit-identical
+        // baseline every other test already pins.
+        let base = run_experiment(&quick_cfg(5, Variant::Raft));
+        assert!(base.samples.is_empty());
+        // On: frames at the virtual-clock interval, carrying the shared
+        // series names, with monotone time and non-decreasing counters —
+        // and identical protocol traffic (sampling only reads state).
+        let mut cfg = quick_cfg(5, Variant::Raft);
+        cfg.telemetry.interval_us = 200_000;
+        let sampled = run_experiment(&cfg);
+        assert_eq!(base.messages, sampled.messages, "sampling must not perturb traffic");
+        assert_eq!(base.completed, sampled.completed);
+        // 2s run at 200ms interval: 9 in-window ticks (the 10th pops past
+        // the horizon and ends the run as any event would).
+        assert!(sampled.samples.len() >= 8, "only {} frames", sampled.samples.len());
+        let mut last_t = 0;
+        let mut last_egress = -1.0;
+        for f in &sampled.samples {
+            assert!(f.t_us > last_t, "sample time must advance");
+            last_t = f.t_us;
+            let egress = f.get(tm::S_LEADER_EGRESS).expect("leader egress series");
+            assert!(egress >= last_egress, "egress counter must be monotone");
+            last_egress = egress;
+            assert!(f.get(tm::S_COMMIT_INDEX).is_some());
+            assert!(f.get(tm::S_PEER_EGRESS_TOTAL).is_some());
+            assert!(f.get(&format!("{}_p50", tm::S_REQUEST_LATENCY)).is_some());
+        }
+        let end = sampled.samples.last().unwrap();
+        assert!(end.get(tm::S_COMMIT_INDEX).unwrap() > 0.0, "commit must advance");
+        assert!(end.get(tm::S_LEADER_EGRESS).unwrap() > 0.0);
+        assert!(end.get(tm::S_COMPLETED).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn lag_triggered_snapshot_beats_tail_replay_above_the_horizon() {
+        // Satellite 1 (PR 9): a follower that is *persistently lagging* —
+        // but still above the leader's compaction horizon — should be
+        // caught up with one InstallSnapshot instead of a long tail
+        // replay, whenever the snapshot is cheaper on wire bytes. A huge
+        // `retain_entries` keeps the laggard above the horizon, so the
+        // old horizon-only trigger would never fire here.
+        use crate::config::LinkSpec;
+        let mut cfg = quick_cfg(5, Variant::Raft);
+        cfg.workload.duration_us = 6_000_000;
+        cfg.workload.warmup_us = 500_000;
+        cfg.workload.rate = 400.0;
+        // Tiny keyspace: the snapshot (4 + 16*keys wire bytes) undercuts
+        // the tail replay (33/entry) after only ~10 entries of lag.
+        cfg.workload.keys = 16;
+        cfg.protocol.storage.snapshot_interval_entries = 50;
+        cfg.protocol.storage.retain_entries = 1_000_000; // never compacts past anyone
+        // One slow replica (asymmetric delay both ways), slow but alive.
+        cfg.protocol.election_timeout_min_us = 1_500_000;
+        cfg.protocol.election_timeout_max_us = 3_000_000;
+        cfg.network.links.push(LinkSpec { selector: "4".into(), extra_us: 400_000 });
+        let report = run_experiment(&cfg);
+        assert!(report.safety_ok, "lag snapshots must not break safety");
+        assert!(report.completed > 100, "cluster must keep serving");
+        assert!(report.snapshots_taken > 0, "leader must have snapshotted");
+        assert!(
+            report.snapshots_installed > 0,
+            "the laggard must be caught up by InstallSnapshot, not tail replay"
+        );
+        assert!(
+            report.min_commit * 2 >= report.max_commit,
+            "laggard stuck at {} vs {}",
+            report.min_commit,
+            report.max_commit
+        );
+        // Attribution: with retain_entries this large nothing compacts,
+        // so `next` can never fall below the log's first index — the
+        // pre-PR-9 horizon-only trigger is unreachable here and every
+        // install above came from the lag trigger.
     }
 
     #[test]

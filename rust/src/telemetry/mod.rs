@@ -1,0 +1,144 @@
+//! Zero-dependency telemetry: a registry of named series, a periodic
+//! sampler, and a Prometheus-style `/metrics` HTTP endpoint.
+//!
+//! The paper's central claim — epidemic propagation decentralizes the
+//! leader's replication effort — was until now measured almost entirely
+//! inside the simulator. This module is the instrumentation layer that
+//! lets the *live* cluster publish the same series the simulator
+//! reports, so a trace from either host is directly comparable
+//! (DESIGN.md §10 has the full series table):
+//!
+//! - [`Registry`] holds named counters / gauges / histograms. Hot paths
+//!   pay one relaxed atomic op per update; series that already live in
+//!   host-owned atomics (e.g. `TransportStats`) are adopted via polled
+//!   closures, so publishing them costs nothing on the send path.
+//! - [`Sampler`] snapshots the registry every `telemetry.interval_us`
+//!   into a bounded in-memory ring of [`Frame`]s, optionally appending
+//!   each frame as a JSON line to `telemetry.trace_path`.
+//! - [`MetricsServer`] serves `GET /metrics` (text exposition) from a
+//!   `std::net` listener at `telemetry.metrics_addr` / `--metrics-addr`.
+//!
+//! Both hosts emit the **same series names** (the `S_*` constants
+//! below): the live cluster from `TransportStats` + replica gauges, the
+//! simulator from its collector at sample events and from [`SimReport`]
+//! counters at the end of a run. `harness/soak.rs` leans on exactly
+//! this to cross-check the simulated leader-egress share against real
+//! loopback sockets (`epiraft bench-pr9`).
+//!
+//! [`SimReport`]: crate::sim::metrics::SimReport
+
+mod registry;
+mod sampler;
+mod server;
+
+pub use registry::{Counter, Gauge, HistogramHandle, Kind, Registry};
+pub use sampler::Sampler;
+pub use server::MetricsServer;
+
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Shared series names (DESIGN.md §10). Both hosts publish these; keeping
+// them as constants (not ad-hoc strings at each call site) is what makes
+// a sim trace and a live trace line up column-for-column.
+
+/// Gauge, label `replica="i"`: highest committed log index.
+pub const S_COMMIT_INDEX: &str = "epiraft_commit_index";
+/// Gauge, label `replica="i"`: highest applied log index (live only —
+/// the sim's apply pipeline is synchronous with commit).
+pub const S_APPLY_INDEX: &str = "epiraft_apply_index";
+/// Counter: bytes the leader (replica 0) has written to peers.
+pub const S_LEADER_EGRESS: &str = "epiraft_leader_egress_bytes";
+/// Counter: bytes all non-leader replicas have written, summed.
+pub const S_PEER_EGRESS_TOTAL: &str = "epiraft_peer_egress_bytes_total";
+/// Counter, labels `replica="i",peer="j"`: bytes replica i wrote to j
+/// (live TCP only — the per-link split rides `TransportStats`).
+pub const S_PEER_EGRESS: &str = "epiraft_peer_egress_bytes";
+/// Counter, label `replica="i"`: writer reconnect cycles completed.
+pub const S_RECONNECTS: &str = "epiraft_reconnects_total";
+/// Counter, label `replica="i"`: frames dropped on a full outbox.
+pub const S_OUTBOX_DROPS: &str = "epiraft_outbox_drops_total";
+/// Gauge, label `replica="i"`: frames currently queued in outboxes.
+pub const S_OUTBOX_DEPTH: &str = "epiraft_outbox_depth";
+/// Counter, label `replica="i"`: well-formed but semantically invalid
+/// frames rejected at the wire boundary (includes malformed
+/// `EPI_SPARSE` index streams — see `transport/codec.rs`).
+pub const S_BOUNDARY_DROPS: &str = "epiraft_boundary_drops_total";
+/// Counter, label `replica="i"`: framing-level decode failures.
+pub const S_DECODE_ERRORS: &str = "epiraft_decode_errors_total";
+/// Counter: client requests completed (committed + replied).
+pub const S_COMPLETED: &str = "epiraft_requests_completed_total";
+/// Counter: open-loop arrivals shed at the admission cap.
+pub const S_SHED: &str = "epiraft_requests_shed_total";
+/// Histogram: client-observed request latency in µs.
+pub const S_REQUEST_LATENCY: &str = "epiraft_request_latency_us";
+
+/// One sampler tick: every series value at a single instant, ordered as
+/// the registry renders them. `t_us` is µs since the host's epoch (run
+/// start), so sim and live traces share a time axis.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Frame {
+    pub t_us: u64,
+    pub values: Vec<(String, f64)>,
+}
+
+impl Frame {
+    /// Value of a series by its rendered name (`name` or `name{labels}`).
+    pub fn get(&self, series: &str) -> Option<f64> {
+        self.values.iter().find(|(k, _)| k == series).map(|&(_, v)| v)
+    }
+
+    /// One JSONL trace line: `{"t_us":..., "series":{...}}`.
+    pub fn to_json(&self) -> Json {
+        let series =
+            Json::Obj(self.values.iter().map(|(k, v)| (k.clone(), Json::num(*v))).collect());
+        Json::obj(vec![("t_us", Json::num(self.t_us as f64)), ("series", series)])
+    }
+}
+
+/// Render a label pair like `replica="3"`. Values are escaped for the
+/// exposition format (backslash, quote, newline).
+pub fn label(key: &str, value: &str) -> String {
+    let mut esc = String::with_capacity(value.len());
+    for c in value.chars() {
+        match c {
+            '\\' => esc.push_str("\\\\"),
+            '"' => esc.push_str("\\\""),
+            '\n' => esc.push_str("\\n"),
+            c => esc.push(c),
+        }
+    }
+    format!("{key}=\"{esc}\"")
+}
+
+/// `replica="i"` — the label every per-replica series carries.
+pub fn replica_label(id: usize) -> String {
+    label("replica", &id.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_escapes_exposition_metacharacters() {
+        assert_eq!(label("replica", "3"), "replica=\"3\"");
+        assert_eq!(label("k", "a\"b\\c\nd"), "k=\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn frame_json_round_trips_values() {
+        let f = Frame {
+            t_us: 1500,
+            values: vec![(S_LEADER_EGRESS.into(), 42.0), (S_COMPLETED.into(), 7.0)],
+        };
+        let j = f.to_json();
+        let parsed = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.get("t_us").and_then(Json::as_u64), Some(1500));
+        let series = parsed.get("series").unwrap();
+        assert_eq!(series.get(S_LEADER_EGRESS).and_then(Json::as_f64), Some(42.0));
+        assert_eq!(series.get(S_COMPLETED).and_then(Json::as_f64), Some(7.0));
+        assert_eq!(f.get(S_COMPLETED), Some(7.0));
+        assert_eq!(f.get("missing"), None);
+    }
+}

@@ -1,0 +1,346 @@
+//! The metrics registry: named series over lock-cheap cells.
+//!
+//! Three cell shapes cover every series in the repo:
+//!
+//! - **owned atomics** ([`Counter`] / [`Gauge`]): the registry hands the
+//!   host an `Arc<AtomicU64>` handle; updates are one relaxed atomic op
+//!   and never touch the registry lock.
+//! - **polled closures**: series whose source of truth already lives in
+//!   host-owned state (`TransportStats` per-peer counters, summed
+//!   egress) register a `Fn() -> u64` read at snapshot time — the hot
+//!   path that bumps the underlying atomic pays nothing extra.
+//! - **histograms** ([`HistogramHandle`]): a mutex around the in-tree
+//!   log-bucketed [`Histogram`]; recorded once per client request, far
+//!   off the replication hot path.
+//!
+//! The registry lock is taken only at registration and at snapshot /
+//! render time (sampler tick or `/metrics` scrape), never per update.
+
+use crate::telemetry::Frame;
+use crate::util::histogram::Histogram;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Exposition type of a series.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn exposition_name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            // Rendered as a quantile summary (`{quantile="..."}` lines
+            // plus `_sum`/`_count`), the closest first-class shape.
+            Kind::Histogram => "summary",
+        }
+    }
+}
+
+enum Cell {
+    Value(Arc<AtomicU64>),
+    Poll(Arc<dyn Fn() -> u64 + Send + Sync>),
+    Hist(Arc<Mutex<Histogram>>),
+}
+
+struct Series {
+    name: &'static str,
+    /// Rendered label pairs (e.g. `replica="0",peer="3"`), empty for none.
+    labels: String,
+    kind: Kind,
+    cell: Cell,
+}
+
+impl Series {
+    fn key(&self) -> String {
+        if self.labels.is_empty() {
+            self.name.to_string()
+        } else {
+            format!("{}{{{}}}", self.name, self.labels)
+        }
+    }
+}
+
+/// Monotone counter handle. Clone freely — all clones share the cell.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge handle.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Histogram handle; `record` takes the mutex briefly (client-path only).
+#[derive(Clone)]
+pub struct HistogramHandle(Arc<Mutex<Histogram>>);
+
+impl HistogramHandle {
+    pub fn record(&self, v: u64) {
+        self.0.lock().expect("telemetry histogram poisoned").record(v);
+    }
+
+    /// Snapshot (count, mean, p50, p99) without exposing the lock.
+    pub fn summary(&self) -> (u64, f64, u64, u64) {
+        let h = self.0.lock().expect("telemetry histogram poisoned");
+        (h.count(), h.mean(), h.p50(), h.p99())
+    }
+}
+
+/// A set of named series. Cheap to share (`Arc<Registry>`); see the
+/// module docs for the locking discipline.
+#[derive(Default)]
+pub struct Registry {
+    series: Mutex<Vec<Series>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or fetch) a counter. Same `(name, labels)` returns a
+    /// handle to the same cell, so re-registration cannot fork a series.
+    pub fn counter(&self, name: &'static str, labels: &str) -> Counter {
+        Counter(self.value_cell(name, labels, Kind::Counter))
+    }
+
+    /// Register (or fetch) a gauge.
+    pub fn gauge(&self, name: &'static str, labels: &str) -> Gauge {
+        Gauge(self.value_cell(name, labels, Kind::Gauge))
+    }
+
+    /// Register (or fetch) a histogram.
+    pub fn histogram(&self, name: &'static str, labels: &str) -> HistogramHandle {
+        let mut series = self.series.lock().expect("telemetry registry poisoned");
+        if let Some(s) = series.iter().find(|s| s.name == name && s.labels == labels) {
+            if let Cell::Hist(h) = &s.cell {
+                return HistogramHandle(Arc::clone(h));
+            }
+            panic!("telemetry series {name} re-registered with a different kind");
+        }
+        let h = Arc::new(Mutex::new(Histogram::default()));
+        series.push(Series {
+            name,
+            labels: labels.to_string(),
+            kind: Kind::Histogram,
+            cell: Cell::Hist(Arc::clone(&h)),
+        });
+        HistogramHandle(h)
+    }
+
+    /// Adopt an externally-owned value: `read` is called at snapshot and
+    /// scrape time only, so the owning hot path is untouched. A second
+    /// registration under the same `(name, labels)` replaces the closure
+    /// (restart of the underlying source, e.g. a replica respawn).
+    pub fn poll(
+        &self,
+        name: &'static str,
+        labels: &str,
+        kind: Kind,
+        read: impl Fn() -> u64 + Send + Sync + 'static,
+    ) {
+        assert!(kind != Kind::Histogram, "polled series must be counter or gauge");
+        let mut series = self.series.lock().expect("telemetry registry poisoned");
+        let cell = Cell::Poll(Arc::new(read));
+        if let Some(s) = series.iter_mut().find(|s| s.name == name && s.labels == labels) {
+            s.kind = kind;
+            s.cell = cell;
+        } else {
+            series.push(Series { name, labels: labels.to_string(), kind, cell });
+        }
+    }
+
+    fn value_cell(&self, name: &'static str, labels: &str, kind: Kind) -> Arc<AtomicU64> {
+        let mut series = self.series.lock().expect("telemetry registry poisoned");
+        if let Some(s) = series.iter().find(|s| s.name == name && s.labels == labels) {
+            if let Cell::Value(v) = &s.cell {
+                return Arc::clone(v);
+            }
+            panic!("telemetry series {name} re-registered with a different kind");
+        }
+        let v = Arc::new(AtomicU64::new(0));
+        series.push(Series {
+            name,
+            labels: labels.to_string(),
+            kind,
+            cell: Cell::Value(Arc::clone(&v)),
+        });
+        v
+    }
+
+    /// Snapshot every series into a [`Frame`] at `t_us`. Histograms
+    /// expand into `_count` / `_mean` / `_p50` / `_p99` entries so a
+    /// frame is pure `(name, number)` pairs. Output is sorted by key for
+    /// deterministic traces.
+    pub fn sample(&self, t_us: u64) -> Frame {
+        let series = self.series.lock().expect("telemetry registry poisoned");
+        let mut values = Vec::with_capacity(series.len());
+        for s in series.iter() {
+            match &s.cell {
+                Cell::Value(v) => values.push((s.key(), v.load(Ordering::Relaxed) as f64)),
+                Cell::Poll(f) => values.push((s.key(), f() as f64)),
+                Cell::Hist(h) => {
+                    let h = h.lock().expect("telemetry histogram poisoned");
+                    let base = s.key();
+                    values.push((format!("{base}_count"), h.count() as f64));
+                    values.push((format!("{base}_mean"), h.mean()));
+                    values.push((format!("{base}_p50"), h.p50() as f64));
+                    values.push((format!("{base}_p99"), h.p99() as f64));
+                }
+            }
+        }
+        drop(series);
+        values.sort_by(|a, b| a.0.cmp(&b.0));
+        Frame { t_us, values }
+    }
+
+    /// Prometheus text exposition (version 0.0.4): `# TYPE` per metric
+    /// name, one sample line per labeled series, sorted for determinism.
+    pub fn render_prometheus(&self) -> String {
+        let series = self.series.lock().expect("telemetry registry poisoned");
+        let mut order: Vec<usize> = (0..series.len()).collect();
+        order.sort_by(|&a, &b| {
+            (series[a].name, series[a].labels.as_str())
+                .cmp(&(series[b].name, series[b].labels.as_str()))
+        });
+        let mut out = String::new();
+        let mut last_name = "";
+        for &i in &order {
+            let s = &series[i];
+            if s.name != last_name {
+                let _ = writeln!(out, "# TYPE {} {}", s.name, s.kind.exposition_name());
+                last_name = s.name;
+            }
+            match &s.cell {
+                Cell::Value(v) => {
+                    let _ = writeln!(out, "{} {}", s.key(), v.load(Ordering::Relaxed));
+                }
+                Cell::Poll(f) => {
+                    let _ = writeln!(out, "{} {}", s.key(), f());
+                }
+                Cell::Hist(h) => {
+                    let h = h.lock().expect("telemetry histogram poisoned");
+                    let (count, mean) = (h.count(), h.mean());
+                    for (q, v) in [(0.5, h.p50()), (0.99, h.p99())] {
+                        let labels = if s.labels.is_empty() {
+                            format!("quantile=\"{q}\"")
+                        } else {
+                            format!("{},quantile=\"{q}\"", s.labels)
+                        };
+                        let _ = writeln!(out, "{}{{{}}} {}", s.name, labels, v);
+                    }
+                    let suffix_labels = if s.labels.is_empty() {
+                        String::new()
+                    } else {
+                        format!("{{{}}}", s.labels)
+                    };
+                    let _ =
+                        writeln!(out, "{}_sum{} {}", s.name, suffix_labels, mean * count as f64);
+                    let _ = writeln!(out, "{}_count{} {}", s.name, suffix_labels, count);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{replica_label, S_COMMIT_INDEX, S_RECONNECTS, S_REQUEST_LATENCY};
+
+    #[test]
+    fn counter_gauge_roundtrip_and_dedup() {
+        let reg = Registry::new();
+        let c1 = reg.counter(S_RECONNECTS, &replica_label(0));
+        let c2 = reg.counter(S_RECONNECTS, &replica_label(0));
+        c1.add(3);
+        c2.inc();
+        // Same (name, labels) -> same cell.
+        assert_eq!(c1.get(), 4);
+        let other = reg.counter(S_RECONNECTS, &replica_label(1));
+        other.inc();
+        assert_eq!(other.get(), 1);
+        assert_eq!(c1.get(), 4);
+        let g = reg.gauge(S_COMMIT_INDEX, &replica_label(0));
+        g.set(9);
+        g.set(17);
+        assert_eq!(g.get(), 17);
+    }
+
+    #[test]
+    fn polled_series_read_at_snapshot_time() {
+        let reg = Registry::new();
+        let src = Arc::new(AtomicU64::new(5));
+        let src2 = Arc::clone(&src);
+        reg.poll("epiraft_test_poll", "", Kind::Counter, move || src2.load(Ordering::Relaxed));
+        assert_eq!(reg.sample(0).get("epiraft_test_poll"), Some(5.0));
+        src.store(11, Ordering::Relaxed);
+        assert_eq!(reg.sample(1).get("epiraft_test_poll"), Some(11.0));
+    }
+
+    #[test]
+    fn sample_expands_histograms_and_sorts() {
+        let reg = Registry::new();
+        let h = reg.histogram(S_REQUEST_LATENCY, "");
+        for v in [100, 200, 300] {
+            h.record(v);
+        }
+        let frame = reg.sample(42);
+        assert_eq!(frame.t_us, 42);
+        assert_eq!(frame.get(&format!("{S_REQUEST_LATENCY}_count")), Some(3.0));
+        assert!(frame.get(&format!("{S_REQUEST_LATENCY}_p99")).unwrap() >= 200.0);
+        let keys: Vec<&str> = frame.values.iter().map(|(k, _)| k.as_str()).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted, "frame keys must be sorted");
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let reg = Registry::new();
+        reg.counter(S_RECONNECTS, &replica_label(1)).add(2);
+        reg.counter(S_RECONNECTS, &replica_label(0)).add(7);
+        reg.gauge(S_COMMIT_INDEX, &replica_label(0)).set(33);
+        reg.histogram(S_REQUEST_LATENCY, "").record(250);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE epiraft_reconnects_total counter"));
+        assert!(text.contains("epiraft_reconnects_total{replica=\"0\"} 7"));
+        assert!(text.contains("epiraft_reconnects_total{replica=\"1\"} 2"));
+        assert!(text.contains("# TYPE epiraft_commit_index gauge"));
+        assert!(text.contains("epiraft_commit_index{replica=\"0\"} 33"));
+        assert!(text.contains("# TYPE epiraft_request_latency_us summary"));
+        assert!(text.contains("epiraft_request_latency_us{quantile=\"0.5\"}"));
+        assert!(text.contains("epiraft_request_latency_us_count 1"));
+        // One TYPE line per metric name, not per labeled series.
+        assert_eq!(text.matches("# TYPE epiraft_reconnects_total").count(), 1);
+    }
+}

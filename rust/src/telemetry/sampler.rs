@@ -1,0 +1,145 @@
+//! Periodic registry snapshots: an in-memory ring of [`Frame`]s plus an
+//! optional JSONL trace file.
+//!
+//! The sampler owns a background thread that wakes every `interval_us`,
+//! calls [`Registry::sample`], pushes the frame into a bounded ring
+//! (oldest dropped first) and, when a trace path is configured, appends
+//! the frame as one JSON line. `stop()` joins the thread, takes one
+//! final sample — so even a run shorter than the interval yields a
+//! frame — and hands the ring back.
+//!
+//! Frame timestamps are µs since `start()`, matching the simulator's
+//! virtual clock origin, so sim and live traces share a time axis.
+
+use crate::telemetry::{Frame, Registry};
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::sync::mpsc::{self, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+pub struct Sampler {
+    stop_tx: Sender<()>,
+    handle: JoinHandle<Vec<Frame>>,
+}
+
+impl Sampler {
+    /// Spawn the sampling thread. `ring` caps retained frames (0 is
+    /// treated as 1); `trace_path` empty = no file trace. File-open
+    /// errors are reported, not panicked — telemetry must never take a
+    /// cluster down.
+    pub fn start(
+        registry: Arc<Registry>,
+        interval_us: u64,
+        ring: usize,
+        trace_path: &str,
+    ) -> Result<Sampler, String> {
+        let interval = Duration::from_micros(interval_us.max(1));
+        let cap = ring.max(1);
+        let mut trace = match trace_path {
+            "" => None,
+            path => {
+                let f = File::create(path)
+                    .map_err(|e| format!("telemetry.trace_path {path}: {e}"))?;
+                Some(BufWriter::new(f))
+            }
+        };
+        let (stop_tx, stop_rx) = mpsc::channel::<()>();
+        let handle = std::thread::Builder::new()
+            .name("telemetry-sampler".into())
+            .spawn(move || {
+                let epoch = Instant::now();
+                let mut frames: VecDeque<Frame> = VecDeque::with_capacity(cap.min(1024));
+                loop {
+                    let stop = match stop_rx.recv_timeout(interval) {
+                        Err(RecvTimeoutError::Timeout) => false,
+                        Ok(()) | Err(RecvTimeoutError::Disconnected) => true,
+                    };
+                    let frame = registry.sample(epoch.elapsed().as_micros() as u64);
+                    if let Some(w) = trace.as_mut() {
+                        // Trace-write failures degrade to ring-only.
+                        if writeln!(w, "{}", frame.to_json().to_string_compact()).is_err() {
+                            trace = None;
+                        }
+                    }
+                    if frames.len() == cap {
+                        frames.pop_front();
+                    }
+                    frames.push_back(frame);
+                    if stop {
+                        if let Some(mut w) = trace.take() {
+                            let _ = w.flush();
+                        }
+                        return frames.into_iter().collect();
+                    }
+                }
+            })
+            .map_err(|e| format!("spawn telemetry sampler: {e}"))?;
+        Ok(Sampler { stop_tx, handle })
+    }
+
+    /// Stop the thread and collect the ring (oldest frame first).
+    pub fn stop(self) -> Vec<Frame> {
+        let _ = self.stop_tx.send(());
+        self.handle.join().unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{S_COMMIT_INDEX, S_COMPLETED};
+    use crate::util::json::Json;
+
+    #[test]
+    fn sampler_collects_frames_and_caps_ring() {
+        let reg = Arc::new(Registry::new());
+        let c = reg.counter(S_COMPLETED, "");
+        let s = Sampler::start(Arc::clone(&reg), 2_000, 4, "").unwrap();
+        for _ in 0..20 {
+            c.add(5);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let frames = s.stop();
+        assert!(!frames.is_empty(), "final sample guarantees at least one frame");
+        assert!(frames.len() <= 4, "ring must cap retained frames");
+        // Monotone time axis and monotone counter reads.
+        for w in frames.windows(2) {
+            assert!(w[1].t_us >= w[0].t_us);
+            assert!(w[1].get(S_COMPLETED) >= w[0].get(S_COMPLETED));
+        }
+        assert_eq!(frames.last().unwrap().get(S_COMPLETED), Some(100.0));
+    }
+
+    #[test]
+    fn sampler_writes_jsonl_trace() {
+        let reg = Arc::new(Registry::new());
+        reg.gauge(S_COMMIT_INDEX, "").set(12);
+        let path = std::env::temp_dir()
+            .join(format!("epiraft_trace_test_{}.jsonl", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        let s = Sampler::start(Arc::clone(&reg), 1_000, 16, &path_s).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let frames = s.stop();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), frames.len(), "one JSON line per frame");
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("t_us").is_some());
+            assert_eq!(
+                j.get("series").and_then(|s| s.get(S_COMMIT_INDEX)).and_then(Json::as_f64),
+                Some(12.0)
+            );
+        }
+    }
+
+    #[test]
+    fn sampler_rejects_unwritable_trace_path() {
+        let reg = Arc::new(Registry::new());
+        assert!(Sampler::start(reg, 1_000, 4, "/nonexistent-dir/trace.jsonl").is_err());
+    }
+}

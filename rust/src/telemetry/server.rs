@@ -1,0 +1,141 @@
+//! `GET /metrics` over raw `std::net` — the smallest HTTP server that a
+//! Prometheus scraper (or `curl`) will talk to.
+//!
+//! One accept loop, one short-lived thread per connection (a stalled
+//! scraper must not block the next one), 2-second socket timeouts, and
+//! exactly two responses: `200` with the text exposition for
+//! `GET /metrics`, `404` for anything else. Shutdown works by flagging
+//! and self-connecting to unblock `accept`.
+
+use crate::telemetry::Registry;
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+pub struct MetricsServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`; port 0 picks a free one) and
+    /// serve `registry` until `shutdown()`.
+    pub fn start(addr: &str, registry: Arc<Registry>) -> Result<MetricsServer, String> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| format!("metrics addr {addr}: {e}"))?;
+        let local = listener.local_addr().map_err(|e| format!("metrics addr: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("metrics-server".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_flag.load(Ordering::Acquire) {
+                        return;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let reg = Arc::clone(&registry);
+                    // Per-connection thread: scrapes are rare and tiny,
+                    // but a half-open client must not wedge the listener.
+                    let _ = std::thread::Builder::new()
+                        .name("metrics-conn".into())
+                        .spawn(move || serve_one(stream, &reg));
+                }
+            })
+            .map_err(|e| format!("spawn metrics server: {e}"))?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        // Unblock accept() with a throwaway connection.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(500));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_one(stream: TcpStream, registry: &Registry) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    let mut reader = BufReader::new(stream);
+    let mut request_line = String::new();
+    if reader.read_line(&mut request_line).is_err() {
+        return;
+    }
+    // Drain headers so well-behaved clients see a clean close.
+    let mut header = String::new();
+    while reader.read_line(&mut header).is_ok() {
+        if header.trim_end().is_empty() {
+            break;
+        }
+        header.clear();
+    }
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let mut stream = reader.into_inner();
+    if method == "GET" && (path == "/metrics" || path == "/metrics/") {
+        let body = registry.render_prometheus();
+        let _ = write!(
+            stream,
+            "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        );
+    } else {
+        let body = "not found; try GET /metrics\n";
+        let _ = write!(
+            stream,
+            "HTTP/1.1 404 Not Found\r\nContent-Type: text/plain\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{}",
+            body.len(),
+            body
+        );
+    }
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{replica_label, S_COMMIT_INDEX};
+    use std::io::Read as _;
+
+    fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_everything_else() {
+        let reg = Arc::new(Registry::new());
+        reg.gauge(S_COMMIT_INDEX, &replica_label(0)).set(21);
+        let srv = MetricsServer::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+        let ok = http_get(srv.local_addr(), "/metrics");
+        assert!(ok.starts_with("HTTP/1.1 200 OK"), "got: {ok}");
+        assert!(ok.contains("text/plain; version=0.0.4"));
+        assert!(ok.contains("epiraft_commit_index{replica=\"0\"} 21"));
+        let missing = http_get(srv.local_addr(), "/other");
+        assert!(missing.starts_with("HTTP/1.1 404"), "got: {missing}");
+        // Scrapes see live values, not a bind-time snapshot.
+        reg.gauge(S_COMMIT_INDEX, &replica_label(0)).set(40);
+        let again = http_get(srv.local_addr(), "/metrics");
+        assert!(again.contains("epiraft_commit_index{replica=\"0\"} 40"));
+        srv.shutdown();
+    }
+}

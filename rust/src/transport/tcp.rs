@@ -25,7 +25,7 @@
 //! and the `cluster.kill_link_*` config knobs use to prove the reconnect
 //! path end-to-end.
 
-use super::codec::{self, FrameError};
+use super::codec::{self, DecodeError, FrameError};
 use crate::raft::{Message, NodeId};
 use std::io::{BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -123,15 +123,24 @@ pub struct TransportStats {
     pub reconnects: AtomicU64,
     /// Messages dropped at a full (or torn-down) outbox.
     pub outbox_drops: AtomicU64,
-    /// Inbound connections dropped on a codec rejection.
+    /// Inbound connections dropped on a framing-level codec rejection
+    /// (bad magic/kind/length, truncation): the byte stream itself has
+    /// desynchronized.
     pub decode_errors: AtomicU64,
-    /// Well-formed inbound frames rejected by the message boundary check
-    /// (`Message::wire_valid_for`): out-of-range replica ids or epidemic
-    /// payloads sized for a different cluster — the signature of a peer
-    /// running a mismatched config (or a hostile one).
+    /// Inbound frames rejected at the message boundary: either a decoded
+    /// message failing `Message::wire_valid_for` (out-of-range replica
+    /// ids, epidemic payloads sized for a different cluster) or a frame
+    /// that parsed structurally but carried semantically invalid content
+    /// (`DecodeError::Malformed`, e.g. an out-of-range / duplicate /
+    /// unsorted `EPI_SPARSE` index stream) — the signature of a peer
+    /// running a mismatched config, or a hostile one.
     pub boundary_drops: AtomicU64,
     pub frames_in: AtomicU64,
     pub frames_out: AtomicU64,
+    /// Messages currently enqueued across this endpoint's outboxes
+    /// (incremented at enqueue, decremented at writer dequeue) — a depth
+    /// gauge for the telemetry layer, not a counter.
+    pub outbox_depth: AtomicU64,
     /// Bytes written per peer link (outbound, post-coalescing; indexed by
     /// peer id, our own slot stays 0). Sized by [`TransportStats::for_peers`];
     /// empty under `Default` (unit tests that never touch a socket).
@@ -178,6 +187,10 @@ impl TransportStats {
     pub fn boundary_drops(&self) -> u64 {
         self.boundary_drops.load(Ordering::Relaxed)
     }
+
+    pub fn outbox_depth(&self) -> u64 {
+        self.outbox_depth.load(Ordering::Relaxed)
+    }
 }
 
 /// Sending half of one peer link (cheap to clone). Enqueueing never
@@ -192,7 +205,9 @@ pub struct PeerSender {
 impl PeerSender {
     pub fn send(&self, msg: Message) {
         match self.tx.try_send(msg) {
-            Ok(()) => {}
+            Ok(()) => {
+                self.stats.outbox_depth.fetch_add(1, Ordering::Relaxed);
+            }
             Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
                 self.stats.outbox_drops.fetch_add(1, Ordering::Relaxed);
             }
@@ -391,11 +406,21 @@ fn reader_loop(
             }
             Ok(None) => return, // orderly close at a frame boundary
             Err(FrameError::Io(_)) => return, // reset / killed link
-            Err(FrameError::Decode(_)) => {
-                // A desynchronized or hostile stream: drop the whole
-                // connection (resynchronizing inside a byte stream is
-                // guesswork); the peer's writer will reconnect.
-                stats.decode_errors.fetch_add(1, Ordering::Relaxed);
+            Err(FrameError::Decode(e)) => {
+                // Either way the connection is dropped (resynchronizing
+                // inside a byte stream is guesswork; the peer's writer
+                // reconnects) — but the two failure classes are counted
+                // apart. A frame whose *framing* parsed but whose content
+                // is semantically invalid (`Malformed`, e.g. an
+                // out-of-range / duplicate / unsorted EPI_SPARSE index
+                // stream) is a boundary rejection, same class as a
+                // `wire_valid_for` failure; anything else means the byte
+                // stream itself desynchronized.
+                if matches!(e, DecodeError::Malformed(_)) {
+                    stats.boundary_drops.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    stats.decode_errors.fetch_add(1, Ordering::Relaxed);
+                }
                 return;
             }
         }
@@ -444,7 +469,10 @@ fn writer_loop(
         // `PeerSender` clone outlives the endpoint.
         loop {
             let msg = match rx.recv_timeout(Duration::from_millis(100)) {
-                Ok(m) => m,
+                Ok(m) => {
+                    stats.outbox_depth.fetch_sub(1, Ordering::Relaxed);
+                    m
+                }
                 Err(RecvTimeoutError::Timeout) => {
                     if shutdown.load(Ordering::Relaxed) {
                         conns.unregister(token);
@@ -468,6 +496,7 @@ fn writer_loop(
             while frames < MAX_COALESCED_FRAMES {
                 match rx.try_recv() {
                     Ok(m) => {
+                        stats.outbox_depth.fetch_sub(1, Ordering::Relaxed);
                         codec::encode(&m, &mut buf);
                         frames += 1;
                     }

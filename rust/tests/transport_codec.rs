@@ -239,6 +239,86 @@ fn oversized_and_undersized_length_prefixes_are_rejected() {
     }
 }
 
+/// Byte offset of the epidemic repr tag inside an encoded
+/// `AppendEntriesReply` frame with `round: Some(_)`: frame len(4) +
+/// version(1) + kind(1) + term(8) + from(4) + success(1) + match_hint(8)
+/// + round presence(1) + round(8) + seq(8).
+const REPLY_EPI_REPR_AT: usize = 4 + 2 + 8 + 4 + 1 + 8 + 1 + 8 + 8;
+
+/// A deterministic `AppendEntriesReply` carrying a forced-sparse epidemic
+/// payload (3 set bits out of n=51), for byte-surgery tests below.
+fn sparse_reply_frame() -> Vec<u8> {
+    let payload = EpidemicPayload::sparse_from_indices(51, 10, 11, vec![3, 10, 40])
+        .expect("valid sparse payload");
+    let msg = Message::AppendEntriesReply(AppendEntriesReply {
+        term: 5,
+        from: 2,
+        success: true,
+        match_hint: 10,
+        round: Some(7),
+        epidemic: Some(payload),
+        seq: 1,
+    });
+    let buf = codec::encode_to_vec(&msg);
+    assert_eq!(buf[REPLY_EPI_REPR_AT], 2, "sparse repr tag where expected");
+    codec::decode(&buf).expect("pristine frame decodes").expect("complete");
+    buf
+}
+
+#[test]
+fn sparse_structural_corruption_is_rejected_without_panic() {
+    // EPI_SPARSE is a length-prefixed list of set-bit indices that must be
+    // strictly increasing and < n. A peer sending anything else must cost
+    // us one Malformed error — never a panic, a bogus bitmap, or an OOM.
+    let buf = sparse_reply_frame();
+    // Index stream starts after repr(1) + n(4) + max(8) + next(8) + count(4).
+    let ix0 = REPLY_EPI_REPR_AT + 1 + 4 + 8 + 8 + 4;
+    let idx = |buf: &[u8], k: usize| {
+        u32::from_le_bytes(buf[ix0 + 4 * k..ix0 + 4 * k + 4].try_into().unwrap())
+    };
+    assert_eq!([idx(&buf, 0), idx(&buf, 1), idx(&buf, 2)], [3, 10, 40]);
+
+    // Out of range: an index >= n (both barely and absurdly).
+    for bad_index in [51u32, u32::MAX] {
+        let mut bad = buf.clone();
+        bad[ix0 + 8..ix0 + 12].copy_from_slice(&bad_index.to_le_bytes());
+        assert!(
+            matches!(codec::decode(&bad).unwrap_err(), DecodeError::Malformed(_)),
+            "index {bad_index} >= n must be Malformed"
+        );
+    }
+
+    // Duplicate: repeat the first index into the second slot.
+    let mut dup = buf.clone();
+    let first: [u8; 4] = dup[ix0..ix0 + 4].try_into().unwrap();
+    dup[ix0 + 4..ix0 + 8].copy_from_slice(&first);
+    assert!(matches!(codec::decode(&dup).unwrap_err(), DecodeError::Malformed(_)));
+
+    // Unsorted: swap the first and last indices (40, 10, 3).
+    let mut unsorted = buf.clone();
+    let (a, c) = (idx(&buf, 0), idx(&buf, 2));
+    unsorted[ix0..ix0 + 4].copy_from_slice(&c.to_le_bytes());
+    unsorted[ix0 + 8..ix0 + 12].copy_from_slice(&a.to_le_bytes());
+    assert!(matches!(codec::decode(&unsorted).unwrap_err(), DecodeError::Malformed(_)));
+}
+
+#[test]
+fn sparse_count_bomb_is_rejected_before_allocating() {
+    // A hostile count prefix far beyond the actual bytes must fail the
+    // remaining-bytes check (Truncated), not drive a with_capacity OOM.
+    let buf = sparse_reply_frame();
+    let count_at = REPLY_EPI_REPR_AT + 1 + 4 + 8 + 8;
+    for bomb in [u32::MAX, 1 << 30, 4] {
+        let mut bad = buf.clone();
+        bad[count_at..count_at + 4].copy_from_slice(&bomb.to_le_bytes());
+        assert_eq!(
+            codec::decode(&bad).unwrap_err(),
+            DecodeError::Truncated,
+            "count {bomb} must be rejected as truncated"
+        );
+    }
+}
+
 #[test]
 fn unknown_kinds_and_booleans_are_rejected() {
     let mut rng = Xoshiro256::seed_from_u64(5);

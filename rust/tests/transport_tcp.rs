@@ -133,6 +133,167 @@ fn coalesced_writer_preserves_frames_and_accounts_egress() {
     ep.shutdown();
 }
 
+/// Per-peer egress accounting across a reconnect cycle: the counter must
+/// keep its pre-drop value (no reset with the connection), keep growing on
+/// the new connection, and never exceed one count per frame handed to the
+/// sender (no double-count — a frame that died with the old socket is
+/// *lost*, not re-counted; Raft's own retransmission path re-sends it as a
+/// new frame).
+#[test]
+fn per_peer_egress_survives_reconnect_without_reset_or_double_count() {
+    let l0 = TcpListener::bind(("127.0.0.1", 0)).expect("bind endpoint listener");
+    let l1 = TcpListener::bind(("127.0.0.1", 0)).expect("bind remote listener");
+    let table = PeerTable::new(vec![l0.local_addr().unwrap(), l1.local_addr().unwrap()]);
+    let ep = TcpEndpoint::start(
+        0,
+        l0,
+        &table,
+        256,
+        Arc::new(|_msg: Message| {}),
+        Arc::new(|_peer: usize| {}),
+    )
+    .expect("endpoint start");
+    let sender = ep.sender(1);
+    let frame_len = codec::encode_to_vec(&probe(1)).len() as u64;
+
+    // Phase 1: K frames over the first connection, all received.
+    const K: u64 = 20;
+    for term in 1..=K {
+        sender.send(probe(term));
+    }
+    let (conn1, _) = l1.accept().expect("first connection");
+    let mut r1 = BufReader::new(conn1);
+    for term in 1..=K {
+        assert_eq!(codec::read_frame(&mut r1).expect("frame"), Some(probe(term)));
+    }
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while ep.stats().frames_out() < K && Instant::now() < deadline {
+        thread::sleep(Duration::from_millis(5));
+    }
+    let e1 = ep.stats().egress_bytes_to(1);
+    assert_eq!(e1, K * frame_len, "phase-1 egress must equal the bytes on the wire");
+
+    // Kill the connection; keep sending until the writer reconnects,
+    // counting every frame handed to the sender.
+    drop(r1);
+    l1.set_nonblocking(true).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut sends = K;
+    let conn2 = loop {
+        assert!(Instant::now() < deadline, "writer never reconnected");
+        sender.send(probe(500));
+        sends += 1;
+        match l1.accept() {
+            Ok((s, _)) => break s,
+            Err(_) => thread::sleep(Duration::from_millis(10)),
+        }
+    };
+    conn2.set_nonblocking(false).unwrap();
+    sender.send(probe(1_000));
+    sends += 1;
+    let mut r2 = BufReader::new(conn2);
+    assert!(
+        codec::read_frame(&mut r2).expect("frame after reconnect").is_some(),
+        "no traffic on the reconnected link"
+    );
+    assert!(ep.stats().reconnects() >= 1, "reconnect must be counted");
+
+    // No reset: the counter kept its phase-1 value and the frame received
+    // on the new connection on top of it. No double-count: at most one
+    // count per frame ever handed to the sender (frames the writer dropped
+    // with the dead socket, or shed at a full outbox, are not counted).
+    let e2 = ep.stats().egress_bytes_to(1);
+    assert!(
+        e2 >= e1 + frame_len,
+        "egress reset across reconnect: {e1} then {e2} (frame {frame_len})"
+    );
+    assert!(
+        e2 <= sends * frame_len,
+        "egress double-counted across reconnect: {e2} > {sends} sends x {frame_len}"
+    );
+    assert_eq!(ep.stats().egress_bytes_total(), e2, "only one peer link exists");
+    drop(sender);
+    drop(r2);
+    ep.shutdown();
+}
+
+/// A peer shipping a structurally invalid `EPI_SPARSE` payload (here: a
+/// duplicate set-bit index) must cost exactly one `boundary_drops` count
+/// and its connection — the endpoint itself keeps serving new
+/// connections, and nothing is delivered from the bad frame.
+#[test]
+fn malformed_sparse_frame_counts_as_boundary_drop() {
+    use std::io::Write;
+    use std::sync::mpsc;
+
+    let l0 = TcpListener::bind(("127.0.0.1", 0)).expect("bind endpoint listener");
+    let l1 = TcpListener::bind(("127.0.0.1", 0)).expect("bind remote listener");
+    let addr0 = l0.local_addr().unwrap();
+    let table = PeerTable::new(vec![addr0, l1.local_addr().unwrap()]);
+    let (tx, rx) = mpsc::channel::<Message>();
+    let ep = TcpEndpoint::start(
+        0,
+        l0,
+        &table,
+        64,
+        Arc::new(move |msg: Message| {
+            let _ = tx.send(msg);
+        }),
+        Arc::new(|_peer: usize| {}),
+    )
+    .expect("endpoint start");
+
+    // A valid reply frame carrying a forced-sparse epidemic payload, then
+    // byte-surgery: duplicate the first set-bit index into the second slot
+    // (same surgery `transport_codec.rs` proves decodes as Malformed).
+    use epiraft::epidemic::EpidemicPayload;
+    use epiraft::raft::AppendEntriesReply;
+    let payload = EpidemicPayload::sparse_from_indices(51, 10, 11, vec![3, 10, 40])
+        .expect("valid sparse payload");
+    let msg = Message::AppendEntriesReply(AppendEntriesReply {
+        term: 5,
+        from: 1,
+        success: true,
+        match_hint: 10,
+        round: Some(7),
+        epidemic: Some(payload),
+        seq: 1,
+    });
+    let mut bad = codec::encode_to_vec(&msg);
+    // repr tag offset: frame len(4) + version/kind(2) + term(8) + from(4)
+    // + success(1) + match_hint(8) + round presence(1) + round(8) + seq(8);
+    // index stream after repr(1) + n(4) + max(8) + next(8) + count(4).
+    let repr = 4 + 2 + 8 + 4 + 1 + 8 + 1 + 8 + 8;
+    assert_eq!(bad[repr], 2, "sparse repr tag where expected");
+    let ix0 = repr + 1 + 4 + 8 + 8 + 4;
+    let first: [u8; 4] = bad[ix0..ix0 + 4].try_into().unwrap();
+    bad[ix0 + 4..ix0 + 8].copy_from_slice(&first);
+
+    let mut hostile = std::net::TcpStream::connect(addr0).expect("connect to endpoint");
+    hostile.write_all(&bad).expect("write malformed frame");
+    hostile.flush().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while ep.stats().boundary_drops() == 0 && Instant::now() < deadline {
+        thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(ep.stats().boundary_drops(), 1, "malformed sparse frame must be counted");
+    assert_eq!(ep.stats().decode_errors(), 0, "framing itself was fine");
+    assert!(rx.try_recv().is_err(), "nothing may be delivered from the bad frame");
+
+    // The endpoint survives: a fresh connection delivers a valid frame.
+    let mut ok_conn = std::net::TcpStream::connect(addr0).expect("reconnect to endpoint");
+    let good = codec::encode_to_vec(&probe(9));
+    ok_conn.write_all(&good).expect("write valid frame");
+    ok_conn.flush().unwrap();
+    assert_eq!(
+        rx.recv_timeout(Duration::from_secs(5)).expect("valid frame delivered"),
+        probe(9)
+    );
+    drop(hostile);
+    drop(ok_conn);
+    ep.shutdown();
+}
+
 fn tcp_cfg(variant: Variant, n: usize, duration_us: u64) -> Config {
     let mut cfg = Config::default();
     cfg.protocol.n = n;
