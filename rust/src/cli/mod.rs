@@ -14,6 +14,7 @@
 //! epiraft bench-pr8  [--quick] [--n N] [--protocol-n N] [--fleet-n N]
 //!                    [--shards K] [--seed S] [--out FILE]
 //! epiraft bench-pr9  [--quick] [--n N] [--tcp-n N] [--seed S] [--out FILE]
+//! epiraft bench-pr10 [--quick] [--n N] [--rate R] [--seed S] [--out FILE]
 //! epiraft live       [--variant v] [--n N] [--clients C] [--secs S]
 //!                    [--transport {mpsc|tcp}] [--node-id I]
 //!                    [--metrics-addr HOST:PORT]
@@ -214,6 +215,17 @@ USAGE:
       BENCH_PR9.json and fails unless the pull variant's leader-egress
       share is strictly below classic's on every host and classic's live
       share agrees with the sim prediction within tolerance.
+
+  epiraft bench-pr10 [--quick] [--n N] [--rate R] [--seed S] [--out FILE]
+      Bandwidth-queueing links ({raft, v2, pull} x {unlimited,
+      leader-uplink-capped}, default n=101). The cap is derived from the
+      unlimited runs — 60% of classic's measured leader-egress rate, at
+      least 1.5x the epidemic variants' — and enforced as a shared-NIC
+      [sim.bandwidth] bottleneck on replica 0 with a byte-bounded
+      tail-drop queue. Writes BENCH_PR10.json and fails unless capped
+      classic queues behind its own fanout (wait > 0, tail-drops > 0,
+      commit p99 above its unlimited twin) while v2 and pull both commit
+      with a strictly lower p99 under the same cap.
 
   epiraft live [--variant v] [--n N] [--clients C] [--secs S]
                [--transport mpsc|tcp] [--node-id I]

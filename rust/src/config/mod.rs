@@ -600,6 +600,69 @@ pub struct NetworkConfig {
     /// (a slow node). Entries compose additively. Replica links only —
     /// client traffic keeps the base model.
     pub links: Vec<LinkSpec>,
+    /// Per-link transmission capacity + bounded queue (`[sim.bandwidth]`,
+    /// default off): frames pay `bytes / rate` of serialization time and
+    /// wait behind earlier frames on the same bottleneck; a full queue
+    /// tail-drops. Replica links only, like the other impairments.
+    pub bandwidth: BandwidthConfig,
+}
+
+/// `[sim.bandwidth]`: link capacity and queueing (default off — zero rates
+/// and no per-link overrides keep runs bit-identical to the latency-only
+/// model).
+///
+/// * `bytes_per_sec` — default capacity of every directed replica link,
+///   in bytes/second; each link gets its own transmission queue. 0 =
+///   unlimited.
+/// * `pps` — alternative rate unit, packets/second (the Nyx
+///   `bandwidth_pps` model): every frame costs `1e6 / pps` µs regardless
+///   of size. Mutually exclusive with `bytes_per_sec`.
+/// * `max_queue` / `max_queue_bytes` — bounded FIFO per bottleneck, in
+///   frames / in queued bytes (0 disables that bound; at least one bound
+///   must be set while a rate is on). Overflow tail-drops, counted in
+///   `SimReport::queue_tail_drops`.
+/// * `[sim.bandwidth.links]` — rate overrides reusing the `[sim.links]`
+///   selector syntax. A directed `"<from>-<to>"` entry caps that one
+///   link; a bare `"<id>"` entry models the node's NIC: one *shared*
+///   egress queue across everything `id` sends and one shared ingress
+///   queue across everything it receives (how a leader-uplink constraint
+///   is expressed). Override values use the active rate unit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BandwidthConfig {
+    pub bytes_per_sec: u64,
+    pub pps: u64,
+    pub max_queue: usize,
+    pub max_queue_bytes: u64,
+    pub links: Vec<BandwidthLinkSpec>,
+}
+
+impl BandwidthConfig {
+    /// Is any capacity configured? Off = the latency-only model with no
+    /// queue state allocated at all.
+    pub fn enabled(&self) -> bool {
+        self.bytes_per_sec > 0 || self.pps > 0 || !self.links.is_empty()
+    }
+}
+
+impl Default for BandwidthConfig {
+    fn default() -> Self {
+        Self { bytes_per_sec: 0, pps: 0, max_queue: 64, max_queue_bytes: 0, links: Vec::new() }
+    }
+}
+
+/// One `[sim.bandwidth.links]` entry: `selector = rate` (see
+/// [`BandwidthConfig`]). Kept as written so `config-dump` round-trips.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BandwidthLinkSpec {
+    pub selector: String,
+    pub rate: u64,
+}
+
+impl BandwidthLinkSpec {
+    /// Parse the selector into `(from, to)` — see [`LinkSpec::endpoints`].
+    pub fn endpoints(&self, n: usize) -> Result<(Option<usize>, Option<usize>), String> {
+        parse_selector("sim.bandwidth.links", &self.selector, n)
+    }
 }
 
 /// One `[sim.links]` entry: `selector = extra_us` (see
@@ -615,18 +678,29 @@ impl LinkSpec {
     /// `"3-7"` → `(Some(3), Some(7))`; `"3"` → both directions of node 3,
     /// returned as `(Some(3), None)` plus the caller mirroring it.
     pub fn endpoints(&self, n: usize) -> Result<(Option<usize>, Option<usize>), String> {
-        let bad = |s: &str| format!("sim.links: bad selector '{s}' (want '<from>-<to>' or '<id>')");
-        let parse_id = |s: &str| -> Result<usize, String> {
-            let id = s.trim().parse::<usize>().map_err(|_| bad(&self.selector))?;
-            if id >= n {
-                return Err(format!("sim.links: node {id} out of range for n={n}"));
-            }
-            Ok(id)
-        };
-        match self.selector.split_once('-') {
-            Some((f, t)) => Ok((Some(parse_id(f)?), Some(parse_id(t)?))),
-            None => Ok((Some(parse_id(&self.selector)?), None)),
+        parse_selector("sim.links", &self.selector, n)
+    }
+}
+
+/// The `[sim.links]` / `[sim.bandwidth.links]` selector grammar, shared:
+/// `"<from>-<to>"` names one directed replica link, `"<id>"` names a node.
+fn parse_selector(
+    section: &str,
+    selector: &str,
+    n: usize,
+) -> Result<(Option<usize>, Option<usize>), String> {
+    let parse_id = |s: &str| -> Result<usize, String> {
+        let id = s.trim().parse::<usize>().map_err(|_| {
+            format!("{section}: bad selector '{selector}' (want '<from>-<to>' or '<id>')")
+        })?;
+        if id >= n {
+            return Err(format!("{section}: node {id} out of range for n={n}"));
         }
+        Ok(id)
+    };
+    match selector.split_once('-') {
+        Some((f, t)) => Ok((Some(parse_id(f)?), Some(parse_id(t)?))),
+        None => Ok((Some(parse_id(selector)?), None)),
     }
 }
 
@@ -643,6 +717,7 @@ impl Default for NetworkConfig {
             ge_loss_good: 0.0,
             ge_loss_bad: 1.0,
             links: Vec::new(),
+            bandwidth: BandwidthConfig::default(),
         }
     }
 }
@@ -859,6 +934,25 @@ impl Config {
         for spec in &self.network.links {
             spec.endpoints(self.protocol.n)?;
         }
+        let bw = &self.network.bandwidth;
+        if bw.bytes_per_sec > 0 && bw.pps > 0 {
+            return Err("sim.bandwidth: set bytes_per_sec or pps, not both".into());
+        }
+        if bw.enabled() && bw.max_queue == 0 && bw.max_queue_bytes == 0 {
+            return Err(
+                "sim.bandwidth: max_queue or max_queue_bytes must be >= 1 when a rate is set"
+                    .into(),
+            );
+        }
+        for spec in &bw.links {
+            spec.endpoints(self.protocol.n)?;
+            if spec.rate == 0 {
+                return Err(format!(
+                    "sim.bandwidth.links.{}: rate must be > 0 (omit the entry for unlimited)",
+                    spec.selector
+                ));
+            }
+        }
         if !(0.0..=1.0).contains(&self.workload.write_fraction) {
             return Err("workload.write_fraction must be in [0,1]".into());
         }
@@ -922,6 +1016,21 @@ impl Config {
                 p.addr = addr;
             } else {
                 self.cluster.peers.push(PeerSpec { node, addr });
+            }
+            return Ok(());
+        }
+        // `[sim.bandwidth.links]` is a map, not a fixed key set: any
+        // selector is a key. Same selector twice = overwrite (so dump/set
+        // round-trips). Checked before the scalar `sim.bandwidth.*` keys.
+        if let Some(selector) = key.strip_prefix("sim.bandwidth.links.") {
+            let rate = parse_u64(v)?;
+            let selector = selector.trim().to_string();
+            if let Some(e) =
+                self.network.bandwidth.links.iter_mut().find(|e| e.selector == selector)
+            {
+                e.rate = rate;
+            } else {
+                self.network.bandwidth.links.push(BandwidthLinkSpec { selector, rate });
             }
             return Ok(());
         }
@@ -1039,6 +1148,14 @@ impl Config {
             "network.ge_bad_to_good" => self.network.ge_bad_to_good = parse_f64(v)?,
             "network.ge_loss_good" => self.network.ge_loss_good = parse_f64(v)?,
             "network.ge_loss_bad" => self.network.ge_loss_bad = parse_f64(v)?,
+            "sim.bandwidth.bytes_per_sec" => self.network.bandwidth.bytes_per_sec = parse_u64(v)?,
+            "sim.bandwidth.pps" => self.network.bandwidth.pps = parse_u64(v)?,
+            "sim.bandwidth.max_queue" => {
+                self.network.bandwidth.max_queue = parse_u64(v)? as usize
+            }
+            "sim.bandwidth.max_queue_bytes" => {
+                self.network.bandwidth.max_queue_bytes = parse_u64(v)?
+            }
             "cost.client_recv_us" => self.cost.client_recv_us = parse_f64(v)?,
             "cost.client_reply_us" => self.cost.client_reply_us = parse_f64(v)?,
             "cost.msg_send_us" => self.cost.msg_send_us = parse_f64(v)?,
@@ -1227,6 +1344,14 @@ pub fn dump(cfg: &Config) -> BTreeMap<String, String> {
     }
     for spec in &cfg.network.links {
         m.insert(format!("sim.links.{}", spec.selector), spec.extra_us.to_string());
+    }
+    let bw = &cfg.network.bandwidth;
+    m.insert("sim.bandwidth.bytes_per_sec".into(), bw.bytes_per_sec.to_string());
+    m.insert("sim.bandwidth.pps".into(), bw.pps.to_string());
+    m.insert("sim.bandwidth.max_queue".into(), bw.max_queue.to_string());
+    m.insert("sim.bandwidth.max_queue_bytes".into(), bw.max_queue_bytes.to_string());
+    for spec in &bw.links {
+        m.insert(format!("sim.bandwidth.links.{}", spec.selector), spec.rate.to_string());
     }
     m.insert("network.latency_mean_us".into(), cfg.network.latency_mean_us.to_string());
     m.insert("network.latency_stddev_us".into(), cfg.network.latency_stddev_us.to_string());
@@ -1631,6 +1756,68 @@ rate = 2500.5
         // Values must still be integers.
         let mut cfg = Config::default();
         assert!(cfg.set("sim.links.1", "fast").is_err());
+    }
+
+    #[test]
+    fn sim_bandwidth_parse_validate_and_roundtrip() {
+        let cfg = Config::from_toml(
+            "[sim.bandwidth]\nbytes_per_sec = 2000000\nmax_queue = 32\nmax_queue_bytes = 65536\n\n[sim.bandwidth.links]\n0 = 1500000\n2-1 = 500000\n",
+        )
+        .unwrap();
+        cfg.validate().unwrap();
+        assert!(cfg.network.bandwidth.enabled());
+        assert_eq!(cfg.network.bandwidth.bytes_per_sec, 2_000_000);
+        assert_eq!(cfg.network.bandwidth.pps, 0);
+        assert_eq!(cfg.network.bandwidth.max_queue, 32);
+        assert_eq!(cfg.network.bandwidth.max_queue_bytes, 65_536);
+        assert_eq!(cfg.network.bandwidth.links.len(), 2);
+        assert_eq!(cfg.network.bandwidth.links[0].endpoints(5).unwrap(), (Some(0), None));
+        assert_eq!(cfg.network.bandwidth.links[1].endpoints(5).unwrap(), (Some(2), Some(1)));
+        // Re-setting the same selector overwrites instead of duplicating.
+        let mut cfg = cfg;
+        cfg.set("sim.bandwidth.links.0", "1000000").unwrap();
+        assert_eq!(cfg.network.bandwidth.links.len(), 2);
+        assert_eq!(cfg.network.bandwidth.links[0].rate, 1_000_000);
+        // Dump/set round-trips every bandwidth key.
+        let dumped = dump(&cfg);
+        assert_eq!(dumped.get("sim.bandwidth.bytes_per_sec").map(String::as_str), Some("2000000"));
+        assert_eq!(dumped.get("sim.bandwidth.links.2-1").map(String::as_str), Some("500000"));
+        let mut rebuilt = Config::default();
+        for (k, v) in &dumped {
+            rebuilt.set(k, v).unwrap();
+        }
+        assert_eq!(rebuilt.network.bandwidth, cfg.network.bandwidth);
+        // Defaults stay disabled so existing runs are untouched.
+        assert!(!Config::default().network.bandwidth.enabled());
+    }
+
+    #[test]
+    fn sim_bandwidth_validation_rejects_bad_specs() {
+        // bytes_per_sec and pps are mutually exclusive.
+        let mut cfg = Config::default();
+        cfg.set("sim.bandwidth.bytes_per_sec", "1000000").unwrap();
+        cfg.set("sim.bandwidth.pps", "100").unwrap();
+        assert!(cfg.validate().is_err(), "both rate knobs at once must be rejected");
+        // An enabled cap needs at least one queue bound.
+        let mut cfg = Config::default();
+        cfg.set("sim.bandwidth.pps", "100").unwrap();
+        cfg.set("sim.bandwidth.max_queue", "0").unwrap();
+        assert!(cfg.validate().is_err(), "rate with no queue bound must be rejected");
+        // Per-link selectors follow the sim.links rules: in-range, well-formed.
+        let mut cfg = Config::default();
+        cfg.set("sim.bandwidth.links.9", "1000").unwrap(); // n = 5 by default
+        assert!(cfg.validate().is_err(), "node id beyond n must be rejected");
+        let mut cfg = Config::default();
+        cfg.set("sim.bandwidth.links.a-b", "1000").unwrap();
+        assert!(cfg.validate().is_err(), "non-numeric selector must be rejected");
+        // A zero per-link rate is a contradiction (omit the entry for unlimited).
+        let mut cfg = Config::default();
+        cfg.set("sim.bandwidth.links.1", "0").unwrap();
+        assert!(cfg.validate().is_err(), "zero per-link rate must be rejected");
+        // Values must still be integers.
+        let mut cfg = Config::default();
+        assert!(cfg.set("sim.bandwidth.bytes_per_sec", "fast").is_err());
+        assert!(cfg.set("sim.bandwidth.links.1", "slow").is_err());
     }
 
     #[test]

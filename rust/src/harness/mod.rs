@@ -7,6 +7,7 @@ pub mod adaptive;
 pub mod bench_stats;
 pub mod egress;
 pub mod figures;
+pub mod queueing;
 pub mod recovery;
 pub mod scale;
 pub mod soak;
@@ -23,6 +24,9 @@ pub use egress::{
 pub use figures::{
     fig4, fig4_default_rates, fig5, fig5_default_rates, fig6, fig6_default_ns, fig7, headline,
     print_points, run_point, write_cdfs_json, write_points_json, Headline, Point, Scale,
+};
+pub use queueing::{
+    bench_pr10_json, print_queueing, queueing_comparison, queueing_gate, QueueingPoint,
 };
 pub use recovery::{
     bench_pr7_json, print_recovery, recovery_comparison, recovery_gate, RecoveryPoint,

@@ -1,0 +1,378 @@
+//! PR 10 measurement plumbing: bandwidth-queueing links.
+//!
+//! This is the scenario behind `epiraft bench-pr10`, the committed
+//! `BENCH_PR10.json`, and its `bench-smoke` gate. The grid is
+//! {raft, v2, pull} × {unlimited, leader-uplink-capped} at n=101, all
+//! cells sharing seed, rate and election timeouts:
+//!
+//! 1. **Unlimited** cells re-measure the latency-only model (and pin that
+//!    the queueing counters stay exactly zero when `[sim.bandwidth]` has
+//!    no rate for a link).
+//! 2. **Capped** cells put a shared-NIC cap on replica 0's egress — sized
+//!    from the unlimited runs (see [`derive_cap`]) to saturate classic
+//!    Raft's per-request broadcast while leaving the epidemic variants
+//!    ≥ 1.5× headroom — with a byte-bounded tail-drop queue.
+//!
+//! The gate then asserts the paper's claim under its most realistic
+//! model: with the leader's uplink the bottleneck, classic must queue
+//! behind its own fanout (wait > 0, drops > 0, commit p99 strictly above
+//! its unlimited twin) while v2 and pull both commit with a strictly
+//! lower p99 than capped classic. Safety everywhere, elections nowhere.
+
+use super::figures::Scale;
+use crate::config::{BandwidthLinkSpec, Config};
+use crate::raft::Variant;
+use crate::sim::{run_experiment, SimReport};
+use crate::util::json::Json;
+
+pub const UNLIMITED: &str = "unlimited";
+pub const CAPPED: &str = "capped";
+
+/// Queue depth as a fraction of the cap: `max_queue_bytes = cap / 50`,
+/// i.e. at most ~20 ms of serialization backlog before tail-drop — deep
+/// enough to show queueing delay, shallow enough that a saturated classic
+/// leader must also drop (both effects are gated on).
+pub const QUEUE_DEPTH_DIVISOR: u64 = 50;
+
+/// One cell of the {variant} × {unlimited, capped} grid.
+#[derive(Clone, Debug)]
+pub struct QueueingPoint {
+    pub variant: &'static str,
+    /// [`UNLIMITED`] or [`CAPPED`].
+    pub scenario: &'static str,
+    /// The shared-NIC rate on replica 0 (bytes/s); 0 in unlimited cells.
+    pub cap_bytes_per_sec: u64,
+    pub completed: u64,
+    pub throughput: f64,
+    pub p99_latency_us: u64,
+    /// Follower commit-interval p99 (leader append -> follower commit).
+    pub commit_p99_us: u64,
+    pub leader_egress_bytes: u64,
+    pub queue_tail_drops: u64,
+    pub peak_link_queue: u64,
+    pub leader_queue_wait_us: u64,
+    pub elections: u64,
+    pub safety_ok: bool,
+}
+
+impl QueueingPoint {
+    fn from_report(scenario: &'static str, cap: u64, r: &SimReport) -> Self {
+        Self {
+            variant: r.variant,
+            scenario,
+            cap_bytes_per_sec: cap,
+            completed: r.completed,
+            throughput: r.throughput,
+            p99_latency_us: r.p99_latency_us,
+            commit_p99_us: r.commit_interval.p99(),
+            leader_egress_bytes: r.leader_egress_bytes,
+            queue_tail_drops: r.queue_tail_drops,
+            peak_link_queue: r.peak_link_queue,
+            leader_queue_wait_us: r.leader_queue_wait_us,
+            elections: r.elections,
+            safety_ok: r.safety_ok,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(self.variant)),
+            ("scenario", Json::str(self.scenario)),
+            ("cap_bytes_per_sec", Json::num(self.cap_bytes_per_sec as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("throughput", Json::num(self.throughput)),
+            ("p99_latency_us", Json::num(self.p99_latency_us as f64)),
+            ("commit_p99_us", Json::num(self.commit_p99_us as f64)),
+            ("leader_egress_bytes", Json::num(self.leader_egress_bytes as f64)),
+            ("queue_tail_drops", Json::num(self.queue_tail_drops as f64)),
+            ("peak_link_queue", Json::num(self.peak_link_queue as f64)),
+            ("leader_queue_wait_us", Json::num(self.leader_queue_wait_us as f64)),
+            ("elections", Json::num(self.elections as f64)),
+            ("safety_ok", Json::Bool(self.safety_ok)),
+        ])
+    }
+}
+
+/// Build one cell's config. `cap = 0` is the unlimited scenario; a
+/// positive cap puts a shared-NIC bandwidth bottleneck (egress + ingress)
+/// on replica 0 — the bootstrap leader — with a byte-bounded queue.
+fn cell_cfg(scale: Scale, variant: Variant, cap: u64, rate: f64, seed: u64) -> Config {
+    let mut cfg = Config {
+        protocol: crate::config::ProtocolConfig::for_variant(scale.n, variant),
+        ..Config::default()
+    };
+    // Same election timeouts in every cell, far past any queueing delay a
+    // saturated uplink can add: a capped leader's heartbeats arrive late
+    // by design, and this is a queueing measurement, not a failover
+    // benchmark (the bench-pr4 precedent for slow-but-alive replicas).
+    cfg.protocol.election_timeout_min_us = 30_000_000;
+    cfg.protocol.election_timeout_max_us = 60_000_000;
+    cfg.workload.clients = 10;
+    cfg.workload.rate = rate;
+    cfg.workload.duration_us = scale.duration_us;
+    cfg.workload.warmup_us = scale.warmup_us;
+    cfg.seed = seed;
+    if cap > 0 {
+        cfg.network.bandwidth.links.push(BandwidthLinkSpec { selector: "0".into(), rate: cap });
+        // Bound the queue in bytes, not frames: frame sizes differ per
+        // variant, and ~20 ms of backlog is the same physical statement
+        // for all of them.
+        cfg.network.bandwidth.max_queue = 0;
+        cfg.network.bandwidth.max_queue_bytes = (cap / QUEUE_DEPTH_DIVISOR).max(1);
+    }
+    cfg
+}
+
+/// Size the leader-uplink cap from the *measured* unlimited runs: 60% of
+/// classic Raft's observed leader-egress rate (so its broadcast demand
+/// exceeds the NIC by ~1.67× and must queue), but never below 1.5× the
+/// epidemic variants' observed rates (so v2/pull keep real headroom and
+/// the comparison isolates classic's fanout, not a starved cluster).
+/// Deriving instead of hardcoding keeps the cap meaningful whatever the
+/// scale, rate or payload sizes of the run.
+pub fn derive_cap(unlimited: &[QueueingPoint], duration_us: u64) -> Result<u64, String> {
+    let secs = duration_us as f64 / 1e6;
+    let rate_of = |name: &str| -> Result<f64, String> {
+        unlimited
+            .iter()
+            .find(|p| p.variant == name && p.scenario == UNLIMITED)
+            .map(|p| p.leader_egress_bytes as f64 / secs)
+            .ok_or_else(|| format!("derive_cap: unlimited '{name}' cell missing"))
+    };
+    let raft = rate_of(Variant::Raft.name())?;
+    let v2 = rate_of(Variant::V2.name())?;
+    let pull = rate_of(Variant::Pull.name())?;
+    let cap = (0.6 * raft).max(1.5 * v2.max(pull));
+    if cap < 1.0 {
+        return Err("derive_cap: unlimited cells moved no leader bytes".into());
+    }
+    Ok(cap as u64)
+}
+
+/// Run the grid: three unlimited cells, derive the cap, then the same
+/// three variants behind it — same n/seed/rate, the cells differ only in
+/// `[sim.bandwidth]`.
+pub fn queueing_comparison(scale: Scale, rate: f64, seed: u64) -> Vec<QueueingPoint> {
+    let variants = [Variant::Raft, Variant::V2, Variant::Pull];
+    let mut out = Vec::new();
+    for &variant in &variants {
+        let cfg = cell_cfg(scale, variant, 0, rate, seed);
+        out.push(QueueingPoint::from_report(UNLIMITED, 0, &run_experiment(&cfg)));
+    }
+    let cap = derive_cap(&out, scale.duration_us).expect("unlimited cells just ran");
+    for &variant in &variants {
+        let cfg = cell_cfg(scale, variant, cap, rate, seed);
+        out.push(QueueingPoint::from_report(CAPPED, cap, &run_experiment(&cfg)));
+    }
+    out
+}
+
+fn find<'a>(
+    points: &'a [QueueingPoint],
+    variant: &str,
+    scenario: &str,
+) -> Result<&'a QueueingPoint, String> {
+    points
+        .iter()
+        .find(|p| p.variant == variant && p.scenario == scenario)
+        .ok_or_else(|| format!("gate: cell {variant}/{scenario} missing from results"))
+}
+
+/// The CI gate (`epiraft bench-pr10` exit status):
+///
+/// * every cell is safe, leader-stable, serving, with a sane commit p99;
+/// * unlimited cells report exactly zero queueing activity (the
+///   default-off pin, at bench scale);
+/// * capped classic demonstrably queued behind its own fanout: wait > 0,
+///   tail-drops > 0, commit p99 strictly above its unlimited twin;
+/// * both epidemic variants beat capped classic on commit p99 under the
+///   same uplink cap — the paper's claim as a *timing* win.
+pub fn queueing_gate(points: &[QueueingPoint]) -> Result<(), String> {
+    for p in points {
+        if !p.safety_ok {
+            return Err(format!("gate: safety violated in {}/{}", p.variant, p.scenario));
+        }
+        if p.elections > 0 {
+            return Err(format!(
+                "gate: leader deposed ({} election(s)) in {}/{}",
+                p.elections, p.variant, p.scenario
+            ));
+        }
+        if p.completed == 0 {
+            return Err(format!("gate: {}/{} served no requests", p.variant, p.scenario));
+        }
+        if p.commit_p99_us == 0 || p.commit_p99_us > 30_000_000 {
+            return Err(format!(
+                "gate: {}/{} commit p99 {}us is not sane",
+                p.variant, p.scenario, p.commit_p99_us
+            ));
+        }
+        if p.scenario == UNLIMITED
+            && (p.queue_tail_drops != 0 || p.peak_link_queue != 0 || p.leader_queue_wait_us != 0)
+        {
+            return Err(format!(
+                "gate: unlimited '{}' cell reported queueing activity (drops {}, peak {}, \
+                 wait {}us) — the default-off pin is broken",
+                p.variant, p.queue_tail_drops, p.peak_link_queue, p.leader_queue_wait_us
+            ));
+        }
+    }
+    let raft_free = find(points, Variant::Raft.name(), UNLIMITED)?;
+    let raft_cap = find(points, Variant::Raft.name(), CAPPED)?;
+    let v2_cap = find(points, Variant::V2.name(), CAPPED)?;
+    let pull_cap = find(points, Variant::Pull.name(), CAPPED)?;
+    if raft_cap.leader_queue_wait_us == 0 {
+        return Err("gate: capped classic shows no queue wait — the cap did not bind".into());
+    }
+    if raft_cap.queue_tail_drops == 0 {
+        return Err("gate: capped classic never overflowed its bounded queue".into());
+    }
+    if raft_cap.commit_p99_us <= raft_free.commit_p99_us {
+        return Err(format!(
+            "gate: capped classic commit p99 {}us not above its unlimited twin's {}us",
+            raft_cap.commit_p99_us, raft_free.commit_p99_us
+        ));
+    }
+    for epi in [v2_cap, pull_cap] {
+        if epi.commit_p99_us >= raft_cap.commit_p99_us {
+            return Err(format!(
+                "gate: capped '{}' commit p99 {}us not strictly below capped classic's {}us",
+                epi.variant, epi.commit_p99_us, raft_cap.commit_p99_us
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Render the whole scenario as the `BENCH_PR10.json` document.
+pub fn bench_pr10_json(scale: Scale, rate: f64, seed: u64, points: &[QueueingPoint]) -> Json {
+    let gate = queueing_gate(points);
+    let cap = points
+        .iter()
+        .find(|p| p.scenario == CAPPED)
+        .map_or(0, |p| p.cap_bytes_per_sec);
+    Json::obj(vec![
+        ("bench", Json::str("bandwidth-queueing")),
+        ("n", Json::num(scale.n as f64)),
+        ("rate", Json::num(rate)),
+        ("duration_us", Json::num(scale.duration_us as f64)),
+        ("warmup_us", Json::num(scale.warmup_us as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("cap_bytes_per_sec", Json::num(cap as f64)),
+        ("points", Json::arr(points.iter().map(|p| p.to_json()))),
+        ("gate_queueing", Json::Bool(gate.is_ok())),
+        (
+            "gate_detail",
+            match gate {
+                Ok(()) => Json::str(
+                    "all cells safe and leader-stable; unlimited cells queue-free; capped \
+                     classic queued and dropped behind its own fanout; v2 and pull beat it \
+                     on commit p99 under the same uplink cap",
+                ),
+                Err(e) => Json::str(&e),
+            },
+        ),
+    ])
+}
+
+/// Print the grid.
+pub fn print_queueing(points: &[QueueingPoint]) {
+    println!("\n== bandwidth-queueing links: {{raft, v2, pull}} x {{unlimited, capped}} ==");
+    println!(
+        "{:<8} {:<10} {:>12} {:>10} {:>14} {:>12} {:>10} {:>12}",
+        "variant",
+        "scenario",
+        "cap_B/s",
+        "completed",
+        "commit_p99_us",
+        "wait_us",
+        "drops",
+        "peak_q"
+    );
+    for p in points {
+        println!(
+            "{:<8} {:<10} {:>12} {:>10} {:>14} {:>12} {:>10} {:>12}",
+            p.variant,
+            p.scenario,
+            p.cap_bytes_per_sec,
+            p.completed,
+            p.commit_p99_us,
+            p.leader_queue_wait_us,
+            p.queue_tail_drops,
+            p.peak_link_queue
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tiny scale: the grid's mechanics (cap derivation, gate wiring, JSON
+    // shape) are testable without n=101; `bench-pr10` itself runs the real
+    // size in the bench-smoke CI job.
+    fn tiny() -> Scale {
+        Scale { reps: 1, duration_us: 1_500_000, warmup_us: 300_000, n: 15 }
+    }
+
+    #[test]
+    fn gate_passes_at_tiny_scale_and_rejects_tampering() {
+        let points = queueing_comparison(tiny(), 300.0, 7);
+        assert_eq!(points.len(), 6);
+        queueing_gate(&points).expect("tiny-scale gate");
+        // Tamper 1: an unlimited cell claims queueing activity.
+        let mut bad = points.clone();
+        bad[0].queue_tail_drops = 1;
+        assert!(queueing_gate(&bad).is_err(), "default-off pin must be enforced");
+        // Tamper 2: capped classic claims a free ride through the cap.
+        let mut bad = points.clone();
+        for p in bad.iter_mut() {
+            if p.variant == Variant::Raft.name() && p.scenario == CAPPED {
+                p.leader_queue_wait_us = 0;
+            }
+        }
+        assert!(queueing_gate(&bad).is_err(), "the cap must demonstrably bind");
+        // Tamper 3: pretend classic out-committed the epidemic variants.
+        let mut bad = points.clone();
+        for p in bad.iter_mut() {
+            if p.variant == Variant::Raft.name() && p.scenario == CAPPED {
+                p.commit_p99_us = 1;
+            }
+        }
+        assert!(queueing_gate(&bad).is_err(), "the timing win must be real");
+        // Tamper 4: a safety violation anywhere fails the gate.
+        let mut bad = points.clone();
+        bad[5].safety_ok = false;
+        assert!(queueing_gate(&bad).is_err());
+    }
+
+    #[test]
+    fn derived_cap_binds_classic_and_spares_the_epidemic_variants() {
+        let points = queueing_comparison(tiny(), 300.0, 7);
+        let secs = tiny().duration_us as f64 / 1e6;
+        let cap = points.iter().find(|p| p.scenario == CAPPED).unwrap().cap_bytes_per_sec;
+        let rate_of = |name: &str| {
+            points
+                .iter()
+                .find(|p| p.variant == name && p.scenario == UNLIMITED)
+                .unwrap()
+                .leader_egress_bytes as f64
+                / secs
+        };
+        assert!((cap as f64) < rate_of(Variant::Raft.name()), "cap must undercut classic");
+        assert!((cap as f64) >= 1.5 * rate_of(Variant::V2.name()), "v2 must keep headroom");
+        assert!((cap as f64) >= 1.5 * rate_of(Variant::Pull.name()), "pull must keep headroom");
+    }
+
+    #[test]
+    fn bench_json_has_cells_and_gate() {
+        let points = queueing_comparison(tiny(), 300.0, 7);
+        let j = bench_pr10_json(tiny(), 300.0, 7, &points);
+        assert_eq!(j.get("points").and_then(|v| v.as_arr()).unwrap().len(), 6);
+        assert!(j.get("gate_queueing").and_then(|g| g.as_bool()).is_some());
+        assert!(j.get("cap_bytes_per_sec").is_some());
+        let text = j.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("bench").and_then(|b| b.as_str()), Some("bandwidth-queueing"));
+    }
+}

@@ -36,6 +36,7 @@ fn run(args: Vec<String>) -> Result<(), String> {
         "bench-pr7" => cmd_bench_pr7(&cli),
         "bench-pr8" => cmd_bench_pr8(&cli),
         "bench-pr9" => cmd_bench_pr9(&cli),
+        "bench-pr10" => cmd_bench_pr10(&cli),
         "live" => cmd_live(&cli),
         "fleet" => cmd_fleet(&cli),
         "artifacts-check" => cmd_artifacts_check(&cli),
@@ -495,6 +496,43 @@ fn cmd_bench_pr9(cli: &Cli) -> Result<(), String> {
         "gate OK: pull leader share strictly below classic on both hosts; live classic \
          share within {} of the sim prediction",
         harness::SIM_LIVE_TOLERANCE
+    );
+    Ok(())
+}
+
+/// PR 10 bench: bandwidth-queueing links — {raft, v2, pull} ×
+/// {unlimited, leader-uplink-capped} at n=101, the cap derived from the
+/// unlimited runs (60% of classic's measured leader-egress rate, with
+/// ≥1.5× headroom for the epidemic variants) and backed by a byte-bounded
+/// tail-drop queue on replica 0's shared NIC. Writes `BENCH_PR10.json`
+/// (CI uploads it as an artifact) and exits non-zero unless capped
+/// classic queues behind its own fanout while v2 and pull both beat it on
+/// commit p99 — the queueing `bench-smoke` gate.
+fn cmd_bench_pr10(cli: &Cli) -> Result<(), String> {
+    let mut s = scale(cli);
+    s.n = 101;
+    if let Some(n) = cli.get_u64("n")? {
+        s.n = n as usize;
+    }
+    let rate = cli.get_f64("rate")?.unwrap_or(300.0);
+    let seed = cli.get_u64("seed")?.unwrap_or(20230713);
+    let out = cli.get("out").unwrap_or("BENCH_PR10.json");
+    println!(
+        "== bench-pr10: bandwidth-queueing links (n={}, rate={}, seed={}, {}s sim) ==",
+        s.n,
+        rate,
+        seed,
+        s.duration_us as f64 / 1e6
+    );
+    let points = harness::queueing_comparison(s, rate, seed);
+    harness::print_queueing(&points);
+    let doc = harness::bench_pr10_json(s, rate, seed, &points);
+    std::fs::write(out, doc.to_string_pretty()).map_err(|e| format!("write {out}: {e}"))?;
+    println!("\nwrote {out}");
+    harness::queueing_gate(&points)?;
+    println!(
+        "gate OK: capped classic queued behind its own fanout; v2 and pull beat it on \
+         commit p99 under the same uplink cap"
     );
     Ok(())
 }

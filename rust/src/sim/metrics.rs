@@ -82,6 +82,16 @@ pub struct SimReport {
     /// Lowest commit index across replicas at end of run (how far the most
     /// lagged replica — e.g. a snapshot-restored laggard — caught up).
     pub min_commit: u64,
+    /// Bandwidth-queueing links (PR 10, `[sim.bandwidth]`): frames
+    /// tail-dropped by a full link/NIC queue, the deepest any queue got
+    /// (frames), the virtual µs the *leader's* frames spent waiting behind
+    /// earlier frames, and the same sum per replica. Whole-run totals like
+    /// egress (capacity statements, not latency statistics); all zero when
+    /// the feature is off.
+    pub queue_tail_drops: u64,
+    pub peak_link_queue: u64,
+    pub leader_queue_wait_us: u64,
+    pub queue_wait_us: Vec<u64>,
     /// Simulated events processed (host-side performance diagnostics).
     pub events_processed: u64,
     /// Event-queue traffic (PR 8): total pushes (including tiebreak
@@ -105,6 +115,7 @@ pub struct SimReport {
 
 impl SimReport {
     pub fn to_json(&self) -> Json {
+        let queue_wait: Vec<f64> = self.queue_wait_us.iter().map(|&w| w as f64).collect();
         Json::obj(vec![
             ("variant", Json::str(self.variant)),
             ("n", Json::num(self.n as f64)),
@@ -150,6 +161,10 @@ impl SimReport {
             ("safety_ok", Json::Bool(self.safety_ok)),
             ("max_commit", Json::num(self.max_commit as f64)),
             ("min_commit", Json::num(self.min_commit as f64)),
+            ("queue_tail_drops", Json::num(self.queue_tail_drops as f64)),
+            ("peak_link_queue", Json::num(self.peak_link_queue as f64)),
+            ("leader_queue_wait_us", Json::num(self.leader_queue_wait_us as f64)),
+            ("queue_wait_us", Json::from_f64_slice(&queue_wait)),
             ("events_processed", Json::num(self.events_processed as f64)),
             ("heap_pushes", Json::num(self.heap_pushes as f64)),
             ("heap_pops", Json::num(self.heap_pops as f64)),
@@ -182,6 +197,11 @@ pub struct Collector {
     /// model), charged at send time whether or not the network drops the
     /// message — egress is what leaves the NIC.
     pub egress_bytes: Vec<u64>,
+    /// Virtual µs each replica's outbound frames spent queued behind
+    /// earlier frames on a `[sim.bandwidth]` bottleneck (the waiting term
+    /// only, not the frame's own serialization time). All zero when the
+    /// feature is off.
+    pub queue_wait_us: Vec<u64>,
     /// Telemetry frames captured at virtual-clock sample ticks (PR 9).
     pub samples: Vec<Frame>,
 }
@@ -200,6 +220,7 @@ impl Collector {
             messages: 0,
             events: 0,
             egress_bytes: vec![0; n],
+            queue_wait_us: vec![0; n],
             samples: Vec::new(),
         }
     }

@@ -8,14 +8,63 @@
 //! duplication, burst loss and link delays apply to replica links only
 //! (clients run on separate cores/hosts in the paper's setup).
 //!
+//! A fourth impairment, `[sim.bandwidth]`, adds link *capacity*: each
+//! frame pays a serialization term (`bytes / rate`, or a fixed slot in pps
+//! mode) and waits behind earlier frames on the same bottleneck in a
+//! bounded FIFO whose overflow tail-drops. See [`SimNet::transmit`].
+//!
 //! Determinism note: every impairment draws from the RNG only while its
 //! gate is open (probability > 0 / chain enabled), so runs with the
 //! default config consume the exact same random sequence as before these
-//! options existed — seed-for-seed identical reports.
+//! options existed — seed-for-seed identical reports. Bandwidth queueing
+//! is fully deterministic (it never touches the RNG), so enabling it
+//! changes delivery *times* but not the random sequence.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
 
 use crate::config::NetworkConfig;
 use crate::raft::{NodeId, Time};
 use crate::util::rng::Xoshiro256;
+
+/// One bounded transmission queue (a directed link or a shared node NIC).
+/// Entries are `(done_at, bytes)` in arrival order; `done_at` is when that
+/// frame finishes serializing, so the back entry is when the queue drains.
+#[derive(Clone, Debug, Default)]
+struct BwQueue {
+    items: VecDeque<(Time, u64)>,
+    /// Sum of `bytes` across `items` (kept incrementally: the byte bound
+    /// check must not rescan the queue on every frame).
+    bytes: u64,
+}
+
+/// Bandwidth-queueing state, allocated only when `[sim.bandwidth]` is
+/// enabled so the default config costs nothing at n=10k (all maps are
+/// sparse: a queue exists only for bottlenecks that have carried traffic).
+#[derive(Clone, Debug)]
+struct Bandwidth {
+    /// Default rate for links without an override; 0 = unlimited.
+    global_rate: u64,
+    /// Rates are packets/s (fixed slot per frame) instead of bytes/s.
+    pps_mode: bool,
+    /// Queue bound in frames (0 = unbounded in frames).
+    max_queue: usize,
+    /// Queue bound in waiting bytes (0 = unbounded in bytes).
+    max_queue_bytes: u64,
+    /// `from-to` selector overrides, keyed by `from * n + to`.
+    link_rate: HashMap<usize, u64>,
+    /// Node selector overrides: ONE shared egress queue per node (all
+    /// frames it sends, any destination) …
+    egress_rate: HashMap<usize, u64>,
+    /// … and one shared ingress queue (all frames it receives). Shared
+    /// queues are what make a "leader uplink cap" meaningful: per-link
+    /// queues would dilute the cap across n-1 destinations.
+    ingress_rate: HashMap<usize, u64>,
+    /// Live queues, keyed by bottleneck id (see `transmit`).
+    queues: HashMap<usize, BwQueue>,
+    tail_drops: u64,
+    peak_queue: u64,
+}
 
 /// Network model with dynamic partitions.
 #[derive(Clone, Debug)]
@@ -28,22 +77,28 @@ pub struct SimNet {
     /// Gilbert–Elliott chain state per directed link (`from * n + to`):
     /// is that link currently in the bad (bursty) state? Keeping the chain
     /// per-link means each link sees the configured burst lengths
-    /// regardless of aggregate cluster traffic.
+    /// regardless of aggregate cluster traffic. Allocated only when the
+    /// chain is enabled — this is n² bools (~100 MB at n=10k), which the
+    /// default config must not pay.
     ge_bad: Vec<bool>,
     /// `[sim.links]`: fixed extra one-way delay (µs) per directed link
     /// (`from * n + to`); empty = no per-link asymmetry, zero lookups.
     link_extra_us: Vec<Time>,
+    /// `[sim.bandwidth]` state; `None` when the feature is off.
+    bw: Option<Bandwidth>,
     rng: Xoshiro256,
 }
 
 impl SimNet {
-    pub fn new(cfg: NetworkConfig, n: usize, rng: Xoshiro256) -> Self {
+    pub fn new(cfg: NetworkConfig, n: usize, rng: Xoshiro256) -> Result<Self, String> {
         let mut link_extra_us = Vec::new();
         if !cfg.links.is_empty() {
             link_extra_us = vec![0; n * n];
             for spec in &cfg.links {
-                // Config validation already rejected malformed selectors.
-                let (from, to) = spec.endpoints(n).unwrap_or_else(|e| panic!("{e}"));
+                // Config validation rejects malformed selectors, but a
+                // hand-built NetworkConfig can still carry one: surface it
+                // as a config error, not a panic.
+                let (from, to) = spec.endpoints(n)?;
                 match (from, to) {
                     (Some(f), Some(t)) => link_extra_us[f * n + t] += spec.extra_us,
                     (Some(id), None) => {
@@ -60,7 +115,126 @@ impl SimNet {
                 }
             }
         }
-        Self { cfg, n, groups: None, ge_bad: vec![false; n * n], link_extra_us, rng }
+        let ge_bad = if cfg.ge_good_to_bad > 0.0 { vec![false; n * n] } else { Vec::new() };
+        let bw = if cfg.bandwidth.enabled() {
+            let mut link_rate = HashMap::new();
+            let mut egress_rate = HashMap::new();
+            let mut ingress_rate = HashMap::new();
+            for spec in &cfg.bandwidth.links {
+                match spec.endpoints(n)? {
+                    (Some(f), Some(t)) => {
+                        link_rate.insert(f * n + t, spec.rate);
+                    }
+                    (Some(id), None) => {
+                        // A node selector is a shared NIC: one egress and
+                        // one ingress bottleneck at this rate.
+                        egress_rate.insert(id, spec.rate);
+                        ingress_rate.insert(id, spec.rate);
+                    }
+                    _ => unreachable!("endpoints always yields a from id"),
+                }
+            }
+            Some(Bandwidth {
+                global_rate: if cfg.bandwidth.pps > 0 {
+                    cfg.bandwidth.pps
+                } else {
+                    cfg.bandwidth.bytes_per_sec
+                },
+                pps_mode: cfg.bandwidth.pps > 0,
+                max_queue: cfg.bandwidth.max_queue,
+                max_queue_bytes: cfg.bandwidth.max_queue_bytes,
+                link_rate,
+                egress_rate,
+                ingress_rate,
+                queues: HashMap::new(),
+                tail_drops: 0,
+                peak_queue: 0,
+            })
+        } else {
+            None
+        };
+        Ok(Self { cfg, n, groups: None, ge_bad, link_extra_us, bw, rng })
+    }
+
+    /// Charge a replica frame against its link capacity at virtual time
+    /// `now`. Returns `Some((delay_us, queued_us))` — the frame leaves the
+    /// wire at `now + delay_us`, of which `queued_us` was spent waiting
+    /// behind earlier frames (the rest is its own serialization time) — or
+    /// `None` if the bottleneck queue was full and the frame tail-dropped.
+    ///
+    /// With `[sim.bandwidth]` off (or no rate applying to this link) the
+    /// answer is always `Some((0, 0))`: free, like the latency-only model.
+    /// Bottleneck resolution, most specific first: directed `from-to`
+    /// override → sender's shared egress NIC → receiver's shared ingress
+    /// NIC → global rate → unlimited. Exactly one bottleneck applies per
+    /// frame. Never draws from the RNG, so enabling bandwidth keeps the
+    /// random sequence identical to a run without it.
+    ///
+    /// `now` must be non-decreasing per bottleneck; the runner guarantees
+    /// this because sends are processed in event order.
+    pub fn transmit(
+        &mut self,
+        from: NodeId,
+        to: NodeId,
+        bytes: u64,
+        now: Time,
+    ) -> Option<(Time, Time)> {
+        let n = self.n;
+        let Some(bw) = &mut self.bw else { return Some((0, 0)) };
+        let link = from * n + to;
+        let (key, rate) = if let Some(&r) = bw.link_rate.get(&link) {
+            (link, r)
+        } else if let Some(&r) = bw.egress_rate.get(&from) {
+            // Shared egress NIC: one queue id per sender, past the link
+            // id space.
+            (n * n + from, r)
+        } else if let Some(&r) = bw.ingress_rate.get(&to) {
+            (n * n + n + to, r)
+        } else if bw.global_rate > 0 {
+            (link, bw.global_rate)
+        } else {
+            return Some((0, 0));
+        };
+        let tx = if bw.pps_mode {
+            1_000_000u64.div_ceil(rate)
+        } else {
+            (bytes * 1_000_000).div_ceil(rate)
+        };
+        let q = bw.queues.entry(key).or_default();
+        // Retire frames that finished serializing by `now`.
+        while let Some(&(done, b)) = q.items.front() {
+            if done > now {
+                break;
+            }
+            q.items.pop_front();
+            q.bytes -= b;
+        }
+        // An empty bottleneck always accepts (the frame goes straight into
+        // service — otherwise one oversized frame could never pass). A
+        // busy one tail-drops past either bound.
+        if !q.items.is_empty()
+            && ((bw.max_queue > 0 && q.items.len() >= bw.max_queue)
+                || (bw.max_queue_bytes > 0 && q.bytes + bytes > bw.max_queue_bytes))
+        {
+            bw.tail_drops += 1;
+            return None;
+        }
+        let start = q.items.back().map_or(now, |&(done, _)| done.max(now));
+        let done = start + tx;
+        q.items.push_back((done, bytes));
+        q.bytes += bytes;
+        bw.peak_queue = bw.peak_queue.max(q.items.len() as u64);
+        Some((done - now, start - now))
+    }
+
+    /// Frames tail-dropped by a full `[sim.bandwidth]` queue so far.
+    pub fn queue_tail_drops(&self) -> u64 {
+        self.bw.as_ref().map_or(0, |bw| bw.tail_drops)
+    }
+
+    /// Highest simultaneous occupancy (frames) any bottleneck reached.
+    pub fn peak_link_queue(&self) -> u64 {
+        self.bw.as_ref().map_or(0, |bw| bw.peak_queue)
     }
 
     /// Sample a one-way latency.
@@ -155,7 +329,7 @@ mod tests {
 
     fn net(loss: f64) -> SimNet {
         let cfg = NetworkConfig { loss, ..Default::default() };
-        SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(1))
+        SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(1)).unwrap()
     }
 
     #[test]
@@ -222,7 +396,7 @@ mod tests {
     #[test]
     fn duplication_rate_approximately_honored() {
         let cfg = NetworkConfig { duplicate: 0.5, ..Default::default() };
-        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(2));
+        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(2)).unwrap();
         let dup = (0..20000).filter(|_| n.duplicates()).count();
         let rate = dup as f64 / 20000.0;
         assert!((rate - 0.5).abs() < 0.02, "rate {rate}");
@@ -239,7 +413,7 @@ mod tests {
             ],
             ..Default::default()
         };
-        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(9));
+        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(9)).unwrap();
         let slow = n.latency_between(2, 0);
         let fast = n.latency_between(0, 2);
         assert!(slow >= 60_000 + 20, "directed extra must apply: {slow}");
@@ -254,7 +428,7 @@ mod tests {
             links: vec![LinkSpec { selector: "3".into(), extra_us: 80_000 }],
             ..Default::default()
         };
-        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(10));
+        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(10)).unwrap();
         assert!(n.latency_between(3, 1) >= 80_000);
         assert!(n.latency_between(1, 3) >= 80_000);
         assert!(n.latency_between(0, 1) < 1_000, "untouched links keep the base model");
@@ -281,7 +455,7 @@ mod tests {
             ge_loss_bad: 1.0,
             ..Default::default()
         };
-        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(3));
+        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(3)).unwrap();
         for _ in 0..100 {
             assert!(n.drops(0, 1), "every packet sees the bad state");
         }
@@ -297,7 +471,7 @@ mod tests {
             ge_loss_bad: 1.0,
             ..Default::default()
         };
-        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(4));
+        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(4)).unwrap();
         for i in 0..50 {
             let dropped = n.drops(0, 1);
             assert_eq!(dropped, i % 2 == 0, "packet {i}: chain must alternate");
@@ -316,7 +490,7 @@ mod tests {
             ge_loss_bad: 1.0,
             ..Default::default()
         };
-        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(6));
+        let mut n = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(6)).unwrap();
         assert!(n.drops(0, 1), "link (0,1) packet 1: bad");
         assert!(n.drops(2, 3), "link (2,3) packet 1: bad on its own chain");
         assert!(!n.drops(0, 1), "link (0,1) packet 2: recovered");
@@ -352,7 +526,7 @@ mod tests {
             ge_loss_bad: 1.0,
             ..Default::default()
         };
-        let mut ge = SimNet::new(ge_cfg, 5, Xoshiro256::seed_from_u64(5));
+        let mut ge = SimNet::new(ge_cfg, 5, Xoshiro256::seed_from_u64(5)).unwrap();
         let mut ind = net(1.0 / 3.0);
         let ge_runs = run_mean(Box::new(move || ge.drops(0, 1)));
         let ind_runs = run_mean(Box::new(move || ind.drops(0, 1)));
@@ -360,5 +534,147 @@ mod tests {
             ge_runs > ind_runs * 2.0,
             "GE bursts ({ge_runs:.2}) must be much longer than independent ({ind_runs:.2})"
         );
+    }
+
+    use crate::config::{BandwidthConfig, BandwidthLinkSpec};
+
+    fn bw_net(bandwidth: BandwidthConfig, seed: u64) -> SimNet {
+        let cfg = NetworkConfig { bandwidth, ..Default::default() };
+        SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(seed)).unwrap()
+    }
+
+    #[test]
+    fn bandwidth_off_is_free_and_draws_nothing() {
+        // Default config: transmit always answers "free" and never touches
+        // the RNG, so the latency stream matches an untouched net.
+        let mut a = net(0.0);
+        let mut b = net(0.0);
+        for i in 0..100 {
+            assert_eq!(a.transmit(0, 1, 10_000, i), Some((0, 0)));
+            assert_eq!(a.latency(), b.latency());
+        }
+        assert_eq!(a.queue_tail_drops(), 0);
+        assert_eq!(a.peak_link_queue(), 0);
+    }
+
+    #[test]
+    fn transmit_serializes_and_queues_exact_times() {
+        // 1 MB/s = 1 byte/µs: transmission times are exact integers.
+        let mut n = bw_net(BandwidthConfig { bytes_per_sec: 1_000_000, ..Default::default() }, 11);
+        assert_eq!(n.transmit(0, 1, 1000, 0), Some((1000, 0)), "empty queue: pure tx time");
+        assert_eq!(n.transmit(0, 1, 500, 0), Some((1500, 1000)), "waits behind the first");
+        // After the queue drains, a later frame pays only its own tx time.
+        assert_eq!(n.transmit(0, 1, 100, 2000), Some((100, 0)));
+        // Distinct directed links queue independently under the global rate.
+        assert_eq!(n.transmit(3, 4, 1000, 0), Some((1000, 0)));
+        assert_eq!(n.queue_tail_drops(), 0);
+        assert_eq!(n.peak_link_queue(), 2);
+    }
+
+    #[test]
+    fn pps_mode_charges_a_fixed_slot_per_frame() {
+        // 1000 packets/s = one 1000 µs slot regardless of frame size.
+        let mut n = bw_net(BandwidthConfig { pps: 1000, ..Default::default() }, 12);
+        assert_eq!(n.transmit(0, 1, 999_999, 0), Some((1000, 0)));
+        assert_eq!(n.transmit(0, 1, 1, 0), Some((2000, 1000)));
+    }
+
+    #[test]
+    fn full_queue_tail_drops_and_counts() {
+        let mut n = bw_net(
+            BandwidthConfig { bytes_per_sec: 1_000_000, max_queue: 2, ..Default::default() },
+            13,
+        );
+        assert!(n.transmit(0, 1, 1000, 0).is_some());
+        assert!(n.transmit(0, 1, 1000, 0).is_some());
+        assert_eq!(n.transmit(0, 1, 1000, 0), None, "third frame exceeds max_queue = 2");
+        assert_eq!(n.queue_tail_drops(), 1);
+        assert_eq!(n.peak_link_queue(), 2);
+        // Once the queue drains the link accepts again.
+        assert!(n.transmit(0, 1, 1000, 10_000).is_some());
+        assert_eq!(n.queue_tail_drops(), 1);
+    }
+
+    #[test]
+    fn byte_bound_drops_waiting_frames_but_not_oversized_first_frames() {
+        let mut n = bw_net(
+            BandwidthConfig {
+                bytes_per_sec: 1_000_000,
+                max_queue: 0,
+                max_queue_bytes: 1000,
+                ..Default::default()
+            },
+            14,
+        );
+        // An oversized frame on an empty bottleneck still goes through —
+        // the byte bound limits waiting, it must not livelock big frames.
+        assert_eq!(n.transmit(0, 1, 5000, 0), Some((5000, 0)));
+        assert!(n.transmit(0, 1, 800, 0).is_none(), "5000 + 800 > 1000 queued bytes");
+        assert_eq!(n.queue_tail_drops(), 1);
+        assert!(n.transmit(0, 1, 800, 5000).is_some(), "accepted after the drain");
+    }
+
+    #[test]
+    fn node_selector_is_one_shared_egress_and_ingress_queue() {
+        let bandwidth = BandwidthConfig {
+            links: vec![BandwidthLinkSpec { selector: "0".into(), rate: 1_000_000 }],
+            ..Default::default()
+        };
+        let mut n = bw_net(bandwidth, 15);
+        // Frames to *different* destinations share node 0's egress NIC.
+        assert_eq!(n.transmit(0, 1, 1000, 0), Some((1000, 0)));
+        assert_eq!(n.transmit(0, 2, 1000, 0), Some((2000, 1000)), "shares the uplink");
+        // Ingress to node 0 is a separate bottleneck from its egress.
+        assert_eq!(n.transmit(3, 0, 1000, 0), Some((1000, 0)));
+        // Links not touching node 0 are unlimited (no global rate set).
+        assert_eq!(n.transmit(3, 4, 1_000_000, 0), Some((0, 0)));
+    }
+
+    #[test]
+    fn directed_override_beats_node_and_global_rates() {
+        let bandwidth = BandwidthConfig {
+            bytes_per_sec: 1_000_000,
+            links: vec![BandwidthLinkSpec { selector: "0-1".into(), rate: 500_000 }],
+            ..Default::default()
+        };
+        let mut n = bw_net(bandwidth, 16);
+        assert_eq!(n.transmit(0, 1, 1000, 0), Some((2000, 0)), "override at half rate");
+        assert_eq!(n.transmit(0, 2, 1000, 0), Some((1000, 0)), "global rate elsewhere");
+    }
+
+    #[test]
+    fn default_config_allocates_no_quadratic_state() {
+        // The default impairment-free config must stay O(1) in n: at
+        // n=10k any n² vector would be ~100 MB of dead weight.
+        let n = 10_000;
+        let net = SimNet::new(NetworkConfig::default(), n, Xoshiro256::seed_from_u64(17)).unwrap();
+        assert_eq!(net.ge_bad.capacity(), 0, "GE chain state must be lazy");
+        assert_eq!(net.link_extra_us.capacity(), 0, "link delays must be lazy");
+        assert!(net.bw.is_none(), "bandwidth state must be lazy");
+    }
+
+    #[test]
+    fn ge_state_allocates_only_when_chain_enabled() {
+        let cfg = NetworkConfig { ge_good_to_bad: 0.1, ..Default::default() };
+        let net = SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(18)).unwrap();
+        assert_eq!(net.ge_bad.len(), 25);
+    }
+
+    #[test]
+    fn malformed_selectors_are_config_errors_not_panics() {
+        use crate::config::LinkSpec;
+        let cfg = NetworkConfig {
+            links: vec![LinkSpec { selector: "not-a-node".into(), extra_us: 10 }],
+            ..Default::default()
+        };
+        assert!(SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(19)).is_err());
+        let cfg = NetworkConfig {
+            bandwidth: BandwidthConfig {
+                links: vec![BandwidthLinkSpec { selector: "9".into(), rate: 1000 }],
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        assert!(SimNet::new(cfg, 5, Xoshiro256::seed_from_u64(20)).is_err(), "out of range");
     }
 }

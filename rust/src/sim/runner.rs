@@ -116,29 +116,44 @@ struct SimSink<'a> {
 impl ActionSink for SimSink<'_> {
     fn send(&mut self, from: NodeId, to: NodeId, msg: Message) {
         self.collector.messages += 1;
+        let bytes = msg.wire_bytes();
         // Egress accounting happens before the loss model: the bytes left
         // the sender's NIC either way.
-        self.collector.egress_bytes[from] += msg.wire_bytes();
+        self.collector.egress_bytes[from] += bytes;
         if self.net.drops(from, to) {
             return;
         }
         if self.net.duplicates() {
             // Second copy with its own latency draw (arbitrary reordering).
+            // It charges the link capacity like any other frame — a
+            // duplicate is real bytes on the wire, so under a constrained
+            // link duplication must cost throughput, never add it — and
+            // can itself tail-drop.
             let lat = self.net.latency_between(from, to);
+            if let Some((delay, queued)) = self.net.transmit(from, to, bytes, self.departs_at) {
+                self.collector.queue_wait_us[from] += queued;
+                push_ev(
+                    self.queue,
+                    self.seq,
+                    self.departs_at + delay + lat,
+                    Ev::Deliver { to, msg: Box::new(msg.clone()) },
+                );
+            }
+        }
+        // Queue-drain time (serialization + waiting behind earlier frames
+        // on the same bottleneck) then propagation latency. `transmit`
+        // never draws from the RNG, so with `[sim.bandwidth]` off this is
+        // exactly the old "latency sample only" schedule.
+        let lat = self.net.latency_between(from, to);
+        if let Some((delay, queued)) = self.net.transmit(from, to, bytes, self.departs_at) {
+            self.collector.queue_wait_us[from] += queued;
             push_ev(
                 self.queue,
                 self.seq,
-                self.departs_at + lat,
-                Ev::Deliver { to, msg: Box::new(msg.clone()) },
+                self.departs_at + delay + lat,
+                Ev::Deliver { to, msg: Box::new(msg) },
             );
         }
-        let lat = self.net.latency_between(from, to);
-        push_ev(
-            self.queue,
-            self.seq,
-            self.departs_at + lat,
-            Ev::Deliver { to, msg: Box::new(msg) },
-        );
     }
 
     fn client_reply(&mut self, _from: NodeId, req: RequestId, result: ClientResult) {
@@ -213,7 +228,8 @@ impl Simulation {
     pub fn new(cfg: Config, faults: FaultSchedule, cold_start: bool) -> Self {
         cfg.validate().expect("invalid config");
         let mut root = Xoshiro256::seed_from_u64(cfg.seed);
-        let net = SimNet::new(cfg.network.clone(), cfg.protocol.n, root.fork(1));
+        let net = SimNet::new(cfg.network.clone(), cfg.protocol.n, root.fork(1))
+            .expect("selectors checked by config validation");
         let workload = Workload::new(cfg.workload.clone(), 0, root.fork(2));
         let collector =
             Collector::new(cfg.protocol.n, cfg.workload.warmup_us, cfg.workload.duration_us);
@@ -756,6 +772,10 @@ impl Simulation {
             safety_ok,
             max_commit: ref_node.commit_index(),
             min_commit,
+            queue_tail_drops: self.net.queue_tail_drops(),
+            peak_link_queue: self.net.peak_link_queue(),
+            leader_queue_wait_us: self.collector.queue_wait_us[leader],
+            queue_wait_us: self.collector.queue_wait_us.clone(),
             events_processed: self.events,
             heap_pushes: self.seq,
             heap_pops: self.events,
@@ -898,6 +918,102 @@ mod tests {
             assert!(report.safety_ok, "{variant:?} under burst loss");
             assert!(report.completed > 0, "{variant:?} must serve under burst loss");
         }
+    }
+
+    /// Stable-leader knobs for the bandwidth tests: queueing delays
+    /// heartbeats, and these tests measure queueing, not elections — so
+    /// widen the timeouts the way `harness/unreliable.rs` cells do.
+    fn bw_cfg(variant: Variant) -> Config {
+        let mut cfg = quick_cfg(5, variant);
+        cfg.protocol.election_timeout_min_us = 30_000_000;
+        cfg.protocol.election_timeout_max_us = 60_000_000;
+        cfg
+    }
+
+    #[test]
+    fn bandwidth_disabled_is_bit_identical() {
+        // Queue-bound knobs without a rate must reproduce the latency-only
+        // runs exactly — the feature may not perturb RNG draws, message
+        // counts or timing while no rate is set — and report zero
+        // queueing activity.
+        for variant in [Variant::Raft, Variant::Pull, Variant::V2] {
+            let base = run_experiment(&quick_cfg(7, variant));
+            let mut cfg = quick_cfg(7, variant);
+            cfg.network.bandwidth.max_queue = 2; // knobs without a rate
+            cfg.network.bandwidth.max_queue_bytes = 64;
+            let off = run_experiment(&cfg);
+            assert_eq!(base.messages, off.messages, "{variant:?}");
+            assert_eq!(base.completed, off.completed, "{variant:?}");
+            assert_eq!(base.mean_latency_us, off.mean_latency_us, "{variant:?}");
+            assert_eq!(base.p99_latency_us, off.p99_latency_us, "{variant:?}");
+            assert_eq!(off.queue_tail_drops, 0, "{variant:?}");
+            assert_eq!(off.peak_link_queue, 0, "{variant:?}");
+            assert_eq!(off.leader_queue_wait_us, 0, "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn leader_uplink_cap_forces_queueing_delay_into_commit_p99() {
+        use crate::config::BandwidthLinkSpec;
+        // A binding cap on the leader's shared egress NIC: appends queue
+        // behind each other, so commit latency must visibly inflate while
+        // the closed-loop clients keep the run live.
+        let base = run_experiment(&bw_cfg(Variant::Raft));
+        let mut cfg = bw_cfg(Variant::Raft);
+        cfg.network.bandwidth.links.push(BandwidthLinkSpec { selector: "0".into(), rate: 200_000 });
+        cfg.network.bandwidth.max_queue = 1024; // deep queue: delay, not drops
+        let capped = run_experiment(&cfg);
+        assert!(capped.safety_ok);
+        assert!(capped.completed > 0, "closed loop must self-throttle, not stall");
+        assert!(capped.leader_queue_wait_us > 0, "a binding cap must show queue wait");
+        assert!(capped.peak_link_queue >= 2, "frames must actually have queued");
+        assert_eq!(capped.queue_tail_drops, 0, "the deep queue must absorb the burst");
+        assert!(
+            capped.commit_interval.p99() > base.commit_interval.p99(),
+            "queueing must inflate commit p99: capped {} vs unlimited {}",
+            capped.commit_interval.p99(),
+            base.commit_interval.p99()
+        );
+    }
+
+    #[test]
+    fn tight_queue_tail_drops_but_stays_safe() {
+        use crate::config::BandwidthLinkSpec;
+        // Two slots behind a capped NIC: a 4-follower broadcast burst must
+        // overflow, and retries have to recover everything that dropped.
+        let mut cfg = bw_cfg(Variant::Raft);
+        cfg.network.bandwidth.links.push(BandwidthLinkSpec { selector: "0".into(), rate: 200_000 });
+        cfg.network.bandwidth.max_queue = 2;
+        let report = run_experiment(&cfg);
+        assert!(report.safety_ok, "tail drops are just loss: safety must hold");
+        assert!(report.completed > 0, "progress through a majority must continue");
+        assert!(report.queue_tail_drops > 0, "a 2-slot queue must overflow");
+        assert_eq!(report.peak_link_queue, 2, "occupancy can never exceed the bound");
+    }
+
+    #[test]
+    fn duplicates_consume_link_capacity() {
+        // The duplicate copy is real bytes through the same bottleneck: on
+        // a binding link, heavy duplication must cost delivered throughput
+        // (a bypassing duplicate would add it for free).
+        let mk = |dup: f64| {
+            let mut cfg = bw_cfg(Variant::Raft);
+            cfg.network.duplicate = dup;
+            cfg.network.bandwidth.bytes_per_sec = 300_000;
+            cfg.network.bandwidth.max_queue = 1024;
+            cfg
+        };
+        let clean = run_experiment(&mk(0.0));
+        let dup = run_experiment(&mk(0.9));
+        assert!(clean.safety_ok && dup.safety_ok);
+        assert!(clean.completed > 0 && dup.completed > 0);
+        assert!(
+            dup.completed < clean.completed,
+            "duplication doubled the load on a saturated link: {} vs {}",
+            dup.completed,
+            clean.completed
+        );
+        assert!(dup.queue_wait_us.iter().sum::<u64>() > 0);
     }
 
     #[test]

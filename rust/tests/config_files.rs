@@ -23,6 +23,7 @@ fn all_shipped_configs_parse_and_validate() {
         "live-tcp",
         "open-loop",
         "durable",
+        "queueing",
     ];
     for name in names {
         let cfg = load(name);
@@ -167,6 +168,36 @@ fn durable_config_pins_the_wal_knobs_and_runs_in_memory() {
     assert!(report.completed > 0, "durable preset must serve requests");
     assert!(report.fsyncs > 0, "fsync = batch must count barriers");
     assert!(report.snapshots_taken > 0, "interval 50 must trigger snapshots");
+}
+
+#[test]
+fn queueing_config_caps_the_leader_nic_and_runs() {
+    let mut cfg = load("queueing");
+    assert!(cfg.network.bandwidth.enabled(), "the preset's point is the capped NIC");
+    assert_eq!(cfg.network.bandwidth.links.len(), 1);
+    assert_eq!(cfg.network.bandwidth.links[0].endpoints(cfg.protocol.n).unwrap(), (Some(0), None));
+    assert_eq!(cfg.network.bandwidth.links[0].rate, 400_000);
+    assert_eq!(cfg.network.bandwidth.max_queue, 0, "byte-bounded, not frame-bounded");
+    assert_eq!(cfg.network.bandwidth.max_queue_bytes, 8000);
+    // The preset must survive a dump/set round trip: every key it sets is
+    // a key `config-dump` emits and `Config::set` accepts.
+    let mut rebuilt = epiraft::config::Config::default();
+    for (k, v) in epiraft::config::dump(&cfg) {
+        rebuilt.set(&k, &v).unwrap_or_else(|e| panic!("{k}={v}: {e}"));
+    }
+    rebuilt.validate().unwrap();
+    assert_eq!(rebuilt.network.bandwidth, cfg.network.bandwidth);
+    // Shrink for test time. The capped NIC must show up in the queueing
+    // counters while leaving safety and progress intact.
+    cfg.protocol.n = 9;
+    cfg.workload.clients = 5;
+    cfg.workload.duration_us = 2_000_000;
+    cfg.workload.warmup_us = 400_000;
+    cfg.validate().unwrap();
+    let report = run_experiment(&cfg);
+    assert!(report.safety_ok);
+    assert!(report.completed > 0, "queueing preset must serve requests");
+    assert!(report.leader_queue_wait_us > 0, "the capped leader NIC must queue");
 }
 
 #[test]
